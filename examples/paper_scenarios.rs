@@ -1,0 +1,192 @@
+//! **End-to-end driver**: the paper's complete §IV evaluation.
+//!
+//! Runs all four scenarios for N trials each (paper: 100), under both
+//! methods, and regenerates:
+//! * Fig. 5 — rebuild-time mean ± std per scenario and method;
+//! * Fig. 6 — how many times faster the proposed method is;
+//! * Table II — the one-sided Z hypothesis tests against
+//!   H₀ = {100, 105000, 20, 0.7}.
+//!
+//! CSVs land in `bench_results/`. Run:
+//! `cargo run --release --example paper_scenarios -- [--trials N] [--seed S]`
+
+use layerjet::bench::report::{fmt_p, fmt_secs, fmt_speedup, Table};
+use layerjet::bench::{run_scenario_experiment, ScenarioExperiment};
+use layerjet::builder::CostModel;
+use layerjet::inject::InjectMode;
+use layerjet::stats::z_test;
+use layerjet::workload::ScenarioKind;
+
+/// The paper's H₀ per scenario (Table II).
+const H0: [(ScenarioKind, f64); 4] = [
+    (ScenarioKind::PythonTiny, 100.0),
+    (ScenarioKind::PythonLarge, 105_000.0),
+    (ScenarioKind::JavaTiny, 20.0),
+    (ScenarioKind::JavaLarge, 0.7),
+];
+
+fn parse_flag(args: &[String], flag: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> layerjet::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trials = parse_flag(&args, "--trials", 100) as usize;
+    let seed = parse_flag(&args, "--seed", 42);
+    let root = std::env::temp_dir().join(format!("layerjet-paper-{}", std::process::id()));
+    std::fs::create_dir_all("bench_results").ok();
+
+    println!(
+        "paper evaluation: 4 scenarios x {trials} trials x 2 methods (seed {seed})\n"
+    );
+
+    let mut experiments: Vec<ScenarioExperiment> = Vec::new();
+    for kind in ScenarioKind::ALL {
+        eprint!("running scenario {} ({}) ... ", kind.number(), kind.name());
+        let t0 = std::time::Instant::now();
+        let exp = run_scenario_experiment(
+            kind,
+            trials,
+            &root.join(kind.name()),
+            CostModel::default(),
+            InjectMode::Implicit,
+            seed,
+        )?;
+        eprintln!("done in {:.1}s", t0.elapsed().as_secs_f64());
+        experiments.push(exp);
+    }
+
+    // ---- Fig. 5: rebuild time mean ± std -----------------------------------
+    let mut fig5 = Table::new(
+        "Fig. 5 — Image rebuild time, mean ± std over trials",
+        &["scenario", "docker mean", "docker std", "proposed mean", "proposed std"],
+    );
+    let mut fig5_csv = String::from("scenario,method,mean_s,std_s,min_s,max_s,n\n");
+    for exp in &experiments {
+        let d = exp.docker_summary();
+        let p = exp.proposed_summary();
+        fig5.row(vec![
+            format!("{} ({})", exp.kind.number(), exp.kind.name()),
+            fmt_secs(d.mean),
+            fmt_secs(d.std),
+            fmt_secs(p.mean),
+            fmt_secs(p.std),
+        ]);
+        for (method, s) in [("docker", d), ("proposed", p)] {
+            fig5_csv.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{}\n",
+                exp.kind.name(),
+                method,
+                s.mean,
+                s.std,
+                s.min,
+                s.max,
+                s.n
+            ));
+        }
+    }
+    fig5.print();
+    std::fs::write("bench_results/fig5_rebuild_times.csv", fig5_csv)?;
+
+    // ---- Fig. 6: times faster ----------------------------------------------
+    let mut fig6 = Table::new(
+        "Fig. 6 — Proposed method: times faster than the Docker method",
+        &["scenario", "mean", "std", "min", "max"],
+    );
+    let mut fig6_csv = String::from("scenario,trial,speedup\n");
+    for exp in &experiments {
+        let s = exp.speedup_summary();
+        fig6.row(vec![
+            format!("{} ({})", exp.kind.number(), exp.kind.name()),
+            fmt_speedup(s.mean),
+            fmt_speedup(s.std),
+            fmt_speedup(s.min),
+            fmt_speedup(s.max),
+        ]);
+        for (i, x) in exp.speedup.iter().enumerate() {
+            fig6_csv.push_str(&format!("{},{},{:.4}\n", exp.kind.name(), i, x));
+        }
+    }
+    fig6.print();
+    std::fs::write("bench_results/fig6_speedup.csv", fig6_csv)?;
+
+    // ---- Table II: hypothesis tests ----------------------------------------
+    let mut table2 = Table::new(
+        "Table II — Hypothesis tests (H0: mean speedup <= H0, alpha = 0.001)",
+        &["scenario", "H0", "sample mean", "Z", "P", "reject H0?"],
+    );
+    let mut t2_csv = String::from("scenario,h0,mean,z,p,reject\n");
+    for exp in &experiments {
+        let h0 = H0
+            .iter()
+            .find(|(k, _)| *k == exp.kind)
+            .map(|(_, h)| *h)
+            .unwrap();
+        let s = exp.speedup_summary();
+        let t = z_test(&s, h0, 0.001);
+        table2.row(vec![
+            format!("{} ({})", exp.kind.number(), exp.kind.name()),
+            format!("{h0}"),
+            fmt_speedup(s.mean),
+            format!("{:.2}", t.z),
+            fmt_p(t.p),
+            if t.reject { "yes".into() } else { "no".into() },
+        ]);
+        t2_csv.push_str(&format!(
+            "{},{},{:.4},{:.4},{:.6e},{}\n",
+            exp.kind.name(),
+            h0,
+            s.mean,
+            t.z,
+            t.p,
+            t.reject
+        ));
+    }
+    table2.print();
+    std::fs::write("bench_results/table2_hypothesis.csv", t2_csv)?;
+
+    // ---- Shape checks (the paper's qualitative claims) ----------------------
+    let by_kind = |k: ScenarioKind| experiments.iter().find(|e| e.kind == k).unwrap();
+    let s1 = by_kind(ScenarioKind::PythonTiny).speedup_summary().mean;
+    let s2 = by_kind(ScenarioKind::PythonLarge).speedup_summary().mean;
+    let s3 = by_kind(ScenarioKind::JavaTiny).speedup_summary().mean;
+    let s4 = by_kind(ScenarioKind::JavaLarge).speedup_summary().mean;
+    println!("shape checks (paper §IV/§V):");
+    println!(
+        "  python scenarios orders of magnitude faster: s1={} s2={}  -> {}",
+        fmt_speedup(s1),
+        fmt_speedup(s2),
+        ok(s1 > 10.0 && s2 > 10.0)
+    );
+    println!(
+        "  complex python >= tiny python (more saved work): {} -> {}",
+        fmt_speedup(s2 / s1),
+        ok(s2 >= s1 * 0.8)
+    );
+    println!(
+        "  java-tiny clearly faster but less than python:   s3={} -> {}",
+        fmt_speedup(s3),
+        ok(s3 > 2.0)
+    );
+    println!(
+        "  java-large no significant improvement (~0.7-1.5x): s4={} -> {}",
+        fmt_speedup(s4),
+        ok(s4 > 0.5 && s4 < 2.5)
+    );
+
+    std::fs::remove_dir_all(&root)?;
+    println!("\nCSV series written to bench_results/ — paper_scenarios OK");
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

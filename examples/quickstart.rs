@@ -1,0 +1,111 @@
+//! Quickstart: the full LayerJet tour on the paper's scenario-1 project.
+//!
+//! Reproduces, on a tiny project:
+//! * Fig. 1 — the build transcript with layer ids and cache reuse;
+//! * Fig. 3 — the revision diff;
+//! * Table III-A — the save-bundle layout;
+//! * the headline: a one-line change injected in O(change) instead of a
+//!   full layer rebuild.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use layerjet::bench::report::fmt_secs;
+use layerjet::diff::{diff_lines, render_unified};
+use layerjet::prelude::*;
+use layerjet::tar::TarReader;
+use std::time::Instant;
+
+fn main() -> layerjet::Result<()> {
+    let root = std::env::temp_dir().join(format!("layerjet-quickstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let daemon = Daemon::new(&root.join("daemon"))?;
+
+    // --- a one-line Python project (paper scenario 1) ----------------------
+    let project = root.join("project");
+    std::fs::create_dir_all(&project)?;
+    std::fs::write(
+        project.join("Dockerfile"),
+        "FROM python:alpine\nCOPY main.py main.py\nCMD [ \"python\", \"./main.py\" ]\n",
+    )?;
+    let v1 = "print('hello world')\n";
+    std::fs::write(project.join("main.py"), v1)?;
+
+    println!("### docker build -t hello:latest . (first build)\n");
+    let r1 = daemon.build(&project, "hello:latest")?;
+    print!("{}", r1.transcript);
+
+    println!("\n### unchanged rebuild — every layer served from cache (Fig. 1)\n");
+    let r2 = daemon.build(&project, "hello:latest")?;
+    print!("{}", r2.transcript);
+    assert_eq!(r2.rebuilt_steps(), 0);
+
+    println!("\n### docker history hello:latest\n");
+    print!("{}", daemon.history("hello:latest")?);
+
+    // --- the revision: append one line --------------------------------------
+    let v2 = "print('hello world')\nprint('one more line')\n";
+    std::fs::write(project.join("main.py"), v2)?;
+    println!("\n### diff old/new revision (Fig. 3)\n");
+    let ops = diff_lines(v1, v2);
+    print!("{}", render_unified(v1, &ops));
+
+    // --- method A: Docker rebuild (fall-through) ----------------------------
+    let t0 = Instant::now();
+    let rebuild = daemon.build(&project, "hello:docker")?;
+    let docker_time = t0.elapsed().as_secs_f64();
+    println!(
+        "\nDocker rebuild: {} of {} steps rebuilt, {} written, {}",
+        rebuild.rebuilt_steps(),
+        rebuild.steps.len(),
+        layerjet::util::human_bytes(rebuild.bytes_written()),
+        fmt_secs(docker_time),
+    );
+
+    // --- method B: code injection (the paper's contribution) ----------------
+    // Rebuild v1 image first so injection starts from the same point.
+    std::fs::write(project.join("main.py"), v1)?;
+    daemon.build(&project, "hello:latest")?;
+    std::fs::write(project.join("main.py"), v2)?;
+
+    let t0 = Instant::now();
+    let inject = daemon.inject(&project, "hello:latest", "hello:injected")?;
+    let inject_time = t0.elapsed().as_secs_f64();
+    let p = &inject.patched[0];
+    println!(
+        "Code injection:  1 file patched in layer {}, {}/{} chunks rehashed, {} digest slot(s) rewritten, {}",
+        p.layer_id.short(),
+        p.chunks_rehashed,
+        p.chunks_total,
+        inject.digests_rewritten,
+        fmt_secs(inject_time),
+    );
+    println!(
+        "Speedup: {:.1}x  (same permanent layer id {}, checksum {} -> {})",
+        docker_time / inject_time.max(1e-9),
+        p.layer_id.short(),
+        p.old_checksum.short(),
+        p.new_checksum.short(),
+    );
+
+    // Both images must pass Docker's integrity test and contain v2.
+    assert!(daemon.verify_image("hello:docker")?);
+    assert!(daemon.verify_image("hello:injected")?);
+
+    // --- Table III-A: what a save bundle contains ---------------------------
+    println!("\n### docker save hello:injected (bundle layout, Table III-A)\n");
+    let bundle = daemon.save("hello:injected")?;
+    let reader = TarReader::new(&bundle)?;
+    for entry in reader.entries() {
+        println!(
+            "  {:<90} {:>8}",
+            entry.name,
+            layerjet::util::human_bytes(entry.size)
+        );
+    }
+    println!(
+        "\nbundle total {} — quickstart OK",
+        layerjet::util::human_bytes(bundle.len() as u64)
+    );
+    std::fs::remove_dir_all(&root)?;
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Redeployment (paper §III.C): why naive checksum bypass cannot be
+//! pushed, and how clone-before-inject fixes it.
+//!
+//! 1. build v1 and push to a remote registry;
+//! 2. inject v2 **in place** → push rejected (remote compares the
+//!    checksum trace for the same layer id);
+//! 3. inject v3 with `clone_for_redeploy` → a fresh layer id uploads
+//!    cleanly;
+//! 4. a second machine pulls the result and verifies integrity.
+//!
+//! Run: `cargo run --release --example registry_redeploy`
+
+use layerjet::inject::InjectOptions;
+use layerjet::prelude::*;
+
+fn main() -> layerjet::Result<()> {
+    let root = std::env::temp_dir().join(format!("layerjet-redeploy-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let machine_a = Daemon::new(&root.join("machine-a"))?;
+    let machine_b = Daemon::new(&root.join("machine-b"))?;
+    let remote = RemoteRegistry::open(&root.join("remote-registry"))?;
+
+    let project = root.join("project");
+    std::fs::create_dir_all(&project)?;
+    std::fs::write(
+        project.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /srv/\nWORKDIR /srv\nCMD [\"python\", \"app.py\"]\n",
+    )?;
+    std::fs::write(project.join("app.py"), "VERSION = 1\nprint('serving', VERSION)\n")?;
+
+    println!("[1] build app:v1 on machine A and push");
+    machine_a.build(&project, "app:v1")?;
+    let push = machine_a.push("app:v1", &remote)?;
+    println!(
+        "    pushed {} layers, {} uploaded",
+        push.layers.len(),
+        layerjet::util::human_bytes(push.bytes_uploaded)
+    );
+
+    println!("[2] inject v2 IN PLACE (no clone) and try to push");
+    std::fs::write(project.join("app.py"), "VERSION = 2\nprint('serving', VERSION)\n")?;
+    machine_a.inject(&project, "app:v1", "app:v2")?;
+    assert!(machine_a.verify_image("app:v2")?, "local integrity holds");
+    match machine_a.push("app:v2", &remote) {
+        Err(e) => println!("    REJECTED, exactly as §III.C predicts:\n      {e}"),
+        Ok(_) => panic!("naive bypass must not be pushable"),
+    }
+
+    println!("[3] inject v3 WITH clone-for-redeploy and push");
+    std::fs::write(project.join("app.py"), "VERSION = 3\nprint('serving', VERSION)\n")?;
+    let opts = InjectOptions {
+        clone_for_redeploy: true,
+        ..InjectOptions::default()
+    };
+    let report = machine_a.inject_with(&project, "app:v1", "app:v3", &opts)?;
+    let patched = &report.patched[0];
+    println!(
+        "    cloned layer {} -> {} before patching",
+        patched.layer_id.short(),
+        patched
+            .cloned_as
+            .map(|c| c.short())
+            .unwrap_or_else(|| "-".into())
+    );
+    let push = machine_a.push("app:v3", &remote)?;
+    println!(
+        "    ACCEPTED: {} uploaded under the fresh layer id",
+        layerjet::util::human_bytes(push.bytes_uploaded)
+    );
+
+    println!("[4] machine B pulls app:v3 and verifies");
+    machine_b.pull("app:v3", &remote)?;
+    assert!(machine_b.verify_image("app:v3")?);
+    let (_, image) = machine_b.image("app:v3")?;
+    let tar = machine_b.layers.read_tar(&image.layer_ids[1])?;
+    let reader = layerjet::tar::TarReader::new(&tar)?;
+    let app = reader.find("srv/app.py").expect("srv/app.py in layer");
+    let content = String::from_utf8_lossy(app.data(&tar)).into_owned();
+    assert!(content.contains("VERSION = 3"), "{content}");
+    println!("    machine B sees VERSION = 3 — redeploy round trip OK");
+
+    std::fs::remove_dir_all(&root)?;
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT pipeline: lower the L2 hash graph to HLO **text** artifacts.
+
+HLO text — not serialized ``HloModuleProto`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); the rust binary then loads
+``artifacts/hash_chunks_l{N}.hlo.txt`` through PJRT and Python never runs
+again.  A ``manifest.json`` lists the variants so the rust runtime can
+pick lane counts without directory scraping.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import BLOCKS_PER_CHUNK, K, chunk_message_blocks
+from .model import build_fn
+
+# Lane-count variants to export. The runtime batches full 64-lane calls
+# and drains the tail with the 8-lane variant.
+LANE_VARIANTS = (8, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def self_check(lanes: int) -> None:
+    """The lowered graph must reproduce hashlib on a sample batch."""
+    fn, _ = build_fn(lanes)
+    chunks = [bytes([i] * (97 * (i + 1) % 4097)) for i in range(lanes)]
+    blocks = np.stack([chunk_message_blocks(c) for c in chunks])
+    (out,) = fn(blocks, np.asarray(K))
+    out = np.asarray(out)
+    for i, chunk in enumerate(chunks):
+        msg = chunk + bytes(4096 - len(chunk)) + len(chunk).to_bytes(8, "little")
+        expect = hashlib.sha256(msg).hexdigest()
+        got = out[i].astype(">u4").tobytes().hex()
+        assert got == expect, f"lane {i}: {got} != {expect}"
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="(compat) single-file mode marker")
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "blocks_per_chunk": BLOCKS_PER_CHUNK,
+        "variants": [],
+    }
+    for lanes in LANE_VARIANTS:
+        self_check(lanes)
+        fn, (blocks_spec, kc_spec) = build_fn(lanes)
+        lowered = jax.jit(fn).lower(blocks_spec, kc_spec)
+        text = to_hlo_text(lowered)
+        name = f"hash_chunks_l{lanes}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append({"lanes": lanes, "file": name, "bytes": len(text)})
+        print(f"wrote {path} ({len(text)} chars), self-check OK", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"artifacts complete: {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Pure-jnp SHA-256 reference: the correctness oracle for the Pallas kernel.
+
+Implements FIPS 180-4 exactly as the paper describes it (§III.B, Eq. 1):
+pad to a multiple of 512 bits, split into 16-word blocks, and fold
+``H(i) = H(i-1) + C_{M(i)}(H(i-1))``.  Everything here is vectorized over
+a leading *lane* axis so a batch of independent streams (one per 4 KiB
+chunk of layer content) hashes in one call — the workload the rust
+coordinator ships to the AOT executable.
+
+Cross-checked against ``hashlib`` in python/tests/test_kernel.py and
+against the from-scratch rust implementation via shared test vectors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# FIPS 180-4 §5.3.3 initial hash value.
+IV = np.array(
+    [
+        0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A,
+        0x510E527F, 0x9B05688C, 0x1F83D9AB, 0x5BE0CD19,
+    ],
+    dtype=np.uint32,
+)
+
+# FIPS 180-4 §4.2.2 round constants.
+K = np.array(
+    [
+        0x428A2F98, 0x71374491, 0xB5C0FBCF, 0xE9B5DBA5, 0x3956C25B, 0x59F111F1,
+        0x923F82A4, 0xAB1C5ED5, 0xD807AA98, 0x12835B01, 0x243185BE, 0x550C7DC3,
+        0x72BE5D74, 0x80DEB1FE, 0x9BDC06A7, 0xC19BF174, 0xE49B69C1, 0xEFBE4786,
+        0x0FC19DC6, 0x240CA1CC, 0x2DE92C6F, 0x4A7484AA, 0x5CB0A9DC, 0x76F988DA,
+        0x983E5152, 0xA831C66D, 0xB00327C8, 0xBF597FC7, 0xC6E00BF3, 0xD5A79147,
+        0x06CA6351, 0x14292967, 0x27B70A85, 0x2E1B2138, 0x4D2C6DFC, 0x53380D13,
+        0x650A7354, 0x766A0ABB, 0x81C2C92E, 0x92722C85, 0xA2BFE8A1, 0xA81A664B,
+        0xC24B8B70, 0xC76C51A3, 0xD192E819, 0xD6990624, 0xF40E3585, 0x106AA070,
+        0x19A4C116, 0x1E376C08, 0x2748774C, 0x34B0BCB5, 0x391C0CB3, 0x4ED8AA4A,
+        0x5B9CCA4F, 0x682E6FF3, 0x748F82EE, 0x78A5636F, 0x84C87814, 0x8CC70208,
+        0x90BEFFFA, 0xA4506CEB, 0xBEF9A3F7, 0xC67178F2,
+    ],
+    dtype=np.uint32,
+)
+
+# Chunk geometry shared with the rust side (hash/engine.rs): a 4 KiB chunk
+# plus an 8-byte little-endian length suffix, SHA-padded to exactly 65
+# 64-byte blocks.
+CHUNK_SIZE = 4096
+BLOCKS_PER_CHUNK = 65
+WORDS_PER_BLOCK = 16
+
+
+def _rotr(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    return (x >> np.uint32(n)) | (x << np.uint32(32 - n))
+
+
+def compress_ref(h: jnp.ndarray, w16: jnp.ndarray) -> jnp.ndarray:
+    """One SHA-256 compression: fold one 16-word block into the state.
+
+    h:   uint32[..., 8]   current state
+    w16: uint32[..., 16]  message block (big-endian words)
+    Returns the new uint32[..., 8] state.
+
+    The round loop is a ``fori_loop`` with a sliding 16-word message
+    window. (An unrolled 64-round body triggers a pathological XLA-CPU
+    compile once jitted, so both this reference and the Pallas kernel use
+    the loop form; the *independent* correctness oracle is ``hashlib``,
+    which the tests compare against at every level.)
+    """
+    import jax
+
+    h = h.astype(jnp.uint32)
+    w16 = w16.astype(jnp.uint32)
+    # Same 8-element-piece trick as the kernel: HLO text elides large
+    # constants, and this reference also gets lowered (hash_chunks_ref).
+    kc = jnp.concatenate(
+        [jnp.asarray(K[i * 8 : (i + 1) * 8], dtype=jnp.uint32) for i in range(8)]
+    )
+
+    def round_body(t, carry):
+        a, b, c, d, e, f, g, hh, window = carry
+        wt = window[..., 0]
+        big_s1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+        ch = (e & f) ^ (~e & g)
+        t1 = hh + big_s1 + ch + kc[t] + wt
+        big_s0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+        maj = (a & b) ^ (a & c) ^ (b & c)
+        t2 = big_s0 + maj
+        # Schedule: w[t+16] = w[t] + σ0(w[t+1]) + w[t+9] + σ1(w[t+14]).
+        w1 = window[..., 1]
+        w14 = window[..., 14]
+        s0 = _rotr(w1, 7) ^ _rotr(w1, 18) ^ (w1 >> np.uint32(3))
+        s1 = _rotr(w14, 17) ^ _rotr(w14, 19) ^ (w14 >> np.uint32(10))
+        nxt = window[..., 0] + s0 + window[..., 9] + s1
+        window = jnp.concatenate([window[..., 1:], nxt[..., None]], axis=-1)
+        return (t1 + t2, a, b, c, d + t1, e, f, g, window)
+
+    init = tuple(h[..., i] for i in range(8)) + (w16,)
+    a, b, c, d, e, f, g, hh = jax.lax.fori_loop(0, 64, round_body, init)[:8]
+    out = jnp.stack([a, b, c, d, e, f, g, hh], axis=-1)
+    return h + out
+
+
+import functools as _functools
+import jax as _jax
+
+
+@_functools.partial(_jax.jit)
+def _fold_blocks(h0: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    seq = jnp.transpose(blocks.astype(jnp.uint32), (1, 0, 2))
+
+    def step(h, w):
+        return compress_ref(h, w), None
+
+    h, _ = _jax.lax.scan(step, h0.astype(jnp.uint32), seq)
+    return h
+
+
+def hash_blocks_ref(h0: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """Fold a sequence of blocks: blocks uint32[lanes, n, 16] -> [lanes, 8].
+
+    Jitted (scan over the block axis): the oracle is called thousands of
+    times by the hypothesis sweeps, and eager per-round dispatch would
+    dominate the test suite's runtime.
+    """
+    return _fold_blocks(h0, blocks)
+
+
+# ---------------------------------------------------------------------------
+# numpy-side helpers used by tests and by aot.py's self-check.
+# ---------------------------------------------------------------------------
+
+
+def pad_message(data: bytes) -> np.ndarray:
+    """SHA-256 padding: returns uint32[n_blocks, 16] big-endian words."""
+    bitlen = len(data) * 8
+    msg = bytearray(data)
+    msg.append(0x80)
+    while len(msg) % 64 != 56:
+        msg.append(0)
+    msg += bitlen.to_bytes(8, "big")
+    arr = np.frombuffer(bytes(msg), dtype=">u4").astype(np.uint32)
+    return arr.reshape(-1, WORDS_PER_BLOCK)
+
+
+def digest_hex(state: np.ndarray) -> str:
+    """Final 8-word state -> hex digest string."""
+    return np.asarray(state, dtype=np.uint32).astype(">u4").tobytes().hex()
+
+
+def sha256_ref(data: bytes) -> str:
+    """Full SHA-256 of a byte string, via compress_ref. For oracle tests."""
+    blocks = pad_message(data)
+    h = jnp.asarray(IV)[None, :]
+    out = hash_blocks_ref(h, jnp.asarray(blocks)[None, :, :])
+    return digest_hex(np.asarray(out)[0])
+
+
+def chunk_message_blocks(chunk: bytes) -> np.ndarray:
+    """The fixed 65-block padded message of one chunk, mirroring the rust
+    ``hash::engine::chunk_message_blocks`` byte-for-byte:
+    ``chunk ∥ 0^(4096-len) ∥ u64_le(len)`` then SHA padding to 4160 bytes.
+    Returns uint32[65, 16].
+    """
+    assert len(chunk) <= CHUNK_SIZE, f"chunk too large: {len(chunk)}"
+    msg = bytearray(BLOCKS_PER_CHUNK * 64)
+    msg[: len(chunk)] = chunk
+    msg[CHUNK_SIZE : CHUNK_SIZE + 8] = len(chunk).to_bytes(8, "little")
+    msg[CHUNK_SIZE + 8] = 0x80
+    bitlen = (CHUNK_SIZE + 8) * 8
+    msg[-8:] = bitlen.to_bytes(8, "big")
+    arr = np.frombuffer(bytes(msg), dtype=">u4").astype(np.uint32)
+    return arr.reshape(BLOCKS_PER_CHUNK, WORDS_PER_BLOCK)
+
+
+def chunk_digest_ref(chunk: bytes) -> str:
+    """Digest of one chunk via the reference path (hex)."""
+    blocks = chunk_message_blocks(chunk)
+    h = jnp.asarray(IV)[None, :]
+    out = hash_blocks_ref(h, jnp.asarray(blocks)[None, :, :])
+    return digest_hex(np.asarray(out)[0])

@@ -1,0 +1,137 @@
+"""L1 — the SHA-256 compression function as a Pallas kernel.
+
+The compute hot-spot of Docker's integrity mechanism (and of the paper's
+checksum-bypass step) is hashing layer bytes.  LayerJet's chunk digest
+turns that into a data-parallel problem: every 4 KiB chunk is an
+independent 65-block SHA-256 stream, so the *lane* axis (one lane per
+chunk) maps onto the TPU vector unit while the strictly sequential
+64-round dependency stays inside the kernel.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+ * the 8-word state and 16-word message block for a lane tile live in
+   VMEM (`BlockSpec` below tiles the lane axis);
+ * the kernel is pure uint32 bitwise/add work — VPU-bound, no MXU;
+ * the message schedule uses a rolling 16-word window (8 KiB/128 lanes)
+   rather than the expanded 64-word form (32 KiB) to keep the VMEM
+   footprint per grid step minimal;
+ * ``interpret=True`` everywhere: the CPU PJRT client cannot execute
+   Mosaic custom-calls, so the kernel lowers to plain HLO. Real-TPU
+   performance is *estimated* from the tiling structure, never measured
+   here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import IV, K
+
+
+def k_table() -> jnp.ndarray:
+    """The 64 round constants as a trace-time array (test path only).
+
+    IMPORTANT: the AOT path must NOT bake K in as a constant. The HLO
+    **text** printer elides constants larger than a few elements
+    (`constant({...})`), HLO text is our AOT interchange format, and an
+    elided constant silently round-trips as garbage — the lowered graph
+    therefore takes K as a *runtime argument* supplied by the rust
+    caller (see model.build_fn and runtime/mod.rs)."""
+    return jnp.asarray(K, dtype=jnp.uint32)
+
+
+# Lane tile per grid step. 8 keeps the interpret-mode overhead low while
+# the structure (grid over lane tiles) is what a real TPU build would use
+# with 128-lane tiles.
+LANE_TILE = 8
+
+
+def _rotr(x, n: int):
+    return (x >> np.uint32(n)) | (x << np.uint32(32 - n))
+
+
+def _compress_rounds(h, w, kc):
+    """64 SHA-256 rounds over a lane tile.
+
+    h: uint32[tile, 8], w: uint32[tile, 16], kc: uint32[64] (round
+    constants, passed as a kernel input — Pallas forbids captured
+    constants) -> uint32[tile, 8]
+
+    The round loop is a ``fori_loop`` with a **rolling message-schedule
+    window**: the carry holds the state vectors plus ``w[t..t+15]`` as a
+    ``[tile, 16]`` array. Each step consumes ``window[:, 0]`` and appends
+    ``w[t+16] = w[t] + σ0(w[t+1]) + w[t+9] + σ1(w[t+14])`` (computed —
+    harmlessly — even for the final rounds). A small loop body keeps the
+    traced graph tiny, which matters twice: interpret-mode compilation
+    stays fast, and the AOT HLO the rust side compiles stays compact.
+    """
+    def round_body(t, carry):
+        a, b, c, d, e, f, g, hh, window = carry
+        wt = window[:, 0]
+        big_s1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+        ch = (e & f) ^ (~e & g)
+        t1 = hh + big_s1 + ch + kc[t] + wt
+        big_s0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+        maj = (a & b) ^ (a & c) ^ (b & c)
+        t2 = big_s0 + maj
+        # Schedule: w[t+16] from the current window.
+        w1 = window[:, 1]
+        w14 = window[:, 14]
+        s0 = _rotr(w1, 7) ^ _rotr(w1, 18) ^ (w1 >> np.uint32(3))
+        s1 = _rotr(w14, 17) ^ _rotr(w14, 19) ^ (w14 >> np.uint32(10))
+        nxt = window[:, 0] + s0 + window[:, 9] + s1
+        window = jnp.concatenate([window[:, 1:], nxt[:, None]], axis=1)
+        # (a, b, c, d, e, f, g, h) after the round:
+        return (t1 + t2, a, b, c, d + t1, e, f, g, window)
+
+    init = tuple(h[:, i] for i in range(8)) + (w,)
+    a, b, c, d, e, f, g, hh, _ = jax.lax.fori_loop(0, 64, round_body, init)
+    out = jnp.stack([a, b, c, d, e, f, g, hh], axis=-1)
+    return h + out
+
+
+def _compress_kernel(k_ref, h_ref, w_ref, o_ref):
+    """Pallas kernel body: one compression per lane of the tile."""
+    o_ref[...] = _compress_rounds(h_ref[...], w_ref[...], k_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("lane_tile",))
+def pallas_compress(
+    h: jnp.ndarray,
+    w: jnp.ndarray,
+    lane_tile: int = LANE_TILE,
+    kc: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Batched SHA-256 compression via the Pallas kernel.
+
+    h: uint32[lanes, 8], w: uint32[lanes, 16] -> uint32[lanes, 8].
+    ``lanes`` must be a multiple of ``lane_tile``. ``kc`` is the round
+    constant table (uint32[64]); it defaults to the trace-time table but
+    the AOT path passes it through as a runtime argument (see k_table).
+    """
+    if kc is None:
+        kc = k_table()
+    lanes = h.shape[0]
+    assert lanes % lane_tile == 0, f"lanes {lanes} % tile {lane_tile} != 0"
+    grid = (lanes // lane_tile,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((64,), lambda i: (0,)),
+            pl.BlockSpec((lane_tile, 8), lambda i: (i, 0)),
+            pl.BlockSpec((lane_tile, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((lane_tile, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, 8), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(kc.astype(jnp.uint32), h.astype(jnp.uint32), w.astype(jnp.uint32))
+
+
+def iv_for(lanes: int) -> jnp.ndarray:
+    """Broadcast initial state for a lane batch."""
+    return jnp.broadcast_to(jnp.asarray(IV, dtype=jnp.uint32), (lanes, 8))

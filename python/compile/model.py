@@ -1,0 +1,82 @@
+"""L2 — the JAX compute graph: batched multi-block SHA-256.
+
+The rust coordinator's unit of hashing work is a **chunk batch**: a dense
+``uint32[lanes, 65, 16]`` tensor (one 4 KiB chunk per lane, pre-padded on
+the rust side to the fixed 65-block message — see hash/engine.rs).  This
+module folds the 65 blocks with ``lax.scan``, each step calling the L1
+Pallas compression kernel, producing one ``uint32[lanes, 8]`` digest row
+per lane.
+
+Design choices (perf pass, DESIGN.md §8):
+ * ``scan`` over the block axis rather than a Python loop: one compiled
+   body instead of 65 inlined compressions keeps the HLO small and lets
+   XLA pipeline the per-step loads;
+ * blocks are transposed to ``[65, lanes, 16]`` once so each scan step
+   reads a contiguous slice;
+ * the state is donated through the scan carry — no per-step allocation.
+
+``aot.py`` lowers ``hash_chunks`` at several fixed lane counts to HLO
+text; the rust runtime picks the variant that fits the batch and pads the
+tail.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sha256_kernel import iv_for, pallas_compress
+from .kernels.ref import BLOCKS_PER_CHUNK, compress_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def hash_chunks(
+    blocks: jnp.ndarray,
+    kc: jnp.ndarray | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Hash a chunk batch.
+
+    blocks: uint32[lanes, 65, 16] — pre-padded chunk messages.
+    kc: uint32[64] round-constant table; `None` uses the trace-time
+    constant (test path). The AOT artifact takes it as a parameter so the
+    HLO-text interchange never elides it (see kernels.sha256_kernel.k_table).
+    Returns uint32[lanes, 8] — one digest (as big-endian words) per lane.
+    """
+    lanes, nblocks, words = blocks.shape
+    assert nblocks == BLOCKS_PER_CHUNK and words == 16, blocks.shape
+    # [65, lanes, 16]: contiguous per-step slices for the scan.
+    seq = jnp.transpose(blocks.astype(jnp.uint32), (1, 0, 2))
+
+    def step(h, w):
+        if use_pallas:
+            return pallas_compress(h, w, kc=kc), None
+        return compress_ref(h, w), None
+
+    h0 = iv_for(lanes)
+    h_final, _ = jax.lax.scan(step, h0, seq)
+    return h_final
+
+
+def hash_chunks_ref(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Reference path (pure jnp, no Pallas) for A/B tests."""
+    return hash_chunks(blocks, use_pallas=False)
+
+
+def build_fn(lanes: int):
+    """A concrete-shape entry point for AOT lowering.
+
+    Signature: ``fn(blocks, kc) -> (digests,)`` — the round-constant
+    table is a runtime parameter (HLO text elides large constants; see
+    kernels.sha256_kernel.k_table).
+    """
+
+    def fn(blocks, kc):
+        # return_tuple lowering expects a tuple result.
+        return (hash_chunks(blocks, kc=kc),)
+
+    blocks_spec = jax.ShapeDtypeStruct((lanes, BLOCKS_PER_CHUNK, 16), jnp.uint32)
+    kc_spec = jax.ShapeDtypeStruct((64,), jnp.uint32)
+    return fn, (blocks_spec, kc_spec)

@@ -1,0 +1,182 @@
+"""Correctness of the L1 Pallas kernel and L2 graph.
+
+Three-way agreement is required:
+  hashlib (independent oracle)
+    == ref.py (pure jnp)
+    == sha256_kernel.py (Pallas, interpret mode)
+    == model.hash_chunks (scan + Pallas)
+plus cross-language vectors shared with the rust implementation.
+"""
+
+import hashlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sha256_kernel import LANE_TILE, iv_for, pallas_compress
+from compile.model import build_fn, hash_chunks, hash_chunks_ref
+
+
+# ---------------------------------------------------------------------------
+# ref.py vs hashlib
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "data",
+    [b"", b"abc", b"a" * 55, b"a" * 56, b"a" * 64, b"a" * 65, bytes(range(256)) * 7],
+    ids=["empty", "abc", "len55", "len56", "len64", "len65", "1792B"],
+)
+def test_ref_matches_hashlib(data):
+    assert ref.sha256_ref(data) == hashlib.sha256(data).hexdigest()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=512))
+def test_ref_matches_hashlib_random(data):
+    assert ref.sha256_ref(data) == hashlib.sha256(data).hexdigest()
+
+
+def test_nist_vector():
+    assert (
+        ref.sha256_ref(b"abc")
+        == "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunk geometry — must mirror rust hash/engine.rs exactly
+# ---------------------------------------------------------------------------
+
+
+def chunk_oracle(chunk: bytes) -> str:
+    msg = chunk + bytes(4096 - len(chunk)) + len(chunk).to_bytes(8, "little")
+    return hashlib.sha256(msg).hexdigest()
+
+
+def test_chunk_message_is_65_blocks():
+    blocks = ref.chunk_message_blocks(b"xyz")
+    assert blocks.shape == (65, 16)
+    assert blocks.dtype == np.uint32
+
+
+def test_cross_language_chunk_vectors():
+    # The same constants are asserted in rust/src/hash/engine.rs tests.
+    assert (
+        ref.chunk_digest_ref(b"abc")
+        == "9a40a5edc5fd6afe85c86c7e9d4a517b670b2d0147b680a5f0b4654154195f12"
+    )
+    assert (
+        ref.chunk_digest_ref(b"")
+        == "4f2cfec1c5dc3827cdeb42906713b37cae91e009aa0e2d211c376ccb9969b3ea"
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=0, max_size=4096))
+def test_chunk_digest_matches_oracle(chunk):
+    assert ref.chunk_digest_ref(chunk) == chunk_oracle(chunk)
+
+
+def test_oversized_chunk_rejected():
+    with pytest.raises(AssertionError):
+        ref.chunk_message_blocks(bytes(4097))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lanes", [LANE_TILE, 2 * LANE_TILE, 8 * LANE_TILE])
+def test_pallas_compress_matches_ref(lanes):
+    rng = np.random.RandomState(42 + lanes)
+    h = rng.randint(0, 2**32, size=(lanes, 8), dtype=np.uint64).astype(np.uint32)
+    w = rng.randint(0, 2**32, size=(lanes, 16), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(pallas_compress(jnp.asarray(h), jnp.asarray(w)))
+    want = np.asarray(ref.compress_ref(jnp.asarray(h), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**32 - 1),
+    st.integers(min_value=1, max_value=4),
+)
+def test_pallas_compress_hypothesis(seed, tiles):
+    lanes = tiles * LANE_TILE
+    rng = np.random.RandomState(seed % (2**31))
+    h = rng.randint(0, 2**32, size=(lanes, 8), dtype=np.uint64).astype(np.uint32)
+    w = rng.randint(0, 2**32, size=(lanes, 16), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(pallas_compress(jnp.asarray(h), jnp.asarray(w)))
+    want = np.asarray(ref.compress_ref(jnp.asarray(h), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_rejects_ragged_lanes():
+    h = jnp.zeros((LANE_TILE + 1, 8), dtype=jnp.uint32)
+    w = jnp.zeros((LANE_TILE + 1, 16), dtype=jnp.uint32)
+    with pytest.raises(AssertionError):
+        pallas_compress(h, w)
+
+
+def test_iv_broadcast():
+    h = np.asarray(iv_for(4))
+    assert h.shape == (4, 8)
+    assert h[0, 0] == 0x6A09E667
+    assert (h[0] == h[3]).all()
+
+
+# ---------------------------------------------------------------------------
+# L2 graph vs hashlib (whole pipeline)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lanes", [8, 64])
+def test_hash_chunks_matches_hashlib(lanes):
+    rng = np.random.RandomState(lanes)
+    chunks = []
+    for i in range(lanes):
+        n = int(rng.randint(0, 4097))
+        chunks.append(rng.bytes(n))
+    blocks = np.stack([ref.chunk_message_blocks(c) for c in chunks])
+    out = np.asarray(hash_chunks(jnp.asarray(blocks)))
+    for i, chunk in enumerate(chunks):
+        assert out[i].astype(">u4").tobytes().hex() == chunk_oracle(chunk), f"lane {i}"
+
+
+def test_hash_chunks_pallas_equals_ref_path():
+    rng = np.random.RandomState(7)
+    blocks = rng.randint(
+        0, 2**32, size=(8, ref.BLOCKS_PER_CHUNK, 16), dtype=np.uint64
+    ).astype(np.uint32)
+    a = np.asarray(hash_chunks(jnp.asarray(blocks)))
+    b = np.asarray(hash_chunks_ref(jnp.asarray(blocks)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_build_fn_shapes():
+    fn, (blocks_spec, kc_spec) = build_fn(8)
+    assert blocks_spec.shape == (8, ref.BLOCKS_PER_CHUNK, 16)
+    assert kc_spec.shape == (64,)
+    blocks = np.zeros(blocks_spec.shape, dtype=np.uint32)
+    (out,) = fn(jnp.asarray(blocks), jnp.asarray(ref.K))
+    assert out.shape == (8, 8)
+    assert out.dtype == jnp.uint32
+
+
+def test_lanes_are_independent():
+    # Changing one lane's chunk must not affect any other lane's digest.
+    base = np.stack([ref.chunk_message_blocks(b"lane%d" % i) for i in range(8)])
+    out1 = np.asarray(hash_chunks(jnp.asarray(base)))
+    changed = base.copy()
+    changed[3] = ref.chunk_message_blocks(b"mutated!")
+    out2 = np.asarray(hash_chunks(jnp.asarray(changed)))
+    for i in range(8):
+        if i == 3:
+            assert not (out1[i] == out2[i]).all()
+        else:
+            np.testing.assert_array_equal(out1[i], out2[i])

@@ -1,0 +1,53 @@
+//! Shared bench plumbing (no criterion in this environment; benches are
+//! `harness = false` binaries).
+
+use layerjet::bench::{run_scenario_experiment, ScenarioExperiment};
+use layerjet::builder::CostModel;
+use layerjet::inject::InjectMode;
+use layerjet::workload::ScenarioKind;
+
+/// Trials per scenario: `LAYERJET_TRIALS` env or the default.
+pub fn trials(default: usize) -> usize {
+    std::env::var("LAYERJET_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Bench workspace root (wiped per run).
+pub fn bench_root(name: &str) -> std::path::PathBuf {
+    let root = std::env::temp_dir().join(format!("layerjet-bench-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+/// Run all four scenarios with the default cost model.
+pub fn run_all_scenarios(name: &str, n: usize, seed: u64) -> Vec<ScenarioExperiment> {
+    let root = bench_root(name);
+    let mut out = Vec::new();
+    for kind in ScenarioKind::ALL {
+        eprint!("[{}] scenario {} ({}): {} trials ... ", name, kind.number(), kind.name(), n);
+        let t0 = std::time::Instant::now();
+        let exp = run_scenario_experiment(
+            kind,
+            n,
+            &root.join(kind.name()),
+            CostModel::default(),
+            InjectMode::Implicit,
+            seed,
+        )
+        .expect("scenario experiment failed");
+        eprintln!("{:.1}s", t0.elapsed().as_secs_f64());
+        out.push(exp);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    out
+}
+
+/// Write a CSV into bench_results/.
+pub fn write_csv(file: &str, contents: &str) {
+    std::fs::create_dir_all("bench_results").ok();
+    let path = format!("bench_results/{file}");
+    std::fs::write(&path, contents).expect("write csv");
+    eprintln!("wrote {path}");
+}

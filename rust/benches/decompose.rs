@@ -1,0 +1,67 @@
+//! **E8 / §III.A** — explicit vs implicit decomposition.
+//!
+//! "Removing an intermediate stage, decomposing implicitly is much
+//! faster than explicitly, as the experiment shows below."
+//!
+//! `cargo bench --bench decompose`
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::bench::run_scenario_experiment;
+use layerjet::builder::CostModel;
+use layerjet::inject::InjectMode;
+use layerjet::stats::summarize;
+use layerjet::workload::ScenarioKind;
+
+fn main() {
+    let n = common::trials(20);
+    let root = common::bench_root("decompose");
+    let mut table = Table::new(
+        &format!("§III.A — explicit vs implicit decomposition ({n} trials)"),
+        &["scenario", "implicit mean", "explicit mean", "explicit/implicit"],
+    );
+    let mut csv = String::from("scenario,mode,mean_s,std_s,n\n");
+    for kind in [ScenarioKind::PythonTiny, ScenarioKind::PythonLarge] {
+        let implicit = run_scenario_experiment(
+            kind,
+            n,
+            &root.join(format!("{}-imp", kind.name())),
+            CostModel::default(),
+            InjectMode::Implicit,
+            7,
+        )
+        .expect("implicit run");
+        let explicit = run_scenario_experiment(
+            kind,
+            n,
+            &root.join(format!("{}-exp", kind.name())),
+            CostModel::default(),
+            InjectMode::Explicit,
+            7,
+        )
+        .expect("explicit run");
+        let si = summarize(&implicit.proposed);
+        let se = summarize(&explicit.proposed);
+        table.row(vec![
+            kind.name().into(),
+            fmt_secs(si.mean),
+            fmt_secs(se.mean),
+            format!("{:.1}x", se.mean / si.mean.max(1e-12)),
+        ]);
+        csv.push_str(&format!("{},implicit,{:.6},{:.6},{}\n", kind.name(), si.mean, si.std, si.n));
+        csv.push_str(&format!("{},explicit,{:.6},{:.6},{}\n", kind.name(), se.mean, se.std, se.n));
+
+        assert!(
+            se.mean > si.mean,
+            "{}: explicit ({}) must be slower than implicit ({})",
+            kind.name(),
+            se.mean,
+            si.mean
+        );
+    }
+    table.print();
+    common::write_csv("decompose_explicit_vs_implicit.csv", &csv);
+    let _ = std::fs::remove_dir_all(&root);
+    eprintln!("decompose shape check OK (implicit faster, as §III.A claims)");
+}

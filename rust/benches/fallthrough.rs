@@ -1,0 +1,138 @@
+//! **E5 / Fig. 2 + §II.C** — layer fall-through.
+//!
+//! Part A reproduces Fig. 2: on the python-large project, a change in
+//! step 2 (COPY) forces steps 4+ (apt, conda) to rebuild even though
+//! they do not depend on the edit; the per-step breakdown shows where
+//! the time goes and that the rebuilt RUN layers are byte-identical to
+//! the cached ones (pure waste).
+//!
+//! Part B sweeps fall-through *depth*: k RUN layers stacked behind the
+//! COPY; Docker's rebuild grows with k, injection stays flat.
+//!
+//! `cargo bench --bench fallthrough`
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::builder::CostModel;
+use layerjet::daemon::Daemon;
+use layerjet::workload::{Scenario, ScenarioKind};
+
+fn main() {
+    part_a_fig2();
+    part_b_depth_sweep();
+}
+
+fn part_a_fig2() {
+    let root = common::bench_root("fallthrough-a");
+    let mut daemon = Daemon::new(&root.join("daemon")).unwrap();
+    daemon.cost = CostModel::default();
+    let mut scenario = Scenario::generate(ScenarioKind::PythonLarge, &root.join("p"), 5).unwrap();
+    let first = daemon.build(&scenario.dir, "large:latest").unwrap();
+
+    scenario.revise().unwrap();
+    let rebuild = daemon.build(&scenario.dir, "large:latest").unwrap();
+
+    let mut table = Table::new(
+        "Fig. 2 — change at step 2 falls through to steps 3..n",
+        &["step", "instruction", "cache", "reason", "time", "identical to v0?"],
+    );
+    for (i, step) in rebuild.steps.iter().enumerate() {
+        let identical = first.steps[i].checksum == step.checksum;
+        table.row(vec![
+            format!("{}/{}", step.step, rebuild.steps.len()),
+            step.instruction.chars().take(44).collect(),
+            if step.cached { "hit".into() } else { "MISS".into() },
+            step.miss_reason
+                .as_ref()
+                .map(|r| r.to_string())
+                .unwrap_or_default(),
+            fmt_secs(step.duration.as_secs_f64()),
+            if identical { "yes".into() } else { "no".into() },
+        ]);
+    }
+    table.print();
+
+    // The apt/conda layers fell through AND produced identical bytes.
+    let apt = rebuild.steps.iter().find(|s| s.instruction.contains("apt update")).unwrap();
+    let conda = rebuild.steps.iter().find(|s| s.instruction.contains("conda env update")).unwrap();
+    assert!(!apt.cached && !conda.cached, "fall-through must rebuild RUN layers");
+    assert_eq!(
+        apt.checksum,
+        first.steps.iter().find(|s| s.instruction.contains("apt update")).unwrap().checksum,
+        "rebuilt apt layer is byte-identical — wasted work"
+    );
+    let wasted: f64 = [apt, conda].iter().map(|s| s.duration.as_secs_f64()).sum();
+    eprintln!(
+        "fall-through wasted {} rebuilding identical layers ({}% of the rebuild)\n",
+        fmt_secs(wasted),
+        (100.0 * wasted / rebuild.duration.as_secs_f64()) as u32
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+fn part_b_depth_sweep() {
+    let n = common::trials(5);
+    let root = common::bench_root("fallthrough-b");
+    let mut table = Table::new(
+        &format!("§II.C — fall-through depth sweep ({n} trials/point)"),
+        &["RUN layers behind COPY", "docker mean", "inject mean", "speedup"],
+    );
+    let mut csv = String::from("depth,docker_mean_s,inject_mean_s\n");
+    let mut prev_docker = 0.0;
+    for depth in [0usize, 1, 2, 4, 8] {
+        let case = root.join(format!("d{depth}"));
+        let project = case.join("project");
+        std::fs::create_dir_all(&project).unwrap();
+        let mut df = String::from("FROM python:alpine\nCOPY . /app/\n");
+        for i in 0..depth {
+            // Distinct pip packages per layer: each fall-through layer
+            // redownloads and regenerates its content.
+            df.push_str(&format!("RUN pip install pkg{i}a pkg{i}b\n"));
+        }
+        df.push_str("CMD [\"python\", \"app/main.py\"]\n");
+        std::fs::write(project.join("Dockerfile"), df).unwrap();
+        std::fs::write(project.join("main.py"), "print('v0')\n").unwrap();
+
+        let mut daemon_d = Daemon::new(&case.join("docker")).unwrap();
+        let mut daemon_i = Daemon::new(&case.join("inject")).unwrap();
+        daemon_d.cost = CostModel::default();
+        daemon_i.cost = CostModel::default();
+        daemon_d.build(&project, "depth:latest").unwrap();
+        daemon_i.build(&project, "depth:latest").unwrap();
+
+        let mut docker = Vec::new();
+        let mut inject = Vec::new();
+        for t in 0..n {
+            let mut main = std::fs::read_to_string(project.join("main.py")).unwrap();
+            main.push_str(&format!("print('edit {t}')\n"));
+            std::fs::write(project.join("main.py"), main).unwrap();
+            let t0 = std::time::Instant::now();
+            daemon_d.build(&project, "depth:latest").unwrap();
+            docker.push(t0.elapsed().as_secs_f64());
+            let t0 = std::time::Instant::now();
+            daemon_i.inject(&project, "depth:latest", "depth:latest").unwrap();
+            inject.push(t0.elapsed().as_secs_f64());
+        }
+        let d = layerjet::stats::summarize(&docker);
+        let p = layerjet::stats::summarize(&inject);
+        table.row(vec![
+            depth.to_string(),
+            fmt_secs(d.mean),
+            fmt_secs(p.mean),
+            format!("{:.1}x", d.mean / p.mean.max(1e-12)),
+        ]);
+        csv.push_str(&format!("{},{:.6},{:.6}\n", depth, d.mean, p.mean));
+        if depth >= 2 {
+            assert!(
+                d.mean > prev_docker,
+                "docker rebuild must grow with fall-through depth"
+            );
+        }
+        prev_docker = d.mean;
+    }
+    table.print();
+    common::write_csv("fallthrough_depth.csv", &csv);
+    let _ = std::fs::remove_dir_all(&root);
+    eprintln!("fallthrough depth sweep OK (docker grows with depth, inject flat)");
+}

@@ -1,0 +1,58 @@
+//! **E1 / Fig. 5** — image rebuild time mean ± std, four scenarios,
+//! Docker method vs proposed method.
+//!
+//! `cargo bench --bench fig5_rebuild_times` (set `LAYERJET_TRIALS` to
+//! override the trial count; the paper uses 100).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+
+fn main() {
+    let n = common::trials(30);
+    let experiments = common::run_all_scenarios("fig5", n, 42);
+
+    let mut table = Table::new(
+        &format!("Fig. 5 — Image rebuild time, mean ± std ({n} trials)"),
+        &["scenario", "docker mean", "docker std", "proposed mean", "proposed std", "docker/proposed"],
+    );
+    let mut csv = String::from("scenario,method,mean_s,std_s,min_s,max_s,n\n");
+    for exp in &experiments {
+        let d = exp.docker_summary();
+        let p = exp.proposed_summary();
+        table.row(vec![
+            format!("{} ({})", exp.kind.number(), exp.kind.name()),
+            fmt_secs(d.mean),
+            fmt_secs(d.std),
+            fmt_secs(p.mean),
+            fmt_secs(p.std),
+            format!("{:.1}x", d.mean / p.mean.max(1e-12)),
+        ]);
+        for (method, s) in [("docker", d), ("proposed", p)] {
+            csv.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{}\n",
+                exp.kind.name(),
+                method,
+                s.mean,
+                s.std,
+                s.min,
+                s.max,
+                s.n
+            ));
+        }
+    }
+    table.print();
+    common::write_csv("fig5_rebuild_times.csv", &csv);
+
+    // Shape assertions (the paper's qualitative result).
+    let mean = |i: usize| experiments[i].speedup_summary().mean;
+    assert!(mean(0) > 5.0, "scenario 1 must clearly win: {}", mean(0));
+    assert!(mean(1) > 20.0, "scenario 2 must win big: {}", mean(1));
+    assert!(mean(2) > 2.0, "scenario 3 must win: {}", mean(2));
+    assert!(
+        mean(3) > 0.4 && mean(3) < 3.0,
+        "scenario 4 must be a wash: {}",
+        mean(3)
+    );
+    eprintln!("fig5 shape checks OK");
+}

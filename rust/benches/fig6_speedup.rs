@@ -1,0 +1,48 @@
+//! **E2 / Fig. 6** — how many times faster the proposed method is than
+//! the Docker method, per scenario (paired per trial).
+//!
+//! `cargo bench --bench fig6_speedup`
+
+mod common;
+
+use layerjet::bench::report::{fmt_speedup, Table};
+use layerjet::stats::percentile;
+
+fn main() {
+    let n = common::trials(30);
+    let experiments = common::run_all_scenarios("fig6", n, 43);
+
+    let mut table = Table::new(
+        &format!("Fig. 6 — Proposed method, times faster than Docker ({n} trials)"),
+        &["scenario", "mean", "std", "p10", "median", "p90", "max"],
+    );
+    let mut csv = String::from("scenario,trial,speedup\n");
+    for exp in &experiments {
+        let s = exp.speedup_summary();
+        table.row(vec![
+            format!("{} ({})", exp.kind.number(), exp.kind.name()),
+            fmt_speedup(s.mean),
+            fmt_speedup(s.std),
+            fmt_speedup(percentile(&exp.speedup, 10.0)),
+            fmt_speedup(percentile(&exp.speedup, 50.0)),
+            fmt_speedup(percentile(&exp.speedup, 90.0)),
+            fmt_speedup(s.max),
+        ]);
+        for (i, x) in exp.speedup.iter().enumerate() {
+            csv.push_str(&format!("{},{},{:.4}\n", exp.kind.name(), i, x));
+        }
+    }
+    table.print();
+    common::write_csv("fig6_speedup.csv", &csv);
+
+    // Ordering shape: interpreted scenarios dominate; compiled-complex ~1x.
+    let mean = |i: usize| experiments[i].speedup_summary().mean;
+    assert!(
+        mean(1) > mean(2) && mean(2) > mean(3),
+        "expected s2 > s3 > s4 ordering: {} {} {}",
+        mean(1),
+        mean(2),
+        mean(3)
+    );
+    eprintln!("fig6 shape checks OK");
+}

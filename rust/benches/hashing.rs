@@ -1,0 +1,122 @@
+//! **E10 / §Perf** — hashing ablation: the checksum machinery that both
+//! Docker's integrity test and the §III.B bypass depend on.
+//!
+//! * native streaming SHA-256 vs the batched AOT/PJRT engine, across
+//!   buffer sizes (the L1/L3 perf story);
+//! * full re-hash vs incremental chunk-digest update for a 1-chunk edit
+//!   (the O(n) → O(change) mechanism inside the injector).
+//!
+//! `cargo bench --bench hashing`
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::bench::time_trials;
+use layerjet::hash::{ChunkDigest, Digest, HashEngine, NativeEngine, CHUNK_SIZE};
+use layerjet::runtime::PjrtEngine;
+use layerjet::stats::summarize;
+use layerjet::util::prng::Prng;
+
+fn main() {
+    let n = common::trials(10);
+    let pjrt = PjrtEngine::load_default();
+    if pjrt.is_err() {
+        eprintln!("NOTE: PJRT artifacts missing (run `make artifacts`); engine rows limited to native");
+    }
+
+    // --- engine comparison ---------------------------------------------------
+    let mut table = Table::new(
+        &format!("hash engines: chunked digest over a buffer ({n} trials)"),
+        &["buffer", "native", "pjrt-xla", "native/pjrt", "sequential sha256"],
+    );
+    let mut csv = String::from("buffer_bytes,native_s,pjrt_s,sequential_s\n");
+    for mib in [0.25f64, 1.0, 4.0, 16.0] {
+        let bytes = (mib * 1048576.0) as usize;
+        let mut rng = Prng::new(bytes as u64);
+        let mut data = vec![0u8; bytes];
+        rng.fill_bytes(&mut data);
+
+        let native = NativeEngine::new();
+        let tn = summarize(&time_trials(1, n, |_| {
+            let _ = ChunkDigest::compute(&data, &native);
+        }));
+        let tp = pjrt.as_ref().ok().map(|engine| {
+            summarize(&time_trials(1, n, |_| {
+                let _ = ChunkDigest::compute(&data, engine);
+            }))
+        });
+        let ts = summarize(&time_trials(1, n, |_| {
+            let _ = Digest::of(&data);
+        }));
+        table.row(vec![
+            format!("{mib} MiB"),
+            fmt_secs(tn.mean),
+            tp.as_ref().map(|t| fmt_secs(t.mean)).unwrap_or_else(|| "-".into()),
+            tp.as_ref()
+                .map(|t| format!("{:.2}x", tn.mean / t.mean.max(1e-12)))
+                .unwrap_or_else(|| "-".into()),
+            fmt_secs(ts.mean),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.6},{:.6},{:.6}\n",
+            bytes,
+            tn.mean,
+            tp.as_ref().map(|t| t.mean).unwrap_or(f64::NAN),
+            ts.mean
+        ));
+    }
+    table.print();
+    common::write_csv("hashing_engines.csv", &csv);
+
+    // --- incremental vs full rehash -------------------------------------------
+    let mut table = Table::new(
+        &format!("incremental chunk-digest update vs full rehash, 1-chunk edit ({n} trials)"),
+        &["buffer", "full rehash", "incremental", "speedup", "chunks rehashed"],
+    );
+    let mut csv = String::from("buffer_bytes,full_s,incremental_s,chunks_rehashed,chunks_total\n");
+    let native = NativeEngine::new();
+    for mib in [1.0f64, 4.0, 16.0, 64.0] {
+        let bytes = (mib * 1048576.0) as usize;
+        let mut rng = Prng::new(7 + bytes as u64);
+        let mut data = vec![0u8; bytes];
+        rng.fill_bytes(&mut data);
+        let cd = ChunkDigest::compute(&data, &native);
+
+        // Edit one byte in the middle (stays within one chunk).
+        let at = (bytes / 2 / CHUNK_SIZE) * CHUNK_SIZE + 17;
+        data[at] ^= 0x55;
+        let edit = vec![(at as u64)..(at as u64 + 1)];
+
+        let tf = summarize(&time_trials(1, n, |_| {
+            let _ = ChunkDigest::compute(&data, &native);
+        }));
+        let mut rehashed = 0;
+        let ti = summarize(&time_trials(1, n, |_| {
+            let (_, r) = cd.update(&data, &edit, &native);
+            rehashed = r;
+        }));
+        table.row(vec![
+            format!("{mib} MiB"),
+            fmt_secs(tf.mean),
+            fmt_secs(ti.mean),
+            format!("{:.0}x", tf.mean / ti.mean.max(1e-12)),
+            format!("{}/{}", rehashed, cd.chunks.len()),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.6},{:.6},{},{}\n",
+            bytes,
+            tf.mean,
+            ti.mean,
+            rehashed,
+            cd.chunks.len()
+        ));
+        assert_eq!(rehashed, 1, "a 1-byte edit must rehash exactly 1 chunk");
+        assert!(
+            tf.mean / ti.mean > 10.0,
+            "incremental must be >>1 order faster at {mib} MiB"
+        );
+    }
+    table.print();
+    common::write_csv("hashing_incremental.csv", &csv);
+    eprintln!("hashing ablation OK");
+}

@@ -1,0 +1,111 @@
+//! **E9 / §II.B** — rebuild cost vs layer size: Docker's rebuild is
+//! O(layer size) while injection is O(change size) ("effectively
+//! reducing the O(n), n = size of layer, rebuild time to O(1)").
+//!
+//! Sweeps the COPY payload from 512 KiB to 16 MiB with a constant
+//! one-line edit and reports both times plus the chunk-rehash counts
+//! that explain them.
+//!
+//! `cargo bench --bench layer_scaling`
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::builder::CostModel;
+use layerjet::daemon::Daemon;
+use layerjet::stats::summarize;
+use layerjet::util::prng::Prng;
+
+fn main() {
+    let n = common::trials(10);
+    let root = common::bench_root("scaling");
+    let sizes_mib = [0.5f64, 1.0, 2.0, 4.0, 8.0, 16.0];
+
+    let mut table = Table::new(
+        &format!("§II.B — rebuild cost vs COPY layer size ({n} trials/point, 1-line edit)"),
+        &["payload", "docker mean", "inject mean", "speedup", "chunks rehashed/total"],
+    );
+    let mut csv = String::from("payload_mib,docker_mean_s,inject_mean_s,speedup,chunks_rehashed,chunks_total\n");
+
+    let mut prev_docker = 0.0;
+    for (i, mib) in sizes_mib.iter().enumerate() {
+        let bytes = (mib * 1048576.0) as usize;
+        let case_root = root.join(format!("case-{i}"));
+        let project = case_root.join("project");
+        std::fs::create_dir_all(&project).unwrap();
+        std::fs::write(
+            project.join("Dockerfile"),
+            "FROM python:alpine\nCOPY . /app/\nCMD [\"python\", \"app/main.py\"]\n",
+        )
+        .unwrap();
+        // Payload: one big generated asset + the editable script.
+        let mut rng = Prng::new(1000 + i as u64);
+        let mut blob = vec![0u8; bytes];
+        rng.fill_bytes(&mut blob);
+        std::fs::write(project.join("assets.bin"), &blob).unwrap();
+        std::fs::write(project.join("main.py"), "print('v0')\n").unwrap();
+
+        let mut daemon_d = Daemon::new(&case_root.join("docker")).unwrap();
+        let mut daemon_i = Daemon::new(&case_root.join("inject")).unwrap();
+        daemon_d.cost = CostModel::default();
+        daemon_i.cost = CostModel::default();
+        daemon_d.build(&project, "scale:latest").unwrap();
+        daemon_i.build(&project, "scale:latest").unwrap();
+
+        let mut docker = Vec::new();
+        let mut inject = Vec::new();
+        let (mut rehashed, mut total) = (0usize, 0usize);
+        for t in 0..n {
+            let mut main = std::fs::read_to_string(project.join("main.py")).unwrap();
+            main.push_str(&format!("print('edit {t}')\n"));
+            std::fs::write(project.join("main.py"), main).unwrap();
+
+            let t0 = std::time::Instant::now();
+            daemon_d.build(&project, "scale:latest").unwrap();
+            docker.push(t0.elapsed().as_secs_f64());
+
+            let t0 = std::time::Instant::now();
+            let r = daemon_i.inject(&project, "scale:latest", "scale:latest").unwrap();
+            inject.push(t0.elapsed().as_secs_f64());
+            rehashed = r.patched[0].chunks_rehashed;
+            total = r.patched[0].chunks_total;
+        }
+        let d = summarize(&docker);
+        let p = summarize(&inject);
+        table.row(vec![
+            format!("{mib} MiB"),
+            fmt_secs(d.mean),
+            fmt_secs(p.mean),
+            format!("{:.1}x", d.mean / p.mean.max(1e-12)),
+            format!("{rehashed}/{total}"),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.6},{:.6},{:.2},{},{}\n",
+            mib,
+            d.mean,
+            p.mean,
+            d.mean / p.mean.max(1e-12),
+            rehashed,
+            total
+        ));
+
+        // Shape: docker grows with payload; rehash count stays a small
+        // fraction of the chunk count.
+        if i > 1 {
+            assert!(
+                d.mean > prev_docker * 0.9,
+                "docker time should not shrink as layers grow"
+            );
+        }
+        assert!(
+            rehashed * 4 < total.max(4),
+            "inject must rehash a small fraction: {rehashed}/{total}"
+        );
+        prev_docker = d.mean;
+    }
+    table.print();
+    common::write_csv("layer_scaling.csv", &csv);
+
+    let _ = std::fs::remove_dir_all(&root);
+    eprintln!("layer_scaling shape checks OK (O(n) docker vs O(change) inject)");
+}

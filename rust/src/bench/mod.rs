@@ -1,0 +1,54 @@
+//! Benchmark harness: trial runner, experiment driver, and paper-style
+//! report tables. (The environment has no `criterion`; benches are
+//! `harness = false` binaries built on this module.)
+
+pub mod experiment;
+pub mod report;
+
+pub use experiment::{images_content_equal, run_scenario_experiment, ScenarioExperiment};
+pub use report::Table;
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once.
+pub fn time_once<T>(mut f: impl FnMut() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `trials` timed iterations (after `warmup` untimed ones) of a
+/// closure that receives the trial index. Returns seconds per trial.
+pub fn time_trials(warmup: usize, trials: usize, mut f: impl FnMut(usize)) -> Vec<f64> {
+    for i in 0..warmup {
+        f(i);
+    }
+    (0..trials)
+        .map(|i| {
+            let t0 = Instant::now();
+            f(warmup + i);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_trials_counts() {
+        let mut calls = 0;
+        let secs = time_trials(2, 5, |_| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(secs.len(), 5);
+        assert!(secs.iter().all(|s| *s >= 0.0));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

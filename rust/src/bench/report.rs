@@ -1,0 +1,139 @@
+//! Plain-text report tables (and CSV) for bench output.
+
+/// A simple aligned table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV form (for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout (render + blank line).
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds adaptively (`1.234s`, `56.7ms`, `890µs`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Format a speedup factor (`123x`, `4.56x`, `0.89x`).
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{:.0}x", x)
+    } else if x >= 10.0 {
+        format!("{:.1}x", x)
+    } else {
+        format!("{:.2}x", x)
+    }
+}
+
+/// Format a P value in scientific notation, as the paper's Table II does.
+pub fn fmt_p(p: f64) -> String {
+    if p == 0.0 {
+        "<1e-300".into()
+    } else if p < 1e-4 {
+        format!("{:.2e}", p)
+    } else {
+        format!("{:.6}", p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer  22"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert_eq!(csv.lines().next().unwrap(), "name,value");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(1.5), "1.500s");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(0.0000456), "45.6µs");
+        assert_eq!(fmt_speedup(123.4), "123x");
+        assert_eq!(fmt_speedup(12.34), "12.3x");
+        assert_eq!(fmt_speedup(0.89), "0.89x");
+        assert_eq!(fmt_p(0.0000026), "2.60e-6");
+        assert_eq!(fmt_p(0.25), "0.250000");
+    }
+}

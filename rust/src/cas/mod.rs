@@ -1,0 +1,277 @@
+//! Content-addressable blob store.
+//!
+//! Layer tarballs and config blobs are stored by their SHA-256 digest
+//! under `<root>/blobs/sha256/<hex>`, which is what makes Docker's
+//! layer *deduplication* (paper §I) work: two images whose layers hash
+//! identically share one blob. Alongside each blob the store caches its
+//! chunk-digest summary (`<hex>.chunks`) so incremental re-hashing never
+//! needs a cold full pass.
+
+use crate::hash::{ChunkDigest, Digest, HashEngine};
+use crate::util::hex;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// On-disk content-addressable store.
+pub struct BlobStore {
+    root: PathBuf,
+}
+
+impl BlobStore {
+    /// Open (creating if necessary) a blob store rooted at `root`.
+    pub fn open(root: &Path) -> Result<BlobStore> {
+        std::fs::create_dir_all(root.join("blobs/sha256"))?;
+        Ok(BlobStore {
+            root: root.to_path_buf(),
+        })
+    }
+
+    fn blob_path(&self, digest: &Digest) -> PathBuf {
+        self.root.join("blobs/sha256").join(digest.to_hex())
+    }
+
+    fn chunks_path(&self, digest: &Digest) -> PathBuf {
+        self.root
+            .join("blobs/sha256")
+            .join(format!("{}.chunks", digest.to_hex()))
+    }
+
+    /// Store a blob; returns its digest. Idempotent (dedup by content).
+    pub fn put(&self, data: &[u8]) -> Result<Digest> {
+        let digest = Digest::of(data);
+        let path = self.blob_path(&digest);
+        if !path.exists() {
+            // Write-then-rename for atomicity.
+            let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+            std::fs::write(&tmp, data)?;
+            std::fs::rename(&tmp, &path)?;
+        }
+        Ok(digest)
+    }
+
+    /// Store a blob together with its chunk-digest sidecar.
+    pub fn put_with_chunks(&self, data: &[u8], engine: &dyn HashEngine) -> Result<(Digest, ChunkDigest)> {
+        let digest = self.put(data)?;
+        let cd = ChunkDigest::compute(data, engine);
+        self.write_chunks(&digest, &cd)?;
+        Ok((digest, cd))
+    }
+
+    /// Fetch a blob's bytes.
+    pub fn get(&self, digest: &Digest) -> Result<Vec<u8>> {
+        std::fs::read(self.blob_path(digest))
+            .map_err(|e| Error::Store(format!("blob {} missing: {}", digest.short(), e)))
+    }
+
+    pub fn has(&self, digest: &Digest) -> bool {
+        self.blob_path(digest).exists()
+    }
+
+    /// Blob size without reading it.
+    pub fn size(&self, digest: &Digest) -> Result<u64> {
+        Ok(std::fs::metadata(self.blob_path(digest))
+            .map_err(|e| Error::Store(format!("blob {} missing: {}", digest.short(), e)))?
+            .len())
+    }
+
+    /// Remove a blob (and its chunk sidecar). No-op if absent.
+    pub fn delete(&self, digest: &Digest) -> Result<()> {
+        let _ = std::fs::remove_file(self.chunks_path(digest));
+        match std::fs::remove_file(self.blob_path(digest)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// All stored blob digests.
+    pub fn list(&self) -> Result<Vec<Digest>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("blobs/sha256"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.len() == 64 {
+                if let Some(d) = Digest::parse(&name) {
+                    out.push(d);
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Load the cached chunk summary, or compute + cache it on miss.
+    pub fn chunk_digest(&self, digest: &Digest, engine: &dyn HashEngine) -> Result<ChunkDigest> {
+        let path = self.chunks_path(digest);
+        if path.exists() {
+            let bytes = std::fs::read(&path)?;
+            if let Some(cd) = Self::decode_chunks(&bytes) {
+                return Ok(cd);
+            }
+            // Corrupt sidecar: fall through and rebuild.
+        }
+        let data = self.get(digest)?;
+        let cd = ChunkDigest::compute(&data, engine);
+        self.write_chunks(digest, &cd)?;
+        Ok(cd)
+    }
+
+    fn write_chunks(&self, digest: &Digest, cd: &ChunkDigest) -> Result<()> {
+        let mut buf = Vec::with_capacity(8 + 32 * cd.chunks.len() + 32);
+        buf.extend_from_slice(&cd.total_len.to_le_bytes());
+        buf.extend_from_slice(&cd.root.0);
+        for c in &cd.chunks {
+            buf.extend_from_slice(&c.0);
+        }
+        std::fs::write(self.chunks_path(digest), buf)?;
+        Ok(())
+    }
+
+    fn decode_chunks(bytes: &[u8]) -> Option<ChunkDigest> {
+        if bytes.len() < 40 || (bytes.len() - 40) % 32 != 0 {
+            return None;
+        }
+        let total_len = u64::from_le_bytes(bytes[..8].try_into().ok()?);
+        let mut root = [0u8; 32];
+        root.copy_from_slice(&bytes[8..40]);
+        let mut chunks = Vec::new();
+        for c in bytes[40..].chunks_exact(32) {
+            let mut d = [0u8; 32];
+            d.copy_from_slice(c);
+            chunks.push(Digest(d));
+        }
+        let cd = ChunkDigest {
+            chunks,
+            total_len,
+            root: Digest(root),
+        };
+        // Integrity: root must match.
+        if ChunkDigest::root_of(&cd.chunks, total_len) != cd.root {
+            return None;
+        }
+        Some(cd)
+    }
+
+    /// Verify a blob's content matches its digest (Docker's integrity
+    /// test — the thing the paper's §III.B bypass must keep consistent).
+    pub fn verify(&self, digest: &Digest) -> Result<bool> {
+        let data = self.get(digest)?;
+        Ok(&Digest::of(&data) == digest)
+    }
+
+    /// Root directory (used by the implicit-decomposition path, which
+    /// patches blobs in place; see `inject::implicit`).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Raw blob path for in-place IO. The caller is responsible for
+    /// keeping digests consistent afterwards (this is precisely what the
+    /// paper's checksum-bypass step does).
+    pub fn raw_blob_path(&self, digest: &Digest) -> PathBuf {
+        self.blob_path(digest)
+    }
+
+    /// Total bytes stored.
+    pub fn disk_usage(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in std::fs::read_dir(self.root.join("blobs/sha256"))? {
+            total += entry?.metadata()?.len();
+        }
+        Ok(total)
+    }
+}
+
+/// Hex-validate helper shared with store code.
+pub fn is_hex64(s: &str) -> bool {
+    s.len() == 64 && hex::decode(s).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+
+    fn store(tag: &str) -> (BlobStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-cas-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (BlobStore::open(&d).unwrap(), d)
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let (s, d) = store("rt");
+        let digest = s.put(b"layer contents").unwrap();
+        assert!(s.has(&digest));
+        assert_eq!(s.get(&digest).unwrap(), b"layer contents");
+        assert_eq!(s.size(&digest).unwrap(), 14);
+        assert!(s.verify(&digest).unwrap());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn put_is_idempotent_dedup() {
+        let (s, d) = store("dedup");
+        let d1 = s.put(b"same").unwrap();
+        let d2 = s.put(b"same").unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(s.list().unwrap().len(), 1);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_blob_errors() {
+        let (s, d) = store("missing");
+        let ghost = Digest::of(b"ghost");
+        assert!(!s.has(&ghost));
+        assert!(s.get(&ghost).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn delete_removes() {
+        let (s, d) = store("del");
+        let digest = s.put(b"bye").unwrap();
+        s.delete(&digest).unwrap();
+        assert!(!s.has(&digest));
+        s.delete(&digest).unwrap(); // idempotent
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn chunk_sidecar_cache() {
+        let (s, d) = store("chunks");
+        let eng = NativeEngine::new();
+        let data = vec![0x42u8; 10_000];
+        let (digest, cd) = s.put_with_chunks(&data, &eng).unwrap();
+        // Cached load must equal fresh compute.
+        let loaded = s.chunk_digest(&digest, &eng).unwrap();
+        assert_eq!(loaded, cd);
+        assert_eq!(loaded, ChunkDigest::compute(&data, &eng));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_sidecar_rebuilt() {
+        let (s, d) = store("corrupt");
+        let eng = NativeEngine::new();
+        let (digest, cd) = s.put_with_chunks(b"hello world", &eng).unwrap();
+        std::fs::write(s.chunks_path(&digest), b"garbage!").unwrap();
+        let loaded = s.chunk_digest(&digest, &eng).unwrap();
+        assert_eq!(loaded, cd);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn list_sorted() {
+        let (s, d) = store("list");
+        let mut digests = vec![
+            s.put(b"a").unwrap(),
+            s.put(b"b").unwrap(),
+            s.put(b"c").unwrap(),
+        ];
+        digests.sort();
+        assert_eq!(s.list().unwrap(), digests);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

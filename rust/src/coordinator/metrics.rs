@@ -1,0 +1,101 @@
+//! Aggregate CI metrics: the throughput/latency numbers the pipeline
+//! experiments report.
+
+use super::BuildOutcome;
+use crate::stats::percentile;
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorMetrics {
+    pub completed: usize,
+    pub failed: usize,
+    /// Requests per second over the whole batch.
+    pub throughput_rps: f64,
+    pub mean_service: Duration,
+    pub p50_service: Duration,
+    pub p95_service: Duration,
+    pub max_service: Duration,
+    pub wall: Duration,
+}
+
+impl CoordinatorMetrics {
+    pub fn from_outcomes(outcomes: &[BuildOutcome], wall: Duration) -> CoordinatorMetrics {
+        let completed = outcomes.iter().filter(|o| o.ok).count();
+        let failed = outcomes.len() - completed;
+        let services: Vec<f64> = outcomes.iter().map(|o| o.service.as_secs_f64()).collect();
+        let (mean, p50, p95, max) = if services.is_empty() {
+            (0.0, 0.0, 0.0, 0.0)
+        } else {
+            (
+                services.iter().sum::<f64>() / services.len() as f64,
+                percentile(&services, 50.0),
+                percentile(&services, 95.0),
+                services.iter().copied().fold(0.0, f64::max),
+            )
+        };
+        CoordinatorMetrics {
+            completed,
+            failed,
+            throughput_rps: if wall.as_secs_f64() > 0.0 {
+                outcomes.len() as f64 / wall.as_secs_f64()
+            } else {
+                0.0
+            },
+            mean_service: Duration::from_secs_f64(mean),
+            p50_service: Duration::from_secs_f64(p50),
+            p95_service: Duration::from_secs_f64(p95),
+            max_service: Duration::from_secs_f64(max),
+            wall,
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ok / {} failed | {:.2} req/s | service mean {} p50 {} p95 {} | wall {}",
+            self.completed,
+            self.failed,
+            self.throughput_rps,
+            crate::util::human_duration(self.mean_service),
+            crate::util::human_duration(self.p50_service),
+            crate::util::human_duration(self.p95_service),
+            crate::util::human_duration(self.wall),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(ok: bool, ms: u64) -> BuildOutcome {
+        BuildOutcome {
+            id: 0,
+            worker: 0,
+            strategy_used: "build".into(),
+            queue_wait: Duration::ZERO,
+            service: Duration::from_millis(ms),
+            ok,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let outcomes = vec![outcome(true, 10), outcome(true, 20), outcome(false, 30)];
+        let m = CoordinatorMetrics::from_outcomes(&outcomes, Duration::from_secs(1));
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.failed, 1);
+        assert!((m.throughput_rps - 3.0).abs() < 1e-9);
+        assert_eq!(m.mean_service, Duration::from_millis(20));
+        assert_eq!(m.max_service, Duration::from_millis(30));
+        assert!(m.summary().contains("2 ok / 1 failed"));
+    }
+
+    #[test]
+    fn empty_outcomes() {
+        let m = CoordinatorMetrics::from_outcomes(&[], Duration::from_secs(1));
+        assert_eq!(m.completed + m.failed, 0);
+        assert_eq!(m.mean_service, Duration::ZERO);
+    }
+}

@@ -1,0 +1,304 @@
+//! L3 build coordinator: a CI-farm front end over the daemon.
+//!
+//! The paper's motivation (§II.C): "the modern software development
+//! process encourages a build after each small incremental change …
+//! This becomes problematic when we have a high demand for builds but a
+//! low throughput of build runtime, which is clogged up by long build
+//! time." The coordinator models that pipeline: a queue of build
+//! requests served by a pool of worker machines (each with its own
+//! daemon state, as in the paper's multi-machine setup), where each
+//! request is served either by the Docker rebuild path or by the
+//! injection fast path — the knob every throughput experiment turns.
+
+pub mod metrics;
+
+pub use metrics::CoordinatorMetrics;
+
+use crate::builder::{BuildOptions, CostModel};
+use crate::daemon::Daemon;
+use crate::inject::{InjectMode, InjectOptions};
+use crate::Result;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// How a request should be served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuildStrategy {
+    /// Always the baseline Docker rebuild.
+    DockerRebuild,
+    /// Always the injection fast path (errors on structural changes).
+    Inject,
+    /// Injection with downstream cascade (compiled-language projects).
+    InjectCascade,
+    /// Try injection; fall back to a rebuild when injection refuses
+    /// (first build, structural change, compile hazard).
+    Auto,
+}
+
+/// One CI build request.
+#[derive(Clone, Debug)]
+pub struct BuildRequest {
+    pub id: u64,
+    /// Build-context directory (the project checkout).
+    pub project: PathBuf,
+    pub tag: String,
+    pub strategy: BuildStrategy,
+}
+
+/// Outcome of one request.
+#[derive(Clone, Debug)]
+pub struct BuildOutcome {
+    pub id: u64,
+    pub worker: usize,
+    /// What actually ran: "build", "inject", "inject+cascade",
+    /// "inject->build" (auto fallback).
+    pub strategy_used: String,
+    /// Time spent waiting in the queue.
+    pub queue_wait: Duration,
+    /// Service time (build or inject).
+    pub service: Duration,
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// The coordinator: a worker pool over per-worker daemons.
+pub struct BuildCoordinator {
+    root: PathBuf,
+    workers: usize,
+    pub cost: CostModel,
+}
+
+impl BuildCoordinator {
+    /// `root` hosts one daemon state dir per worker (`worker-0`, …).
+    pub fn new(root: &std::path::Path, workers: usize) -> BuildCoordinator {
+        assert!(workers >= 1);
+        BuildCoordinator {
+            root: root.to_path_buf(),
+            workers,
+            cost: CostModel::default(),
+        }
+    }
+
+    /// Process a batch of requests to completion; returns outcomes in
+    /// completion order plus aggregate metrics.
+    pub fn run(&self, requests: Vec<BuildRequest>) -> Result<(Vec<BuildOutcome>, CoordinatorMetrics)> {
+        let submitted = Instant::now();
+        let queue: Mutex<VecDeque<BuildRequest>> = Mutex::new(requests.into_iter().collect());
+        let outcomes: Mutex<Vec<BuildOutcome>> = Mutex::new(Vec::new());
+        let t_start = Instant::now();
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for worker_id in 0..self.workers {
+                let queue = &queue;
+                let outcomes = &outcomes;
+                let root = self.root.join(format!("worker-{worker_id}"));
+                let cost = self.cost;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let mut daemon = Daemon::new(&root)?;
+                    daemon.cost = cost;
+                    loop {
+                        let request = {
+                            let mut q = queue.lock().unwrap();
+                            match q.pop_front() {
+                                Some(r) => r,
+                                None => return Ok(()),
+                            }
+                        };
+                        let queue_wait = submitted.elapsed();
+                        let outcome = serve(&daemon, &request, worker_id, queue_wait, cost);
+                        outcomes.lock().unwrap().push(outcome);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("worker panicked")?;
+            }
+            Ok(())
+        })?;
+
+        let outcomes = outcomes.into_inner().unwrap();
+        let metrics = CoordinatorMetrics::from_outcomes(&outcomes, t_start.elapsed());
+        Ok((outcomes, metrics))
+    }
+}
+
+/// Serve one request on one worker daemon.
+fn serve(
+    daemon: &Daemon,
+    request: &BuildRequest,
+    worker: usize,
+    queue_wait: Duration,
+    cost: CostModel,
+) -> BuildOutcome {
+    let t0 = Instant::now();
+    let build_opts = BuildOptions { no_cache: false, cost };
+    let inject_opts = |cascade: bool| InjectOptions {
+        mode: InjectMode::Implicit,
+        cascade,
+        clone_for_redeploy: false,
+        cost,
+        scan_cache: None, // the daemon fills this in
+    };
+    let (strategy_used, result): (String, Result<String>) = match request.strategy {
+        BuildStrategy::DockerRebuild => (
+            "build".into(),
+            daemon
+                .build_with(&request.project, &request.tag, &build_opts)
+                .map(|r| format!("{} steps, {} rebuilt", r.steps.len(), r.rebuilt_steps())),
+        ),
+        BuildStrategy::Inject => (
+            "inject".into(),
+            daemon
+                .inject_with(&request.project, &request.tag, &request.tag, &inject_opts(false))
+                .map(|r| format!("{} file(s) injected", r.files_changed())),
+        ),
+        BuildStrategy::InjectCascade => (
+            "inject+cascade".into(),
+            daemon
+                .inject_with(&request.project, &request.tag, &request.tag, &inject_opts(true))
+                .map(|r| format!("{} file(s) injected + cascade", r.files_changed())),
+        ),
+        BuildStrategy::Auto => {
+            match daemon.inject_with(&request.project, &request.tag, &request.tag, &inject_opts(false))
+            {
+                Ok(r) => ("inject".into(), Ok(format!("{} file(s) injected", r.files_changed()))),
+                Err(_) => {
+                    // First build / structural change / compile hazard:
+                    // fall back to the rebuild path.
+                    (
+                        "inject->build".into(),
+                        daemon
+                            .build_with(&request.project, &request.tag, &build_opts)
+                            .map(|r| {
+                                format!("fallback build: {} rebuilt", r.rebuilt_steps())
+                            }),
+                    )
+                }
+            }
+        }
+    };
+    let service = t0.elapsed();
+    match result {
+        Ok(detail) => BuildOutcome {
+            id: request.id,
+            worker,
+            strategy_used,
+            queue_wait,
+            service,
+            ok: true,
+            detail,
+        },
+        Err(e) => BuildOutcome {
+            id: request.id,
+            worker,
+            strategy_used,
+            queue_wait,
+            service,
+            ok: false,
+            detail: e.to_string(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Scenario, ScenarioKind};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lj-coord-{}-{}", tag, std::process::id()))
+    }
+
+    #[test]
+    fn auto_falls_back_then_injects() {
+        let root = tmp("auto");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut scenario =
+            Scenario::generate(ScenarioKind::PythonTiny, &root.join("proj"), 1).unwrap();
+        let mut coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+        coordinator.cost = CostModel::instant();
+
+        // Round 1: no image yet -> auto must fall back to build.
+        let (outcomes, _) = coordinator
+            .run(vec![BuildRequest {
+                id: 1,
+                project: scenario.dir.clone(),
+                tag: scenario.tag(),
+                strategy: BuildStrategy::Auto,
+            }])
+            .unwrap();
+        assert!(outcomes[0].ok, "{}", outcomes[0].detail);
+        assert_eq!(outcomes[0].strategy_used, "inject->build");
+
+        // Round 2: revision -> auto injects.
+        scenario.revise().unwrap();
+        let (outcomes, metrics) = coordinator
+            .run(vec![BuildRequest {
+                id: 2,
+                project: scenario.dir.clone(),
+                tag: scenario.tag(),
+                strategy: BuildStrategy::Auto,
+            }])
+            .unwrap();
+        assert!(outcomes[0].ok, "{}", outcomes[0].detail);
+        assert_eq!(outcomes[0].strategy_used, "inject");
+        assert_eq!(metrics.completed, 1);
+        assert_eq!(metrics.failed, 0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn pool_processes_batch_across_workers() {
+        let root = tmp("pool");
+        let _ = std::fs::remove_dir_all(&root);
+        // Four distinct tiny projects.
+        let mut requests = Vec::new();
+        for i in 0..4 {
+            let s = Scenario::generate(
+                ScenarioKind::PythonTiny,
+                &root.join(format!("proj-{i}")),
+                i as u64,
+            )
+            .unwrap();
+            // Distinct tags so projects are independent images.
+            requests.push(BuildRequest {
+                id: i as u64,
+                project: s.dir.clone(),
+                tag: format!("proj{i}:latest"),
+                strategy: BuildStrategy::DockerRebuild,
+            });
+        }
+        let mut coordinator = BuildCoordinator::new(&root.join("farm"), 2);
+        coordinator.cost = CostModel::instant();
+        let (outcomes, metrics) = coordinator.run(requests).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| o.ok));
+        let workers: std::collections::BTreeSet<_> = outcomes.iter().map(|o| o.worker).collect();
+        assert!(!workers.is_empty() && workers.len() <= 2);
+        assert_eq!(metrics.completed, 4);
+        assert!(metrics.throughput_rps > 0.0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn failed_requests_are_reported_not_fatal() {
+        let root = tmp("fail");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+        coordinator.cost = CostModel::instant();
+        let (outcomes, metrics) = coordinator
+            .run(vec![BuildRequest {
+                id: 9,
+                project: root.join("nonexistent"),
+                tag: "ghost:1".into(),
+                strategy: BuildStrategy::DockerRebuild,
+            }])
+            .unwrap();
+        assert!(!outcomes[0].ok);
+        assert_eq!(metrics.failed, 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,159 @@
+//! File-set diff: which members of a layer's archive differ from the
+//! current build context.
+
+use crate::builder::BuildContext;
+use crate::hash::{ChunkDigest, HashEngine};
+use crate::tar::{TarReader, TypeFlag};
+use crate::Result;
+
+/// What happened to one file between the archived layer and the context.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FileChangeKind {
+    /// Present in both, content differs.
+    Modified,
+    /// Present only in the new context.
+    Added,
+    /// Present only in the old layer.
+    Removed,
+}
+
+/// One changed file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FileChange {
+    /// Archive path inside the layer tar.
+    pub archive_path: String,
+    /// Context-relative source path (`None` for removals).
+    pub context_path: Option<String>,
+    pub kind: FileChangeKind,
+}
+
+/// Compare a COPY/ADD layer's tar against what the instruction would copy
+/// from the current context.
+///
+/// `selected` is the `(sub_path, file)` list from
+/// [`BuildContext::select`], and `path_of` maps a sub-path to the archive
+/// path the builder would use (the caller knows the dst/workdir rules).
+pub fn diff_trees(
+    layer_tar: &[u8],
+    _ctx: &BuildContext,
+    selected: &[(String, &crate::builder::ContextFile)],
+    path_of: &dyn Fn(&str) -> String,
+    engine: &dyn HashEngine,
+) -> Result<Vec<FileChange>> {
+    let reader = TarReader::new(layer_tar)?;
+    let mut changes = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+
+    for (sub, f) in selected {
+        let archive_path = path_of(sub);
+        seen.insert(archive_path.clone());
+        match reader.find(&archive_path) {
+            None => changes.push(FileChange {
+                archive_path,
+                context_path: Some(f.rel_path.clone()),
+                kind: FileChangeKind::Added,
+            }),
+            Some(entry) => {
+                // Compare by chunk-digest root: the context already carries
+                // it, so only the archived side needs hashing — and the
+                // batched engine does that.
+                let archived = ChunkDigest::compute(entry.data(layer_tar), engine);
+                if archived.root != f.digest {
+                    changes.push(FileChange {
+                        archive_path,
+                        context_path: Some(f.rel_path.clone()),
+                        kind: FileChangeKind::Modified,
+                    });
+                }
+            }
+        }
+    }
+    for entry in reader.entries() {
+        if entry.typeflag == TypeFlag::Regular && !seen.contains(&entry.name) {
+            changes.push(FileChange {
+                archive_path: entry.name.clone(),
+                context_path: None,
+                kind: FileChangeKind::Removed,
+            });
+        }
+    }
+    Ok(changes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+    use crate::tar::TarBuilder;
+    use std::path::PathBuf;
+
+    fn ctx_with(files: &[(&str, &str)]) -> (BuildContext, PathBuf) {
+        let d = std::env::temp_dir().join(format!(
+            "lj-fsdiff-{}-{}",
+            files.len(),
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        for (p, c) in files {
+            let path = d.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+        (BuildContext::scan(&d, &NativeEngine::new()).unwrap(), d)
+    }
+
+    fn identity(sub: &str) -> String {
+        sub.to_string()
+    }
+
+    #[test]
+    fn detects_modified_added_removed() {
+        let eng = NativeEngine::new();
+        let mut b = TarBuilder::new();
+        b.append_file("main.py", b"print('v1')\n").unwrap();
+        b.append_file("gone.py", b"bye\n").unwrap();
+        let tar = b.finish();
+
+        let (ctx, d) = ctx_with(&[("main.py", "print('v2')\n"), ("new.py", "hi\n")]);
+        let selected = ctx.select(".");
+        let changes = diff_trees(&tar, &ctx, &selected, &identity, &eng).unwrap();
+        let kind_of = |p: &str| {
+            changes
+                .iter()
+                .find(|c| c.archive_path == p)
+                .map(|c| c.kind.clone())
+        };
+        assert_eq!(kind_of("main.py"), Some(FileChangeKind::Modified));
+        assert_eq!(kind_of("new.py"), Some(FileChangeKind::Added));
+        assert_eq!(kind_of("gone.py"), Some(FileChangeKind::Removed));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn no_changes_is_empty() {
+        let eng = NativeEngine::new();
+        let (ctx, d) = ctx_with(&[("a.py", "same\n")]);
+        let mut b = TarBuilder::new();
+        b.append_file("a.py", b"same\n").unwrap();
+        let tar = b.finish();
+        let selected = ctx.select(".");
+        let changes = diff_trees(&tar, &ctx, &selected, &identity, &eng).unwrap();
+        assert!(changes.is_empty(), "{changes:?}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn path_mapping_is_respected() {
+        let eng = NativeEngine::new();
+        let (ctx, d) = ctx_with(&[("app.py", "x\n")]);
+        let mut b = TarBuilder::new();
+        b.append_file("root/app.py", b"x\n").unwrap();
+        let tar = b.finish();
+        let selected = ctx.select(".");
+        let map = |sub: &str| format!("root/{sub}");
+        let changes = diff_trees(&tar, &ctx, &selected, &map, &eng).unwrap();
+        assert!(changes.is_empty(), "{changes:?}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,0 +1,13 @@
+//! Change detection: the paper's `diff` step (Fig. 3).
+//!
+//! * [`myers`] — line-level diff (Myers O(ND)) between two revisions of a
+//!   source file, with unified-diff rendering and patch application;
+//! * [`fsdiff`] — file-set diff between a layer's archived tree and the
+//!   current build context, which is how the injector finds *which* files
+//!   of a `COPY`/`ADD` layer changed.
+
+pub mod fsdiff;
+pub mod myers;
+
+pub use fsdiff::{diff_trees, FileChange, FileChangeKind};
+pub use myers::{diff_lines, render_unified, DiffOp};

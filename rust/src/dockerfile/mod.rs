@@ -1,0 +1,217 @@
+//! Dockerfile language: instruction model + parser.
+//!
+//! Supports the instruction set the paper's four evaluation scenarios use
+//! (Fig. 4): `FROM`, `COPY`, `ADD`, `RUN`, `WORKDIR`, `ENV`, `EXPOSE`,
+//! `CMD`, `ENTRYPOINT`, `LABEL` — with comments, blank lines, line
+//! continuations (`\`) and the JSON-array exec form for
+//! `CMD`/`ENTRYPOINT`/`RUN`.
+//!
+//! The classification in [`Instruction::kind`] mirrors paper §II.A: a
+//! **content layer** is created by `FROM`/`COPY`/`ADD`/`RUN` (carries
+//! files); a **config layer** by `ENV`/`WORKDIR`/`EXPOSE`/`CMD`/
+//! `ENTRYPOINT`/`LABEL` (an *empty layer*: metadata only).
+
+mod parse;
+
+pub use parse::parse_dockerfile;
+
+use crate::{Error, Result};
+
+/// Whether an instruction produces a content layer or a config layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Carries files (`FROM`, `COPY`, `ADD`, `RUN`).
+    Content,
+    /// Empty layer: metadata only (`ENV`, `CMD`, ... ) — paper §II.A.
+    Config,
+}
+
+/// A parsed Dockerfile instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instruction {
+    /// `FROM image[:tag]`
+    From { image: String },
+    /// `COPY src dst`
+    Copy { src: String, dst: String },
+    /// `ADD src dst` (treated as COPY; our scenarios don't use URLs)
+    Add { src: String, dst: String },
+    /// `RUN command ...` (shell or exec form, normalized to one string)
+    Run { command: String },
+    /// `WORKDIR path`
+    Workdir { path: String },
+    /// `ENV key value` / `ENV key=value`
+    Env { key: String, value: String },
+    /// `EXPOSE port`
+    Expose { port: u16 },
+    /// `CMD ["a", "b"]` or shell form
+    Cmd { argv: Vec<String> },
+    /// `ENTRYPOINT ["a", "b"]` or shell form
+    Entrypoint { argv: Vec<String> },
+    /// `LABEL key=value`
+    Label { key: String, value: String },
+}
+
+impl Instruction {
+    /// Content vs config classification (paper §II.A).
+    pub fn kind(&self) -> LayerKind {
+        match self {
+            Instruction::From { .. }
+            | Instruction::Copy { .. }
+            | Instruction::Add { .. }
+            | Instruction::Run { .. } => LayerKind::Content,
+            _ => LayerKind::Config,
+        }
+    }
+
+    /// Is this a file-import instruction (`COPY`/`ADD`) — the "type 1
+    /// content change" targets of the injection method (paper §III.A)?
+    pub fn imports_files(&self) -> bool {
+        matches!(self, Instruction::Copy { .. } | Instruction::Add { .. })
+    }
+
+    /// The canonical literal used for cache-key comparison and as the
+    /// layer's `created_by` string. Docker compares this literal for
+    /// operation commands (criterion 4 of §I.A): `RUN apt install ubuntu`
+    /// is checked literally, not by comparing Ubuntu's files.
+    pub fn literal(&self) -> String {
+        match self {
+            Instruction::From { image } => format!("FROM {image}"),
+            Instruction::Copy { src, dst } => format!("COPY {src} {dst}"),
+            Instruction::Add { src, dst } => format!("ADD {src} {dst}"),
+            Instruction::Run { command } => format!("RUN {command}"),
+            Instruction::Workdir { path } => format!("WORKDIR {path}"),
+            Instruction::Env { key, value } => format!("ENV {key}={value}"),
+            Instruction::Expose { port } => format!("EXPOSE {port}"),
+            Instruction::Cmd { argv } => format!("CMD {}", exec_form(argv)),
+            Instruction::Entrypoint { argv } => format!("ENTRYPOINT {}", exec_form(argv)),
+            Instruction::Label { key, value } => format!("LABEL {key}={value}"),
+        }
+    }
+}
+
+fn exec_form(argv: &[String]) -> String {
+    let items: Vec<String> = argv.iter().map(|a| format!("{:?}", a)).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// A parsed Dockerfile: ordered instructions with their 1-based source
+/// line numbers (used in build transcripts: `Step 2/6 : COPY . /root/`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dockerfile {
+    pub instructions: Vec<(usize, Instruction)>,
+}
+
+impl Dockerfile {
+    /// Parse Dockerfile text.
+    pub fn parse(text: &str) -> Result<Dockerfile> {
+        parse_dockerfile(text)
+    }
+
+    /// Read and parse `<dir>/Dockerfile`.
+    pub fn from_dir(dir: &std::path::Path) -> Result<Dockerfile> {
+        let path = dir.join("Dockerfile");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Build(format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Number of build steps.
+    pub fn steps(&self) -> usize {
+        self.instructions.len()
+    }
+
+    /// The base image of the first FROM instruction.
+    pub fn base_image(&self) -> Option<&str> {
+        self.instructions.iter().find_map(|(_, i)| match i {
+            Instruction::From { image } => Some(image.as_str()),
+            _ => None,
+        })
+    }
+
+    /// Validate structural rules: exactly one FROM, and it must be first.
+    pub fn validate(&self) -> Result<()> {
+        match self.instructions.first() {
+            Some((_, Instruction::From { .. })) => {}
+            Some((line, i)) => {
+                return Err(Error::Dockerfile {
+                    line: *line,
+                    msg: format!("first instruction must be FROM, found {}", i.literal()),
+                })
+            }
+            None => {
+                return Err(Error::Dockerfile {
+                    line: 0,
+                    msg: "empty Dockerfile".into(),
+                })
+            }
+        }
+        let extra_from = self.instructions[1..]
+            .iter()
+            .find(|(_, i)| matches!(i, Instruction::From { .. }));
+        if let Some((line, _)) = extra_from {
+            return Err(Error::Dockerfile {
+                line: *line,
+                msg: "multi-stage builds (second FROM) are not supported".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_matches_paper() {
+        let content = [
+            Instruction::From { image: "alpine".into() },
+            Instruction::Copy { src: ".".into(), dst: "/root/".into() },
+            Instruction::Add { src: "src".into(), dst: "/code/src".into() },
+            Instruction::Run { command: "apt update".into() },
+        ];
+        for i in &content {
+            assert_eq!(i.kind(), LayerKind::Content, "{:?}", i);
+        }
+        let config = [
+            Instruction::Workdir { path: "/root".into() },
+            Instruction::Env { key: "A".into(), value: "b".into() },
+            Instruction::Expose { port: 8080 },
+            Instruction::Cmd { argv: vec!["python".into()] },
+            Instruction::Entrypoint { argv: vec!["sh".into()] },
+            Instruction::Label { key: "k".into(), value: "v".into() },
+        ];
+        for i in &config {
+            assert_eq!(i.kind(), LayerKind::Config, "{:?}", i);
+        }
+    }
+
+    #[test]
+    fn literals_are_canonical() {
+        assert_eq!(
+            Instruction::Cmd { argv: vec!["python".into(), "./main.py".into()] }.literal(),
+            r#"CMD ["python", "./main.py"]"#
+        );
+        assert_eq!(
+            Instruction::Copy { src: ".".into(), dst: "/root/".into() }.literal(),
+            "COPY . /root/"
+        );
+    }
+
+    #[test]
+    fn validate_rules() {
+        let ok = Dockerfile::parse("FROM alpine\nCOPY . .\n").unwrap();
+        assert!(ok.validate().is_ok());
+        let no_from = Dockerfile::parse("COPY . .\n").unwrap();
+        assert!(no_from.validate().is_err());
+        let two_from = Dockerfile::parse("FROM a\nFROM b\n").unwrap();
+        assert!(two_from.validate().is_err());
+        assert!(Dockerfile::parse("").unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn base_image_lookup() {
+        let df = Dockerfile::parse("FROM python:alpine\nCOPY . .\n").unwrap();
+        assert_eq!(df.base_image(), Some("python:alpine"));
+    }
+}

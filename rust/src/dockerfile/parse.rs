@@ -1,0 +1,269 @@
+//! Dockerfile text → [`Dockerfile`] parser.
+
+use super::{Dockerfile, Instruction};
+use crate::{Error, Result};
+
+/// Parse complete Dockerfile text. Handles comments (`#`), blank lines,
+/// and trailing-backslash line continuations; records the 1-based line
+/// number where each instruction starts.
+pub fn parse_dockerfile(text: &str) -> Result<Dockerfile> {
+    let mut instructions = Vec::new();
+    let lines: Vec<&str> = text.lines().collect();
+    let mut i = 0;
+    while i < lines.len() {
+        let start_line = i + 1;
+        let raw = lines[i].trim();
+        i += 1;
+        if raw.is_empty() || raw.starts_with('#') {
+            continue;
+        }
+        // Fold continuations.
+        let mut logical = raw.to_string();
+        while logical.ends_with('\\') && i < lines.len() {
+            logical.pop();
+            logical.push(' ');
+            logical.push_str(lines[i].trim());
+            i += 1;
+        }
+        let inst = parse_instruction(&logical, start_line)?;
+        instructions.push((start_line, inst));
+    }
+    Ok(Dockerfile { instructions })
+}
+
+fn parse_instruction(line: &str, lineno: usize) -> Result<Instruction> {
+    let err = |msg: String| Error::Dockerfile { line: lineno, msg };
+    let (keyword, rest) = match line.split_once(char::is_whitespace) {
+        Some((k, r)) => (k, r.trim()),
+        None => (line, ""),
+    };
+    let require_args = |rest: &str| -> Result<()> {
+        if rest.is_empty() {
+            Err(err(format!("{keyword} requires arguments")))
+        } else {
+            Ok(())
+        }
+    };
+    match keyword.to_ascii_uppercase().as_str() {
+        "FROM" => {
+            require_args(rest)?;
+            Ok(Instruction::From { image: rest.to_string() })
+        }
+        "COPY" | "ADD" => {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            if parts.len() != 2 {
+                return Err(err(format!(
+                    "{keyword} expects exactly 'src dst', got {:?}",
+                    rest
+                )));
+            }
+            let (src, dst) = (parts[0].to_string(), parts[1].to_string());
+            if keyword.eq_ignore_ascii_case("COPY") {
+                Ok(Instruction::Copy { src, dst })
+            } else {
+                Ok(Instruction::Add { src, dst })
+            }
+        }
+        "RUN" => {
+            require_args(rest)?;
+            // Exec form becomes a normalized shell string.
+            let command = if rest.starts_with('[') {
+                parse_exec_array(rest).map_err(|m| err(m))?.join(" ")
+            } else {
+                rest.to_string()
+            };
+            Ok(Instruction::Run { command })
+        }
+        "WORKDIR" => {
+            require_args(rest)?;
+            Ok(Instruction::Workdir { path: rest.to_string() })
+        }
+        "ENV" => {
+            require_args(rest)?;
+            // `ENV k=v` or `ENV k v`.
+            if let Some((k, v)) = rest.split_once('=') {
+                Ok(Instruction::Env {
+                    key: k.trim().to_string(),
+                    value: v.trim().to_string(),
+                })
+            } else if let Some((k, v)) = rest.split_once(char::is_whitespace) {
+                Ok(Instruction::Env {
+                    key: k.trim().to_string(),
+                    value: v.trim().to_string(),
+                })
+            } else {
+                Err(err("ENV expects 'key=value' or 'key value'".into()))
+            }
+        }
+        "EXPOSE" => {
+            let port: u16 = rest
+                .split('/')
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| err(format!("bad EXPOSE port {rest:?}")))?;
+            Ok(Instruction::Expose { port })
+        }
+        "CMD" => Ok(Instruction::Cmd {
+            argv: parse_argv(rest).map_err(|m| err(m))?,
+        }),
+        "ENTRYPOINT" => Ok(Instruction::Entrypoint {
+            argv: parse_argv(rest).map_err(|m| err(m))?,
+        }),
+        "LABEL" => {
+            let (k, v) = rest
+                .split_once('=')
+                .ok_or_else(|| err("LABEL expects key=value".into()))?;
+            Ok(Instruction::Label {
+                key: k.trim().to_string(),
+                value: v.trim().trim_matches('"').to_string(),
+            })
+        }
+        other => Err(err(format!("unknown instruction {other:?}"))),
+    }
+}
+
+/// CMD/ENTRYPOINT accept exec form (JSON array) or shell form.
+fn parse_argv(rest: &str) -> std::result::Result<Vec<String>, String> {
+    if rest.starts_with('[') {
+        parse_exec_array(rest)
+    } else if rest.is_empty() {
+        Err("empty argv".into())
+    } else {
+        Ok(vec!["/bin/sh".into(), "-c".into(), rest.to_string()])
+    }
+}
+
+/// Parse the JSON-array exec form: `["python", "./main.py"]`.
+fn parse_exec_array(s: &str) -> std::result::Result<Vec<String>, String> {
+    let j = crate::util::json::Json::parse(s).map_err(|e| format!("bad exec form: {e}"))?;
+    let arr = j.as_arr().ok_or("exec form must be a JSON array")?;
+    arr.iter()
+        .map(|item| {
+            item.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| "exec form elements must be strings".to_string())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dockerfile::LayerKind;
+
+    /// Scenario 2's Dockerfile from the paper (Fig. 4).
+    const SCENARIO2: &str = "\
+FROM continuumio/miniconda3
+COPY . /root/
+WORKDIR /root
+RUN apt update && apt install curl git less gedit -y
+RUN conda env update -f environment.yaml
+CMD [\"python\", \"main.py\"]
+";
+
+    #[test]
+    fn parses_scenario2() {
+        let df = parse_dockerfile(SCENARIO2).unwrap();
+        assert_eq!(df.steps(), 6);
+        df.validate().unwrap();
+        let kinds: Vec<LayerKind> = df.instructions.iter().map(|(_, i)| i.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                LayerKind::Content, // FROM
+                LayerKind::Content, // COPY
+                LayerKind::Config,  // WORKDIR
+                LayerKind::Content, // RUN
+                LayerKind::Content, // RUN
+                LayerKind::Config,  // CMD
+            ]
+        );
+        assert_eq!(
+            df.instructions[5].1,
+            Instruction::Cmd {
+                argv: vec!["python".into(), "main.py".into()]
+            }
+        );
+    }
+
+    #[test]
+    fn comments_blanks_and_line_numbers() {
+        let text = "# build\n\nFROM alpine\n# copy step\nCOPY a b\n";
+        let df = parse_dockerfile(text).unwrap();
+        assert_eq!(df.instructions[0].0, 3);
+        assert_eq!(df.instructions[1].0, 5);
+    }
+
+    #[test]
+    fn line_continuations() {
+        let text = "FROM alpine\nRUN apt update && \\\n    apt install -y curl\n";
+        let df = parse_dockerfile(text).unwrap();
+        assert_eq!(
+            df.instructions[1].1,
+            Instruction::Run {
+                command: "apt update &&  apt install -y curl".into()
+            }
+        );
+    }
+
+    #[test]
+    fn exec_form_run() {
+        let df = parse_dockerfile("FROM a\nRUN [\"mvn\", \"package\"]\n").unwrap();
+        assert_eq!(
+            df.instructions[1].1,
+            Instruction::Run { command: "mvn package".into() }
+        );
+    }
+
+    #[test]
+    fn shell_form_cmd() {
+        let df = parse_dockerfile("FROM a\nCMD python main.py\n").unwrap();
+        assert_eq!(
+            df.instructions[1].1,
+            Instruction::Cmd {
+                argv: vec!["/bin/sh".into(), "-c".into(), "python main.py".into()]
+            }
+        );
+    }
+
+    #[test]
+    fn env_both_forms() {
+        let df = parse_dockerfile("FROM a\nENV A=1\nENV B 2\n").unwrap();
+        assert_eq!(
+            df.instructions[1].1,
+            Instruction::Env { key: "A".into(), value: "1".into() }
+        );
+        assert_eq!(
+            df.instructions[2].1,
+            Instruction::Env { key: "B".into(), value: "2".into() }
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_dockerfile("FROM a\nBOGUS x\n").unwrap_err();
+        match e {
+            Error::Dockerfile { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected error {other:?}"),
+        }
+        assert!(parse_dockerfile("FROM a\nCOPY onlyonearg\n").is_err());
+        assert!(parse_dockerfile("FROM a\nEXPOSE notaport\n").is_err());
+        assert!(parse_dockerfile("FROM a\nCMD [1, 2]\n").is_err());
+    }
+
+    #[test]
+    fn scenario_dockerfiles_from_paper_fig4() {
+        // Scenario 1: python tiny.
+        let s1 = "FROM python:alpine\nCOPY main.py main.py\nCMD [ \"python\", \"./main.py\" ]\n";
+        assert_eq!(parse_dockerfile(s1).unwrap().steps(), 3);
+        // Scenario 3: java tiny.
+        let s3 = "FROM java:8-jdk-alpine\nCOPY ./appl/build/libs/app.war /usr/app/app.war\nEXPOSE 8080\nCMD [\"/usr/bin/java\", \"-jar\", \"/usr/app/app.war\"]\n";
+        let df3 = parse_dockerfile(s3).unwrap();
+        assert_eq!(df3.steps(), 4);
+        assert_eq!(df3.instructions[2].1, Instruction::Expose { port: 8080 });
+        // Scenario 4: java large (abridged).
+        let s4 = "FROM ubuntu:latest\nRUN apt update\nRUN apt install -y openjdk-8-jdk\nWORKDIR /code\nADD pom.xml /code/pom.xml\nRUN [\"mvn\", \"dependency:resolve\"]\nRUN [\"mvn\", \"verify\"]\nADD src /code/src\nRUN [\"mvn\", \"package\"]\nCMD [\"java\", \"-jar\", \"target/app.jar\"]\n";
+        assert_eq!(parse_dockerfile(s4).unwrap().steps(), 10);
+    }
+}

@@ -1,0 +1,260 @@
+//! Two-level chunk digest: LayerJet's incremental, data-parallel content
+//! hash.
+//!
+//! Docker hashes a layer as one sequential SHA-256 pass over `layer.tar` —
+//! O(layer size) per rebuild, which is inefficiency B of the paper (§II.B).
+//! LayerJet additionally records, per blob:
+//!
+//! * a digest for every fixed 4 KiB chunk (computed by a pluggable
+//!   [`HashEngine`] — natively, or batched on the AOT XLA executable), and
+//! * a **root** digest = SHA-256 over the concatenated chunk digests plus
+//!   the total length.
+//!
+//! During injection only the chunks overlapping the patched byte ranges
+//! are re-hashed; the root is recomputed over the (mostly reused) chunk
+//! digest vector. This is the O(change) step that realizes the paper's
+//! "O(1) rebuild" claim for content layers, and the chunk batch is the
+//! workload the L1 Pallas kernel executes.
+
+use super::engine::HashEngine;
+use super::sha256::{Digest, Sha256};
+
+/// Fixed chunk size: 4 KiB = 64 SHA-256 blocks of payload.
+pub const CHUNK_SIZE: usize = 4096;
+
+/// The chunk-digest summary of one blob.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkDigest {
+    /// Digest of each 4 KiB chunk (last chunk may be short).
+    pub chunks: Vec<Digest>,
+    /// Total blob length in bytes.
+    pub total_len: u64,
+    /// Root digest over `chunks ∥ u64_le(total_len)`.
+    pub root: Digest,
+}
+
+impl ChunkDigest {
+    /// Compute the chunk digest of `data` using the given engine.
+    pub fn compute(data: &[u8], engine: &dyn HashEngine) -> ChunkDigest {
+        let chunk_slices: Vec<&[u8]> = if data.is_empty() {
+            Vec::new()
+        } else {
+            data.chunks(CHUNK_SIZE).collect()
+        };
+        let chunks = engine.hash_chunks(&chunk_slices);
+        let root = Self::root_of(&chunks, data.len() as u64);
+        ChunkDigest {
+            chunks,
+            total_len: data.len() as u64,
+            root,
+        }
+    }
+
+    /// Root digest over a chunk-digest vector.
+    pub fn root_of(chunks: &[Digest], total_len: u64) -> Digest {
+        let mut h = Sha256::new();
+        for c in chunks {
+            h.update(&c.0);
+        }
+        h.update(&total_len.to_le_bytes());
+        h.finalize()
+    }
+
+    /// Number of chunks for a blob of `len` bytes.
+    pub fn chunk_count(len: u64) -> usize {
+        (len as usize).div_ceil(CHUNK_SIZE)
+    }
+
+    /// Incrementally update: given the previous summary and the new blob
+    /// contents plus the byte ranges known to have changed, re-hash only
+    /// the affected chunks. Falls back to a full pass if the length's
+    /// chunk count changed in a way that invalidates reuse beyond the
+    /// tail.
+    ///
+    /// Returns the new summary and the number of chunks actually
+    /// re-hashed (the work done — reported by the injection fast path).
+    pub fn update(
+        &self,
+        new_data: &[u8],
+        changed: &[std::ops::Range<u64>],
+        engine: &dyn HashEngine,
+    ) -> (ChunkDigest, usize) {
+        let new_count = Self::chunk_count(new_data.len() as u64);
+        let old_count = self.chunks.len();
+        let mut dirty = vec![false; new_count];
+        // Chunks overlapping a changed range are dirty.
+        for r in changed {
+            if r.start >= r.end {
+                continue;
+            }
+            let first = (r.start as usize) / CHUNK_SIZE;
+            let last = ((r.end - 1) as usize) / CHUNK_SIZE;
+            for d in dirty.iter_mut().take(last.min(new_count - 1) + 1).skip(first.min(new_count)) {
+                *d = true;
+            }
+        }
+        // Chunks beyond the old count are new; the previous tail chunk is
+        // dirty whenever the length changed (its padding encodes length).
+        if new_data.len() as u64 != self.total_len {
+            if old_count > 0 && old_count <= new_count {
+                if let Some(d) = dirty.get_mut(old_count - 1) {
+                    *d = true;
+                }
+            }
+            for d in dirty.iter_mut().skip(old_count) {
+                *d = true;
+            }
+            if new_count > 0 {
+                dirty[new_count - 1] = true;
+            }
+        }
+        let mut chunk_slices: Vec<&[u8]> = Vec::new();
+        let mut dirty_idx: Vec<usize> = Vec::new();
+        for (i, is_dirty) in dirty.iter().enumerate() {
+            if *is_dirty {
+                let start = i * CHUNK_SIZE;
+                let end = (start + CHUNK_SIZE).min(new_data.len());
+                chunk_slices.push(&new_data[start..end]);
+                dirty_idx.push(i);
+            }
+        }
+        let rehashed = engine.hash_chunks(&chunk_slices);
+        let mut chunks = Vec::with_capacity(new_count);
+        let mut next_rehash = 0;
+        for (i, _) in dirty.iter().enumerate() {
+            if dirty[i] {
+                chunks.push(rehashed[next_rehash]);
+                next_rehash += 1;
+            } else {
+                // Reuse: chunk i content unchanged.
+                chunks.push(self.chunks[i]);
+            }
+        }
+        let root = Self::root_of(&chunks, new_data.len() as u64);
+        (
+            ChunkDigest {
+                chunks,
+                total_len: new_data.len() as u64,
+                root,
+            },
+            dirty_idx.len(),
+        )
+    }
+
+    /// Indices of chunks whose digests differ between two summaries (plus
+    /// all chunks present in only one of them).
+    pub fn changed_chunks(&self, other: &ChunkDigest) -> Vec<usize> {
+        let common = self.chunks.len().min(other.chunks.len());
+        let max = self.chunks.len().max(other.chunks.len());
+        let mut out: Vec<usize> = (0..common)
+            .filter(|&i| self.chunks[i] != other.chunks[i])
+            .collect();
+        out.extend(common..max);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+    use crate::util::prop;
+
+    fn eng() -> NativeEngine {
+        NativeEngine::new()
+    }
+
+    #[test]
+    fn empty_blob() {
+        let cd = ChunkDigest::compute(&[], &eng());
+        assert_eq!(cd.chunks.len(), 0);
+        assert_eq!(cd.total_len, 0);
+    }
+
+    #[test]
+    fn chunk_counts() {
+        assert_eq!(ChunkDigest::chunk_count(0), 0);
+        assert_eq!(ChunkDigest::chunk_count(1), 1);
+        assert_eq!(ChunkDigest::chunk_count(4096), 1);
+        assert_eq!(ChunkDigest::chunk_count(4097), 2);
+        let cd = ChunkDigest::compute(&vec![7u8; 4096 * 3 + 5], &eng());
+        assert_eq!(cd.chunks.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_and_content_sensitive() {
+        let a = vec![1u8; 10_000];
+        let mut b = a.clone();
+        let cd_a = ChunkDigest::compute(&a, &eng());
+        assert_eq!(cd_a, ChunkDigest::compute(&a, &eng()));
+        b[5000] ^= 0xff;
+        let cd_b = ChunkDigest::compute(&b, &eng());
+        assert_ne!(cd_a.root, cd_b.root);
+        assert_eq!(cd_a.changed_chunks(&cd_b), vec![1]);
+    }
+
+    #[test]
+    fn update_rehashes_only_dirty_chunks() {
+        let mut data = vec![3u8; CHUNK_SIZE * 10];
+        let cd = ChunkDigest::compute(&data, &eng());
+        data[CHUNK_SIZE * 4 + 7] = 9;
+        let (cd2, rehashed) = cd.update(&data, &[(CHUNK_SIZE as u64 * 4 + 7)..(CHUNK_SIZE as u64 * 4 + 8)], &eng());
+        assert_eq!(rehashed, 1);
+        assert_eq!(cd2, ChunkDigest::compute(&data, &eng()));
+    }
+
+    #[test]
+    fn update_handles_growth_and_shrink() {
+        let data = vec![5u8; CHUNK_SIZE * 2 + 100];
+        let cd = ChunkDigest::compute(&data, &eng());
+        // Grow by appending.
+        let mut grown = data.clone();
+        grown.extend_from_slice(&[6u8; CHUNK_SIZE]);
+        let (cd_g, n) = cd.update(&grown, &[data.len() as u64..grown.len() as u64], &eng());
+        assert_eq!(cd_g, ChunkDigest::compute(&grown, &eng()));
+        assert!(n <= 3, "rehashed {} chunks", n);
+        // Shrink.
+        let shrunk = &data[..CHUNK_SIZE + 10];
+        let (cd_s, _) = cd.update(shrunk, &[], &eng());
+        assert_eq!(cd_s, ChunkDigest::compute(shrunk, &eng()));
+    }
+
+    #[test]
+    fn update_arbitrary_edits_match_full_recompute() {
+        prop::check("incremental chunk digest == full recompute", 60, |g| {
+            let mut rng = g.rng().clone();
+            let len = rng.range(0, 6 * CHUNK_SIZE as u64) as usize;
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let cd = ChunkDigest::compute(&data, &eng());
+            // Apply 1-3 random edits (in-place only; growth covered above).
+            let mut changed = Vec::new();
+            let edits = rng.range(1, 4);
+            for _ in 0..edits {
+                if data.is_empty() {
+                    break;
+                }
+                let at = rng.below(data.len() as u64);
+                let span = rng.range(1, 64).min(data.len() as u64 - at);
+                for b in &mut data[at as usize..(at + span) as usize] {
+                    *b ^= 0x5a;
+                }
+                changed.push(at..at + span);
+            }
+            let (inc, _) = cd.update(&data, &changed, &eng());
+            let full = ChunkDigest::compute(&data, &eng());
+            if inc == full {
+                Ok(())
+            } else {
+                Err(format!("len={} edits={:?}", len, changed))
+            }
+        });
+    }
+
+    #[test]
+    fn root_depends_on_length() {
+        let a = ChunkDigest::root_of(&[], 0);
+        let b = ChunkDigest::root_of(&[], 1);
+        assert_ne!(a, b);
+    }
+}

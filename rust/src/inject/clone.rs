@@ -1,0 +1,119 @@
+//! Layer cloning for redeployment (paper §III.C).
+//!
+//! Injecting into a layer in place has two hazards the paper calls out:
+//! another image still referencing the layer silently sees the new
+//! content, and a remote registry — which compares the checksum trace
+//! for the *same layer id* — rejects the push. The fix: "before code
+//! injection, we clone the layer in the local registry, so there are two
+//! identical layers", inject into the clone, and swap the image's layer
+//! pointer to the clone's fresh id.
+
+use crate::hash::HashEngine;
+use crate::oci::{Image, LayerId, LayerMeta};
+use crate::store::LayerStore;
+use crate::Result;
+
+/// Duplicate a layer under a fresh id. The clone starts byte-identical
+/// (same checksum — the revision identity is content-based), ready to be
+/// patched independently.
+pub fn clone_layer(
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+    old: &LayerId,
+    nonce: u64,
+) -> Result<LayerMeta> {
+    let mut meta = layers.meta(old)?;
+    let tar = layers.read_tar(old)?;
+    meta.id = old.derive_clone(nonce);
+    layers.put_layer(&meta, &tar, engine)?;
+    // Carry the per-file index over (put_layer regenerates the hash
+    // sidecars from the tar, but the file index comes from the builder).
+    if let Some(index) = layers.file_index(old) {
+        layers.write_file_index(&meta.id, &index)?;
+    }
+    Ok(meta)
+}
+
+/// Swap a layer pointer in an image's manifest ("inject the reference of
+/// the new layer into image manifest and json to replace the old layer
+/// id"). Returns true if a slot was swapped.
+pub fn replace_layer_ref(image: &mut Image, old: &LayerId, new: &LayerId) -> bool {
+    match image.layer_index(old) {
+        Some(i) => {
+            image.layer_ids[i] = *new;
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::{ChunkDigest, Digest, NativeEngine};
+    use crate::store::LAYER_VERSION;
+    use crate::tar::TarBuilder;
+    use std::path::PathBuf;
+
+    fn fresh(tag: &str) -> (LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-clone-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (LayerStore::open(&d).unwrap(), d)
+    }
+
+    fn put_sample(layers: &LayerStore) -> LayerMeta {
+        let eng = NativeEngine::new();
+        let mut b = TarBuilder::new();
+        b.append_file("main.py", b"print('v1')\n").unwrap();
+        let tar = b.finish();
+        let meta = LayerMeta {
+            id: LayerId::derive("test", None, "COPY . ."),
+            parent: None,
+            parent_checksum: None,
+            checksum: Digest::of(&tar),
+            chunk_root: ChunkDigest::compute(&tar, &eng).root,
+            created_by: "COPY . .".into(),
+            source_checksum: Digest([0u8; 32]),
+            is_empty_layer: false,
+            size: tar.len() as u64,
+            version: LAYER_VERSION.into(),
+        };
+        layers.put_layer(&meta, &tar, &eng).unwrap();
+        meta
+    }
+
+    #[test]
+    fn clone_is_identical_but_independent() {
+        let (layers, d) = fresh("ind");
+        let eng = NativeEngine::new();
+        let orig = put_sample(&layers);
+        let cloned = clone_layer(&layers, &eng, &orig.id, 1).unwrap();
+        assert_ne!(cloned.id, orig.id, "fresh id");
+        assert_eq!(cloned.checksum, orig.checksum, "identical content");
+        assert_eq!(layers.read_tar(&cloned.id).unwrap(), layers.read_tar(&orig.id).unwrap());
+
+        // Patch the clone; the original must be untouched (the paper's
+        // "another image … has no choice but to use the new content"
+        // problem, solved).
+        let mut tar = layers.read_tar(&cloned.id).unwrap();
+        crate::tar::replace_file(&mut tar, "main.py", b"print('v2')\n").unwrap();
+        layers.write_tar_raw(&cloned.id, &tar).unwrap();
+        assert_ne!(
+            layers.read_tar(&cloned.id).unwrap(),
+            layers.read_tar(&orig.id).unwrap()
+        );
+        assert!(layers.verify(&orig.id).unwrap(), "original still intact");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn nonces_give_distinct_clones() {
+        let (layers, d) = fresh("nonce");
+        let eng = NativeEngine::new();
+        let orig = put_sample(&layers);
+        let c1 = clone_layer(&layers, &eng, &orig.id, 1).unwrap();
+        let c2 = clone_layer(&layers, &eng, &orig.id, 2).unwrap();
+        assert_ne!(c1.id, c2.id);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

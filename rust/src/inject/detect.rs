@@ -1,0 +1,461 @@
+//! Change detection: walk the Dockerfile against the old image
+//! (paper §III.A) and classify what changed.
+
+use crate::builder::{executor, BuildContext};
+use crate::diff::{diff_trees, FileChange};
+use crate::dockerfile::{Dockerfile, Instruction, LayerKind};
+use crate::hash::HashEngine;
+use crate::oci::{Image, ImageId, ImageRef};
+use crate::store::{ImageStore, LayerStore};
+use crate::{Error, Result};
+
+/// The COPY/ADD placement parameters needed to map context files to
+/// archive paths (the same rules the builder applies).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CopySpec {
+    pub src: String,
+    pub dst: String,
+    pub workdir: String,
+}
+
+impl CopySpec {
+    /// Archive path of a selected context file (`sub` from
+    /// [`BuildContext::select`]). Must mirror `builder::engine`'s COPY
+    /// placement exactly — `detect_no_changes_after_build` tests parity.
+    pub fn archive_path(&self, sub: &str, multi: bool) -> String {
+        let dst_is_dir = self.dst.ends_with('/') || multi;
+        let dst_base = executor::join(&self.workdir, &self.dst);
+        if dst_is_dir {
+            if dst_base.is_empty() {
+                sub.to_string()
+            } else {
+                format!("{dst_base}/{sub}")
+            }
+        } else {
+            dst_base
+        }
+    }
+}
+
+/// One detected change at a Dockerfile step.
+#[derive(Clone, Debug)]
+pub struct StepChange {
+    /// 0-based instruction index == layer index in the image.
+    pub step: usize,
+    pub kind: ChangeKind,
+}
+
+#[derive(Clone, Debug)]
+pub enum ChangeKind {
+    /// Type 1 (paper §III.A): a content change in a COPY/ADD layer.
+    Content {
+        spec: CopySpec,
+        files: Vec<FileChange>,
+    },
+    /// Type 2: a configuration instruction's literal changed.
+    ConfigEdit { old: String, new: String },
+    /// A content instruction's literal changed (RUN command edited,
+    /// instruction added/removed) — outside the method's scope; the
+    /// caller falls back to a full build.
+    InstructionEdit { old: String, new: String },
+}
+
+/// The full detection result.
+#[derive(Clone, Debug)]
+pub struct ChangePlan {
+    pub old_image_id: ImageId,
+    pub old_image: Image,
+    pub changes: Vec<StepChange>,
+    /// True if a changed content layer is followed by a RUN step that
+    /// looks like a compile/package command — the compiled-language case
+    /// where injection alone is unsound (paper §IV scenario 4) and
+    /// `--cascade` is required.
+    pub downstream_compile: bool,
+}
+
+impl ChangePlan {
+    pub fn is_unchanged(&self) -> bool {
+        self.changes.is_empty()
+    }
+
+    /// Type-1 changes only?
+    pub fn content_only(&self) -> bool {
+        self.changes
+            .iter()
+            .all(|c| matches!(c.kind, ChangeKind::Content { .. }))
+    }
+
+    /// Any structural edits (unsupported by injection)?
+    pub fn has_instruction_edits(&self) -> bool {
+        self.changes
+            .iter()
+            .any(|c| matches!(c.kind, ChangeKind::InstructionEdit { .. }))
+    }
+}
+
+/// Commands whose output depends on source content: a changed source
+/// layer feeding one of these downstream requires a cascade rebuild.
+fn is_compile_command(cmd: &str) -> bool {
+    ["mvn", "javac", "gcc", "g++", "cargo build", "make", "go build"]
+        .iter()
+        .any(|t| cmd.contains(t))
+}
+
+/// Walk the Dockerfile against the old image, line by line (§III.A).
+pub fn detect(
+    r: &ImageRef,
+    ctx: &BuildContext,
+    dockerfile: &Dockerfile,
+    images: &ImageStore,
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+) -> Result<ChangePlan> {
+    let (old_image_id, old_image) = images.get_by_ref(r)?;
+    let n_new = dockerfile.steps();
+    let n_old = old_image.history.len();
+
+    let mut changes = Vec::new();
+    let mut workdir = "/".to_string();
+    // The base image may set a workdir; replay it like the builder does.
+    if let Some(base) = dockerfile.base_image() {
+        if let Ok((_, base_img)) = images.get_by_ref(&ImageRef::parse(base)) {
+            if !base_img.config.working_dir.is_empty() {
+                workdir = base_img.config.working_dir.clone();
+            }
+        }
+    }
+
+    for (idx, (_, inst)) in dockerfile.instructions.iter().enumerate() {
+        let literal = inst.literal();
+        // Structural comparison first (cache criterion 2: instruction
+        // added/removed/altered).
+        if idx >= n_old {
+            changes.push(StepChange {
+                step: idx,
+                kind: ChangeKind::InstructionEdit {
+                    old: "<none>".into(),
+                    new: literal.clone(),
+                },
+            });
+            continue;
+        }
+        let old_literal = &old_image.history[idx].created_by;
+        if *old_literal != literal {
+            let kind = if inst.kind() == LayerKind::Config
+                && config_keyword(old_literal) == config_keyword(&literal)
+            {
+                ChangeKind::ConfigEdit {
+                    old: old_literal.clone(),
+                    new: literal.clone(),
+                }
+            } else {
+                ChangeKind::InstructionEdit {
+                    old: old_literal.clone(),
+                    new: literal.clone(),
+                }
+            };
+            changes.push(StepChange { step: idx, kind });
+            // Track workdir even across changes.
+            if let Instruction::Workdir { path } = inst {
+                workdir = path.clone();
+            }
+            continue;
+        }
+        match inst {
+            Instruction::Workdir { path } => workdir = path.clone(),
+            Instruction::Copy { src, dst } | Instruction::Add { src, dst } => {
+                let spec = CopySpec {
+                    src: src.clone(),
+                    dst: dst.clone(),
+                    workdir: workdir.clone(),
+                };
+                let layer_id = old_image.layer_ids[idx];
+                let selected = ctx.select(src);
+                if selected.is_empty() {
+                    return Err(Error::Inject(format!(
+                        "COPY {src}: no files in context"
+                    )));
+                }
+                let multi = selected.len() > 1 || ctx.src_is_dir(src);
+                // Fast path: compare against the layer's per-file index
+                // sidecar — pure metadata, no tar IO or hashing (§Perf).
+                // Fallback (index missing, e.g. a loaded bundle): hash the
+                // archived content via diff_trees.
+                let files = match layers.file_index(&layer_id) {
+                    Some(index) => diff_against_index(&index, &selected, &spec, multi),
+                    None => {
+                        let tar = layers.read_tar(&layer_id)?;
+                        let spec2 = spec.clone();
+                        let path_of = move |sub: &str| spec2.archive_path(sub, multi);
+                        diff_trees(&tar, ctx, &selected, &path_of, engine)?
+                    }
+                };
+                if !files.is_empty() {
+                    changes.push(StepChange {
+                        step: idx,
+                        kind: ChangeKind::Content { spec, files },
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    if n_old > n_new {
+        changes.push(StepChange {
+            step: n_new,
+            kind: ChangeKind::InstructionEdit {
+                old: old_image.history[n_new].created_by.clone(),
+                new: "<removed>".into(),
+            },
+        });
+    }
+
+    // Compiled-language hazard: a content change followed by a compile RUN.
+    let first_content_change = changes
+        .iter()
+        .filter(|c| matches!(c.kind, ChangeKind::Content { .. }))
+        .map(|c| c.step)
+        .min();
+    let downstream_compile = match first_content_change {
+        Some(step) => dockerfile.instructions[step + 1..]
+            .iter()
+            .any(|(_, i)| matches!(i, Instruction::Run { command } if is_compile_command(command))),
+        None => false,
+    };
+
+    Ok(ChangePlan {
+        old_image_id,
+        old_image,
+        changes,
+        downstream_compile,
+    })
+}
+
+fn config_keyword(literal: &str) -> &str {
+    literal.split_whitespace().next().unwrap_or("")
+}
+
+/// Metadata-only diff: the layer's stored per-file index vs the current
+/// context selection. Equivalent to [`diff_trees`] when the index is in
+/// sync with the tar (the builder and the injector both maintain it).
+fn diff_against_index(
+    index: &[(String, u64, crate::hash::Digest)],
+    selected: &[(String, &crate::builder::ContextFile)],
+    spec: &CopySpec,
+    multi: bool,
+) -> Vec<FileChange> {
+    use crate::diff::FileChangeKind;
+    let indexed: std::collections::BTreeMap<&str, (u64, &crate::hash::Digest)> = index
+        .iter()
+        .map(|(p, s, d)| (p.as_str(), (*s, d)))
+        .collect();
+    let mut changes = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for (sub, f) in selected {
+        let archive_path = spec.archive_path(sub, multi);
+        seen.insert(archive_path.clone());
+        match indexed.get(archive_path.as_str()) {
+            None => changes.push(FileChange {
+                archive_path,
+                context_path: Some(f.rel_path.clone()),
+                kind: FileChangeKind::Added,
+            }),
+            Some((size, digest)) => {
+                if *size != f.size || **digest != f.digest {
+                    changes.push(FileChange {
+                        archive_path,
+                        context_path: Some(f.rel_path.clone()),
+                        kind: FileChangeKind::Modified,
+                    });
+                }
+            }
+        }
+    }
+    for (path, _, _) in index {
+        if !seen.contains(path.as_str()) {
+            changes.push(FileChange {
+                archive_path: path.clone(),
+                context_path: None,
+                kind: FileChangeKind::Removed,
+            });
+        }
+    }
+    changes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::{BuildOptions, Builder, CostModel};
+    use crate::hash::NativeEngine;
+    use std::path::PathBuf;
+
+    fn fresh(tag: &str) -> (ImageStore, LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-detect-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (
+            ImageStore::open(&d).unwrap(),
+            LayerStore::open(&d).unwrap(),
+            d,
+        )
+    }
+
+    fn write_ctx(dir: &std::path::Path, dockerfile: &str, files: &[(&str, &str)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+        for (p, c) in files {
+            let path = dir.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+    }
+
+    fn opts() -> BuildOptions {
+        BuildOptions {
+            no_cache: false,
+            cost: CostModel::instant(),
+        }
+    }
+
+    const DF: &str = "FROM python:alpine\nCOPY . /root/\nWORKDIR /root\nCMD [\"python\", \"main.py\"]\n";
+
+    #[test]
+    fn detect_no_changes_after_build() {
+        let (images, layers, d) = fresh("clean");
+        let ctx_dir = d.join("ctx");
+        write_ctx(&ctx_dir, DF, &[("main.py", "print('v1')\n"), ("util.py", "x = 1\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        b.build(&ctx_dir, &tag, &opts()).unwrap();
+
+        let ctx = BuildContext::scan(&ctx_dir, &eng).unwrap();
+        let df = Dockerfile::from_dir(&ctx_dir).unwrap();
+        let plan = detect(&tag, &ctx, &df, &images, &layers, &eng).unwrap();
+        assert!(plan.is_unchanged(), "{:?}", plan.changes);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn detect_content_change() {
+        let (images, layers, d) = fresh("content");
+        let ctx_dir = d.join("ctx");
+        write_ctx(&ctx_dir, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        b.build(&ctx_dir, &tag, &opts()).unwrap();
+
+        std::fs::write(ctx_dir.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+        let ctx = BuildContext::scan(&ctx_dir, &eng).unwrap();
+        let df = Dockerfile::from_dir(&ctx_dir).unwrap();
+        let plan = detect(&tag, &ctx, &df, &images, &layers, &eng).unwrap();
+        assert_eq!(plan.changes.len(), 1);
+        assert!(plan.content_only());
+        assert!(!plan.downstream_compile);
+        match &plan.changes[0].kind {
+            ChangeKind::Content { spec, files } => {
+                assert_eq!(plan.changes[0].step, 1);
+                assert_eq!(spec.src, ".");
+                assert_eq!(files.len(), 1, "only main.py changed: {files:?}");
+            }
+            other => panic!("expected content change, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn detect_config_edit() {
+        let (images, layers, d) = fresh("cfg");
+        let ctx_dir = d.join("ctx");
+        write_ctx(&ctx_dir, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx_dir, &ImageRef::parse("app:v1"), &opts())
+            .unwrap();
+
+        // Change only the CMD literal.
+        let df2 = DF.replace("main.py\"]", "main.py\", \"--debug\"]");
+        std::fs::write(ctx_dir.join("Dockerfile"), &df2).unwrap();
+        let ctx = BuildContext::scan(&ctx_dir, &eng).unwrap();
+        let df = Dockerfile::from_dir(&ctx_dir).unwrap();
+        let plan = detect(&ImageRef::parse("app:v1"), &ctx, &df, &images, &layers, &eng).unwrap();
+        // The Dockerfile itself is in the context, so COPY . also changes;
+        // the CMD edit must be classified type-2.
+        assert!(plan
+            .changes
+            .iter()
+            .any(|c| matches!(c.kind, ChangeKind::ConfigEdit { .. })));
+        assert!(!plan.has_instruction_edits());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn detect_instruction_edit_and_removal() {
+        let (images, layers, d) = fresh("edit");
+        let ctx_dir = d.join("ctx");
+        write_ctx(&ctx_dir, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx_dir, &ImageRef::parse("app:v1"), &opts())
+            .unwrap();
+
+        // Drop the WORKDIR instruction: structural edit.
+        let df2 = "FROM python:alpine\nCOPY . /root/\nCMD [\"python\", \"main.py\"]\n";
+        std::fs::write(ctx_dir.join("Dockerfile"), df2).unwrap();
+        let ctx = BuildContext::scan(&ctx_dir, &eng).unwrap();
+        let df = Dockerfile::from_dir(&ctx_dir).unwrap();
+        let plan = detect(&ImageRef::parse("app:v1"), &ctx, &df, &images, &layers, &eng).unwrap();
+        assert!(plan.has_instruction_edits());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn detect_downstream_compile() {
+        let (images, layers, d) = fresh("compile");
+        let ctx_dir = d.join("ctx");
+        let df = "FROM ubuntu:latest\nWORKDIR /code\nADD pom.xml pom.xml\nADD src /code/src\nRUN [\"mvn\", \"package\"]\n";
+        write_ctx(
+            &ctx_dir,
+            df,
+            &[
+                ("pom.xml", "<project><artifactId>app</artifactId><dependency><artifactId>gson</artifactId></dependency></project>"),
+                ("src/App.java", "class App {}"),
+            ],
+        );
+        let eng = NativeEngine::new();
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx_dir, &ImageRef::parse("japp:v1"), &opts())
+            .unwrap();
+
+        std::fs::write(ctx_dir.join("src/App.java"), "class App { int x; }").unwrap();
+        let ctx = BuildContext::scan(&ctx_dir, &eng).unwrap();
+        let dff = Dockerfile::from_dir(&ctx_dir).unwrap();
+        let plan = detect(&ImageRef::parse("japp:v1"), &ctx, &dff, &images, &layers, &eng).unwrap();
+        assert!(plan.content_only());
+        assert!(plan.downstream_compile, "mvn package follows the changed ADD");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn copy_spec_archive_paths() {
+        let spec = CopySpec {
+            src: ".".into(),
+            dst: "/root/".into(),
+            workdir: "/".into(),
+        };
+        assert_eq!(spec.archive_path("main.py", true), "root/main.py");
+        let single = CopySpec {
+            src: "app.war".into(),
+            dst: "/usr/app/app.war".into(),
+            workdir: "/".into(),
+        };
+        assert_eq!(single.archive_path("app.war", false), "usr/app/app.war");
+        let rel = CopySpec {
+            src: "pom.xml".into(),
+            dst: "pom.xml".into(),
+            workdir: "/code".into(),
+        };
+        assert_eq!(rel.archive_path("pom.xml", false), "code/pom.xml");
+    }
+}

@@ -1,0 +1,300 @@
+//! Explicit decomposition: inject through a `docker save` bundle
+//! (paper §III.A): "export the image … examine this bundle … After the
+//! change is determined, inject the new code into the files in the
+//! image, and save changes", then re-load. Slower than the implicit
+//! path because the whole image round-trips through the bundle — the
+//! decomposition bench (E8) quantifies exactly that gap.
+
+use super::checksum::rewrite_occurrences;
+use super::detect::{detect, ChangeKind};
+use super::implicit::{apply_file_changes, guard_plan};
+use super::{InjectMode, InjectOptions, InjectReport, PatchedLayer};
+use crate::builder::{BuildContext, BuildOptions, Builder};
+use crate::dockerfile::Dockerfile;
+use crate::hash::{ChunkDigest, Digest, HashEngine};
+use crate::oci::{ImageRef, LayerMeta};
+use crate::store::{load_bundle, save_bundle, ImageStore, LayerStore};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// Run an explicit injection: save → patch the bundle → load.
+#[allow(clippy::too_many_arguments)]
+pub fn inject_explicit(
+    r: &ImageRef,
+    new_tag: &ImageRef,
+    ctx_dir: &std::path::Path,
+    images: &ImageStore,
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+    opts: &InjectOptions,
+) -> Result<InjectReport> {
+    let t_start = Instant::now();
+    let ctx = BuildContext::scan_cached(ctx_dir, engine, opts.scan_cache.as_deref())?;
+    let dockerfile = Dockerfile::from_dir(ctx_dir)?;
+    dockerfile.validate()?;
+    let plan = detect(r, &ctx, &dockerfile, images, layers, engine)?;
+    let detect_duration = t_start.elapsed();
+
+    guard_plan(&plan, opts)?;
+
+    // --- export ------------------------------------------------------------
+    let mut bundle = save_bundle(r, images, layers)?;
+    let image_json_name = format!("{}.json", plan.old_image_id.to_hex());
+
+    let mut patched = Vec::new();
+    let mut digests_rewritten = 0;
+    let mut patch_duration = std::time::Duration::ZERO;
+    let mut hash_duration = std::time::Duration::ZERO;
+
+    for change in &plan.changes {
+        let (spec, files) = match &change.kind {
+            ChangeKind::Content { spec, files } => (spec, files),
+            _ => continue,
+        };
+        let layer_id = plan.old_image.layer_ids[change.step];
+        let tar_member = format!("{}/layer.tar", layer_id.to_hex());
+        let json_member = format!("{}/json", layer_id.to_hex());
+
+        // --- patch the inner layer.tar inside the bundle --------------------
+        let t_patch = Instant::now();
+        let reader = crate::tar::TarReader::new(&bundle)?;
+        let entry = reader
+            .find(&tar_member)
+            .ok_or_else(|| Error::Inject(format!("bundle missing {tar_member}")))?;
+        let mut inner = entry.data(&bundle).to_vec();
+        let old_chunks = ChunkDigest::compute(&inner, engine);
+        let chunks_total = old_chunks.chunks.len();
+        let (modified, added, removed, ranges) = apply_file_changes(&mut inner, files, &ctx)?;
+        let bytes_spliced: u64 = ranges.iter().map(|x| x.end - x.start).sum();
+        patch_duration += t_patch.elapsed();
+
+        // --- recompute checksums --------------------------------------------
+        let t_hash = Instant::now();
+        let old_checksum = Digest::of(entry.data(&bundle));
+        let new_checksum = Digest::of(&inner);
+        let (new_cd, chunks_rehashed) = old_chunks.update(&inner, &ranges, engine);
+        hash_duration += t_hash.elapsed();
+
+        // --- write back: layer.tar, layer json, image config json -----------
+        crate::tar::replace_file(&mut bundle, &tar_member, &inner)?;
+
+        let reader = crate::tar::TarReader::new(&bundle)?;
+        let meta_entry = reader
+            .find(&json_member)
+            .ok_or_else(|| Error::Inject(format!("bundle missing {json_member}")))?;
+        let mut meta = LayerMeta::from_json(
+            &Json::parse(&String::from_utf8_lossy(meta_entry.data(&bundle)))
+                .map_err(Error::Json)?,
+        )?;
+        let old_chunk_root = meta.chunk_root;
+        meta.checksum = new_checksum;
+        meta.chunk_root = new_cd.root;
+        meta.size = inner.len() as u64;
+        meta.source_checksum = ctx.copy_checksum(&spec.src);
+        crate::tar::replace_file(
+            &mut bundle,
+            &json_member,
+            meta.to_json().to_string_pretty().as_bytes(),
+        )?;
+
+        // The paper's literal §III.B move: string-search the old checksum in
+        // the image's config json and replace every occurrence.
+        let reader = crate::tar::TarReader::new(&bundle)?;
+        let cfg_entry = reader
+            .find(&image_json_name)
+            .ok_or_else(|| Error::Inject(format!("bundle missing {image_json_name}")))?;
+        let cfg_text = String::from_utf8_lossy(cfg_entry.data(&bundle)).into_owned();
+        let (cfg_text, n1) = rewrite_occurrences(&cfg_text, &old_checksum, &new_checksum);
+        let (cfg_text, _) = rewrite_occurrences(&cfg_text, &old_chunk_root, &new_cd.root);
+        digests_rewritten += n1;
+        crate::tar::replace_file(&mut bundle, &image_json_name, cfg_text.as_bytes())?;
+
+        patched.push(PatchedLayer {
+            layer_id,
+            cloned_as: None,
+            files_modified: modified,
+            files_added: added,
+            files_removed: removed,
+            bytes_spliced,
+            chunks_rehashed,
+            sha_bytes_rehashed: inner.len() as u64, // explicit path: full pass
+            chunks_total,
+            old_checksum,
+            new_checksum,
+        });
+    }
+
+    // --- import ("docker load") ---------------------------------------------
+    let loaded_ref = load_bundle(&bundle, images, layers, engine)?;
+    let mut new_image_id = images.resolve(&loaded_ref)?;
+    if *new_tag != loaded_ref {
+        images.tag(new_tag, &new_image_id)?;
+    }
+
+    // Type-2 / cascade handling identical to the implicit path.
+    let has_config_edits = plan
+        .changes
+        .iter()
+        .any(|c| matches!(c.kind, ChangeKind::ConfigEdit { .. }));
+    let mut cascade = None;
+    if opts.cascade || has_config_edits {
+        let mut builder = Builder::new(layers, images, engine);
+        builder.scan_cache = opts.scan_cache.clone();
+        let report = builder.build(
+            ctx_dir,
+            new_tag,
+            &BuildOptions {
+                no_cache: false,
+                cost: opts.cost,
+            },
+        )?;
+        new_image_id = report.image_id;
+        cascade = Some(report);
+    }
+
+    Ok(InjectReport {
+        mode: InjectMode::Explicit,
+        reference: new_tag.clone(),
+        new_image_id,
+        patched,
+        digests_rewritten,
+        duration: t_start.elapsed(),
+        detect_duration,
+        patch_duration,
+        hash_duration,
+        cascade,
+        delegated_to_build: has_config_edits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::CostModel;
+    use crate::hash::NativeEngine;
+    use std::path::PathBuf;
+
+    fn fresh(tag: &str) -> (ImageStore, LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-exp-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (
+            ImageStore::open(&d).unwrap(),
+            LayerStore::open(&d).unwrap(),
+            d,
+        )
+    }
+
+    fn write_ctx(dir: &std::path::Path, dockerfile: &str, files: &[(&str, &str)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+        for (p, c) in files {
+            let path = dir.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+    }
+
+    fn opts() -> InjectOptions {
+        InjectOptions {
+            mode: InjectMode::Explicit,
+            cost: CostModel::instant(),
+            ..InjectOptions::default()
+        }
+    }
+
+    const DF: &str = "FROM python:alpine\nCOPY . /root/\nWORKDIR /root\nCMD [\"python\", \"main.py\"]\n";
+
+    #[test]
+    fn explicit_inject_round_trip() {
+        let (images, layers, d) = fresh("rt");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &BuildOptions { no_cache: false, cost: CostModel::instant() })
+            .unwrap();
+
+        std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+        let report =
+            inject_explicit(&tag, &tag, &ctx, &images, &layers, &eng, &opts()).unwrap();
+        assert_eq!(report.mode, InjectMode::Explicit);
+        assert_eq!(report.patched.len(), 1);
+        assert!(report.digests_rewritten >= 1);
+
+        let (_, img) = images.get_by_ref(&tag).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers.verify(lid).unwrap());
+        }
+        let tar = layers.read_tar(&img.layer_ids[1]).unwrap();
+        let reader = crate::tar::TarReader::new(&tar).unwrap();
+        assert_eq!(
+            reader.find("root/main.py").unwrap().data(&tar),
+            b"print('v1')\nprint('v2')\n"
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn explicit_and_implicit_agree() {
+        let eng = NativeEngine::new();
+        let setup = |tag: &str| {
+            let (images, layers, d) = fresh(tag);
+            let ctx = d.join("ctx");
+            write_ctx(&ctx, DF, &[("main.py", "print('v1')\n"), ("lib.py", "a=1\n")]);
+            Builder::new(&layers, &images, &eng)
+                .build(&ctx, &ImageRef::parse("app:v1"), &BuildOptions { no_cache: false, cost: CostModel::instant() })
+                .unwrap();
+            std::fs::write(ctx.join("lib.py"), "a=1\nb=2\n").unwrap();
+            (images, layers, ctx, d)
+        };
+
+        let (im1, l1, ctx1, d1) = setup("agree-imp");
+        let r1 = super::super::implicit::inject_implicit(
+            &ImageRef::parse("app:v1"),
+            &ImageRef::parse("app:v1"),
+            &ctx1,
+            &im1,
+            &l1,
+            &eng,
+            &InjectOptions { cost: CostModel::instant(), ..Default::default() },
+        )
+        .unwrap();
+
+        let (im2, l2, ctx2, d2) = setup("agree-exp");
+        let r2 = inject_explicit(
+            &ImageRef::parse("app:v1"),
+            &ImageRef::parse("app:v1"),
+            &ctx2,
+            &im2,
+            &l2,
+            &eng,
+            &opts(),
+        )
+        .unwrap();
+
+        // Same new checksum for the patched layer, both verify.
+        assert_eq!(r1.patched[0].new_checksum, r2.patched[0].new_checksum);
+        let (_, img1) = im1.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        let (_, img2) = im2.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        assert_eq!(img1.diff_ids, img2.diff_ids);
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn structural_change_rejected_before_export() {
+        let (images, layers, d) = fresh("guard");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &BuildOptions { no_cache: false, cost: CostModel::instant() })
+            .unwrap();
+        std::fs::write(ctx.join("Dockerfile"), "FROM python:alpine\nCOPY . /app/\nCMD [\"python\", \"main.py\"]\n").unwrap();
+        assert!(inject_explicit(&tag, &tag, &ctx, &images, &layers, &eng, &opts()).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,0 +1,561 @@
+//! Implicit decomposition: patch layers **in place** in the layer store
+//! (paper §III.A): "knowing these changes can be made to the layer
+//! directly without having to export the image or import the image.
+//! Removing an intermediate stage, decomposing implicitly is much faster
+//! than explicitly."
+
+use super::checksum::rewrite_image_digests;
+use super::detect::{detect, ChangeKind, ChangePlan};
+use super::{InjectMode, InjectOptions, InjectReport, PatchedLayer};
+use crate::builder::{BuildContext, BuildOptions, Builder};
+use crate::diff::{FileChange, FileChangeKind};
+use crate::dockerfile::Dockerfile;
+use crate::hash::{ChunkDigest, Digest, HashEngine};
+use crate::oci::ImageRef;
+use crate::store::{ImageStore, LayerStore};
+use crate::{Error, Result};
+use std::ops::Range;
+use std::time::Instant;
+
+/// Apply a set of file changes to a tar buffer. Returns
+/// `(modified, added, removed, changed_ranges)`; the ranges are valid
+/// coordinates of the **final** buffer (conservatively widened to the
+/// tail when splices shifted content).
+pub(crate) fn apply_file_changes(
+    tar: &mut Vec<u8>,
+    files: &[FileChange],
+    ctx: &BuildContext,
+) -> Result<(usize, usize, usize, Vec<Range<u64>>)> {
+    let original_len = tar.len();
+    let mut ranges: Vec<Range<u64>> = Vec::new();
+    let (mut modified, mut added, mut removed) = (0usize, 0usize, 0usize);
+    let mut shifted = false;
+
+    for change in files {
+        let rs = match change.kind {
+            FileChangeKind::Modified => {
+                modified += 1;
+                let content = ctx.read(change.context_path.as_ref().ok_or_else(|| {
+                    Error::Inject(format!("modified {} has no context path", change.archive_path))
+                })?)?;
+                crate::tar::replace_file(tar, &change.archive_path, &content)?
+            }
+            FileChangeKind::Added => {
+                added += 1;
+                let content = ctx.read(change.context_path.as_ref().ok_or_else(|| {
+                    Error::Inject(format!("added {} has no context path", change.archive_path))
+                })?)?;
+                crate::tar::insert_file(tar, &change.archive_path, &content)?
+            }
+            FileChangeKind::Removed => {
+                removed += 1;
+                crate::tar::remove_file(tar, &change.archive_path)?
+            }
+        };
+        shifted |= tar.len() != original_len;
+        ranges.extend(rs);
+    }
+    if shifted {
+        // Splices moved the tail; conservatively dirty everything from the
+        // earliest touched offset.
+        let min_start = ranges.iter().map(|r| r.start).min().unwrap_or(0);
+        ranges = vec![min_start..tar.len() as u64];
+    }
+    Ok((modified, added, removed, ranges))
+}
+
+/// Run an implicit injection: detect → patch in place → checksum bypass →
+/// (optionally) cascade-rebuild downstream layers.
+#[allow(clippy::too_many_arguments)]
+pub fn inject_implicit(
+    r: &ImageRef,
+    new_tag: &ImageRef,
+    ctx_dir: &std::path::Path,
+    images: &ImageStore,
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+    opts: &InjectOptions,
+) -> Result<InjectReport> {
+    let t_start = Instant::now();
+    let ctx = BuildContext::scan_cached(ctx_dir, engine, opts.scan_cache.as_deref())?;
+    let dockerfile = Dockerfile::from_dir(ctx_dir)?;
+    dockerfile.validate()?;
+    let plan = detect(r, &ctx, &dockerfile, images, layers, engine)?;
+    let detect_duration = t_start.elapsed();
+
+    guard_plan(&plan, opts)?;
+
+    let mut image = plan.old_image.clone();
+    let mut patched = Vec::new();
+    let mut digests_rewritten = 0;
+    let mut patch_duration = std::time::Duration::ZERO;
+    let mut hash_duration = std::time::Duration::ZERO;
+    let mut clone_nonce = 1u64;
+
+    for change in &plan.changes {
+        let (spec, files) = match &change.kind {
+            ChangeKind::Content { spec, files } => (spec, files),
+            _ => continue, // config edits handled by the delegate build below
+        };
+        // Redeploy mode: patch a clone, not the shared layer (§III.C).
+        let orig_id = image.layer_ids[change.step];
+        let (target_id, cloned_as) = if opts.clone_for_redeploy {
+            let cloned = super::clone::clone_layer(layers, engine, &orig_id, clone_nonce)?;
+            clone_nonce += 1;
+            super::clone::replace_layer_ref(&mut image, &orig_id, &cloned.id);
+            (cloned.id, Some(cloned.id))
+        } else {
+            (orig_id, None)
+        };
+
+        let mut meta = layers.meta(&target_id)?;
+        let old_checksum = meta.checksum;
+        // The digest to search-and-replace in the image metadata is the
+        // *declared* one at this slot (it can differ from the layer's
+        // current content checksum if a previous in-place injection left
+        // another tag's metadata stale — the §III.C sharing hazard).
+        let declared_checksum = image.diff_ids[change.step];
+        let old_cd = layers.chunk_digest(&target_id, engine)?;
+        let old_ckpts = layers.sha_checkpoints(&target_id);
+        let chunks_total = old_cd.chunks.len();
+
+        // --- patch phase -------------------------------------------------
+        let t_patch = Instant::now();
+        let mut tar = layers.read_tar(&target_id)?;
+        let (modified, added, removed, ranges) = apply_file_changes(&mut tar, files, &ctx)?;
+        let bytes_spliced: u64 = ranges.iter().map(|x| x.end - x.start).sum();
+        layers.write_tar_raw(&target_id, &tar)?;
+        patch_duration += t_patch.elapsed();
+
+        // --- hash phase: "compute the checksum of the new layer" ----------
+        // Docker-compatible SHA-256: resume from the last checkpoint
+        // before the first changed byte instead of re-hashing the whole
+        // layer (EXPERIMENTS.md §Perf, L3 optimization 1).
+        let t_hash = Instant::now();
+        let first_changed = ranges.iter().map(|x| x.start).min().unwrap_or(0);
+        let (new_checksum, new_ckpts, sha_bytes_rehashed) = match &old_ckpts {
+            Some(ck) => crate::hash::rehash_from_checkpoints(&tar, ck, first_changed),
+            None => {
+                let (d, ck) = crate::hash::hash_with_checkpoints(&tar);
+                let n = tar.len() as u64;
+                (d, ck, n)
+            }
+        };
+        debug_assert_eq!(new_checksum, Digest::of(&tar), "checkpoint resume must agree");
+        layers.write_sha_checkpoints(&target_id, &new_ckpts)?;
+        let (new_cd, chunks_rehashed) = old_cd.update(&tar, &ranges, engine);
+        debug_assert_eq!(
+            new_cd,
+            ChunkDigest::compute(&tar, engine),
+            "incremental chunk digest must equal full recompute"
+        );
+        layers.write_chunk_sidecar(&target_id, &new_cd)?;
+        hash_duration += t_hash.elapsed();
+
+        // --- bypass: update both the key and the lock (§III.B) ------------
+        meta.checksum = new_checksum;
+        meta.chunk_root = new_cd.root;
+        meta.size = tar.len() as u64;
+        meta.source_checksum = ctx.copy_checksum(&spec.src);
+        layers.write_meta(&meta)?;
+        // Refresh the per-file index so the next detect stays metadata-only.
+        let selected = ctx.select(&spec.src);
+        let multi = selected.len() > 1 || ctx.src_is_dir(&spec.src);
+        let index: Vec<(String, u64, Digest)> = selected
+            .iter()
+            .map(|(sub, f)| (spec.archive_path(sub, multi), f.size, f.digest))
+            .collect();
+        layers.write_file_index(&target_id, &index)?;
+        digests_rewritten +=
+            rewrite_image_digests(&mut image, &declared_checksum, &new_checksum, &new_cd.root);
+
+        patched.push(PatchedLayer {
+            layer_id: orig_id,
+            cloned_as,
+            files_modified: modified,
+            files_added: added,
+            files_removed: removed,
+            bytes_spliced,
+            chunks_rehashed,
+            sha_bytes_rehashed,
+            chunks_total,
+            old_checksum,
+            new_checksum,
+        });
+    }
+
+    // Persist the updated image and move the tag.
+    let mut new_image_id = images.put(&image)?;
+    images.tag(new_tag, &new_image_id)?;
+
+    // Type-2 config edits and cascade rebuilds delegate to the engine.
+    let has_config_edits = plan
+        .changes
+        .iter()
+        .any(|c| matches!(c.kind, ChangeKind::ConfigEdit { .. }));
+    let mut cascade = None;
+    if opts.cascade || has_config_edits {
+        let mut builder = Builder::new(layers, images, engine);
+        builder.scan_cache = opts.scan_cache.clone();
+        let report = builder.build(
+            ctx_dir,
+            new_tag,
+            &BuildOptions {
+                no_cache: false,
+                cost: opts.cost,
+            },
+        )?;
+        new_image_id = report.image_id;
+        cascade = Some(report);
+    }
+
+    Ok(InjectReport {
+        mode: InjectMode::Implicit,
+        reference: new_tag.clone(),
+        new_image_id,
+        patched,
+        digests_rewritten,
+        duration: t_start.elapsed(),
+        detect_duration,
+        patch_duration,
+        hash_duration,
+        cascade,
+        delegated_to_build: has_config_edits,
+    })
+}
+
+/// Common validity checks for both decomposition modes.
+pub(crate) fn guard_plan(plan: &ChangePlan, opts: &InjectOptions) -> Result<()> {
+    if plan.has_instruction_edits() {
+        let edit = plan
+            .changes
+            .iter()
+            .find_map(|c| match &c.kind {
+                ChangeKind::InstructionEdit { old, new } => Some(format!("{old:?} -> {new:?}")),
+                _ => None,
+            })
+            .unwrap_or_default();
+        return Err(Error::Inject(format!(
+            "structural Dockerfile change ({edit}); code injection targets content changes — run a normal build"
+        )));
+    }
+    if plan.downstream_compile && !opts.cascade {
+        return Err(Error::Inject(
+            "changed sources feed a downstream compile step; literal injection cannot \
+             guarantee integrity for compiled code (paper §V) — pass --cascade to also \
+             rebuild the compile layer"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::CostModel;
+    use crate::hash::NativeEngine;
+    use std::path::PathBuf;
+
+    fn fresh(tag: &str) -> (ImageStore, LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-imp-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (
+            ImageStore::open(&d).unwrap(),
+            LayerStore::open(&d).unwrap(),
+            d,
+        )
+    }
+
+    fn write_ctx(dir: &std::path::Path, dockerfile: &str, files: &[(&str, &str)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+        for (p, c) in files {
+            let path = dir.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+    }
+
+    fn build_opts() -> BuildOptions {
+        BuildOptions {
+            no_cache: false,
+            cost: CostModel::instant(),
+        }
+    }
+
+    fn inject_opts() -> InjectOptions {
+        InjectOptions {
+            cost: CostModel::instant(),
+            ..InjectOptions::default()
+        }
+    }
+
+    const DF: &str = "FROM python:alpine\nCOPY . /root/\nWORKDIR /root\nCMD [\"python\", \"main.py\"]\n";
+
+    #[test]
+    fn inject_one_line_change() {
+        let (images, layers, d) = fresh("oneline");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+
+        // Append one line (the paper's scenario-1 edit).
+        std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+        let tag2 = ImageRef::parse("app:v2");
+        let report =
+            inject_implicit(&tag, &tag2, &ctx, &images, &layers, &eng, &inject_opts()).unwrap();
+
+        assert_eq!(report.patched.len(), 1);
+        let p = &report.patched[0];
+        assert_eq!(p.files_modified, 1);
+        assert_ne!(p.old_checksum, p.new_checksum);
+        assert!(report.digests_rewritten >= 1);
+        assert!(report.cascade.is_none());
+
+        // Integrity: the bypass must leave every layer verifying.
+        let (_, img) = images.get_by_ref(&tag2).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers.verify(lid).unwrap(), "layer {} broken", lid.short());
+        }
+        // The injected content is really there.
+        let tar = layers.read_tar(&img.layer_ids[1]).unwrap();
+        let reader = crate::tar::TarReader::new(&tar).unwrap();
+        assert_eq!(
+            reader.find("root/main.py").unwrap().data(&tar),
+            b"print('v1')\nprint('v2')\n"
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn injected_image_equals_rebuilt_image_content() {
+        // The injected layer must be byte-identical to what a full rebuild
+        // would produce (same deterministic tar layout).
+        let (images, layers, d) = fresh("equiv");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n"), ("lib.py", "a = 1\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+        std::fs::write(ctx.join("lib.py"), "a = 2\nb = 3\n").unwrap();
+
+        // Injection path.
+        let tag_inj = ImageRef::parse("app:inj");
+        inject_implicit(&tag, &tag_inj, &ctx, &images, &layers, &eng, &inject_opts()).unwrap();
+        let (_, img_inj) = images.get_by_ref(&tag_inj).unwrap();
+        let injected_tar = layers.read_tar(&img_inj.layer_ids[1]).unwrap();
+        let injected_reader = crate::tar::TarReader::new(&injected_tar).unwrap();
+
+        // Rebuild path (separate store to avoid interference).
+        let (images2, layers2, d2) = fresh("equiv2");
+        Builder::new(&layers2, &images2, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+        let (_, img_rb) = images2.get_by_ref(&tag).unwrap();
+        let rebuilt_tar = layers2.read_tar(&img_rb.layer_ids[1]).unwrap();
+        let rebuilt_reader = crate::tar::TarReader::new(&rebuilt_tar).unwrap();
+
+        // Same member set and contents (ordering may differ: append vs
+        // sorted rebuild), and both verify.
+        let mut a: Vec<_> = injected_reader
+            .file_names()
+            .into_iter()
+            .map(|n| {
+                let e = injected_reader.find(&n).unwrap();
+                (n, e.data(&injected_tar).to_vec())
+            })
+            .collect();
+        let mut b: Vec<_> = rebuilt_reader
+            .file_names()
+            .into_iter()
+            .map(|n| {
+                let e = rebuilt_reader.find(&n).unwrap();
+                (n, e.data(&rebuilt_tar).to_vec())
+            })
+            .collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn add_and_remove_files() {
+        let (images, layers, d) = fresh("addrm");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n"), ("old.py", "gone\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+
+        std::fs::remove_file(ctx.join("old.py")).unwrap();
+        std::fs::write(ctx.join("new.py"), "fresh\n").unwrap();
+        let report =
+            inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &inject_opts()).unwrap();
+        let p = &report.patched[0];
+        assert_eq!((p.files_added, p.files_removed), (1, 1));
+
+        let (_, img) = images.get_by_ref(&tag).unwrap();
+        let tar = layers.read_tar(&img.layer_ids[1]).unwrap();
+        let reader = crate::tar::TarReader::new(&tar).unwrap();
+        assert!(reader.find("root/new.py").is_some());
+        assert!(reader.find("root/old.py").is_none());
+        assert!(layers.verify(&img.layer_ids[1]).unwrap());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn unchanged_context_is_noop() {
+        let (images, layers, d) = fresh("noop");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        let b1 = Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+        let report =
+            inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &inject_opts()).unwrap();
+        assert!(report.patched.is_empty());
+        assert_eq!(report.new_image_id, b1.image_id);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn structural_change_is_rejected() {
+        let (images, layers, d) = fresh("structural");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+        std::fs::write(
+            ctx.join("Dockerfile"),
+            "FROM python:alpine\nCOPY . /root/\nRUN pip install flask\nWORKDIR /root\nCMD [\"python\", \"main.py\"]\n",
+        )
+        .unwrap();
+        let err = inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &inject_opts());
+        assert!(err.is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn compile_downstream_requires_cascade() {
+        let (images, layers, d) = fresh("cascade");
+        let ctx = d.join("ctx");
+        let df = "FROM ubuntu:latest\nWORKDIR /code\nADD pom.xml pom.xml\nADD src /code/src\nRUN [\"mvn\", \"package\"]\nCMD [\"java\", \"-jar\", \"target/app-jar-with-dependencies.jar\"]\n";
+        write_ctx(
+            &ctx,
+            df,
+            &[
+                ("pom.xml", "<project><artifactId>app</artifactId><dependency><artifactId>gson</artifactId></dependency></project>"),
+                ("src/App.java", "class App {}"),
+            ],
+        );
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("japp:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+
+        std::fs::write(ctx.join("src/App.java"), "class App { int x; }").unwrap();
+        // Without cascade: refused (compiled-language integrity).
+        assert!(
+            inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &inject_opts()).is_err()
+        );
+        // With cascade: inject + rebuild the compile layer.
+        let mut o = inject_opts();
+        o.cascade = true;
+        let report = inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &o).unwrap();
+        let cascade = report.cascade.as_ref().expect("cascade build report");
+        // The ADD layers hit cache (already injected); mvn package reruns.
+        let mvn_step = cascade
+            .steps
+            .iter()
+            .find(|s| s.instruction.contains("mvn package"))
+            .unwrap();
+        assert!(!mvn_step.cached, "compile layer must rebuild");
+        let add_step = cascade
+            .steps
+            .iter()
+            .find(|s| s.instruction.contains("ADD src"))
+            .unwrap();
+        assert!(add_step.cached, "injected source layer must hit cache");
+        // Resulting jar reflects the new source.
+        let (_, img) = images.get_by_ref(&tag).unwrap();
+        let jar_layer = img.layer_ids[4];
+        let tar = layers.read_tar(&jar_layer).unwrap();
+        let reader = crate::tar::TarReader::new(&tar).unwrap();
+        let jar = reader.find("code/target/app-jar-with-dependencies.jar").unwrap();
+        let inner = crate::tar::TarReader::new(jar.data(&tar)).unwrap();
+        let class = inner.find("App.class").unwrap();
+        let bytecode = class.data(jar.data(&tar));
+        assert_eq!(bytecode, crate::builder::executor::compile_java(b"class App { int x; }"));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn config_edit_delegates_to_build() {
+        let (images, layers, d) = fresh("cfgedit");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+        std::fs::write(
+            ctx.join("Dockerfile"),
+            DF.replace("main.py\"]", "main.py\", \"--debug\"]"),
+        )
+        .unwrap();
+        let report =
+            inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &inject_opts()).unwrap();
+        assert!(report.delegated_to_build);
+        let (_, img) = images.get_by_ref(&tag).unwrap();
+        assert!(img.config.cmd.contains(&"--debug".to_string()));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn chunks_rehashed_is_o_change_not_o_layer() {
+        let (images, layers, d) = fresh("ochange");
+        let ctx = d.join("ctx");
+        // A large project: one big static asset + one small script.
+        let big = "x".repeat(2 << 20);
+        write_ctx(
+            &ctx,
+            DF,
+            &[("assets.dat", big.as_str()), ("main.py", "print('v1')\n")],
+        );
+        let eng = NativeEngine::new();
+        let tag = ImageRef::parse("app:v1");
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &tag, &build_opts())
+            .unwrap();
+
+        std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+        let report =
+            inject_implicit(&tag, &tag, &ctx, &images, &layers, &eng, &inject_opts()).unwrap();
+        let p = &report.patched[0];
+        assert!(
+            p.chunks_rehashed * 10 < p.chunks_total,
+            "rehashed {}/{} chunks — should be a small fraction",
+            p.chunks_rehashed,
+            p.chunks_total
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

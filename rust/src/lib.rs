@@ -1,0 +1,98 @@
+//! # LayerJet
+//!
+//! A from-scratch, Docker-compatible container image build system with the
+//! code-injection fast path of *"A Code Injection Method for Rapid Docker
+//! Image Building"* (Wang & Bao, CS.DC 2019) as a first-class feature.
+//!
+//! The stack is three layers:
+//!
+//! * **L3 (this crate)** — the build coordinator: Dockerfile parsing, the
+//!   baseline layer-cache build engine (with Docker's fall-through
+//!   semantics), the layer store, `save`/`load` bundles, a remote registry
+//!   simulator, and the paper's contribution in [`inject`]: targeted code
+//!   injection + SHA-256 checksum bypass + layer cloning for redeployment.
+//! * **L2 (python/compile/model.py)** — a JAX graph for batched multi-block
+//!   SHA-256 (scan over blocks, lanes over chunks), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — the SHA-256 compression function as
+//!   a Pallas kernel, the compute hot-spot of both Docker's integrity
+//!   mechanism and the injection checksum-bypass step.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
+//! crate) so Python never runs on the build path.
+//!
+//! Quick start (see `examples/quickstart.rs` for the full tour):
+//!
+//! ```no_run
+//! use layerjet::prelude::*;
+//!
+//! let tmp = std::env::temp_dir().join("layerjet-doc");
+//! let mut daemon = Daemon::new(&tmp).unwrap();
+//! // ... write a project + Dockerfile under `ctx`, then:
+//! // let image = daemon.build(&ctx, "app:v1").unwrap();
+//! // let report = daemon.inject(&ctx2, "app:v1", "app:v2").unwrap();
+//! ```
+
+pub mod util;
+pub mod hash;
+pub mod tar;
+pub mod cas;
+pub mod oci;
+pub mod dockerfile;
+pub mod store;
+pub mod builder;
+pub mod diff;
+pub mod inject;
+pub mod registry;
+pub mod runtime;
+pub mod coordinator;
+pub mod workload;
+pub mod stats;
+pub mod bench;
+pub mod daemon;
+
+/// The most commonly used types, re-exported.
+pub mod prelude {
+    pub use crate::builder::{BuildOptions, BuildReport, CostModel};
+    pub use crate::coordinator::{BuildCoordinator, BuildRequest, BuildStrategy};
+    pub use crate::daemon::Daemon;
+    pub use crate::dockerfile::Dockerfile;
+    pub use crate::hash::{Digest, HashEngine, NativeEngine, Sha256};
+    pub use crate::inject::{InjectMode, InjectOptions, InjectReport};
+    pub use crate::oci::{Image, ImageId, ImageRef, LayerId};
+    pub use crate::registry::RemoteRegistry;
+    pub use crate::workload::{Scenario, ScenarioKind};
+}
+
+/// Library-wide error type.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("tar error: {0}")]
+    Tar(String),
+    #[error("dockerfile parse error at line {line}: {msg}")]
+    Dockerfile { line: usize, msg: String },
+    #[error("build error: {0}")]
+    Build(String),
+    #[error("store error: {0}")]
+    Store(String),
+    #[error("inject error: {0}")]
+    Inject(String),
+    #[error("registry error: {0}")]
+    Registry(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl Error {
+    /// Shorthand for a free-form error.
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Other(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,300 @@
+//! `layerjet` — the CLI entry point.
+//!
+//! A docker-like command surface over the LayerJet daemon, plus the
+//! paper's injection fast path as a first-class subcommand.
+
+use layerjet::builder::{BuildOptions, CostModel};
+use layerjet::daemon::Daemon;
+use layerjet::inject::{InjectMode, InjectOptions};
+use layerjet::registry::RemoteRegistry;
+use layerjet::runtime;
+use layerjet::workload::{Scenario, ScenarioKind};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+layerjet — rapid container image building via layer code injection
+(reproduction of Wang & Bao, CS.DC 2019)
+
+USAGE: layerjet [--root DIR] [--engine native|pjrt|auto] <COMMAND>
+
+COMMANDS:
+  build -t NAME:TAG CTX [--no-cache]     build an image from a context dir
+  inject -t NAME:TAG CTX [--to NAME:TAG] [--explicit] [--cascade] [--clone]
+                                         inject context changes into an image
+  save NAME:TAG -o FILE                  export an image bundle (docker save)
+  load FILE                              import a bundle (docker load)
+  push NAME:TAG --remote DIR             push to a (directory) registry
+  pull NAME:TAG --remote DIR             pull from a (directory) registry
+  history NAME:TAG                       layer history (docker history)
+  verify NAME:TAG                        image integrity check
+  images                                 list tags
+  prune                                  delete unreferenced layers
+  scenario KIND DIR [--seed N]           generate a paper workload
+                                         (python-tiny|python-large|java-tiny|java-large)
+  engines                                show available hash engines
+
+ENVIRONMENT:
+  LAYERJET_ROOT        daemon state dir (default ./layerjet-state)
+  LAYERJET_ARTIFACTS   AOT artifacts dir (default ./artifacts)
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("layerjet: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Cli {
+    args: Vec<String>,
+}
+
+impl Cli {
+    /// Remove and return the value of `--flag VALUE`, if present.
+    fn opt(&mut self, flag: &str) -> Option<String> {
+        if let Some(i) = self.args.iter().position(|a| a == flag) {
+            if i + 1 < self.args.len() {
+                let v = self.args.remove(i + 1);
+                self.args.remove(i);
+                return Some(v);
+            }
+            self.args.remove(i);
+        }
+        None
+    }
+
+    /// Remove and return whether `--flag` is present.
+    fn has(&mut self, flag: &str) -> bool {
+        if let Some(i) = self.args.iter().position(|a| a == flag) {
+            self.args.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Next positional argument.
+    fn pos(&mut self) -> Option<String> {
+        if self.args.is_empty() {
+            None
+        } else {
+            Some(self.args.remove(0))
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> layerjet::Result<()> {
+    let mut cli = Cli { args };
+    if cli.has("--help") || cli.has("-h") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let root = cli
+        .opt("--root")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var_os("LAYERJET_ROOT").map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("layerjet-state"));
+    let engine_choice = cli.opt("--engine").unwrap_or_else(|| "auto".into());
+
+    let command = match cli.pos() {
+        Some(c) => c,
+        None => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+    };
+
+    let open_daemon = || -> layerjet::Result<Daemon> {
+        let engine: std::sync::Arc<dyn layerjet::hash::HashEngine> = match engine_choice.as_str() {
+            "native" => std::sync::Arc::new(layerjet::hash::NativeEngine::new()),
+            "pjrt" => std::sync::Arc::new(runtime::PjrtEngine::load_default()?),
+            _ => runtime::best_engine(),
+        };
+        Daemon::with_engine(&root, engine)
+    };
+
+    match command.as_str() {
+        "build" => {
+            let tag = cli
+                .opt("-t")
+                .ok_or_else(|| layerjet::Error::msg("build: missing -t NAME:TAG"))?;
+            let no_cache = cli.has("--no-cache");
+            let ctx = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("build: missing context dir"))?;
+            let daemon = open_daemon()?;
+            let report = daemon.build_with(
+                &PathBuf::from(ctx),
+                &tag,
+                &BuildOptions {
+                    no_cache,
+                    cost: CostModel::default(),
+                },
+            )?;
+            print!("{}", report.transcript);
+            eprintln!(
+                "done in {} ({} of {} steps rebuilt, {} written)",
+                layerjet::util::human_duration(report.duration),
+                report.rebuilt_steps(),
+                report.steps.len(),
+                layerjet::util::human_bytes(report.bytes_written()),
+            );
+        }
+        "inject" => {
+            let tag = cli
+                .opt("-t")
+                .ok_or_else(|| layerjet::Error::msg("inject: missing -t NAME:TAG"))?;
+            let to = cli.opt("--to").unwrap_or_else(|| tag.clone());
+            let opts = InjectOptions {
+                mode: if cli.has("--explicit") {
+                    InjectMode::Explicit
+                } else {
+                    InjectMode::Implicit
+                },
+                cascade: cli.has("--cascade"),
+                clone_for_redeploy: cli.has("--clone"),
+                cost: CostModel::default(),
+                scan_cache: None, // the daemon fills this in
+            };
+            let ctx = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("inject: missing context dir"))?;
+            let daemon = open_daemon()?;
+            let report = daemon.inject_with(&PathBuf::from(ctx), &tag, &to, &opts)?;
+            for p in &report.patched {
+                println!(
+                    "layer {}: {} modified / {} added / {} removed, {} of {} chunks rehashed, {} -> {}",
+                    p.layer_id.short(),
+                    p.files_modified,
+                    p.files_added,
+                    p.files_removed,
+                    p.chunks_rehashed,
+                    p.chunks_total,
+                    p.old_checksum.short(),
+                    p.new_checksum.short(),
+                );
+            }
+            println!(
+                "{} injection complete in {} (detect {}, patch {}, hash {}); image {}",
+                report.mode,
+                layerjet::util::human_duration(report.duration),
+                layerjet::util::human_duration(report.detect_duration),
+                layerjet::util::human_duration(report.patch_duration),
+                layerjet::util::human_duration(report.hash_duration),
+                report.new_image_id.short(),
+            );
+            if let Some(c) = &report.cascade {
+                println!(
+                    "cascade rebuild: {} of {} steps rebuilt in {}",
+                    c.rebuilt_steps(),
+                    c.steps.len(),
+                    layerjet::util::human_duration(c.duration)
+                );
+            }
+        }
+        "save" => {
+            let tag = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("save: missing NAME:TAG"))?;
+            let out = cli
+                .opt("-o")
+                .ok_or_else(|| layerjet::Error::msg("save: missing -o FILE"))?;
+            let daemon = open_daemon()?;
+            let bundle = daemon.save(&tag)?;
+            std::fs::write(&out, &bundle)?;
+            eprintln!("wrote {} ({})", out, layerjet::util::human_bytes(bundle.len() as u64));
+        }
+        "load" => {
+            let file = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("load: missing FILE"))?;
+            let daemon = open_daemon()?;
+            let r = daemon.load(&std::fs::read(file)?)?;
+            println!("Loaded image: {r}");
+        }
+        "push" | "pull" => {
+            let tag = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg(format!("{command}: missing NAME:TAG")))?;
+            let remote_dir = cli
+                .opt("--remote")
+                .ok_or_else(|| layerjet::Error::msg(format!("{command}: missing --remote DIR")))?;
+            let daemon = open_daemon()?;
+            let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
+            if command == "push" {
+                let report = daemon.push(&tag, &remote)?;
+                println!(
+                    "pushed {}: {} layers, {} uploaded",
+                    report.reference,
+                    report.layers.len(),
+                    layerjet::util::human_bytes(report.bytes_uploaded)
+                );
+            } else {
+                let id = daemon.pull(&tag, &remote)?;
+                println!("pulled {tag}: image {}", id.short());
+            }
+        }
+        "history" => {
+            let tag = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("history: missing NAME:TAG"))?;
+            print!("{}", open_daemon()?.history(&tag)?);
+        }
+        "verify" => {
+            let tag = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("verify: missing NAME:TAG"))?;
+            let ok = open_daemon()?.verify_image(&tag)?;
+            println!("{}: {}", tag, if ok { "OK" } else { "CORRUPT" });
+            if !ok {
+                return Err(layerjet::Error::msg("integrity check failed"));
+            }
+        }
+        "images" => {
+            let daemon = open_daemon()?;
+            for (r, id) in daemon.images.tags()? {
+                println!("{:<40} {}", r.to_string(), id.short());
+            }
+        }
+        "prune" => {
+            let n = open_daemon()?.prune()?;
+            println!("removed {n} unreferenced layer(s)");
+        }
+        "scenario" => {
+            let kind_name = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("scenario: missing KIND"))?;
+            let dir = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("scenario: missing DIR"))?;
+            let seed = cli.opt("--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+            let kind = ScenarioKind::ALL
+                .into_iter()
+                .find(|k| k.name() == kind_name)
+                .ok_or_else(|| layerjet::Error::msg(format!("unknown scenario {kind_name:?}")))?;
+            let s = Scenario::generate(kind, &PathBuf::from(&dir), seed)?;
+            println!("generated scenario {} in {} (tag {})", kind.name(), dir, s.tag());
+        }
+        "engines" => {
+            println!("native: always available");
+            match runtime::PjrtEngine::load_default() {
+                Ok(_) => println!(
+                    "pjrt-xla: artifacts loaded from {:?}",
+                    runtime::PjrtEngine::artifacts_dir()
+                ),
+                Err(e) => println!("pjrt-xla: unavailable ({e})"),
+            }
+        }
+        other => {
+            return Err(layerjet::Error::msg(format!(
+                "unknown command {other:?}; see --help"
+            )))
+        }
+    }
+    Ok(())
+}

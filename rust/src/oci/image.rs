@@ -1,0 +1,453 @@
+//! Image config + manifest (`config.json`, `manifest.json` of Table III-A).
+
+use super::{ImageId, ImageRef, LayerId};
+use crate::hash::Digest;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Runtime configuration accumulated from config instructions
+/// (ENV/CMD/ENTRYPOINT/WORKDIR/EXPOSE/LABEL).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ImageConfig {
+    pub env: Vec<(String, String)>,
+    pub cmd: Vec<String>,
+    pub entrypoint: Vec<String>,
+    pub working_dir: String,
+    pub exposed_ports: Vec<u16>,
+    pub labels: Vec<(String, String)>,
+}
+
+impl ImageConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "Env",
+                Json::Arr(
+                    self.env
+                        .iter()
+                        .map(|(k, v)| Json::Str(format!("{k}={v}")))
+                        .collect(),
+                ),
+            ),
+            ("Cmd", Json::Arr(self.cmd.iter().map(Json::str).collect())),
+            (
+                "Entrypoint",
+                Json::Arr(self.entrypoint.iter().map(Json::str).collect()),
+            ),
+            ("WorkingDir", Json::str(&*self.working_dir)),
+            (
+                "ExposedPorts",
+                Json::Arr(
+                    self.exposed_ports
+                        .iter()
+                        .map(|p| Json::Str(format!("{p}/tcp")))
+                        .collect(),
+                ),
+            ),
+            (
+                "Labels",
+                Json::Obj(
+                    self.labels
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ImageConfig> {
+        let strings = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let env = strings("Env")
+            .into_iter()
+            .filter_map(|kv| {
+                kv.split_once('=')
+                    .map(|(k, v)| (k.to_string(), v.to_string()))
+            })
+            .collect();
+        let exposed_ports = strings("ExposedPorts")
+            .into_iter()
+            .filter_map(|p| p.split('/').next().and_then(|n| n.parse().ok()))
+            .collect();
+        let labels = match j.get("Labels") {
+            Some(Json::Obj(fields)) => fields
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(ImageConfig {
+            env,
+            cmd: strings("Cmd"),
+            entrypoint: strings("Entrypoint"),
+            working_dir: j
+                .get("WorkingDir")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            exposed_ports,
+            labels,
+        })
+    }
+}
+
+/// One history entry per Dockerfile instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistoryEntry {
+    pub created_by: String,
+    pub empty_layer: bool,
+}
+
+/// A complete image: the in-memory form of `<config>.json`.
+///
+/// Layers are ordered base-first. Every layer — including empty config
+/// layers — has an entry in `layer_ids` and a checksum in `diff_ids`
+/// (empty layers carry the checksum of the empty tar), so "search for
+/// all occurrences of the original checksum" (paper §III.B) is a simple
+/// scan of this structure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub architecture: String,
+    pub os: String,
+    pub config: ImageConfig,
+    /// Ordered permanent layer UUIDs.
+    pub layer_ids: Vec<LayerId>,
+    /// Ordered layer checksums (revision identities), index-aligned with
+    /// `layer_ids`.
+    pub diff_ids: Vec<Digest>,
+    /// Chunk-digest roots, index-aligned with `layer_ids` (LayerJet
+    /// extension for incremental verification).
+    pub chunk_roots: Vec<Digest>,
+    /// One entry per instruction, index-aligned with `layer_ids`.
+    pub history: Vec<HistoryEntry>,
+}
+
+impl Image {
+    /// The image id is the digest of the compact config serialization —
+    /// any change to a layer checksum changes the image id, as in Docker.
+    pub fn id(&self) -> ImageId {
+        ImageId(Digest::of(self.to_json().to_string_compact().as_bytes()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("architecture", Json::str(&*self.architecture)),
+            ("os", Json::str(&*self.os)),
+            ("config", self.config.to_json()),
+            (
+                "rootfs",
+                Json::obj(vec![
+                    ("type", Json::str("layers")),
+                    (
+                        "layer_ids",
+                        Json::Arr(self.layer_ids.iter().map(|l| Json::str(l.to_hex())).collect()),
+                    ),
+                    (
+                        "diff_ids",
+                        Json::Arr(self.diff_ids.iter().map(|d| Json::str(d.prefixed())).collect()),
+                    ),
+                    (
+                        "chunk_roots",
+                        Json::Arr(
+                            self.chunk_roots
+                                .iter()
+                                .map(|d| Json::str(d.prefixed()))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("created_by", Json::str(&*h.created_by)),
+                                ("empty_layer", Json::Bool(h.empty_layer)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Image> {
+        let rootfs = j
+            .get("rootfs")
+            .ok_or_else(|| Error::Json("config missing rootfs".into()))?;
+        let ids = |key: &str| -> Result<Vec<String>> {
+            rootfs
+                .get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(str::to_string))
+                        .collect()
+                })
+                .ok_or_else(|| Error::Json(format!("rootfs missing {key}")))
+        };
+        let layer_ids = ids("layer_ids")?
+            .iter()
+            .map(|s| LayerId::parse(s).ok_or_else(|| Error::Json(format!("bad layer id {s}"))))
+            .collect::<Result<Vec<_>>>()?;
+        let diff_ids = ids("diff_ids")?
+            .iter()
+            .map(|s| Digest::parse(s).ok_or_else(|| Error::Json(format!("bad diff id {s}"))))
+            .collect::<Result<Vec<_>>>()?;
+        let chunk_roots = ids("chunk_roots")?
+            .iter()
+            .map(|s| Digest::parse(s).ok_or_else(|| Error::Json(format!("bad chunk root {s}"))))
+            .collect::<Result<Vec<_>>>()?;
+        let history = j
+            .get("history")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Json("config missing history".into()))?
+            .iter()
+            .map(|h| {
+                Ok(HistoryEntry {
+                    created_by: h
+                        .get("created_by")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| Error::Json("history missing created_by".into()))?
+                        .to_string(),
+                    empty_layer: h
+                        .get("empty_layer")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if layer_ids.len() != diff_ids.len()
+            || layer_ids.len() != history.len()
+            || layer_ids.len() != chunk_roots.len()
+        {
+            return Err(Error::Json(format!(
+                "inconsistent image: {} layers, {} diff_ids, {} chunk_roots, {} history",
+                layer_ids.len(),
+                diff_ids.len(),
+                chunk_roots.len(),
+                history.len()
+            )));
+        }
+        Ok(Image {
+            architecture: j
+                .get("architecture")
+                .and_then(|v| v.as_str())
+                .unwrap_or("amd64")
+                .to_string(),
+            os: j.get("os").and_then(|v| v.as_str()).unwrap_or("linux").to_string(),
+            config: ImageConfig::from_json(
+                j.get("config")
+                    .ok_or_else(|| Error::Json("config missing config".into()))?,
+            )?,
+            layer_ids,
+            diff_ids,
+            chunk_roots,
+            history,
+        })
+    }
+
+    /// Index of the layer with the given permanent id.
+    pub fn layer_index(&self, id: &LayerId) -> Option<usize> {
+        self.layer_ids.iter().position(|l| l == id)
+    }
+
+    /// Top (most recently built) layer.
+    pub fn top_layer(&self) -> Option<&LayerId> {
+        self.layer_ids.last()
+    }
+}
+
+/// `manifest.json` of a save bundle / registry push: config pointer, repo
+/// tags, ordered layer pointers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub config: ImageId,
+    pub repo_tags: Vec<ImageRef>,
+    /// Layer tar paths within the bundle, ordered base-first:
+    /// `<layer-id>/layer.tar`.
+    pub layers: Vec<LayerId>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        // Docker's manifest.json is an array (one element per image).
+        Json::Arr(vec![Json::obj(vec![
+            ("Config", Json::Str(format!("{}.json", self.config.to_hex()))),
+            (
+                "RepoTags",
+                Json::Arr(self.repo_tags.iter().map(|r| Json::Str(r.to_string())).collect()),
+            ),
+            (
+                "Layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| Json::Str(format!("{}/layer.tar", l.to_hex())))
+                        .collect(),
+                ),
+            ),
+        ])])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let entry = j
+            .as_arr()
+            .and_then(|a| a.first())
+            .ok_or_else(|| Error::Json("manifest is not a non-empty array".into()))?;
+        let config_name = entry
+            .get("Config")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Json("manifest missing Config".into()))?;
+        let config = ImageId::parse(config_name.trim_end_matches(".json"))
+            .ok_or_else(|| Error::Json(format!("bad Config pointer {config_name}")))?;
+        let repo_tags = entry
+            .get("RepoTags")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|s| s.as_str().map(ImageRef::parse))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let layers = entry
+            .get("Layers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Json("manifest missing Layers".into()))?
+            .iter()
+            .map(|s| {
+                let path = s
+                    .as_str()
+                    .ok_or_else(|| Error::Json("bad layer pointer".into()))?;
+                let id_part = path.trim_end_matches("/layer.tar");
+                LayerId::parse(id_part)
+                    .ok_or_else(|| Error::Json(format!("bad layer pointer {path}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            config,
+            repo_tags,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_image() -> Image {
+        let l0 = LayerId::derive("test", None, "FROM python:alpine");
+        let l1 = LayerId::derive("test", Some(&l0), "COPY main.py main.py");
+        let l2 = LayerId::derive("test", Some(&l1), "CMD [\"python\", \"./main.py\"]");
+        Image {
+            architecture: "amd64".into(),
+            os: "linux".into(),
+            config: ImageConfig {
+                env: vec![("PATH".into(), "/usr/bin".into())],
+                cmd: vec!["python".into(), "./main.py".into()],
+                entrypoint: vec![],
+                working_dir: "/root".into(),
+                exposed_ports: vec![8080],
+                labels: vec![("maintainer".into(), "layerjet".into())],
+            },
+            layer_ids: vec![l0, l1, l2],
+            diff_ids: vec![
+                Digest::of(b"base tar"),
+                Digest::of(b"copy tar"),
+                Digest::of(b"empty tar"),
+            ],
+            chunk_roots: vec![
+                Digest::of(b"base root"),
+                Digest::of(b"copy root"),
+                Digest::of(b"empty root"),
+            ],
+            history: vec![
+                HistoryEntry {
+                    created_by: "FROM python:alpine".into(),
+                    empty_layer: false,
+                },
+                HistoryEntry {
+                    created_by: "COPY main.py main.py".into(),
+                    empty_layer: false,
+                },
+                HistoryEntry {
+                    created_by: "CMD [\"python\", \"./main.py\"]".into(),
+                    empty_layer: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn image_json_round_trip() {
+        let img = sample_image();
+        let text = img.to_json().to_string_pretty();
+        let back = Image::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, img);
+        assert_eq!(back.id(), img.id());
+    }
+
+    #[test]
+    fn image_id_tracks_checksums() {
+        let img = sample_image();
+        let mut changed = img.clone();
+        changed.diff_ids[1] = Digest::of(b"new copy tar");
+        assert_ne!(img.id(), changed.id(), "checksum change must change image id");
+    }
+
+    #[test]
+    fn inconsistent_lengths_rejected() {
+        let img = sample_image();
+        let mut j = img.to_json();
+        j.get_mut("rootfs")
+            .unwrap()
+            .get_mut("diff_ids")
+            .unwrap()
+            .as_arr_mut()
+            .unwrap()
+            .pop();
+        assert!(Image::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let img = sample_image();
+        let m = Manifest {
+            config: img.id(),
+            repo_tags: vec![ImageRef::parse("app:v1"), ImageRef::parse("app:latest")],
+            layers: img.layer_ids.clone(),
+        };
+        let text = m.to_json().to_string_pretty();
+        let back = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn layer_index_and_top() {
+        let img = sample_image();
+        assert_eq!(img.layer_index(&img.layer_ids[1]), Some(1));
+        assert_eq!(img.top_layer(), Some(&img.layer_ids[2]));
+        let ghost = LayerId::derive("test", None, "RUN nothing");
+        assert_eq!(img.layer_index(&ghost), None);
+    }
+
+    #[test]
+    fn config_round_trip_empty() {
+        let c = ImageConfig::default();
+        let back = ImageConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+}

@@ -1,0 +1,166 @@
+//! Per-layer metadata: the `json` file of paper Table III-A.
+
+use super::LayerId;
+use crate::hash::Digest;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Layer-specific config, serialized as the layer's `json` file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerMeta {
+    /// Permanent UUID.
+    pub id: LayerId,
+    /// Parent layer, if any.
+    pub parent: Option<LayerId>,
+    /// Checksum (revision) of the parent layer **at the time this layer
+    /// was built**. Docker's cache chain: if the parent has since been
+    /// rebuilt (new revision), this layer's cache entry is stale and the
+    /// build falls through (paper §II.C).
+    pub parent_checksum: Option<Digest>,
+    /// SHA-256 checksum of `layer.tar` — the *revision* identity, and the
+    /// value the paper's §III.B bypass rewrites.
+    pub checksum: Digest,
+    /// Root of the chunk-digest tree over `layer.tar` (LayerJet
+    /// extension; lets injection re-verify in O(changed chunks)).
+    pub chunk_root: Digest,
+    /// The instruction literal that created this layer, e.g.
+    /// `COPY . /root/`.
+    pub created_by: String,
+    /// For `COPY`/`ADD` layers: combined digest of the *source* files
+    /// (paths + content hashes) from the build context — the value
+    /// Docker's cache criterion 3 (§I.A) compares. Zero for other layers.
+    pub source_checksum: Digest,
+    /// Config layers (ENV/CMD/...) carry no files (paper §II.A).
+    pub is_empty_layer: bool,
+    /// `layer.tar` size in bytes (0 for empty layers).
+    pub size: u64,
+    /// Layer format version.
+    pub version: String,
+}
+
+impl LayerMeta {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.to_hex())),
+            (
+                "parent",
+                match &self.parent {
+                    Some(p) => Json::str(p.to_hex()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "parent_checksum",
+                match &self.parent_checksum {
+                    Some(d) => Json::str(d.prefixed()),
+                    None => Json::Null,
+                },
+            ),
+            ("checksum", Json::str(self.checksum.prefixed())),
+            ("chunk_root", Json::str(self.chunk_root.prefixed())),
+            ("created_by", Json::str(&*self.created_by)),
+            ("source_checksum", Json::str(self.source_checksum.prefixed())),
+            ("isEmptyLayer", Json::Bool(self.is_empty_layer)),
+            ("size", Json::num(self.size as f64)),
+            ("version", Json::str(&*self.version)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LayerMeta> {
+        let get_str = |k: &str| -> Result<&str> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Json(format!("layer json missing field {k}")))
+        };
+        let parent = match j.get("parent") {
+            Some(Json::Str(s)) => Some(
+                LayerId::parse(s).ok_or_else(|| Error::Json("bad parent id".into()))?,
+            ),
+            _ => None,
+        };
+        let parent_checksum = match j.get("parent_checksum") {
+            Some(Json::Str(s)) => Some(
+                Digest::parse(s).ok_or_else(|| Error::Json("bad parent_checksum".into()))?,
+            ),
+            _ => None,
+        };
+        Ok(LayerMeta {
+            id: LayerId::parse(get_str("id")?)
+                .ok_or_else(|| Error::Json("bad layer id".into()))?,
+            parent,
+            parent_checksum,
+            checksum: Digest::parse(get_str("checksum")?)
+                .ok_or_else(|| Error::Json("bad checksum".into()))?,
+            chunk_root: Digest::parse(get_str("chunk_root")?)
+                .ok_or_else(|| Error::Json("bad chunk_root".into()))?,
+            created_by: get_str("created_by")?.to_string(),
+            source_checksum: Digest::parse(get_str("source_checksum")?)
+                .ok_or_else(|| Error::Json("bad source_checksum".into()))?,
+            is_empty_layer: j
+                .get("isEmptyLayer")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| Error::Json("layer json missing isEmptyLayer".into()))?,
+            size: j
+                .get("size")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| Error::Json("layer json missing size".into()))?,
+            version: get_str("version")?.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LayerMeta {
+        let parent = LayerId::derive("test", None, "FROM python:alpine");
+        LayerMeta {
+            id: LayerId::derive("test", Some(&parent), "COPY main.py main.py"),
+            parent: Some(parent),
+            parent_checksum: Some(Digest::of(b"parent rev")),
+            checksum: Digest::of(b"tar bytes"),
+            chunk_root: Digest::of(b"chunk root"),
+            created_by: "COPY main.py main.py".into(),
+            source_checksum: Digest::of(b"sources"),
+            is_empty_layer: false,
+            size: 1536,
+            version: "1.0".into(),
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let meta = sample();
+        let j = meta.to_json();
+        let text = j.to_string_pretty();
+        let back = LayerMeta::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn root_layer_has_null_parent() {
+        let mut meta = sample();
+        meta.parent = None;
+        let back = LayerMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(back.parent, None);
+    }
+
+    #[test]
+    fn checksum_serialized_with_prefix() {
+        let meta = sample();
+        let j = meta.to_json();
+        assert!(j
+            .get("checksum")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("sha256:"));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"id": "abc"}"#).unwrap();
+        assert!(LayerMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Image and layer metadata model (paper Table III-A).
+//!
+//! An **image** consists of
+//! * `manifest.json` — config pointer, repo tags, ordered layer pointers;
+//! * `repositories` — repository name → latest layer/image pointer;
+//! * `<config>.json` — image config and the per-layer config array
+//!   (architecture, version, **layer checksum**, instruction).
+//!
+//! A **layer** consists of
+//! * `version` — layer format version;
+//! * `layer.tar` — archive of all files generated at this layer;
+//! * `json` — layer-specific config: id, version sha, layer checksum,
+//!   env, `isEmptyLayer`, etc.
+//!
+//! Identity follows the paper's model (§I): a layer's **UUID is
+//! permanent** — it is derived from its position in the build (parent id
+//! + instruction literal) — while its **checksum tracks the content
+//! revision**. "If a developer changes the content of a layer, the
+//! layer's ID remains the same, but its checksum varies."
+
+pub mod image;
+mod layer;
+
+pub use image::{HistoryEntry, Image, ImageConfig, Manifest};
+pub use layer::LayerMeta;
+
+use crate::hash::{Digest, Sha256};
+use std::fmt;
+
+/// Permanent layer UUID (a SHA-256 value, per the paper).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(pub Digest);
+
+impl LayerId {
+    /// Derive the permanent id for a layer from its lineage: the build
+    /// namespace (repository name — so two *different* projects with
+    /// textually identical Dockerfiles get distinct layers), the parent's
+    /// id, and the instruction literal. Rebuilding the same instruction at
+    /// the same position of the same repository reuses the id, while the
+    /// content checksum is free to change — exactly the id/checksum split
+    /// the paper describes. Base images use their own name as namespace,
+    /// which is what makes cross-image base-layer deduplication work.
+    pub fn derive(namespace: &str, parent: Option<&LayerId>, created_by: &str) -> LayerId {
+        let mut h = Sha256::new();
+        h.update(b"layerjet-layer-id\0");
+        h.update(namespace.as_bytes());
+        h.update(&[0]);
+        if let Some(p) = parent {
+            h.update(&p.0 .0);
+        }
+        h.update(created_by.as_bytes());
+        LayerId(h.finalize())
+    }
+
+    /// A fresh, unrelated id (used when cloning a layer for redeployment,
+    /// paper §III.C). Mixes a nonce into the derivation.
+    pub fn derive_clone(&self, nonce: u64) -> LayerId {
+        let mut h = Sha256::new();
+        h.update(b"layerjet-layer-clone\0");
+        h.update(&self.0 .0);
+        h.update(&nonce.to_le_bytes());
+        LayerId(h.finalize())
+    }
+
+    pub fn to_hex(&self) -> String {
+        self.0.to_hex()
+    }
+
+    /// 12-char short form, as `docker build` prints (`---> dd455e432ce8`).
+    pub fn short(&self) -> String {
+        self.0.short()
+    }
+
+    pub fn parse(s: &str) -> Option<LayerId> {
+        Digest::parse(s).map(LayerId)
+    }
+}
+
+impl fmt::Display for LayerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+impl fmt::Debug for LayerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "LayerId({})", self.short())
+    }
+}
+
+/// Image id: the digest of the image's serialized config (as in Docker,
+/// where the image id is the config blob's hash).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ImageId(pub Digest);
+
+impl ImageId {
+    pub fn to_hex(&self) -> String {
+        self.0.to_hex()
+    }
+
+    pub fn short(&self) -> String {
+        self.0.short()
+    }
+
+    pub fn parse(s: &str) -> Option<ImageId> {
+        Digest::parse(s).map(ImageId)
+    }
+}
+
+impl fmt::Display for ImageId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+impl fmt::Debug for ImageId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ImageId({})", self.short())
+    }
+}
+
+/// `name:tag` reference.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct ImageRef {
+    pub name: String,
+    pub tag: String,
+}
+
+impl ImageRef {
+    /// Parse `name[:tag]`; tag defaults to `latest`.
+    pub fn parse(s: &str) -> ImageRef {
+        match s.rsplit_once(':') {
+            // A ':' inside a path-ish name (registry/port) is not our
+            // concern here; tags are simple in this system.
+            Some((name, tag)) if !tag.contains('/') => ImageRef {
+                name: name.to_string(),
+                tag: tag.to_string(),
+            },
+            _ => ImageRef {
+                name: s.to_string(),
+                tag: "latest".to_string(),
+            },
+        }
+    }
+}
+
+impl fmt::Display for ImageRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.name, self.tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_id_is_permanent_across_content() {
+        let a = LayerId::derive("test", None, "COPY . /root/");
+        let b = LayerId::derive("test", None, "COPY . /root/");
+        assert_eq!(a, b, "same position + instruction => same id");
+        let c = LayerId::derive("test", None, "COPY . /app/");
+        assert_ne!(a, c, "different instruction => different id");
+        let parent = LayerId::derive("test", None, "FROM alpine");
+        let d = LayerId::derive("test", Some(&parent), "COPY . /root/");
+        assert_ne!(a, d, "different parent => different id");
+    }
+
+    #[test]
+    fn clone_ids_are_fresh() {
+        let a = LayerId::derive("test", None, "COPY . .");
+        let c1 = a.derive_clone(1);
+        let c2 = a.derive_clone(2);
+        assert_ne!(a, c1);
+        assert_ne!(c1, c2);
+    }
+
+    #[test]
+    fn image_ref_parsing() {
+        let r = ImageRef::parse("app:v2");
+        assert_eq!((r.name.as_str(), r.tag.as_str()), ("app", "v2"));
+        let r = ImageRef::parse("python");
+        assert_eq!((r.name.as_str(), r.tag.as_str()), ("python", "latest"));
+        let r = ImageRef::parse("continuumio/miniconda3");
+        assert_eq!(r.tag, "latest");
+        assert_eq!(ImageRef::parse("a:b").to_string(), "a:b");
+    }
+
+    #[test]
+    fn short_forms() {
+        let id = LayerId::derive("test", None, "FROM x");
+        assert_eq!(id.short().len(), 12);
+        assert!(id.to_hex().starts_with(&id.short()));
+    }
+}

@@ -1,0 +1,389 @@
+//! Remote registry simulator.
+//!
+//! Implements exactly the integrity rule the paper's §III.C hinges on:
+//! on push, the registry "uses each layer's id to fetch the same layer id
+//! from remote and compares the checksum trace". A layer id that already
+//! exists remotely with a **different** checksum is rejected — which is
+//! why naive in-place injection cannot be pushed, and why the clone-
+//! before-inject redeployment flow exists. Fresh layer ids upload
+//! normally (after content verification).
+
+use crate::hash::Digest;
+use crate::oci::{Image, ImageId, ImageRef, LayerId};
+use crate::store::{ImageStore, LayerStore};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// What happened to each layer during a push.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerPushStatus {
+    /// Layer id + checksum already remote: nothing sent.
+    AlreadyExists,
+    /// New layer id: content uploaded.
+    Uploaded,
+    /// Empty layer: metadata only.
+    Empty,
+}
+
+/// Result of a successful push.
+#[derive(Clone, Debug)]
+pub struct PushReport {
+    pub reference: ImageRef,
+    pub image_id: ImageId,
+    pub layers: Vec<(LayerId, LayerPushStatus)>,
+    pub bytes_uploaded: u64,
+}
+
+/// An in-process remote registry backed by a directory:
+///
+/// ```text
+/// <root>/layers/<layer-id>/checksum   — the immutable checksum trace
+/// <root>/layers/<layer-id>/layer.tar
+/// <root>/images/<image-id>.json
+/// <root>/tags.json
+/// ```
+pub struct RemoteRegistry {
+    root: PathBuf,
+}
+
+impl RemoteRegistry {
+    pub fn open(root: &Path) -> Result<RemoteRegistry> {
+        std::fs::create_dir_all(root.join("layers"))?;
+        std::fs::create_dir_all(root.join("images"))?;
+        let reg = RemoteRegistry {
+            root: root.to_path_buf(),
+        };
+        if !reg.tags_path().exists() {
+            std::fs::write(reg.tags_path(), "{}\n")?;
+        }
+        Ok(reg)
+    }
+
+    fn tags_path(&self) -> PathBuf {
+        self.root.join("tags.json")
+    }
+
+    fn layer_dir(&self, id: &LayerId) -> PathBuf {
+        self.root.join("layers").join(id.to_hex())
+    }
+
+    /// The checksum trace the remote holds for a layer id, if any.
+    pub fn remote_checksum(&self, id: &LayerId) -> Option<Digest> {
+        std::fs::read_to_string(self.layer_dir(id).join("checksum"))
+            .ok()
+            .and_then(|s| Digest::parse(s.trim()))
+    }
+
+    /// Push an image (resolved from the local stores).
+    ///
+    /// Failure modes, both integrity checks from the paper:
+    /// * a layer id exists remotely with a different checksum → rejected
+    ///   ("the user cannot change the remote image's content");
+    /// * uploaded content does not hash to its declared checksum →
+    ///   rejected (corruption detection).
+    pub fn push(
+        &self,
+        r: &ImageRef,
+        images: &ImageStore,
+        layers: &LayerStore,
+    ) -> Result<PushReport> {
+        let (image_id, image) = images.get_by_ref(r)?;
+        // Phase 1: verify everything before mutating remote state.
+        let mut plan: Vec<(LayerId, LayerPushStatus, Option<Vec<u8>>)> = Vec::new();
+        for (i, lid) in image.layer_ids.iter().enumerate() {
+            let declared = image.diff_ids[i];
+            match self.remote_checksum(lid) {
+                Some(remote) if remote == declared => {
+                    plan.push((*lid, LayerPushStatus::AlreadyExists, None));
+                }
+                Some(remote) => {
+                    return Err(Error::Registry(format!(
+                        "layer {} integrity check failed: remote checksum trace {} != pushed {} \
+                         (a layer id's content is immutable; clone the layer for redeploy)",
+                        lid.short(),
+                        remote.short(),
+                        declared.short()
+                    )));
+                }
+                None => {
+                    let meta = layers.meta(lid)?;
+                    let tar = layers.read_tar(lid)?;
+                    if Digest::of(&tar) != declared {
+                        return Err(Error::Registry(format!(
+                            "layer {} content does not match its declared checksum",
+                            lid.short()
+                        )));
+                    }
+                    let status = if meta.is_empty_layer {
+                        LayerPushStatus::Empty
+                    } else {
+                        LayerPushStatus::Uploaded
+                    };
+                    plan.push((*lid, status, Some(tar)));
+                }
+            }
+        }
+        // Phase 2: commit.
+        let mut bytes_uploaded = 0;
+        for (lid, _, tar) in &plan {
+            if let Some(tar) = tar {
+                let dir = self.layer_dir(lid);
+                std::fs::create_dir_all(&dir)?;
+                std::fs::write(dir.join("layer.tar"), tar)?;
+                std::fs::write(dir.join("checksum"), Digest::of(tar).prefixed())?;
+                bytes_uploaded += tar.len() as u64;
+            }
+        }
+        std::fs::write(
+            self.root.join("images").join(format!("{}.json", image_id.to_hex())),
+            image.to_json().to_string_pretty(),
+        )?;
+        let mut tags = self.load_tags()?;
+        tags.set(&r.to_string(), Json::str(image_id.to_hex()));
+        std::fs::write(self.tags_path(), tags.to_string_pretty())?;
+
+        Ok(PushReport {
+            reference: r.clone(),
+            image_id,
+            layers: plan.into_iter().map(|(l, s, _)| (l, s)).collect(),
+            bytes_uploaded,
+        })
+    }
+
+    /// Pull an image into local stores (used by multi-machine scenarios
+    /// and the CI coordinator's warm-up).
+    pub fn pull(
+        &self,
+        r: &ImageRef,
+        images: &ImageStore,
+        layers: &LayerStore,
+    ) -> Result<ImageId> {
+        let tags = self.load_tags()?;
+        let image_id = tags
+            .get(&r.to_string())
+            .and_then(|v| v.as_str())
+            .and_then(ImageId::parse)
+            .ok_or_else(|| Error::Registry(format!("remote has no tag {r}")))?;
+        let text = std::fs::read_to_string(
+            self.root.join("images").join(format!("{}.json", image_id.to_hex())),
+        )
+        .map_err(|e| Error::Registry(format!("remote image {} missing: {e}", image_id.short())))?;
+        let image = Image::from_json(&Json::parse(&text).map_err(Error::Json)?)?;
+
+        for (i, lid) in image.layer_ids.iter().enumerate() {
+            let tar = std::fs::read(self.layer_dir(lid).join("layer.tar"))
+                .map_err(|e| Error::Registry(format!("remote layer {} missing: {e}", lid.short())))?;
+            // Integrity on pull, too.
+            if Digest::of(&tar) != image.diff_ids[i] {
+                return Err(Error::Registry(format!(
+                    "remote layer {} corrupt",
+                    lid.short()
+                )));
+            }
+            let meta = crate::oci::LayerMeta {
+                id: *lid,
+                parent: if i == 0 { None } else { Some(image.layer_ids[i - 1]) },
+                parent_checksum: if i == 0 { None } else { Some(image.diff_ids[i - 1]) },
+                checksum: image.diff_ids[i],
+                chunk_root: image.chunk_roots[i],
+                created_by: image.history[i].created_by.clone(),
+                source_checksum: Digest([0u8; 32]),
+                is_empty_layer: image.history[i].empty_layer,
+                size: tar.len() as u64,
+                version: crate::store::LAYER_VERSION.into(),
+            };
+            let engine = crate::hash::NativeEngine::new();
+            layers.put_layer(&meta, &tar, &engine)?;
+        }
+        let stored = images.put(&image)?;
+        images.tag(r, &stored)?;
+        Ok(stored)
+    }
+
+    /// All remote tags.
+    pub fn tags(&self) -> Result<Vec<(ImageRef, ImageId)>> {
+        let tags = self.load_tags()?;
+        let mut out = Vec::new();
+        if let Json::Obj(fields) = &tags {
+            for (k, v) in fields {
+                if let Some(id) = v.as_str().and_then(ImageId::parse) {
+                    out.push((ImageRef::parse(k), id));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn load_tags(&self) -> Result<Json> {
+        Json::parse(&std::fs::read_to_string(self.tags_path())?).map_err(Error::Json)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::{BuildOptions, Builder, CostModel};
+    use crate::hash::NativeEngine;
+    use crate::inject::{implicit::inject_implicit, InjectOptions};
+
+    fn fresh(tag: &str) -> (ImageStore, LayerStore, RemoteRegistry, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-reg-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (
+            ImageStore::open(&d.join("local")).unwrap(),
+            LayerStore::open(&d.join("local")).unwrap(),
+            RemoteRegistry::open(&d.join("remote")).unwrap(),
+            d,
+        )
+    }
+
+    fn write_ctx(dir: &std::path::Path, dockerfile: &str, files: &[(&str, &str)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+        for (p, c) in files {
+            std::fs::write(dir.join(p), c).unwrap();
+        }
+    }
+
+    const DF: &str = "FROM python:alpine\nCOPY . /root/\nCMD [\"python\", \"main.py\"]\n";
+
+    fn build(images: &ImageStore, layers: &LayerStore, ctx: &std::path::Path, tag: &str) {
+        let eng = NativeEngine::new();
+        Builder::new(layers, images, &eng)
+            .build(
+                ctx,
+                &ImageRef::parse(tag),
+                &BuildOptions { no_cache: false, cost: CostModel::instant() },
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn push_and_pull_round_trip() {
+        let (images, layers, remote, d) = fresh("rt");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+
+        let report = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+        assert!(report.bytes_uploaded > 0);
+        assert!(report
+            .layers
+            .iter()
+            .all(|(_, s)| *s != LayerPushStatus::AlreadyExists));
+
+        // Second push: everything deduplicated.
+        let again = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+        assert_eq!(again.bytes_uploaded, 0);
+        assert!(again
+            .layers
+            .iter()
+            .all(|(_, s)| *s == LayerPushStatus::AlreadyExists));
+
+        // Pull into a fresh machine.
+        let (images2, layers2, _, d2) = fresh("rt-pull");
+        remote.pull(&ImageRef::parse("app:v1"), &images2, &layers2).unwrap();
+        let (_, img) = images2.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers2.verify(lid).unwrap());
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    /// The §III.C failure the paper describes: in-place injection changes
+    /// a layer's checksum while keeping its id; the remote rejects it.
+    #[test]
+    fn naive_injected_push_is_rejected_clone_is_accepted() {
+        let (images, layers, remote, d) = fresh("redeploy");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+
+        // Inject WITHOUT cloning: same layer id, new checksum.
+        std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+        let eng = NativeEngine::new();
+        inject_implicit(
+            &ImageRef::parse("app:v1"),
+            &ImageRef::parse("app:v2"),
+            &ctx,
+            &images,
+            &layers,
+            &eng,
+            &InjectOptions { cost: CostModel::instant(), ..Default::default() },
+        )
+        .unwrap();
+        let err = remote.push(&ImageRef::parse("app:v2"), &images, &layers);
+        assert!(err.is_err(), "naive bypass must fail remote integrity");
+        assert!(format!("{}", err.unwrap_err()).contains("integrity"));
+
+        // Now the paper's fix: clone-before-inject.
+        std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\nprint('v3')\n").unwrap();
+        inject_implicit(
+            &ImageRef::parse("app:v1"),
+            &ImageRef::parse("app:v3"),
+            &ctx,
+            &images,
+            &layers,
+            &eng,
+            &InjectOptions {
+                clone_for_redeploy: true,
+                cost: CostModel::instant(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ok = remote.push(&ImageRef::parse("app:v3"), &images, &layers).unwrap();
+        assert!(ok
+            .layers
+            .iter()
+            .any(|(_, s)| *s == LayerPushStatus::Uploaded), "clone uploads under a fresh id");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_content_rejected() {
+        let (images, layers, remote, d) = fresh("corrupt");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        // Corrupt a layer WITHOUT fixing metadata (no bypass).
+        let (_, img) = images.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        let victim = img.layer_ids[1];
+        let mut tar = layers.read_tar(&victim).unwrap();
+        tar[600] ^= 0xff;
+        layers.write_tar_raw(&victim, &tar).unwrap();
+        let err = remote.push(&ImageRef::parse("app:v1"), &images, &layers);
+        assert!(err.is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn pull_unknown_tag_errors() {
+        let (images, layers, remote, d) = fresh("unknown");
+        assert!(remote.pull(&ImageRef::parse("ghost:1"), &images, &layers).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn cross_image_layer_dedup_on_remote() {
+        // Two different tags sharing a base: the base layer uploads once.
+        let (images, layers, remote, d) = fresh("dedup");
+        let ctx1 = d.join("ctx1");
+        let ctx2 = d.join("ctx2");
+        write_ctx(&ctx1, DF, &[("main.py", "print('a')\n")]);
+        write_ctx(&ctx2, DF, &[("main.py", "print('b')\n")]);
+        build(&images, &layers, &ctx1, "app-a:1");
+        build(&images, &layers, &ctx2, "app-b:1");
+        remote.push(&ImageRef::parse("app-a:1"), &images, &layers).unwrap();
+        let second = remote.push(&ImageRef::parse("app-b:1"), &images, &layers).unwrap();
+        assert_eq!(
+            second.layers[0].1,
+            LayerPushStatus::AlreadyExists,
+            "shared base layer must deduplicate"
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

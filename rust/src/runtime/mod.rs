@@ -1,0 +1,371 @@
+//! PJRT runtime: load and execute the AOT-compiled hash graph.
+//!
+//! Python runs once, at build time (`make artifacts`): `compile/aot.py`
+//! lowers the L2 scan-of-Pallas-compressions to **HLO text** (the
+//! interchange format xla_extension 0.5.1 accepts — serialized protos
+//! from jax ≥ 0.5 are rejected over 64-bit instruction ids). This module
+//! loads those artifacts through the `xla` crate's PJRT CPU client and
+//! exposes them as a [`HashEngine`], so the build/injection hot path
+//! calls the same compiled executable a TPU deployment would — never
+//! Python.
+//!
+//! PJRT handles are not `Send`, so the client and executables live on a
+//! dedicated **runtime thread**; the engine hands it whole chunk batches
+//! over a channel. Batches are coarse (a full lane-packed tensor per
+//! message), so the channel hop is noise next to the hashing itself.
+
+use crate::hash::engine::{chunk_message_blocks, HashEngine, BLOCKS_PER_CHUNK, WORDS_PER_BLOCK};
+use crate::hash::Digest;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A batch job for the runtime thread: a packed `[lanes, 65, 16]` u32
+/// buffer plus the lane count selecting the executable variant.
+struct Job {
+    lanes: usize,
+    words: Vec<u32>,
+    reply: mpsc::SyncSender<Result<Vec<u32>>>,
+}
+
+/// The PJRT-backed batched hasher.
+pub struct PjrtEngine {
+    tx: Mutex<mpsc::Sender<Job>>,
+    /// Available lane variants, descending.
+    lanes: Vec<usize>,
+    stats: Mutex<EngineStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub chunks: u64,
+    pub padded_lanes: u64,
+}
+
+impl PjrtEngine {
+    /// Default artifact location: `$LAYERJET_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var_os("LAYERJET_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Parse `<dir>/manifest.json` into (lanes, file) pairs.
+    fn read_manifest(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Json::parse(&text).map_err(Error::Json)?;
+        let blocks = manifest
+            .get("blocks_per_chunk")
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0) as usize;
+        if blocks != BLOCKS_PER_CHUNK {
+            return Err(Error::Runtime(format!(
+                "artifact blocks_per_chunk {} != engine {} — stale artifacts?",
+                blocks, BLOCKS_PER_CHUNK
+            )));
+        }
+        let mut out = Vec::new();
+        for v in manifest
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Runtime("manifest has no variants".into()))?
+        {
+            let lanes = v
+                .get("lanes")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| Error::Runtime("variant missing lanes".into()))?
+                as usize;
+            let file = v
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Runtime("variant missing file".into()))?;
+            out.push((lanes, dir.join(file)));
+        }
+        if out.is_empty() {
+            return Err(Error::Runtime("no artifact variants".into()));
+        }
+        Ok(out)
+    }
+
+    /// Load and compile every variant listed in `<dir>/manifest.json`,
+    /// on a dedicated runtime thread.
+    pub fn load(dir: &Path) -> Result<PjrtEngine> {
+        let manifest = Self::read_manifest(dir)?;
+        let mut lanes: Vec<usize> = manifest.iter().map(|(l, _)| *l).collect();
+        lanes.sort_by(|a, b| b.cmp(a));
+
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+        std::thread::Builder::new()
+            .name("layerjet-pjrt".into())
+            .spawn(move || runtime_thread(manifest, rx, init_tx))
+            .map_err(|e| Error::Runtime(format!("spawn runtime thread: {e}")))?;
+        init_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during init".into()))??;
+        Ok(PjrtEngine {
+            tx: Mutex::new(tx),
+            lanes,
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<PjrtEngine> {
+        Self::load(&Self::artifacts_dir())
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn submit(&self, lanes: usize, words: Vec<u32>) -> Result<Vec<u32>> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job {
+                lanes,
+                words,
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Runtime("runtime thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread dropped reply".into()))?
+    }
+}
+
+/// The thread that owns the PJRT client and executables.
+fn runtime_thread(
+    manifest: Vec<(usize, PathBuf)>,
+    rx: mpsc::Receiver<Job>,
+    init_tx: mpsc::SyncSender<Result<()>>,
+) {
+    // Compile all variants; report success/failure to the loader.
+    let compiled: Result<Vec<(usize, xla::PjRtLoadedExecutable)>> = (|| {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        let mut out = Vec::new();
+        for (lanes, path) in &manifest {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+            out.push((*lanes, exe));
+        }
+        Ok(out)
+    })();
+    let executables = match compiled {
+        Ok(e) => {
+            let _ = init_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        let result = (|| -> Result<Vec<u32>> {
+            let (_, exe) = executables
+                .iter()
+                .find(|(l, _)| *l == job.lanes)
+                .ok_or_else(|| Error::Runtime(format!("no variant with {} lanes", job.lanes)))?;
+            debug_assert_eq!(
+                job.words.len(),
+                job.lanes * BLOCKS_PER_CHUNK * WORDS_PER_BLOCK
+            );
+            let mut bytes = Vec::with_capacity(job.words.len() * 4);
+            for w in &job.words {
+                bytes.extend_from_slice(&w.to_ne_bytes());
+            }
+            let input = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U32,
+                &[job.lanes, BLOCKS_PER_CHUNK, WORDS_PER_BLOCK],
+                &bytes,
+            )
+            .map_err(|e| Error::Runtime(format!("literal: {e}")))?;
+            // The round-constant table travels as a runtime argument:
+            // HLO text (our interchange format) elides constants larger
+            // than a few elements, so K cannot be baked into the graph.
+            let k_bytes: Vec<u8> = crate::hash::sha256::K
+                .iter()
+                .flat_map(|w| w.to_ne_bytes())
+                .collect();
+            let k_input = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U32,
+                &[64],
+                &k_bytes,
+            )
+            .map_err(|e| Error::Runtime(format!("k literal: {e}")))?;
+            let result = exe
+                .execute::<xla::Literal>(&[input, k_input])
+                .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
+            let out = result
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+            out.to_vec::<u32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+        })();
+        let _ = job.reply.send(result);
+    }
+}
+
+impl HashEngine for PjrtEngine {
+    fn name(&self) -> &str {
+        "pjrt-xla"
+    }
+
+    fn hash_chunks(&self, chunks: &[&[u8]]) -> Vec<Digest> {
+        if chunks.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(chunks.len());
+        let mut idx = 0;
+        let mut padded_lanes = 0u64;
+        let mut calls = 0u64;
+        while idx < chunks.len() {
+            let remaining = chunks.len() - idx;
+            // Smallest variant that covers the remainder, else the largest.
+            let lanes = self
+                .lanes
+                .iter()
+                .rev() // ascending
+                .find(|l| **l >= remaining)
+                .copied()
+                .unwrap_or(self.lanes[0]);
+            let take = remaining.min(lanes);
+            let mut words = Vec::with_capacity(lanes * BLOCKS_PER_CHUNK * WORDS_PER_BLOCK);
+            for chunk in &chunks[idx..idx + take] {
+                chunk_message_blocks(chunk, &mut words);
+            }
+            // Pad unused lanes with empty-chunk messages.
+            for _ in take..lanes {
+                chunk_message_blocks(&[], &mut words);
+                padded_lanes += 1;
+            }
+            let digest_words = self
+                .submit(lanes, words)
+                .expect("PJRT execution failed on the hash artifact");
+            calls += 1;
+            for lane in 0..take {
+                let mut state = [0u32; 8];
+                state.copy_from_slice(&digest_words[lane * 8..lane * 8 + 8]);
+                out.push(Digest::from_words(&state));
+            }
+            idx += take;
+        }
+        let mut stats = self.stats.lock().unwrap();
+        stats.calls += calls;
+        stats.chunks += chunks.len() as u64;
+        stats.padded_lanes += padded_lanes;
+        out
+    }
+}
+
+/// Open the best available engine: PJRT artifacts when present, native
+/// fallback otherwise (with a note on stderr so benches can't silently
+/// compare the wrong engine).
+pub fn best_engine() -> std::sync::Arc<dyn HashEngine> {
+    match PjrtEngine::load_default() {
+        Ok(engine) => std::sync::Arc::new(engine),
+        Err(e) => {
+            eprintln!("layerjet: PJRT artifacts unavailable ({e}); using native hash engine");
+            std::sync::Arc::new(crate::hash::NativeEngine::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+
+    fn engine() -> Option<PjrtEngine> {
+        // Tests run from the crate root; artifacts may not be built yet in
+        // a bare `cargo test` — those tests are skipped (the Makefile test
+        // target builds artifacts first and exercises them).
+        PjrtEngine::load(&PjrtEngine::artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn pjrt_matches_native_engine() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let native = NativeEngine::new();
+        let chunks: Vec<Vec<u8>> = vec![
+            b"".to_vec(),
+            b"abc".to_vec(),
+            vec![0x5a; 4096],
+            vec![0xff; 100],
+            (0..=255u8).cycle().take(2048).collect(),
+        ];
+        let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        assert_eq!(eng.hash_chunks(&refs), native.hash_chunks(&refs));
+    }
+
+    #[test]
+    fn pjrt_batches_beyond_max_lanes() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let native = NativeEngine::new();
+        // 150 chunks: exercises 64-lane batching + the 8-lane tail + padding.
+        let chunks: Vec<Vec<u8>> = (0..150u32)
+            .map(|i| i.to_le_bytes().repeat(100 + (i as usize % 900)))
+            .collect();
+        let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        assert_eq!(eng.hash_chunks(&refs), native.hash_chunks(&refs));
+        let stats = eng.stats();
+        assert!(stats.calls >= 3, "expected multiple batched calls");
+        assert_eq!(stats.chunks, 150);
+    }
+
+    #[test]
+    fn engine_is_usable_across_threads() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let eng = std::sync::Arc::new(eng);
+        let native = NativeEngine::new();
+        std::thread::scope(|s| {
+            for t in 0..4u8 {
+                let eng = eng.clone();
+                let native = &native;
+                s.spawn(move || {
+                    let chunk = vec![t; 1000];
+                    let got = eng.hash_chunks(&[&chunk]);
+                    assert_eq!(got, native.hash_chunks(&[&chunk]));
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn missing_artifacts_is_clean_error() {
+        let ghost = std::path::Path::new("/definitely/not/here");
+        assert!(PjrtEngine::load(ghost).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Statistics for the evaluation: descriptive stats and the one-sided
+//! Z hypothesis test of paper Table II.
+//!
+//! The paper tests H₀: µ ≤ H₀ where µ is the true mean speedup of the
+//! proposed method, at significance α = 0.001, with
+//! P = φ((µ̂ − H₀)/(s/√n)) (their Eq. 2 — the reported P is the upper
+//! tail probability of observing the sample mean under H₀).
+
+/// Descriptive summary of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample standard deviation (n−1 denominator).
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute mean/std/min/max of a sample.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+        max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Percentile (nearest-rank) of a sample; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// The error function, via the Abramowitz & Stegun 7.1.26 rational
+/// approximation (|ε| ≤ 1.5e-7 — far below the α = 0.001 resolution the
+/// hypothesis test needs).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    const P: f64 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF φ.
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Result of the one-sided Z test.
+#[derive(Clone, Copy, Debug)]
+pub struct ZTest {
+    pub h0: f64,
+    pub z: f64,
+    /// Upper-tail P value: probability of the data under H₀.
+    pub p: f64,
+    /// Rejected at the paper's α = 0.001?
+    pub reject: bool,
+}
+
+/// One-sided test of H₀: µ ≤ h0 against H₁: µ > h0 (paper Eq. 2).
+pub fn z_test(sample: &Summary, h0: f64, alpha: f64) -> ZTest {
+    let se = sample.std / (sample.n as f64).sqrt();
+    let z = if se == 0.0 {
+        if sample.mean > h0 {
+            f64::INFINITY
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        (sample.mean - h0) / se
+    };
+    // P(observing this or larger mean | µ = h0) = 1 − φ(z).
+    let p = 1.0 - normal_cdf(z);
+    ZTest {
+        h0,
+        z,
+        p,
+        reject: p < alpha,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - 1.2909944487358056).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 4.0));
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-6); // A&S 7.1.26 is ~1e-9 at 0
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953222650).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.96) - 0.9750021).abs() < 1e-5);
+        assert!((normal_cdf(-3.0) - 0.0013499).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn z_test_rejects_when_mean_clearly_above_h0() {
+        // Sample ~ N(200, 10), H0 = 100 => overwhelming rejection.
+        let mut rng = Prng::new(1);
+        let xs: Vec<f64> = (0..100).map(|_| 200.0 + 10.0 * rng.gauss()).collect();
+        let t = z_test(&summarize(&xs), 100.0, 0.001);
+        assert!(t.reject);
+        assert!(t.p < 1e-6);
+    }
+
+    #[test]
+    fn z_test_accepts_when_mean_below_h0() {
+        let mut rng = Prng::new(2);
+        let xs: Vec<f64> = (0..100).map(|_| 90.0 + 10.0 * rng.gauss()).collect();
+        let t = z_test(&summarize(&xs), 100.0, 0.001);
+        assert!(!t.reject);
+        assert!(t.p > 0.5);
+    }
+
+    #[test]
+    fn z_test_degenerate_zero_variance() {
+        let xs = [5.0; 10];
+        let above = z_test(&summarize(&xs), 4.0, 0.001);
+        assert!(above.reject);
+        let below = z_test(&summarize(&xs), 6.0, 0.001);
+        assert!(!below.reject);
+    }
+}

@@ -1,0 +1,184 @@
+//! Image store: config blobs + the `repositories.json` tag map.
+
+use crate::oci::{Image, ImageId, ImageRef};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Stores image configs under `<root>/images/<image-id>.json` and tags in
+/// `<root>/repositories.json`.
+pub struct ImageStore {
+    root: PathBuf,
+}
+
+impl ImageStore {
+    pub fn open(root: &Path) -> Result<ImageStore> {
+        std::fs::create_dir_all(root.join("images"))?;
+        let store = ImageStore {
+            root: root.to_path_buf(),
+        };
+        if !store.repos_path().exists() {
+            std::fs::write(store.repos_path(), "{}\n")?;
+        }
+        Ok(store)
+    }
+
+    fn repos_path(&self) -> PathBuf {
+        self.root.join("repositories.json")
+    }
+
+    fn image_path(&self, id: &ImageId) -> PathBuf {
+        self.root.join("images").join(format!("{}.json", id.to_hex()))
+    }
+
+    /// Persist an image config; returns its content-derived id.
+    pub fn put(&self, image: &Image) -> Result<ImageId> {
+        let id = image.id();
+        std::fs::write(self.image_path(&id), image.to_json().to_string_pretty())?;
+        Ok(id)
+    }
+
+    pub fn get(&self, id: &ImageId) -> Result<Image> {
+        let text = std::fs::read_to_string(self.image_path(id))
+            .map_err(|e| Error::Store(format!("image {} missing: {e}", id.short())))?;
+        Image::from_json(&Json::parse(&text).map_err(Error::Json)?)
+    }
+
+    pub fn exists(&self, id: &ImageId) -> bool {
+        self.image_path(id).exists()
+    }
+
+    /// Point `name:tag` at an image id.
+    pub fn tag(&self, r: &ImageRef, id: &ImageId) -> Result<()> {
+        let mut repos = self.load_repos()?;
+        repos.set(&r.to_string(), Json::str(id.to_hex()));
+        std::fs::write(self.repos_path(), repos.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Resolve a tag to an image id.
+    pub fn resolve(&self, r: &ImageRef) -> Result<ImageId> {
+        let repos = self.load_repos()?;
+        repos
+            .get(&r.to_string())
+            .and_then(|v| v.as_str())
+            .and_then(ImageId::parse)
+            .ok_or_else(|| Error::Store(format!("no such image: {r}")))
+    }
+
+    /// Resolve a tag and load the image in one step.
+    pub fn get_by_ref(&self, r: &ImageRef) -> Result<(ImageId, Image)> {
+        let id = self.resolve(r)?;
+        Ok((id, self.get(&id)?))
+    }
+
+    /// Remove a tag (the image config stays until untagged everywhere and
+    /// pruned; reference counting is the daemon's job).
+    pub fn untag(&self, r: &ImageRef) -> Result<()> {
+        let mut repos = self.load_repos()?;
+        if let Json::Obj(fields) = &mut repos {
+            fields.retain(|(k, _)| k != &r.to_string());
+        }
+        std::fs::write(self.repos_path(), repos.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// All `name:tag → image id` pairs.
+    pub fn tags(&self) -> Result<Vec<(ImageRef, ImageId)>> {
+        let repos = self.load_repos()?;
+        let mut out = Vec::new();
+        if let Json::Obj(fields) = &repos {
+            for (k, v) in fields {
+                if let Some(id) = v.as_str().and_then(ImageId::parse) {
+                    out.push((ImageRef::parse(k), id));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// All stored image ids.
+    pub fn list(&self) -> Result<Vec<ImageId>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("images"))? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(id) = name.strip_suffix(".json").and_then(ImageId::parse) {
+                out.push(id);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn load_repos(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.repos_path())?;
+        Json::parse(&text).map_err(Error::Json)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Digest;
+    use crate::oci::{ImageConfig, LayerId};
+
+    fn fresh(tag: &str) -> (ImageStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-imgs-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (ImageStore::open(&d).unwrap(), d)
+    }
+
+    fn sample_image(marker: &str) -> Image {
+        let l0 = LayerId::derive("test", None, "FROM alpine");
+        Image {
+            architecture: "amd64".into(),
+            os: "linux".into(),
+            config: ImageConfig::default(),
+            layer_ids: vec![l0],
+            diff_ids: vec![Digest::of(marker.as_bytes())],
+            chunk_roots: vec![Digest::of(b"root")],
+            history: vec![crate::oci::image::HistoryEntry {
+                created_by: "FROM alpine".into(),
+                empty_layer: false,
+            }],
+        }
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let (s, d) = fresh("rt");
+        let img = sample_image("v1");
+        let id = s.put(&img).unwrap();
+        assert!(s.exists(&id));
+        assert_eq!(s.get(&id).unwrap(), img);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn tag_resolve_untag() {
+        let (s, d) = fresh("tags");
+        let v1 = sample_image("v1");
+        let v2 = sample_image("v2");
+        let id1 = s.put(&v1).unwrap();
+        let id2 = s.put(&v2).unwrap();
+        let r = ImageRef::parse("app:latest");
+        s.tag(&r, &id1).unwrap();
+        assert_eq!(s.resolve(&r).unwrap(), id1);
+        // Retag moves the pointer (new revision).
+        s.tag(&r, &id2).unwrap();
+        assert_eq!(s.resolve(&r).unwrap(), id2);
+        assert_eq!(s.tags().unwrap().len(), 1);
+        s.untag(&r).unwrap();
+        assert!(s.resolve(&r).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn list_images() {
+        let (s, d) = fresh("list");
+        s.put(&sample_image("a")).unwrap();
+        s.put(&sample_image("b")).unwrap();
+        assert_eq!(s.list().unwrap().len(), 2);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

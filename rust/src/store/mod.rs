@@ -1,0 +1,396 @@
+//! Local daemon storage: the overlay2-like layer store and the image
+//! store ("the local registry" in the paper's terminology).
+//!
+//! Layout mirrors what the paper describes (§I, Table III-A): all layers
+//! live under `<root>/overlay2/<layer-id>/` with `version`, `layer.tar`
+//! and `json` files; image configs live under `<root>/images/`, and
+//! `repositories.json` maps `name:tag` to image ids.
+//!
+//! Layer directories are addressed by the **permanent UUID**, so the
+//! implicit-decomposition injection path (paper §III.A) can patch
+//! `layer.tar` in place — "changes can be made to the layer directly
+//! without having to export the image or import the image".
+
+mod bundle;
+mod images;
+
+pub use bundle::{load_bundle, save_bundle};
+pub use images::ImageStore;
+
+use crate::hash::{ChunkDigest, Digest, HashEngine, ShaCheckpoint};
+use crate::oci::{LayerId, LayerMeta};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Version string written to each layer's `version` file.
+pub const LAYER_VERSION: &str = "1.0";
+
+/// The overlay2-like on-disk layer store.
+pub struct LayerStore {
+    root: PathBuf,
+}
+
+impl LayerStore {
+    /// Open (creating if needed) a layer store under `<root>/overlay2`.
+    pub fn open(root: &Path) -> Result<LayerStore> {
+        std::fs::create_dir_all(root.join("overlay2"))?;
+        Ok(LayerStore {
+            root: root.to_path_buf(),
+        })
+    }
+
+    /// Directory of one layer: `<root>/overlay2/<layer-id>/`.
+    pub fn layer_dir(&self, id: &LayerId) -> PathBuf {
+        self.root.join("overlay2").join(id.to_hex())
+    }
+
+    /// Path of a layer's `layer.tar` (public because the injection path
+    /// patches it in place).
+    pub fn tar_path(&self, id: &LayerId) -> PathBuf {
+        self.layer_dir(id).join("layer.tar")
+    }
+
+    pub fn exists(&self, id: &LayerId) -> bool {
+        self.layer_dir(id).join("json").exists()
+    }
+
+    /// Store a layer: writes `version`, `layer.tar`, `json`, plus the
+    /// chunk-digest sidecar. Overwrites an existing revision of the same
+    /// layer id (the paper's model: same id, new checksum).
+    pub fn put_layer(
+        &self,
+        meta: &LayerMeta,
+        tar: &[u8],
+        engine: &dyn HashEngine,
+    ) -> Result<ChunkDigest> {
+        let (digest, ckpts) = crate::hash::hash_with_checkpoints(tar);
+        debug_assert_eq!(meta.checksum, digest, "meta checksum must match tar");
+        let dir = self.layer_dir(&meta.id);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("version"), LAYER_VERSION)?;
+        std::fs::write(dir.join("layer.tar"), tar)?;
+        let cd = ChunkDigest::compute(tar, engine);
+        self.write_chunk_sidecar(&meta.id, &cd)?;
+        self.write_sha_checkpoints(&meta.id, &ckpts)?;
+        std::fs::write(dir.join("json"), meta.to_json().to_string_pretty())?;
+        Ok(cd)
+    }
+
+    /// Read a layer's metadata (`json` file).
+    pub fn meta(&self, id: &LayerId) -> Result<LayerMeta> {
+        let path = self.layer_dir(id).join("json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Store(format!("layer {} missing: {e}", id.short())))?;
+        LayerMeta::from_json(&Json::parse(&text).map_err(Error::Json)?)
+    }
+
+    /// Overwrite a layer's metadata (used by checksum bypass, §III.B).
+    pub fn write_meta(&self, meta: &LayerMeta) -> Result<()> {
+        let dir = self.layer_dir(&meta.id);
+        if !dir.exists() {
+            return Err(Error::Store(format!("layer {} missing", meta.id.short())));
+        }
+        std::fs::write(dir.join("json"), meta.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Read a layer's tar bytes.
+    pub fn read_tar(&self, id: &LayerId) -> Result<Vec<u8>> {
+        std::fs::read(self.tar_path(id))
+            .map_err(|e| Error::Store(format!("layer {} tar missing: {e}", id.short())))
+    }
+
+    /// Overwrite a layer's tar bytes **without** touching metadata — the
+    /// raw in-place write the implicit injection path uses before it
+    /// fixes the checksums.
+    pub fn write_tar_raw(&self, id: &LayerId, tar: &[u8]) -> Result<()> {
+        std::fs::write(self.tar_path(id), tar)?;
+        Ok(())
+    }
+
+    /// Load the chunk-digest sidecar (recomputing on miss/corruption).
+    pub fn chunk_digest(&self, id: &LayerId, engine: &dyn HashEngine) -> Result<ChunkDigest> {
+        let path = self.layer_dir(id).join("layer.chunks");
+        if path.exists() {
+            if let Some(cd) = decode_chunk_sidecar(&std::fs::read(&path)?) {
+                return Ok(cd);
+            }
+        }
+        let tar = self.read_tar(id)?;
+        let cd = ChunkDigest::compute(&tar, engine);
+        self.write_chunk_sidecar(id, &cd)?;
+        Ok(cd)
+    }
+
+    /// Write/replace the SHA-checkpoint sidecar (midstream SHA-256
+    /// states every CHECKPOINT_INTERVAL bytes of `layer.tar`; lets the
+    /// injector re-hash only from the first changed byte).
+    pub fn write_sha_checkpoints(&self, id: &LayerId, ckpts: &[ShaCheckpoint]) -> Result<()> {
+        let mut buf = Vec::with_capacity(8 + 40 * ckpts.len());
+        buf.extend_from_slice(&(ckpts.len() as u64).to_le_bytes());
+        for (off, state) in ckpts {
+            buf.extend_from_slice(&off.to_le_bytes());
+            for w in state {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        std::fs::write(self.layer_dir(id).join("layer.shakpt"), buf)?;
+        Ok(())
+    }
+
+    /// Load the SHA-checkpoint sidecar, if present and well-formed.
+    pub fn sha_checkpoints(&self, id: &LayerId) -> Option<Vec<ShaCheckpoint>> {
+        let bytes = std::fs::read(self.layer_dir(id).join("layer.shakpt")).ok()?;
+        if bytes.len() < 8 {
+            return None;
+        }
+        let n = u64::from_le_bytes(bytes[..8].try_into().ok()?) as usize;
+        if bytes.len() != 8 + 40 * n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = 8 + 40 * i;
+            let off = u64::from_le_bytes(bytes[base..base + 8].try_into().ok()?);
+            let mut state = [0u32; 8];
+            for (j, w) in state.iter_mut().enumerate() {
+                *w = u32::from_le_bytes(
+                    bytes[base + 8 + 4 * j..base + 12 + 4 * j].try_into().ok()?,
+                );
+            }
+            out.push((off, state));
+        }
+        Some(out)
+    }
+
+    /// Write/replace the per-file index sidecar (`files.idx`): archive
+    /// path → (size, chunk-digest root) for every regular file in the
+    /// layer. Lets change detection compare metadata instead of hashing
+    /// archived content.
+    pub fn write_file_index(&self, id: &LayerId, entries: &[(String, u64, Digest)]) -> Result<()> {
+        let mut doc = Vec::with_capacity(entries.len());
+        for (path, size, digest) in entries {
+            doc.push(Json::obj(vec![
+                ("path", Json::str(path.clone())),
+                ("size", Json::num(*size as f64)),
+                ("digest", Json::str(digest.prefixed())),
+            ]));
+        }
+        std::fs::write(
+            self.layer_dir(id).join("files.idx"),
+            Json::Arr(doc).to_string_compact(),
+        )?;
+        Ok(())
+    }
+
+    /// Load the per-file index sidecar, if present.
+    pub fn file_index(&self, id: &LayerId) -> Option<Vec<(String, u64, Digest)>> {
+        let text = std::fs::read_to_string(self.layer_dir(id).join("files.idx")).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let mut out = Vec::new();
+        for item in j.as_arr()? {
+            out.push((
+                item.get("path")?.as_str()?.to_string(),
+                item.get("size")?.as_u64()?,
+                Digest::parse(item.get("digest")?.as_str()?)?,
+            ));
+        }
+        Some(out)
+    }
+
+    /// Write/replace the chunk-digest sidecar.
+    pub fn write_chunk_sidecar(&self, id: &LayerId, cd: &ChunkDigest) -> Result<()> {
+        let mut buf = Vec::with_capacity(40 + 32 * cd.chunks.len());
+        buf.extend_from_slice(&cd.total_len.to_le_bytes());
+        buf.extend_from_slice(&cd.root.0);
+        for c in &cd.chunks {
+            buf.extend_from_slice(&c.0);
+        }
+        std::fs::write(self.layer_dir(id).join("layer.chunks"), buf)?;
+        Ok(())
+    }
+
+    /// All stored layer ids.
+    pub fn list(&self) -> Result<Vec<LayerId>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("overlay2"))? {
+            let entry = entry?;
+            if let Some(id) = LayerId::parse(&entry.file_name().to_string_lossy()) {
+                out.push(id);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Delete a layer directory entirely.
+    pub fn delete(&self, id: &LayerId) -> Result<()> {
+        let dir = self.layer_dir(id);
+        if dir.exists() {
+            std::fs::remove_dir_all(dir)?;
+        }
+        Ok(())
+    }
+
+    /// Docker's integrity test for one layer: does `layer.tar` hash to
+    /// the checksum recorded in the layer json? The checksum bypass must
+    /// leave this returning `true`.
+    pub fn verify(&self, id: &LayerId) -> Result<bool> {
+        let meta = self.meta(id)?;
+        if meta.is_empty_layer {
+            return Ok(true);
+        }
+        let tar = self.read_tar(id)?;
+        Ok(Digest::of(&tar) == meta.checksum)
+    }
+}
+
+fn decode_chunk_sidecar(bytes: &[u8]) -> Option<ChunkDigest> {
+    if bytes.len() < 40 || (bytes.len() - 40) % 32 != 0 {
+        return None;
+    }
+    let total_len = u64::from_le_bytes(bytes[..8].try_into().ok()?);
+    let mut root = [0u8; 32];
+    root.copy_from_slice(&bytes[8..40]);
+    let chunks: Vec<Digest> = bytes[40..]
+        .chunks_exact(32)
+        .map(|c| {
+            let mut d = [0u8; 32];
+            d.copy_from_slice(c);
+            Digest(d)
+        })
+        .collect();
+    if ChunkDigest::root_of(&chunks, total_len) != Digest(root) {
+        return None;
+    }
+    Some(ChunkDigest {
+        chunks,
+        total_len,
+        root: Digest(root),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+    use crate::tar::TarBuilder;
+
+    fn fresh(tag: &str) -> (LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-store-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (LayerStore::open(&d).unwrap(), d)
+    }
+
+    fn layer_with(content: &[u8], created_by: &str) -> (LayerMeta, Vec<u8>) {
+        let mut b = TarBuilder::new();
+        b.append_file("app.py", content).unwrap();
+        let tar = b.finish();
+        let id = LayerId::derive("test", None, created_by);
+        let meta = LayerMeta {
+            id,
+            parent: None,
+            parent_checksum: None,
+            checksum: Digest::of(&tar),
+            chunk_root: ChunkDigest::compute(&tar, &NativeEngine::new()).root,
+            created_by: created_by.to_string(),
+            source_checksum: Digest([0u8; 32]),
+            is_empty_layer: false,
+            size: tar.len() as u64,
+            version: LAYER_VERSION.into(),
+        };
+        (meta, tar)
+    }
+
+    #[test]
+    fn put_and_read_layer() {
+        let (s, d) = fresh("put");
+        let (meta, tar) = layer_with(b"print('v1')", "COPY app.py app.py");
+        s.put_layer(&meta, &tar, &NativeEngine::new()).unwrap();
+        assert!(s.exists(&meta.id));
+        assert_eq!(s.read_tar(&meta.id).unwrap(), tar);
+        assert_eq!(s.meta(&meta.id).unwrap(), meta);
+        assert!(s.verify(&meta.id).unwrap());
+        // Table III-A files all present.
+        let dir = s.layer_dir(&meta.id);
+        for f in ["version", "layer.tar", "json"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn same_id_new_revision_overwrites() {
+        let (s, d) = fresh("rev");
+        let eng = NativeEngine::new();
+        let (meta1, tar1) = layer_with(b"v1", "COPY app.py app.py");
+        s.put_layer(&meta1, &tar1, &eng).unwrap();
+        let (meta2, tar2) = layer_with(b"v2 longer content", "COPY app.py app.py");
+        assert_eq!(meta1.id, meta2.id, "same instruction => same permanent id");
+        assert_ne!(meta1.checksum, meta2.checksum, "revision => new checksum");
+        s.put_layer(&meta2, &tar2, &eng).unwrap();
+        assert_eq!(s.meta(&meta1.id).unwrap().checksum, meta2.checksum);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn raw_tar_write_breaks_verify_until_meta_fixed() {
+        // This IS the paper's integrity mechanism: content changed but
+        // checksum not yet rewritten => verification fails.
+        let (s, d) = fresh("bypass");
+        let eng = NativeEngine::new();
+        let (meta, tar) = layer_with(b"original", "COPY a a");
+        s.put_layer(&meta, &tar, &eng).unwrap();
+
+        let mut patched = tar.clone();
+        crate::tar::replace_file(&mut patched, "app.py", b"injected").unwrap();
+        s.write_tar_raw(&meta.id, &patched).unwrap();
+        assert!(!s.verify(&meta.id).unwrap(), "stale checksum must fail");
+
+        // "Update both the key and the lock" (§III.B).
+        let mut fixed = meta.clone();
+        fixed.checksum = Digest::of(&patched);
+        fixed.size = patched.len() as u64;
+        s.write_meta(&fixed).unwrap();
+        assert!(s.verify(&meta.id).unwrap());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn chunk_sidecar_round_trip() {
+        let (s, d) = fresh("chunks");
+        let eng = NativeEngine::new();
+        let (meta, tar) = layer_with(&vec![7u8; 9000], "COPY big big");
+        let cd = s.put_layer(&meta, &tar, &eng).unwrap();
+        assert_eq!(s.chunk_digest(&meta.id, &eng).unwrap(), cd);
+        // Corrupt sidecar => transparently recomputed.
+        std::fs::write(s.layer_dir(&meta.id).join("layer.chunks"), b"junk").unwrap();
+        assert_eq!(s.chunk_digest(&meta.id, &eng).unwrap(), cd);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn list_and_delete() {
+        let (s, d) = fresh("list");
+        let eng = NativeEngine::new();
+        let (m1, t1) = layer_with(b"a", "FROM alpine");
+        let (m2, t2) = layer_with(b"b", "COPY . .");
+        s.put_layer(&m1, &t1, &eng).unwrap();
+        s.put_layer(&m2, &t2, &eng).unwrap();
+        assert_eq!(s.list().unwrap().len(), 2);
+        s.delete(&m1.id).unwrap();
+        assert_eq!(s.list().unwrap().len(), 1);
+        assert!(!s.exists(&m1.id));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_layer_errors() {
+        let (s, d) = fresh("missing");
+        let ghost = LayerId::derive("test", None, "RUN ghost");
+        assert!(s.meta(&ghost).is_err());
+        assert!(s.read_tar(&ghost).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

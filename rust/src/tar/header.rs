@@ -1,0 +1,227 @@
+//! ustar header block encoding/decoding.
+
+use crate::{Error, Result};
+
+/// Tar block size; headers are one block, file data is padded to blocks.
+pub const BLOCK_SIZE: usize = 512;
+
+/// Member types we support (layers only contain files and directories).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TypeFlag {
+    Regular,
+    Directory,
+}
+
+impl TypeFlag {
+    fn to_byte(self) -> u8 {
+        match self {
+            TypeFlag::Regular => b'0',
+            TypeFlag::Directory => b'5',
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<TypeFlag> {
+        match b {
+            b'0' | 0 => Ok(TypeFlag::Regular),
+            b'5' => Ok(TypeFlag::Directory),
+            other => Err(Error::Tar(format!("unsupported typeflag {:?}", other as char))),
+        }
+    }
+}
+
+/// A decoded ustar header.
+#[derive(Clone, Debug)]
+pub struct Header {
+    pub name: String,
+    pub mode: u32,
+    pub size: u64,
+    pub typeflag: TypeFlag,
+    checksum: u32,
+}
+
+impl Header {
+    /// Header for a regular file with normalized metadata (mode 0644,
+    /// uid/gid 0, mtime 0 — archives must be deterministic).
+    pub fn for_file(name: &str, size: u64) -> Result<Header> {
+        if name.len() > 100 {
+            // The 155-byte prefix field could extend this; our workloads
+            // never need paths that long, so keep the format simple.
+            return Err(Error::Tar(format!("member name too long: {name}")));
+        }
+        Ok(Header {
+            name: name.to_string(),
+            mode: 0o644,
+            size,
+            typeflag: TypeFlag::Regular,
+            checksum: 0,
+        })
+    }
+
+    /// Header for a directory.
+    pub fn for_dir(name: &str) -> Result<Header> {
+        let name = format!("{}/", name.trim_end_matches('/'));
+        if name.len() > 100 {
+            return Err(Error::Tar(format!("member name too long: {name}")));
+        }
+        Ok(Header {
+            name,
+            mode: 0o755,
+            size: 0,
+            typeflag: TypeFlag::Directory,
+            checksum: 0,
+        })
+    }
+
+    /// Compute and store the header checksum (must be called before
+    /// `to_bytes`; done automatically by the writer).
+    pub fn finalize_checksum(&mut self) {
+        let mut bytes = self.encode(0);
+        // Checksum is computed with the checksum field set to spaces.
+        for b in &mut bytes[148..156] {
+            *b = b' ';
+        }
+        let sum: u32 = bytes.iter().map(|&b| b as u32).sum();
+        self.checksum = sum;
+    }
+
+    /// Serialize to a 512-byte block.
+    pub fn to_bytes(&self) -> [u8; BLOCK_SIZE] {
+        self.encode(self.checksum)
+    }
+
+    fn encode(&self, checksum: u32) -> [u8; BLOCK_SIZE] {
+        let mut block = [0u8; BLOCK_SIZE];
+        write_str(&mut block[0..100], &self.name);
+        write_octal(&mut block[100..108], self.mode as u64);
+        write_octal(&mut block[108..116], 0); // uid
+        write_octal(&mut block[116..124], 0); // gid
+        write_octal(&mut block[124..136], self.size);
+        write_octal(&mut block[136..148], 0); // mtime
+        write_checksum(&mut block[148..156], checksum);
+        block[156] = self.typeflag.to_byte();
+        // linkname: empty
+        block[257..263].copy_from_slice(b"ustar\0");
+        block[263..265].copy_from_slice(b"00");
+        write_str(&mut block[265..297], "root"); // uname
+        write_str(&mut block[297..329], "root"); // gname
+        write_octal(&mut block[329..337], 0); // devmajor
+        write_octal(&mut block[337..345], 0); // devminor
+        block
+    }
+
+    /// Decode a header block. Returns `Ok(None)` for an all-zero block
+    /// (end-of-archive marker).
+    pub fn from_bytes(block: &[u8]) -> Result<Option<Header>> {
+        if block.len() < BLOCK_SIZE {
+            return Err(Error::Tar("truncated header block".into()));
+        }
+        if block[..BLOCK_SIZE].iter().all(|&b| b == 0) {
+            return Ok(None);
+        }
+        let stored_sum = read_octal(&block[148..156])? as u32;
+        let mut check = block[..BLOCK_SIZE].to_vec();
+        for b in &mut check[148..156] {
+            *b = b' ';
+        }
+        let actual: u32 = check.iter().map(|&b| b as u32).sum();
+        if actual != stored_sum {
+            return Err(Error::Tar(format!(
+                "header checksum mismatch: stored {stored_sum}, computed {actual}"
+            )));
+        }
+        Ok(Some(Header {
+            name: read_str(&block[0..100]),
+            mode: read_octal(&block[100..108])? as u32,
+            size: read_octal(&block[124..136])?,
+            typeflag: TypeFlag::from_byte(block[156])?,
+            checksum: stored_sum,
+        }))
+    }
+}
+
+fn write_str(field: &mut [u8], s: &str) {
+    let bytes = s.as_bytes();
+    field[..bytes.len()].copy_from_slice(bytes);
+}
+
+/// NUL-terminated octal ASCII, as GNU tar writes it.
+fn write_octal(field: &mut [u8], value: u64) {
+    let width = field.len() - 1; // leave room for NUL
+    let s = format!("{:0width$o}", value, width = width);
+    field[..width].copy_from_slice(s.as_bytes());
+    field[width] = 0;
+}
+
+/// Checksum field has its own quirky format: 6 octal digits, NUL, space.
+fn write_checksum(field: &mut [u8], value: u32) {
+    let s = format!("{:06o}", value);
+    field[..6].copy_from_slice(s.as_bytes());
+    field[6] = 0;
+    field[7] = b' ';
+}
+
+fn read_str(field: &[u8]) -> String {
+    let end = field.iter().position(|&b| b == 0).unwrap_or(field.len());
+    String::from_utf8_lossy(&field[..end]).into_owned()
+}
+
+fn read_octal(field: &[u8]) -> Result<u64> {
+    let s = read_str(field);
+    let trimmed = s.trim_matches(|c: char| c == ' ' || c == '\0');
+    if trimmed.is_empty() {
+        return Ok(0);
+    }
+    u64::from_str_radix(trimmed, 8).map_err(|e| Error::Tar(format!("bad octal field {s:?}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trip() {
+        let mut h = Header::for_file("dir/app.py", 12345).unwrap();
+        h.finalize_checksum();
+        let bytes = h.to_bytes();
+        let back = Header::from_bytes(&bytes).unwrap().unwrap();
+        assert_eq!(back.name, "dir/app.py");
+        assert_eq!(back.size, 12345);
+        assert_eq!(back.typeflag, TypeFlag::Regular);
+    }
+
+    #[test]
+    fn dir_header_gets_trailing_slash() {
+        let mut h = Header::for_dir("pkg").unwrap();
+        h.finalize_checksum();
+        let back = Header::from_bytes(&h.to_bytes()).unwrap().unwrap();
+        assert_eq!(back.name, "pkg/");
+        assert_eq!(back.typeflag, TypeFlag::Directory);
+    }
+
+    #[test]
+    fn zero_block_is_eof() {
+        assert!(Header::from_bytes(&[0u8; BLOCK_SIZE]).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_checksum_rejected() {
+        let mut h = Header::for_file("x", 1).unwrap();
+        h.finalize_checksum();
+        let mut bytes = h.to_bytes();
+        bytes[0] ^= 0xff;
+        assert!(Header::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn long_name_rejected() {
+        let long = "a/".repeat(60);
+        assert!(Header::for_file(&long, 0).is_err());
+    }
+
+    #[test]
+    fn octal_fields() {
+        let mut f = [0u8; 12];
+        write_octal(&mut f, 0o777_777);
+        assert_eq!(read_octal(&f).unwrap(), 0o777_777);
+    }
+}

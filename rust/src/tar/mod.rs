@@ -1,0 +1,364 @@
+//! A from-scratch ustar (POSIX.1-1988 tar) writer/reader.
+//!
+//! Every layer's content lives in a `layer.tar` (paper Table III-A), and
+//! `docker save` bundles are tars of tars. The injection fast path needs
+//! more than archive/extract: it must **locate a member's byte range** so
+//! a patch can be spliced in place and only the affected chunks re-hashed.
+//! [`replace_file`] returns exactly the byte ranges it touched, which is
+//! what feeds [`crate::hash::ChunkDigest::update`].
+//!
+//! Archives are deterministic: fixed mtime/uid/gid, sorted directory
+//! walks, zero padding — so a layer's digest depends only on its content.
+
+mod header;
+mod reader;
+mod writer;
+
+pub use header::{Header, TypeFlag, BLOCK_SIZE};
+pub use reader::{Entry, TarReader};
+pub use writer::TarBuilder;
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Archive a directory tree into a deterministic tar (sorted walk,
+/// normalized metadata). Paths in the archive are relative to `dir`.
+pub fn tar_dir(dir: &Path) -> Result<Vec<u8>> {
+    let mut b = TarBuilder::new();
+    append_tree(&mut b, dir, "")?;
+    Ok(b.finish())
+}
+
+fn append_tree(b: &mut TarBuilder, dir: &Path, prefix: &str) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let arc_path = if prefix.is_empty() {
+            name.clone()
+        } else {
+            format!("{}/{}", prefix, name)
+        };
+        if entry.file_type()?.is_dir() {
+            b.append_dir(&arc_path)?;
+            append_tree(b, &entry.path(), &arc_path)?;
+        } else {
+            let data = std::fs::read(entry.path())?;
+            b.append_file(&arc_path, &data)?;
+        }
+    }
+    Ok(())
+}
+
+/// Extract an archive into a directory (creates it if needed).
+pub fn untar_to(bytes: &[u8], dir: &Path) -> Result<usize> {
+    std::fs::create_dir_all(dir)?;
+    let reader = TarReader::new(bytes)?;
+    let mut n = 0;
+    for entry in reader.entries() {
+        let safe = sanitize(&entry.name)?;
+        let out = dir.join(&safe);
+        match entry.typeflag {
+            TypeFlag::Directory => std::fs::create_dir_all(&out)?,
+            TypeFlag::Regular => {
+                if let Some(parent) = out.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                std::fs::write(&out, entry.data(bytes))?;
+                n += 1;
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Reject absolute paths and `..` traversal in archive member names.
+fn sanitize(name: &str) -> Result<std::path::PathBuf> {
+    let p = Path::new(name);
+    if p.is_absolute() {
+        return Err(Error::Tar(format!("absolute member path: {name}")));
+    }
+    for comp in p.components() {
+        if matches!(comp, std::path::Component::ParentDir) {
+            return Err(Error::Tar(format!("path traversal in member: {name}")));
+        }
+    }
+    Ok(p.to_path_buf())
+}
+
+/// Replace (or insert) a regular-file member's contents **in place**,
+/// splicing the archive buffer. Returns the byte ranges of `tar` that
+/// changed, for incremental re-hashing:
+///
+/// * same padded size → only the member's header (size/checksum fields)
+///   and data region change: two small ranges;
+/// * different padded size → the splice shifts the tail: one range from
+///   the member's header to the (new) end of the archive.
+pub fn replace_file(
+    tar: &mut Vec<u8>,
+    name: &str,
+    new_data: &[u8],
+) -> Result<Vec<std::ops::Range<u64>>> {
+    let reader = TarReader::new(tar)?;
+    let entry = reader
+        .entries()
+        .into_iter()
+        .find(|e| e.name == name && e.typeflag == TypeFlag::Regular)
+        .ok_or_else(|| Error::Tar(format!("member not found: {name}")))?;
+
+    let old_padded = padded(entry.size as usize);
+    let new_padded = padded(new_data.len());
+
+    // Rewrite the header with the new size.
+    let mut hdr = Header::for_file(name, new_data.len() as u64)?;
+    hdr.finalize_checksum();
+    let hdr_bytes = hdr.to_bytes();
+    tar[entry.header_offset..entry.header_offset + BLOCK_SIZE].copy_from_slice(&hdr_bytes);
+
+    let data_start = entry.data_offset;
+    if new_padded == old_padded {
+        // In-place overwrite; zero the padding tail.
+        tar[data_start..data_start + new_data.len()].copy_from_slice(new_data);
+        for b in &mut tar[data_start + new_data.len()..data_start + new_padded] {
+            *b = 0;
+        }
+        Ok(vec![
+            entry.header_offset as u64..(entry.header_offset + BLOCK_SIZE) as u64,
+            data_start as u64..(data_start + new_padded) as u64,
+        ])
+    } else {
+        // Splice: everything from the data region to EOF shifts.
+        let mut padded_data = vec![0u8; new_padded];
+        padded_data[..new_data.len()].copy_from_slice(new_data);
+        tar.splice(data_start..data_start + old_padded, padded_data);
+        Ok(vec![entry.header_offset as u64..tar.len() as u64])
+    }
+}
+
+/// Insert a new regular-file member, **keeping members name-sorted**
+/// (the builder archives files in sorted order, and injection must stay
+/// byte-equivalent to a rebuild — the `inject == rebuild` property).
+/// Returns the changed byte range (insertion point to new EOF).
+pub fn insert_file(
+    tar: &mut Vec<u8>,
+    name: &str,
+    data: &[u8],
+) -> Result<Vec<std::ops::Range<u64>>> {
+    let reader = TarReader::new(tar)?;
+    if reader.find(name).is_some() {
+        return replace_file(tar, name, data);
+    }
+    // Sorted insertion point: before the first member that orders after
+    // `name`; otherwise after the last member's padded data.
+    let entries = reader.entries();
+    let insert_at = entries
+        .iter()
+        .find(|e| e.name.as_str() > name)
+        .map(|e| e.header_offset)
+        .unwrap_or_else(|| {
+            entries
+                .last()
+                .map(|e| e.data_offset + padded(e.size as usize))
+                .unwrap_or(0)
+        });
+    let mut hdr = Header::for_file(name, data.len() as u64)?;
+    hdr.finalize_checksum();
+    let mut piece = Vec::with_capacity(BLOCK_SIZE + padded(data.len()));
+    piece.extend_from_slice(&hdr.to_bytes());
+    piece.extend_from_slice(data);
+    piece.extend(std::iter::repeat(0u8).take(padded(data.len()) - data.len()));
+    tar.splice(insert_at..insert_at, piece);
+    Ok(vec![insert_at as u64..tar.len() as u64])
+}
+
+/// Remove a regular-file member. Returns the changed byte range (removal
+/// point to new EOF).
+pub fn remove_file(tar: &mut Vec<u8>, name: &str) -> Result<Vec<std::ops::Range<u64>>> {
+    let reader = TarReader::new(tar)?;
+    let entry = reader
+        .entries()
+        .into_iter()
+        .find(|e| e.name == name && e.typeflag == TypeFlag::Regular)
+        .ok_or_else(|| Error::Tar(format!("member not found: {name}")))?;
+    let end = entry.data_offset + padded(entry.size as usize);
+    tar.splice(entry.header_offset..end, std::iter::empty());
+    Ok(vec![entry.header_offset as u64..tar.len() as u64])
+}
+
+/// Round a size up to the 512-byte block boundary.
+pub fn padded(size: usize) -> usize {
+    size.div_ceil(BLOCK_SIZE) * BLOCK_SIZE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lj-tar-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn dir_round_trip() {
+        let src = tmpdir("src");
+        std::fs::create_dir_all(src.join("pkg/sub")).unwrap();
+        std::fs::write(src.join("main.py"), b"print('hi')\n").unwrap();
+        std::fs::write(src.join("pkg/mod.py"), b"x = 1\n").unwrap();
+        std::fs::write(src.join("pkg/sub/deep.py"), vec![0xaa; 1500]).unwrap();
+        let tar = tar_dir(&src).unwrap();
+        assert_eq!(tar.len() % BLOCK_SIZE, 0);
+
+        let dst = tmpdir("dst");
+        let n = untar_to(&tar, &dst).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(std::fs::read(dst.join("main.py")).unwrap(), b"print('hi')\n");
+        assert_eq!(std::fs::read(dst.join("pkg/sub/deep.py")).unwrap(), vec![0xaa; 1500]);
+        std::fs::remove_dir_all(&src).unwrap();
+        std::fs::remove_dir_all(&dst).unwrap();
+    }
+
+    #[test]
+    fn deterministic_archives() {
+        let src = tmpdir("det");
+        std::fs::write(src.join("b.txt"), b"bbb").unwrap();
+        std::fs::write(src.join("a.txt"), b"aaa").unwrap();
+        let t1 = tar_dir(&src).unwrap();
+        let t2 = tar_dir(&src).unwrap();
+        assert_eq!(t1, t2);
+        std::fs::remove_dir_all(&src).unwrap();
+    }
+
+    #[test]
+    fn replace_same_padded_size_is_local() {
+        let mut b = TarBuilder::new();
+        b.append_file("a.py", b"aaaa").unwrap();
+        b.append_file("b.py", &vec![b'b'; 600]).unwrap();
+        b.append_file("c.py", b"cccc").unwrap();
+        let mut tar = b.finish();
+        let before_len = tar.len();
+
+        // 600 -> 700 bytes: both pad to 1024, so the change must be local.
+        let ranges = replace_file(&mut tar, "b.py", &vec![b'B'; 700]).unwrap();
+        assert_eq!(tar.len(), before_len);
+        assert_eq!(ranges.len(), 2);
+        let total_changed: u64 = ranges.iter().map(|r| r.end - r.start).sum();
+        assert!(total_changed <= (BLOCK_SIZE + 1024) as u64);
+
+        let r = TarReader::new(&tar).unwrap();
+        let names: Vec<_> = r.entries().iter().map(|e| e.name.clone()).collect();
+        assert_eq!(names, vec!["a.py", "b.py", "c.py"]);
+        let eb = r.entries().into_iter().find(|e| e.name == "b.py").unwrap();
+        assert_eq!(eb.data(&tar), &vec![b'B'; 700][..]);
+    }
+
+    #[test]
+    fn replace_different_size_splices() {
+        let mut b = TarBuilder::new();
+        b.append_file("a.py", b"aaaa").unwrap();
+        b.append_file("b.py", b"bb").unwrap();
+        b.append_file("c.py", b"cccc").unwrap();
+        let mut tar = b.finish();
+        let big = vec![b'B'; 2000];
+        replace_file(&mut tar, "b.py", &big).unwrap();
+        assert_eq!(tar.len() % BLOCK_SIZE, 0);
+        let r = TarReader::new(&tar).unwrap();
+        let eb = r.entries().into_iter().find(|e| e.name == "b.py").unwrap();
+        assert_eq!(eb.data(&tar), &big[..]);
+        let ec = r.entries().into_iter().find(|e| e.name == "c.py").unwrap();
+        assert_eq!(ec.data(&tar), b"cccc");
+    }
+
+    #[test]
+    fn replace_missing_member_errors() {
+        let mut b = TarBuilder::new();
+        b.append_file("a.py", b"aaaa").unwrap();
+        let mut tar = b.finish();
+        assert!(replace_file(&mut tar, "nope.py", b"x").is_err());
+    }
+
+    #[test]
+    fn rejects_traversal() {
+        let mut b = TarBuilder::new();
+        b.append_file("../evil", b"x").unwrap();
+        let tar = b.finish();
+        let dst = tmpdir("trav");
+        assert!(untar_to(&tar, &dst).is_err());
+        std::fs::remove_dir_all(&dst).unwrap();
+    }
+
+    #[test]
+    fn insert_and_remove_members() {
+        let mut b = TarBuilder::new();
+        b.append_file("a.py", b"aaaa").unwrap();
+        b.append_file("b.py", b"bb").unwrap();
+        let mut tar = b.finish();
+
+        insert_file(&mut tar, "c.py", b"cc-new").unwrap();
+        let r = TarReader::new(&tar).unwrap();
+        assert_eq!(r.file_names(), vec!["a.py", "b.py", "c.py"]);
+        assert_eq!(r.find("c.py").unwrap().data(&tar), b"cc-new");
+
+        // Sorted insertion: a name ordering between existing members
+        // lands in the middle, matching what a fresh build would archive.
+        insert_file(&mut tar, "ab.py", b"between").unwrap();
+        let r = TarReader::new(&tar).unwrap();
+        assert_eq!(r.file_names(), vec!["a.py", "ab.py", "b.py", "c.py"]);
+        remove_file(&mut tar, "ab.py").unwrap();
+
+        // insert_file on an existing member degrades to replace.
+        insert_file(&mut tar, "a.py", b"AAAA!").unwrap();
+        let r = TarReader::new(&tar).unwrap();
+        assert_eq!(r.find("a.py").unwrap().data(&tar), b"AAAA!");
+        assert_eq!(r.file_names().len(), 3);
+
+        remove_file(&mut tar, "b.py").unwrap();
+        let r = TarReader::new(&tar).unwrap();
+        assert_eq!(r.file_names(), vec!["a.py", "c.py"]);
+        assert_eq!(tar.len() % BLOCK_SIZE, 0);
+        assert!(remove_file(&mut tar, "b.py").is_err());
+    }
+
+    #[test]
+    fn insert_into_empty_archive() {
+        let mut tar = TarBuilder::new().finish();
+        insert_file(&mut tar, "only.py", b"x").unwrap();
+        let r = TarReader::new(&tar).unwrap();
+        assert_eq!(r.file_names(), vec!["only.py"]);
+    }
+
+    #[test]
+    fn replace_round_trip_property() {
+        prop::check("tar replace == rebuild", 40, |g| {
+            let n_files = g.len(1, 6);
+            let mut b = TarBuilder::new();
+            let mut contents = Vec::new();
+            for i in 0..n_files {
+                let data = g.vec_u8(0, 3000);
+                b.append_file(&format!("f{}.py", i), &data).unwrap();
+                contents.push(data);
+            }
+            let mut tar = b.finish();
+            let target = g.below(n_files as u64) as usize;
+            let new_data = g.vec_u8(0, 3000);
+            replace_file(&mut tar, &format!("f{}.py", target), &new_data).unwrap();
+            contents[target] = new_data;
+
+            let r = TarReader::new(&tar).map_err(|e| e.to_string())?;
+            for (i, want) in contents.iter().enumerate() {
+                let e = r
+                    .entries()
+                    .into_iter()
+                    .find(|e| e.name == format!("f{}.py", i))
+                    .ok_or("missing member")?;
+                if e.data(&tar) != &want[..] {
+                    return Err(format!("member f{} corrupted", i));
+                }
+            }
+            Ok(())
+        });
+    }
+}

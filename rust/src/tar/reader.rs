@@ -1,0 +1,136 @@
+//! Tar reader: parses headers and exposes member byte ranges.
+
+use super::header::{Header, TypeFlag, BLOCK_SIZE};
+use crate::{Error, Result};
+
+/// A parsed archive member. Data is *not* copied — [`Entry::data`] slices
+/// the original archive buffer, and the offsets are public because the
+/// injection path patches archives in place.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub typeflag: TypeFlag,
+    pub size: u64,
+    /// Offset of the 512-byte header block within the archive.
+    pub header_offset: usize,
+    /// Offset of the first data byte within the archive.
+    pub data_offset: usize,
+}
+
+impl Entry {
+    /// The member's contents, sliced out of the archive buffer.
+    pub fn data<'a>(&self, tar: &'a [u8]) -> &'a [u8] {
+        &tar[self.data_offset..self.data_offset + self.size as usize]
+    }
+}
+
+/// Parses a complete in-memory archive eagerly (layers are modest-sized;
+/// eager parsing keeps the API simple and the offsets stable).
+pub struct TarReader {
+    entries: Vec<Entry>,
+}
+
+impl TarReader {
+    pub fn new(tar: &[u8]) -> Result<TarReader> {
+        if tar.len() % BLOCK_SIZE != 0 {
+            return Err(Error::Tar(format!(
+                "archive length {} not block-aligned",
+                tar.len()
+            )));
+        }
+        let mut entries = Vec::new();
+        let mut off = 0;
+        while off + BLOCK_SIZE <= tar.len() {
+            match Header::from_bytes(&tar[off..off + BLOCK_SIZE])? {
+                None => break, // zero block: end of archive
+                Some(hdr) => {
+                    let data_offset = off + BLOCK_SIZE;
+                    let data_len = super::padded(hdr.size as usize);
+                    if data_offset + data_len > tar.len() {
+                        return Err(Error::Tar(format!(
+                            "member {:?} data overruns archive",
+                            hdr.name
+                        )));
+                    }
+                    entries.push(Entry {
+                        name: hdr.name.trim_end_matches('/').to_string(),
+                        typeflag: hdr.typeflag,
+                        size: hdr.size,
+                        header_offset: off,
+                        data_offset,
+                    });
+                    off = data_offset + data_len;
+                }
+            }
+        }
+        Ok(TarReader { entries })
+    }
+
+    /// All members, in archive order. Directory names have the trailing
+    /// slash stripped.
+    pub fn entries(&self) -> Vec<Entry> {
+        self.entries.clone()
+    }
+
+    /// Find a regular-file member by name.
+    pub fn find(&self, name: &str) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.typeflag == TypeFlag::Regular)
+    }
+
+    /// Names of all regular files.
+    pub fn file_names(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|e| e.typeflag == TypeFlag::Regular)
+            .map(|e| e.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tar::TarBuilder;
+
+    #[test]
+    fn parses_members_in_order() {
+        let mut b = TarBuilder::new();
+        b.append_dir("pkg").unwrap();
+        b.append_file("pkg/a.py", b"aa").unwrap();
+        b.append_file("b.py", &[1u8; 513]).unwrap();
+        let tar = b.finish();
+        let r = TarReader::new(&tar).unwrap();
+        let names: Vec<_> = r.entries().iter().map(|e| e.name.clone()).collect();
+        assert_eq!(names, vec!["pkg", "pkg/a.py", "b.py"]);
+        assert_eq!(r.find("pkg/a.py").unwrap().size, 2);
+        assert!(r.find("pkg").is_none()); // directories are not files
+        assert_eq!(r.file_names(), vec!["pkg/a.py", "b.py"]);
+    }
+
+    #[test]
+    fn rejects_unaligned() {
+        assert!(TarReader::new(&[0u8; 100]).is_err());
+    }
+
+    #[test]
+    fn rejects_overrun() {
+        let mut b = TarBuilder::new();
+        b.append_file("x", &[7u8; 2000]).unwrap();
+        let tar = b.finish();
+        // Chop the archive mid-data.
+        assert!(TarReader::new(&tar[..BLOCK_SIZE * 2]).is_err());
+    }
+
+    #[test]
+    fn data_slices_correct_bytes() {
+        let mut b = TarBuilder::new();
+        b.append_file("a", b"first").unwrap();
+        b.append_file("b", b"second!").unwrap();
+        let tar = b.finish();
+        let r = TarReader::new(&tar).unwrap();
+        assert_eq!(r.find("a").unwrap().data(&tar), b"first");
+        assert_eq!(r.find("b").unwrap().data(&tar), b"second!");
+    }
+}

@@ -1,0 +1,92 @@
+//! Deterministic in-memory tar writer.
+
+use super::header::{Header, BLOCK_SIZE};
+use crate::Result;
+
+/// Builds a tar archive in memory. Call [`TarBuilder::finish`] to obtain
+/// the archive bytes (including the two terminating zero blocks).
+#[derive(Default)]
+pub struct TarBuilder {
+    buf: Vec<u8>,
+}
+
+impl TarBuilder {
+    pub fn new() -> Self {
+        TarBuilder { buf: Vec::new() }
+    }
+
+    /// Pre-allocate for an expected content size (perf: avoids regrowth
+    /// while archiving large layers).
+    pub fn with_capacity(bytes: usize) -> Self {
+        TarBuilder {
+            buf: Vec::with_capacity(bytes),
+        }
+    }
+
+    /// Append a regular file member.
+    pub fn append_file(&mut self, name: &str, data: &[u8]) -> Result<()> {
+        let mut hdr = Header::for_file(name, data.len() as u64)?;
+        hdr.finalize_checksum();
+        self.buf.extend_from_slice(&hdr.to_bytes());
+        self.buf.extend_from_slice(data);
+        let pad = super::padded(data.len()) - data.len();
+        self.buf.extend(std::iter::repeat(0u8).take(pad));
+        Ok(())
+    }
+
+    /// Append a directory member.
+    pub fn append_dir(&mut self, name: &str) -> Result<()> {
+        let mut hdr = Header::for_dir(name)?;
+        hdr.finalize_checksum();
+        self.buf.extend_from_slice(&hdr.to_bytes());
+        Ok(())
+    }
+
+    /// Current archive size (without the end-of-archive marker).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Terminate the archive (two zero blocks) and return the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.buf.extend(std::iter::repeat(0u8).take(2 * BLOCK_SIZE));
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tar::TarReader;
+
+    #[test]
+    fn empty_archive_is_two_blocks() {
+        let tar = TarBuilder::new().finish();
+        assert_eq!(tar.len(), 2 * BLOCK_SIZE);
+        assert!(TarReader::new(&tar).unwrap().entries().is_empty());
+    }
+
+    #[test]
+    fn file_data_is_block_padded() {
+        let mut b = TarBuilder::new();
+        b.append_file("x.bin", &[9u8; 700]).unwrap();
+        let tar = b.finish();
+        // header + 2 data blocks + 2 eof blocks
+        assert_eq!(tar.len(), BLOCK_SIZE * (1 + 2 + 2));
+    }
+
+    #[test]
+    fn zero_length_file() {
+        let mut b = TarBuilder::new();
+        b.append_file("empty", b"").unwrap();
+        let tar = b.finish();
+        let r = TarReader::new(&tar).unwrap();
+        let e = &r.entries()[0];
+        assert_eq!(e.size, 0);
+        assert!(e.data(&tar).is_empty());
+    }
+}

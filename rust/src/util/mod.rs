@@ -1,0 +1,111 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The execution environment is fully offline, so facilities that would
+//! normally come from crates.io (`serde_json`, `rand`, `proptest`, `hex`)
+//! are implemented here from scratch.
+
+pub mod hex;
+pub mod json;
+pub mod prng;
+pub mod prop;
+
+use std::time::Duration;
+
+/// Format a byte count with binary units, e.g. `1.50 MiB`.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < UNITS.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[i])
+    }
+}
+
+/// Format a duration compactly, picking a unit that keeps 3-4 significant
+/// digits (`1.234 s`, `56.7 ms`, `890 us`).
+pub fn human_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1} us", ns as f64 / 1e3)
+    } else {
+        format!("{} ns", ns)
+    }
+}
+
+/// Recursively copy a directory tree. Returns the number of files copied.
+pub fn copy_tree(src: &std::path::Path, dst: &std::path::Path) -> std::io::Result<usize> {
+    std::fs::create_dir_all(dst)?;
+    let mut n = 0;
+    for entry in std::fs::read_dir(src)? {
+        let entry = entry?;
+        let from = entry.path();
+        let to = dst.join(entry.file_name());
+        if entry.file_type()?.is_dir() {
+            n += copy_tree(&from, &to)?;
+        } else {
+            std::fs::copy(&from, &to)?;
+            n += 1;
+        }
+    }
+    Ok(n)
+}
+
+/// Total size in bytes of all regular files under a directory.
+pub fn tree_size(dir: &std::path::Path) -> std::io::Result<u64> {
+    let mut total = 0;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if entry.file_type()?.is_dir() {
+            total += tree_size(&entry.path())?;
+        } else {
+            total += entry.metadata()?.len();
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1.00 KiB");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        assert_eq!(human_duration(Duration::from_nanos(12)), "12 ns");
+        assert_eq!(human_duration(Duration::from_micros(12)), "12.0 us");
+        assert_eq!(human_duration(Duration::from_millis(12)), "12.00 ms");
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.000 s");
+    }
+
+    #[test]
+    fn copy_tree_and_size() {
+        let tmp = std::env::temp_dir().join(format!("lj-util-{}", std::process::id()));
+        let src = tmp.join("src");
+        std::fs::create_dir_all(src.join("sub")).unwrap();
+        std::fs::write(src.join("a.txt"), b"hello").unwrap();
+        std::fs::write(src.join("sub/b.txt"), b"world!").unwrap();
+        let dst = tmp.join("dst");
+        let n = copy_tree(&src, &dst).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(tree_size(&dst).unwrap(), 11);
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+}

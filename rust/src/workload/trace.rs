@@ -1,0 +1,134 @@
+//! Commit traces: a stream of small incremental changes, as in the
+//! paper's motivation ("the modern software development process
+//! encourages a build after each small incremental change", §II.C).
+
+use super::{Scenario, ScenarioKind};
+use crate::util::prng::Prng;
+use crate::Result;
+use std::path::Path;
+
+/// One simulated commit against a scenario project.
+#[derive(Clone, Debug)]
+pub struct Commit {
+    pub seq: u64,
+    /// Lines appended to the main source file.
+    pub lines: usize,
+    /// Whether this commit also touches the Dockerfile's CMD (a type-2
+    /// config change — exercised occasionally, as in real repos).
+    pub config_change: bool,
+}
+
+/// Deterministic commit trace generator.
+pub struct TraceGenerator {
+    rng: Prng,
+    seq: u64,
+    /// Probability (per commit) of a config-only change, in percent.
+    pub config_change_pct: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(seed: u64) -> TraceGenerator {
+        TraceGenerator {
+            rng: Prng::new(seed),
+            seq: 0,
+            config_change_pct: 5,
+        }
+    }
+
+    /// Next commit: mostly small line edits, occasionally larger, rarely
+    /// a config change.
+    pub fn next_commit(&mut self) -> Commit {
+        self.seq += 1;
+        let lines = match self.rng.below(10) {
+            0..=6 => self.rng.range(1, 6) as usize,       // typical tweak
+            7..=8 => self.rng.range(10, 80) as usize,     // feature
+            _ => self.rng.range(100, 400) as usize,       // refactor
+        };
+        Commit {
+            seq: self.seq,
+            lines,
+            config_change: self.rng.below(100) < self.config_change_pct,
+        }
+    }
+
+    /// Apply a commit to a scenario project directory.
+    pub fn apply(&mut self, commit: &Commit, scenario: &Scenario) -> Result<()> {
+        let main = match scenario.kind {
+            ScenarioKind::PythonTiny | ScenarioKind::PythonLarge => scenario.dir.join("main.py"),
+            ScenarioKind::JavaTiny => scenario.dir.join("appl/src/App.java"),
+            ScenarioKind::JavaLarge => scenario.dir.join("src/main/App.java"),
+        };
+        let mut text = std::fs::read_to_string(&main)?;
+        for i in 0..commit.lines {
+            text.push_str(&format!("# commit {} line {}\n", commit.seq, i));
+        }
+        std::fs::write(&main, text)?;
+        if commit.config_change {
+            touch_cmd(&scenario.dir, commit.seq)?;
+        }
+        if scenario.kind == ScenarioKind::JavaTiny {
+            super::build_war_outside(&scenario.dir)?;
+        }
+        Ok(())
+    }
+}
+
+/// Append a marker argument to the Dockerfile's CMD (a config literal
+/// change — type 2 in the paper's classification).
+fn touch_cmd(dir: &Path, seq: u64) -> Result<()> {
+    let path = dir.join("Dockerfile");
+    let text = std::fs::read_to_string(&path)?;
+    let mut out = String::new();
+    for line in text.lines() {
+        if line.starts_with("CMD [") && line.ends_with(']') {
+            let body = &line[..line.len() - 1];
+            out.push_str(&format!("{body}, \"--rev-{seq}\"]\n"));
+        } else {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    std::fs::write(&path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let mut a = TraceGenerator::new(11);
+        let mut b = TraceGenerator::new(11);
+        for _ in 0..50 {
+            let ca = a.next_commit();
+            let cb = b.next_commit();
+            assert_eq!((ca.seq, ca.lines, ca.config_change), (cb.seq, cb.lines, cb.config_change));
+        }
+    }
+
+    #[test]
+    fn commits_apply_to_project() {
+        let root = std::env::temp_dir().join(format!("lj-trace-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let scenario = Scenario::generate(ScenarioKind::PythonTiny, &root.join("p"), 1).unwrap();
+        let mut gen = TraceGenerator::new(2);
+        let before = std::fs::read_to_string(scenario.dir.join("main.py")).unwrap();
+        let c = gen.next_commit();
+        gen.apply(&c, &scenario).unwrap();
+        let after = std::fs::read_to_string(scenario.dir.join("main.py")).unwrap();
+        assert_eq!(after.lines().count(), before.lines().count() + c.lines);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn config_change_touches_cmd() {
+        let root = std::env::temp_dir().join(format!("lj-trace-cfg-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let scenario = Scenario::generate(ScenarioKind::PythonTiny, &root.join("p"), 1).unwrap();
+        touch_cmd(&scenario.dir, 9).unwrap();
+        let df = std::fs::read_to_string(scenario.dir.join("Dockerfile")).unwrap();
+        assert!(df.contains("--rev-9"), "{df}");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,167 @@
+//! End-to-end: the paper's four scenarios through the experiment driver,
+//! with **deterministic** work-based assertions (bytes archived, layers
+//! rebuilt, chunks rehashed) rather than flaky wall-clock ones — the
+//! timing claims live in the release-mode benches.
+
+use layerjet::bench::{images_content_equal, run_scenario_experiment};
+use layerjet::builder::{BuildOptions, CostModel};
+use layerjet::daemon::Daemon;
+use layerjet::inject::{InjectMode, InjectOptions};
+use layerjet::registry::RemoteRegistry;
+use layerjet::workload::{Scenario, ScenarioKind};
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-e2e-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// All four scenarios run 2 trials end-to-end and stay verifiable.
+#[test]
+fn all_scenarios_run_end_to_end() {
+    let root = tmp("all");
+    for kind in ScenarioKind::ALL {
+        let exp = run_scenario_experiment(
+            kind,
+            2,
+            &root.join(kind.name()),
+            CostModel::instant(),
+            InjectMode::Implicit,
+            11,
+        )
+        .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert_eq!(exp.docker.len(), 2);
+        assert_eq!(exp.proposed.len(), 2);
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Work accounting, scenario 2: the docker rebuild re-archives the big
+/// dependency layers on every revision; the injection path's work is
+/// bounded by the source change.
+#[test]
+fn scenario2_work_accounting() {
+    let root = tmp("work");
+    let cost = CostModel::instant();
+    let mut docker = Daemon::new(&root.join("docker")).unwrap();
+    let mut inject = Daemon::new(&root.join("inject")).unwrap();
+    docker.cost = cost;
+    inject.cost = cost;
+    let mut scenario = Scenario::generate(ScenarioKind::PythonLarge, &root.join("p"), 3).unwrap();
+    let tag = scenario.tag();
+    let opts = BuildOptions { no_cache: false, cost };
+    docker.build_with(&scenario.dir, &tag, &opts).unwrap();
+    inject.build_with(&scenario.dir, &tag, &opts).unwrap();
+
+    scenario.revise().unwrap(); // +1000 lines
+
+    let rebuild = docker.build_with(&scenario.dir, &tag, &opts).unwrap();
+    let injection = inject
+        .inject_with(
+            &scenario.dir,
+            &tag,
+            &tag,
+            &InjectOptions { cost, ..Default::default() },
+        )
+        .unwrap();
+
+    // Docker re-archived the apt + conda layers (fall-through): tens of MiB.
+    assert!(
+        rebuild.bytes_written() > 10 << 20,
+        "docker rebuild should re-archive the dependency layers: {}",
+        rebuild.bytes_written()
+    );
+    assert!(rebuild.rebuilt_steps() >= 4, "fall-through must hit steps 2..n");
+
+    // Injection spliced only the changed tail of the COPY layer; its
+    // total hashing work is bounded by the (small) source layer, not by
+    // the dependency layers docker re-archived.
+    let p = &injection.patched[0];
+    assert!(
+        p.bytes_spliced < 1 << 20,
+        "injection splice should be < 1 MiB: {}",
+        p.bytes_spliced
+    );
+    let inject_hash_bytes = (p.chunks_rehashed as u64) * 4096;
+    assert!(
+        inject_hash_bytes * 50 < rebuild.bytes_written(),
+        "injection work ({inject_hash_bytes} B hashed) must be orders below \
+         docker's re-archive ({} B)",
+        rebuild.bytes_written()
+    );
+    // And the two daemons converge to identical content.
+    assert!(images_content_equal(&docker, &inject, &tag).unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Scenario 4 (compiled): the cascade rebuild re-runs `mvn package`, so
+/// injection buys nothing — the jar layer is rebuilt either way, and both
+/// paths produce identical jars.
+#[test]
+fn scenario4_cascade_parity() {
+    let root = tmp("s4");
+    let cost = CostModel::instant();
+    let mut docker = Daemon::new(&root.join("docker")).unwrap();
+    let mut inject = Daemon::new(&root.join("inject")).unwrap();
+    docker.cost = cost;
+    inject.cost = cost;
+    let mut scenario = Scenario::generate(ScenarioKind::JavaLarge, &root.join("p"), 4).unwrap();
+    let tag = scenario.tag();
+    let opts = BuildOptions { no_cache: false, cost };
+    docker.build_with(&scenario.dir, &tag, &opts).unwrap();
+    inject.build_with(&scenario.dir, &tag, &opts).unwrap();
+
+    scenario.revise().unwrap();
+    docker.build_with(&scenario.dir, &tag, &opts).unwrap();
+    let report = inject
+        .inject_with(
+            &scenario.dir,
+            &tag,
+            &tag,
+            &InjectOptions { cascade: true, cost, ..Default::default() },
+        )
+        .unwrap();
+    let cascade = report.cascade.expect("cascade report");
+    assert!(
+        cascade.steps.iter().any(|s| s.instruction.contains("mvn package") && !s.cached),
+        "compile layer must re-run in the cascade"
+    );
+    assert!(images_content_equal(&docker, &inject, &tag).unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// The redeployment story across two machines and a registry, on the
+/// java-tiny scenario (war replacement).
+#[test]
+fn redeploy_war_via_registry() {
+    let root = tmp("redeploy");
+    let cost = CostModel::instant();
+    let mut dev = Daemon::new(&root.join("dev")).unwrap();
+    let mut prod = Daemon::new(&root.join("prod")).unwrap();
+    dev.cost = cost;
+    prod.cost = cost;
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    let mut scenario = Scenario::generate(ScenarioKind::JavaTiny, &root.join("p"), 5).unwrap();
+    let tag = scenario.tag();
+    dev.build_with(&scenario.dir, &tag, &BuildOptions { no_cache: false, cost })
+        .unwrap();
+    dev.push(&tag, &remote).unwrap();
+
+    scenario.revise().unwrap(); // edit + out-of-image recompile
+    dev.inject_with(
+        &scenario.dir,
+        &tag,
+        &tag,
+        &InjectOptions {
+            clone_for_redeploy: true,
+            cost,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    dev.push(&tag, &remote).unwrap();
+    prod.pull(&tag, &remote).unwrap();
+    assert!(prod.verify_image(&tag).unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}

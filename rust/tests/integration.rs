@@ -1,0 +1,293 @@
+//! Cross-module integration tests, driven purely through the public API
+//! (`layerjet::prelude` + daemon/coordinator/registry facades).
+
+use layerjet::builder::{BuildOptions, CostModel};
+use layerjet::coordinator::{BuildCoordinator, BuildRequest, BuildStrategy};
+use layerjet::inject::{InjectMode, InjectOptions};
+use layerjet::prelude::*;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-int-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn daemon(root: &Path) -> Daemon {
+    let mut d = Daemon::new(root).unwrap();
+    d.cost = CostModel::instant();
+    d
+}
+
+fn write_ctx(dir: &Path, dockerfile: &str, files: &[(&str, &str)]) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+    for (p, c) in files {
+        let path = dir.join(p);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, c).unwrap();
+    }
+}
+
+const DF: &str = "FROM python:alpine\nCOPY . /root/\nWORKDIR /root\nCMD [\"python\", \"main.py\"]\n";
+
+/// Build → inject → save → load on a second machine → push → pull on a
+/// third: the full image lifecycle with an injected revision inside it.
+#[test]
+fn full_lifecycle_with_injection() {
+    let root = tmp("lifecycle");
+    let machine_a = daemon(&root.join("a"));
+    let machine_b = daemon(&root.join("b"));
+    let machine_c = daemon(&root.join("c"));
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    let ctx = root.join("ctx");
+    write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+
+    machine_a.build(&ctx, "svc:v1").unwrap();
+    std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+    let report = machine_a
+        .inject_with(
+            &ctx,
+            "svc:v1",
+            "svc:v2",
+            &InjectOptions {
+                clone_for_redeploy: true,
+                cost: CostModel::instant(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(report.patched.len(), 1);
+    assert!(report.patched[0].cloned_as.is_some());
+
+    // Bundle to machine B.
+    let bundle = machine_a.save("svc:v2").unwrap();
+    let loaded = machine_b.load(&bundle).unwrap();
+    assert_eq!(loaded.to_string(), "svc:v2");
+    assert!(machine_b.verify_image("svc:v2").unwrap());
+
+    // Registry to machine C.
+    machine_a.push("svc:v2", &remote).unwrap();
+    machine_c.pull("svc:v2", &remote).unwrap();
+    assert!(machine_c.verify_image("svc:v2").unwrap());
+
+    // All three machines hold identical layer content.
+    let (_, img_a) = machine_a.image("svc:v2").unwrap();
+    for lid in &img_a.layer_ids {
+        assert_eq!(
+            machine_a.layers.read_tar(lid).unwrap(),
+            machine_b.layers.read_tar(lid).unwrap()
+        );
+        assert_eq!(
+            machine_a.layers.read_tar(lid).unwrap(),
+            machine_c.layers.read_tar(lid).unwrap()
+        );
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Explicit and implicit decomposition land on identical image state.
+#[test]
+fn explicit_implicit_equivalence_via_daemon() {
+    let root = tmp("modes");
+    let ctx = root.join("ctx");
+    write_ctx(&ctx, DF, &[("main.py", "print('v1')\n"), ("util.py", "u = 1\n")]);
+
+    let run = |mode: InjectMode, sub: &str| -> Vec<Digest> {
+        let d = daemon(&root.join(sub));
+        d.build(&ctx, "m:v1").unwrap();
+        std::fs::write(ctx.join("util.py"), "u = 2\nv = 3\n").unwrap();
+        d.inject_with(
+            &ctx,
+            "m:v1",
+            "m:v1",
+            &InjectOptions {
+                mode,
+                cost: CostModel::instant(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        std::fs::write(ctx.join("util.py"), "u = 1\n").unwrap(); // restore
+        let (_, img) = d.image("m:v1").unwrap();
+        img.diff_ids
+    };
+
+    let implicit = run(InjectMode::Implicit, "imp");
+    let explicit = run(InjectMode::Explicit, "exp");
+    assert_eq!(implicit, explicit, "both modes must yield identical checksums");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// A long revision chain: inject 10 times, then prove a from-scratch
+/// build of the final context produces identical layer content.
+#[test]
+fn ten_revision_chain_converges_with_fresh_build() {
+    let root = tmp("chain");
+    let ctx = root.join("ctx");
+    write_ctx(&ctx, DF, &[("main.py", "print('v0')\n")]);
+    let incremental = daemon(&root.join("incremental"));
+    incremental.build(&ctx, "app:latest").unwrap();
+    for rev in 1..=10 {
+        let mut text = std::fs::read_to_string(ctx.join("main.py")).unwrap();
+        text.push_str(&format!("print('rev {rev}')\n"));
+        std::fs::write(ctx.join("main.py"), text).unwrap();
+        incremental.inject(&ctx, "app:latest", "app:latest").unwrap();
+    }
+    assert!(incremental.verify_image("app:latest").unwrap());
+
+    let fresh = daemon(&root.join("fresh"));
+    fresh.build(&ctx, "app:latest").unwrap();
+
+    let (_, img_i) = incremental.image("app:latest").unwrap();
+    let (_, img_f) = fresh.image("app:latest").unwrap();
+    // Same permanent ids, same final checksums.
+    assert_eq!(img_i.layer_ids, img_f.layer_ids);
+    assert_eq!(img_i.diff_ids, img_f.diff_ids);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// The coordinator end-to-end with a mixed strategy batch.
+#[test]
+fn coordinator_mixed_strategies() {
+    let root = tmp("coord");
+    let ctx = root.join("ctx");
+    write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+
+    let mut coordinator = BuildCoordinator::new(&root.join("farm"), 2);
+    coordinator.cost = CostModel::instant();
+
+    // Cold build on both workers (so either can serve later requests).
+    let cold: Vec<BuildRequest> = (0..2)
+        .map(|i| BuildRequest {
+            id: i,
+            project: ctx.clone(),
+            tag: "app:latest".into(),
+            strategy: BuildStrategy::DockerRebuild,
+        })
+        .collect();
+    let (outcomes, _) = coordinator.run(cold).unwrap();
+    assert!(outcomes.iter().all(|o| o.ok));
+
+    std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+    let (outcomes, metrics) = coordinator
+        .run(vec![
+            BuildRequest {
+                id: 10,
+                project: ctx.clone(),
+                tag: "app:latest".into(),
+                strategy: BuildStrategy::Auto,
+            },
+            BuildRequest {
+                id: 11,
+                project: ctx.clone(),
+                tag: "app:latest".into(),
+                strategy: BuildStrategy::DockerRebuild,
+            },
+        ])
+        .unwrap();
+    assert_eq!(metrics.completed, 2);
+    assert!(outcomes.iter().all(|o| o.ok), "{outcomes:?}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// no-cache rebuild after an injection reproduces the same content
+/// (the injected state is not a divergent fork).
+#[test]
+fn no_cache_rebuild_matches_injected_state() {
+    let root = tmp("nocache");
+    let ctx = root.join("ctx");
+    write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+    let d = daemon(&root.join("d"));
+    d.build(&ctx, "app:latest").unwrap();
+    std::fs::write(ctx.join("main.py"), "print('v1')\nprint('more')\n").unwrap();
+    d.inject(&ctx, "app:latest", "app:latest").unwrap();
+    let (_, injected) = d.image("app:latest").unwrap();
+
+    let rebuilt = d
+        .build_with(
+            &ctx,
+            "app:latest",
+            &BuildOptions {
+                no_cache: true,
+                cost: CostModel::instant(),
+            },
+        )
+        .unwrap();
+    let rebuilt_img = d.images.get(&rebuilt.image_id).unwrap();
+    assert_eq!(injected.diff_ids, rebuilt_img.diff_ids);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Multi-layer targeted injection — the paper's §V future work
+/// ("we will proceed to investigate the mechanism of performing
+/// multi-layer injection"): two independent COPY layers change in the
+/// same revision and a single inject patches both, bypassing both
+/// checksums.
+#[test]
+fn multi_layer_injection() {
+    let root = tmp("multilayer");
+    let ctx = root.join("ctx");
+    write_ctx(
+        &ctx,
+        "FROM python:alpine\nCOPY app /srv/app/\nCOPY conf /etc/conf/\nCMD [\"python\", \"/srv/app/main.py\"]\n",
+        &[
+            ("app/main.py", "print('v1')\n"),
+            ("conf/settings.ini", "mode=dev\n"),
+        ],
+    );
+    let d = daemon(&root.join("d"));
+    d.build(&ctx, "svc:latest").unwrap();
+
+    // Change BOTH layers in one revision.
+    std::fs::write(ctx.join("app/main.py"), "print('v2')\n").unwrap();
+    std::fs::write(ctx.join("conf/settings.ini"), "mode=prod\n").unwrap();
+    let report = d.inject(&ctx, "svc:latest", "svc:latest").unwrap();
+    assert_eq!(report.patched.len(), 2, "both layers patched in one pass");
+    assert!(report.digests_rewritten >= 2);
+    assert!(d.verify_image("svc:latest").unwrap());
+
+    // Both layers carry the new content; a fresh build agrees byte-for-byte.
+    let fresh = daemon(&root.join("fresh"));
+    fresh.build(&ctx, "svc:latest").unwrap();
+    let (_, a) = d.image("svc:latest").unwrap();
+    let (_, b) = fresh.image("svc:latest").unwrap();
+    assert_eq!(a.diff_ids, b.diff_ids);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// The CLI binary works end to end (build → inject → verify → history).
+#[test]
+fn cli_binary_smoke() {
+    let root = tmp("cli");
+    let ctx = root.join("ctx");
+    write_ctx(&ctx, "FROM python:alpine\nCOPY main.py main.py\nCMD [\"python\", \"main.py\"]\n", &[("main.py", "print('v1')\n")]);
+    let bin = env!("CARGO_BIN_EXE_layerjet");
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(bin)
+            .arg("--root")
+            .arg(root.join("state"))
+            .args(args)
+            .output()
+            .expect("spawn layerjet");
+        assert!(
+            out.status.success(),
+            "layerjet {:?} failed:\n{}\n{}",
+            args,
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let ctx_str = ctx.to_str().unwrap();
+    let transcript = run(&["build", "-t", "cli:latest", ctx_str]);
+    assert!(transcript.contains("Step 1/3 : FROM python:alpine"));
+    std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+    let inj = run(&["inject", "-t", "cli:latest", ctx_str]);
+    assert!(inj.contains("injection complete"), "{inj}");
+    let verify = run(&["verify", "cli:latest"]);
+    assert!(verify.contains("OK"), "{verify}");
+    let hist = run(&["history", "cli:latest"]);
+    assert!(hist.contains("COPY main.py main.py"), "{hist}");
+    std::fs::remove_dir_all(&root).unwrap();
+}

@@ -1,0 +1,245 @@
+//! Property-based invariants over the public API (via the in-crate mini
+//! property harness — the environment has no proptest).
+//!
+//! The central invariant, checked under randomized projects and edit
+//! sequences: **injection is a shortcut, not a fork** — after any valid
+//! sequence of content edits, the injected image is byte-equivalent to a
+//! freshly built image of the same context, and always passes Docker's
+//! integrity test.
+
+use layerjet::builder::CostModel;
+use layerjet::daemon::Daemon;
+use layerjet::hash::{ChunkDigest, Digest, NativeEngine};
+use layerjet::util::prop::{check, Gen};
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-prop-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn daemon(root: &Path) -> Daemon {
+    let mut d = Daemon::new(root).unwrap();
+    d.cost = CostModel::instant();
+    d
+}
+
+/// Random small python-ish project: a Dockerfile plus 1-5 source files.
+fn gen_project(g: &mut Gen, dir: &Path) -> Vec<String> {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /app/\nCMD [\"python\", \"app/main.py\"]\n",
+    )
+    .unwrap();
+    let n = g.len(1, 5);
+    let mut files = Vec::new();
+    for i in 0..n {
+        let name = format!("src{i}.py");
+        let body: String = (0..g.len(1, 30))
+            .map(|j| format!("x_{j} = {}\n", g.below(1000)))
+            .collect();
+        std::fs::write(dir.join(&name), body).unwrap();
+        files.push(name);
+    }
+    std::fs::write(dir.join("main.py"), "print('main')\n").unwrap();
+    files.push("main.py".into());
+    files
+}
+
+/// Apply a random edit to the project; returns false if it was a no-op.
+fn gen_edit(g: &mut Gen, dir: &Path, files: &mut Vec<String>) -> bool {
+    match g.below(4) {
+        0 => {
+            // Append to an existing file.
+            let f = files[g.below(files.len() as u64) as usize].clone();
+            let mut text = std::fs::read_to_string(dir.join(&f)).unwrap();
+            text.push_str(&format!("appended_{} = {}\n", g.below(100), g.below(100)));
+            std::fs::write(dir.join(&f), text).unwrap();
+            true
+        }
+        1 => {
+            // Rewrite a file completely (possibly different size class).
+            let f = files[g.below(files.len() as u64) as usize].clone();
+            let body: String = (0..g.len(0, 60))
+                .map(|j| format!("y_{j} = {}\n", g.below(1000)))
+                .collect();
+            std::fs::write(dir.join(&f), format!("# rewritten\n{body}")).unwrap();
+            true
+        }
+        2 => {
+            // Add a new file.
+            let name = format!("new{}.py", g.below(1_000_000));
+            std::fs::write(dir.join(&name), format!("z = {}\n", g.below(10))).unwrap();
+            files.push(name);
+            true
+        }
+        _ => {
+            // Remove a file (keep at least main.py + one source).
+            if files.len() > 2 {
+                let idx = g.below((files.len() - 1) as u64) as usize; // never main.py (last)
+                let f = files.remove(idx);
+                std::fs::remove_file(dir.join(f)).unwrap();
+                true
+            } else {
+                false
+            }
+        }
+    }
+}
+
+#[test]
+fn inject_equals_rebuild_under_random_edit_sequences() {
+    let root = tmp("equiv");
+    let mut case = 0u64;
+    check("inject == rebuild (random projects + edits)", 12, |g| {
+        case += 1;
+        let case_dir = root.join(format!("case{case}"));
+        let ctx = case_dir.join("ctx");
+        let mut files = gen_project(g, &ctx);
+        let d_inject = daemon(&case_dir.join("inject"));
+        let d_build = daemon(&case_dir.join("build"));
+        d_inject.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+
+        let edits = g.len(1, 4);
+        for _ in 0..edits {
+            if !gen_edit(g, &ctx, &mut files) {
+                continue;
+            }
+            d_inject
+                .inject(&ctx, "p:latest", "p:latest")
+                .map_err(|e| format!("inject: {e}"))?;
+        }
+        if !d_inject.verify_image("p:latest").map_err(|e| e.to_string())? {
+            return Err("injected image failed integrity".into());
+        }
+        d_build.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+        let (_, img_i) = d_inject.image("p:latest").map_err(|e| e.to_string())?;
+        let (_, img_b) = d_build.image("p:latest").map_err(|e| e.to_string())?;
+        if img_i.diff_ids != img_b.diff_ids {
+            return Err(format!(
+                "diverged after {edits} edit(s): {:?} vs {:?}",
+                img_i.diff_ids, img_b.diff_ids
+            ));
+        }
+        let _ = std::fs::remove_dir_all(&case_dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn save_load_roundtrip_random_projects() {
+    let root = tmp("bundle");
+    let mut case = 0u64;
+    check("save/load round trip", 10, |g| {
+        case += 1;
+        let case_dir = root.join(format!("case{case}"));
+        let ctx = case_dir.join("ctx");
+        gen_project(g, &ctx);
+        let a = daemon(&case_dir.join("a"));
+        let b = daemon(&case_dir.join("b"));
+        a.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+        let bundle = a.save("p:latest").map_err(|e| e.to_string())?;
+        b.load(&bundle).map_err(|e| e.to_string())?;
+        if !b.verify_image("p:latest").map_err(|e| e.to_string())? {
+            return Err("loaded image failed integrity".into());
+        }
+        let (ia, img_a) = a.image("p:latest").map_err(|e| e.to_string())?;
+        let (ib, _) = b.image("p:latest").map_err(|e| e.to_string())?;
+        if ia != ib {
+            return Err("image ids differ after round trip".into());
+        }
+        for lid in &img_a.layer_ids {
+            if a.layers.read_tar(lid).map_err(|e| e.to_string())?
+                != b.layers.read_tar(lid).map_err(|e| e.to_string())?
+            {
+                return Err(format!("layer {} differs", lid.short()));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&case_dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn build_is_deterministic_across_daemons() {
+    let root = tmp("det");
+    let mut case = 0u64;
+    check("same context => same image id on independent daemons", 8, |g| {
+        case += 1;
+        let case_dir = root.join(format!("case{case}"));
+        let ctx = case_dir.join("ctx");
+        gen_project(g, &ctx);
+        let a = daemon(&case_dir.join("a"));
+        let b = daemon(&case_dir.join("b"));
+        let ra = a.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+        let rb = b.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+        if ra.image_id != rb.image_id {
+            return Err("image ids diverged".into());
+        }
+        let _ = std::fs::remove_dir_all(&case_dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn chunk_digest_incremental_matches_full_on_tar_edits() {
+    // The exact incremental path the injector takes, on random tars and
+    // random member replacements.
+    check("tar splice + incremental chunk digest == full recompute", 25, |g| {
+        let eng = NativeEngine::new();
+        let n = g.len(1, 6);
+        let mut b = layerjet::tar::TarBuilder::new();
+        let mut names = Vec::new();
+        for i in 0..n {
+            let data = g.vec_u8(0, 6000);
+            let name = format!("f{i}.py");
+            b.append_file(&name, &data).unwrap();
+            names.push(name);
+        }
+        let mut tar = b.finish();
+        let cd = ChunkDigest::compute(&tar, &eng);
+
+        let target = names[g.below(names.len() as u64) as usize].clone();
+        let new_content = g.vec_u8(0, 6000);
+        let ranges = layerjet::tar::replace_file(&mut tar, &target, &new_content)
+            .map_err(|e| e.to_string())?;
+        let (incremental, _) = cd.update(&tar, &ranges, &eng);
+        let full = ChunkDigest::compute(&tar, &eng);
+        if incremental != full {
+            return Err(format!("mismatch for {target} len {}", new_content.len()));
+        }
+        if incremental.root != full.root || Digest::of(&tar) != Digest::of(&tar) {
+            return Err("root mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_invariant_cached_rebuild_is_identity() {
+    let root = tmp("cache");
+    let mut case = 0u64;
+    check("immediate rebuild is fully cached and id-stable", 8, |g| {
+        case += 1;
+        let case_dir = root.join(format!("case{case}"));
+        let ctx = case_dir.join("ctx");
+        gen_project(g, &ctx);
+        let d = daemon(&case_dir.join("d"));
+        let r1 = d.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+        let r2 = d.build(&ctx, "p:latest").map_err(|e| e.to_string())?;
+        if r2.rebuilt_steps() != 0 {
+            return Err(format!("{} steps rebuilt on identical context", r2.rebuilt_steps()));
+        }
+        if r1.image_id != r2.image_id {
+            return Err("image id changed without a content change".into());
+        }
+        let _ = std::fs::remove_dir_all(&case_dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}
