@@ -1,6 +1,10 @@
 //! Shared bench plumbing (no criterion in this environment; benches are
 //! `harness = false` binaries).
 
+// Each bench binary compiles its own copy of this module and uses a
+// different subset of it; unused helpers are expected per target.
+#![allow(dead_code)]
+
 use layerjet::bench::{run_scenario_experiment, ScenarioExperiment};
 use layerjet::builder::CostModel;
 use layerjet::inject::InjectMode;

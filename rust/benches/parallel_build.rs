@@ -1,0 +1,178 @@
+//! **Parallel build engine** — 1-vs-N-thread full builds and the
+//! data-parallel chunked re-hash, with a machine-readable baseline
+//! (`BENCH_parallel_build.json`) so later perf PRs have a trajectory to
+//! beat.
+//!
+//! `cargo bench --bench parallel_build` (set `LAYERJET_TRIALS` to
+//! override the trial count).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::bench::time_trials;
+use layerjet::builder::{BuildOptions, CostModel};
+use layerjet::daemon::Daemon;
+use layerjet::hash::{ChunkDigest, ParallelEngine};
+use layerjet::stats::summarize;
+use layerjet::util::json::Json;
+use layerjet::util::prng::Prng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let n = common::trials(8);
+    let hash = hash_sweep(n);
+    let build = build_sweep(n);
+    emit_baseline(n, &hash, &build);
+
+    // Shape assertion (the acceptance bar for this PR's hot path): the
+    // multi-chunk hashing benchmark must clear 1.5x at 4 threads. Only
+    // meaningful on hardware that can actually run 4 threads — on
+    // smaller machines the number is a hardware property, not an engine
+    // regression, so report instead of panic.
+    let t1 = hash[0].1;
+    let t4 = hash.iter().find(|(t, _)| *t == 4).unwrap().1;
+    let speedup = t1 / t4.max(1e-12);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 4 {
+        assert!(
+            speedup >= 1.5,
+            "4-thread chunk hashing speedup {speedup:.2}x < 1.5x on {cores} cores — parallel engine regressed"
+        );
+        eprintln!("parallel_build shape checks OK ({speedup:.2}x hashing at 4 threads)");
+    } else {
+        eprintln!(
+            "parallel_build: only {cores} core(s) available — speedup assertion skipped \
+             (measured {speedup:.2}x at 4 threads)"
+        );
+    }
+}
+
+/// Chunked re-hash of a 32 MiB buffer across thread counts.
+/// Returns `(threads, mean seconds)` per point.
+fn hash_sweep(n: usize) -> Vec<(usize, f64)> {
+    let mut rng = Prng::new(0xbeef);
+    let mut data = vec![0u8; 32 << 20];
+    rng.fill_bytes(&mut data);
+
+    let mut table = Table::new(
+        &format!("chunked digest, 32 MiB buffer ({n} trials)"),
+        &["threads", "mean", "speedup vs 1"],
+    );
+    let mut out = Vec::new();
+    let mut base = 0.0;
+    for threads in THREADS {
+        let engine = ParallelEngine::new(threads);
+        let t = summarize(&time_trials(1, n, |_| {
+            let _ = ChunkDigest::compute(&data, &engine);
+        }));
+        if threads == 1 {
+            base = t.mean;
+        }
+        table.row(vec![
+            threads.to_string(),
+            fmt_secs(t.mean),
+            format!("{:.2}x", base / t.mean.max(1e-12)),
+        ]);
+        out.push((threads, t.mean));
+    }
+    table.print();
+    out
+}
+
+/// Full no-cache builds of a project with several independent layers,
+/// `jobs = 1` vs `jobs = N`. Returns `(jobs, mean seconds)` per point.
+fn build_sweep(n: usize) -> Vec<(usize, f64)> {
+    let root = common::bench_root("parallel-build");
+    let project = root.join("project");
+    std::fs::create_dir_all(&project).unwrap();
+    std::fs::write(
+        project.join("Dockerfile"),
+        "FROM python:alpine\n\
+         COPY . /app/\n\
+         RUN pip install alpha beta gamma\n\
+         RUN pip install delta epsilon\n\
+         RUN apt update && apt install curl git -y\n\
+         RUN pip install zeta\n\
+         CMD [\"python\", \"app/main.py\"]\n",
+    )
+    .unwrap();
+    std::fs::write(project.join("main.py"), "print('v0')\n").unwrap();
+
+    let mut table = Table::new(
+        &format!("full no-cache build, 7 steps ({n} trials)"),
+        &["jobs", "mean", "speedup vs 1"],
+    );
+    let mut out = Vec::new();
+    let mut base = 0.0;
+    let mut image_ids = Vec::new();
+    for jobs in THREADS {
+        let mut daemon = Daemon::new(&root.join(format!("daemon-j{jobs}"))).unwrap();
+        daemon.cost = CostModel::default();
+        let opts = BuildOptions {
+            no_cache: true,
+            cost: CostModel::default(),
+            jobs,
+        };
+        let mut image_id = None;
+        let t = summarize(&time_trials(1, n, |_| {
+            let r = daemon.build_with(&project, "pbench:latest", &opts).unwrap();
+            image_id = Some(r.image_id);
+        }));
+        if jobs == 1 {
+            base = t.mean;
+        }
+        image_ids.push(image_id.expect("at least one trial ran"));
+        table.row(vec![
+            jobs.to_string(),
+            fmt_secs(t.mean),
+            format!("{:.2}x", base / t.mean.max(1e-12)),
+        ]);
+        out.push((jobs, t.mean));
+    }
+    // Determinism gate: every jobs level must land on the same image.
+    assert!(
+        image_ids.windows(2).all(|w| w[0] == w[1]),
+        "jobs levels diverged: {image_ids:?}"
+    );
+    table.print();
+    let _ = std::fs::remove_dir_all(&root);
+    out
+}
+
+/// Write the machine-readable baseline: once into `bench_results/` and
+/// once at the repository root (the trajectory file later perf PRs
+/// compare against).
+fn emit_baseline(n: usize, hash: &[(usize, f64)], build: &[(usize, f64)]) {
+    let point = |(threads, mean): &(usize, f64)| {
+        Json::obj(vec![
+            ("threads", Json::num(*threads as f64)),
+            ("mean_s", Json::num(*mean)),
+        ])
+    };
+    let speedup_at = |series: &[(usize, f64)], t: usize| {
+        let base = series[0].1;
+        series
+            .iter()
+            .find(|(x, _)| *x == t)
+            .map(|(_, m)| base / m.max(1e-12))
+            .unwrap_or(f64::NAN)
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::str("parallel_build")),
+        ("measured", Json::Bool(true)),
+        ("trials", Json::num(n as f64)),
+        ("hash_32mib", Json::Arr(hash.iter().map(point).collect())),
+        ("build_nocache", Json::Arr(build.iter().map(point).collect())),
+        ("hash_speedup_4t", Json::num(speedup_at(hash, 4))),
+        ("build_speedup_4j", Json::num(speedup_at(build, 4))),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_parallel_build.json", &text).expect("write baseline");
+    // Repo root (cargo bench runs from the package dir `rust/`).
+    if std::fs::write("../BENCH_parallel_build.json", &text).is_ok() {
+        eprintln!("wrote ../BENCH_parallel_build.json");
+    }
+    eprintln!("wrote bench_results/BENCH_parallel_build.json");
+}

@@ -74,7 +74,11 @@ pub fn run_scenario_experiment(
 
     let mut scenario = Scenario::generate(kind, &root.join("project"), seed)?;
     let tag = scenario.tag();
-    let build_opts = BuildOptions { no_cache: false, cost };
+    let build_opts = BuildOptions {
+        no_cache: false,
+        cost,
+        jobs: 1,
+    };
     let inject_opts = InjectOptions {
         mode,
         cascade: kind.needs_cascade(),

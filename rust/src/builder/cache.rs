@@ -1,0 +1,182 @@
+//! Docker's layer-cache decision logic (paper §I.A / §II.C).
+//!
+//! A step is served from cache only when **all** of Docker's criteria
+//! hold, and — exactly as in Docker — one miss disables the cache for
+//! every following step (*fall-through*), even if a later layer's own
+//! inputs are unchanged. That wasted work is inefficiency A of the
+//! paper, and what the injection fast path short-circuits.
+//!
+//! The criteria, per stored layer:
+//! 1. a layer with the derived permanent id exists locally;
+//! 2. its instruction literal matches (criterion 2/4: operation commands
+//!    are compared literally);
+//! 3. its recorded parent revision matches the parent built this pass
+//!    (the cache *chain*);
+//! 4. for `COPY`/`ADD`: the recorded source checksum matches the current
+//!    context selection (criterion 3: imported files are content-checked).
+
+use crate::hash::Digest;
+use crate::oci::{LayerId, LayerMeta};
+use crate::store::LayerStore;
+use std::fmt;
+
+/// Why a step could not be served from cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MissReason {
+    /// `--no-cache` requested.
+    NoCache,
+    /// No stored layer under the derived permanent id.
+    FirstBuild,
+    /// A layer exists but records a different instruction literal.
+    InstructionChanged,
+    /// The parent layer's revision differs from the recorded chain link.
+    ParentChanged,
+    /// `COPY`/`ADD` source files changed in the build context.
+    SourceChanged,
+    /// An earlier step missed; Docker disables the cache downstream.
+    FallThrough,
+}
+
+impl fmt::Display for MissReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            MissReason::NoCache => "--no-cache",
+            MissReason::FirstBuild => "no cached layer",
+            MissReason::InstructionChanged => "instruction changed",
+            MissReason::ParentChanged => "parent layer revised",
+            MissReason::SourceChanged => "context sources changed",
+            MissReason::FallThrough => "upstream miss (fall-through)",
+        })
+    }
+}
+
+/// The outcome of one cache probe.
+#[derive(Clone, Debug)]
+pub enum CacheDecision {
+    /// Reuse the stored layer revision.
+    Hit(Box<LayerMeta>),
+    /// Rebuild, for the given reason.
+    Miss(MissReason),
+}
+
+impl CacheDecision {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, CacheDecision::Hit(_))
+    }
+
+    pub fn miss_reason(&self) -> Option<MissReason> {
+        match self {
+            CacheDecision::Hit(_) => None,
+            CacheDecision::Miss(r) => Some(*r),
+        }
+    }
+}
+
+/// Probe the store for a cached revision of one step.
+///
+/// `parent_checksum` is the revision of the parent layer as established
+/// by this build pass (`None` for the base step); `source_checksum` is
+/// the current context selection digest for `COPY`/`ADD` steps.
+pub fn probe(
+    layers: &LayerStore,
+    id: &LayerId,
+    literal: &str,
+    parent_checksum: Option<Digest>,
+    source_checksum: Option<Digest>,
+) -> CacheDecision {
+    if !layers.exists(id) {
+        return CacheDecision::Miss(MissReason::FirstBuild);
+    }
+    let meta = match layers.meta(id) {
+        Ok(m) => m,
+        Err(_) => return CacheDecision::Miss(MissReason::FirstBuild),
+    };
+    if meta.created_by != literal {
+        return CacheDecision::Miss(MissReason::InstructionChanged);
+    }
+    if meta.parent_checksum != parent_checksum {
+        return CacheDecision::Miss(MissReason::ParentChanged);
+    }
+    if let Some(src) = source_checksum {
+        if meta.source_checksum != src {
+            return CacheDecision::Miss(MissReason::SourceChanged);
+        }
+    }
+    CacheDecision::Hit(Box::new(meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::{ChunkDigest, NativeEngine};
+    use crate::store::LAYER_VERSION;
+    use crate::tar::TarBuilder;
+    use std::path::PathBuf;
+
+    fn fresh(tag: &str) -> (LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-cache-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (LayerStore::open(&d).unwrap(), d)
+    }
+
+    fn sample_layer(layers: &LayerStore, literal: &str, src: Digest) -> LayerMeta {
+        let eng = NativeEngine::new();
+        let mut b = TarBuilder::new();
+        b.append_file("f", b"content").unwrap();
+        let tar = b.finish();
+        let meta = LayerMeta {
+            id: LayerId::derive("test", None, literal),
+            parent: None,
+            parent_checksum: None,
+            checksum: Digest::of(&tar),
+            chunk_root: ChunkDigest::compute(&tar, &eng).root,
+            created_by: literal.to_string(),
+            source_checksum: src,
+            is_empty_layer: false,
+            size: tar.len() as u64,
+            version: LAYER_VERSION.into(),
+        };
+        layers.put_layer(&meta, &tar, &eng).unwrap();
+        meta
+    }
+
+    #[test]
+    fn probe_hits_when_everything_matches() {
+        let (layers, d) = fresh("hit");
+        let src = Digest::of(b"sources");
+        let meta = sample_layer(&layers, "COPY . /app/", src);
+        let got = probe(&layers, &meta.id, "COPY . /app/", None, Some(src));
+        assert!(got.is_hit());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn probe_reports_each_miss_reason() {
+        let (layers, d) = fresh("miss");
+        let src = Digest::of(b"sources");
+        let meta = sample_layer(&layers, "COPY . /app/", src);
+
+        let ghost = LayerId::derive("test", None, "RUN nothing");
+        assert_eq!(
+            probe(&layers, &ghost, "RUN nothing", None, None).miss_reason(),
+            Some(MissReason::FirstBuild)
+        );
+        assert_eq!(
+            probe(&layers, &meta.id, "COPY . /app/", Some(Digest::of(b"new parent")), Some(src))
+                .miss_reason(),
+            Some(MissReason::ParentChanged)
+        );
+        assert_eq!(
+            probe(&layers, &meta.id, "COPY . /app/", None, Some(Digest::of(b"edited")))
+                .miss_reason(),
+            Some(MissReason::SourceChanged)
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn miss_reasons_render() {
+        assert_eq!(MissReason::FallThrough.to_string(), "upstream miss (fall-through)");
+        assert_eq!(MissReason::NoCache.to_string(), "--no-cache");
+    }
+}

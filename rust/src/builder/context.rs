@@ -1,0 +1,443 @@
+//! The in-memory build context: the file set a `docker build` ships to
+//! the daemon, with per-file chunk-digest roots.
+//!
+//! Scanning is the first thing every build *and* every injection does, so
+//! it is engineered as a batched hashing workload: the chunks of every
+//! file that needs (re)hashing are collected into **one**
+//! [`HashEngine::hash_chunks`] call, which is exactly the shape the
+//! data-parallel [`super::parallel::ParallelEngine`] and the AOT XLA
+//! kernel shard across lanes. A per-context scan cache (size + mtime
+//! keyed) makes the steady-state rescan metadata-only, so repeated
+//! injections pay O(changed files) hashing, not O(context).
+
+use crate::hash::{ChunkDigest, Digest, HashEngine, Sha256, CHUNK_SIZE};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One regular file of the build context.
+#[derive(Clone, Debug)]
+pub struct ContextFile {
+    /// Context-relative path, `/`-separated (e.g. `pkg/core.py`).
+    pub rel_path: String,
+    /// Content length in bytes.
+    pub size: u64,
+    /// Chunk-digest **root** of the content — the identity change
+    /// detection and the layer file index compare against.
+    pub digest: Digest,
+    data: Vec<u8>,
+}
+
+impl ContextFile {
+    /// The file's content.
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// A scanned build context (the analogue of the tarball `docker build`
+/// sends to dockerd), held in memory for the duration of one build or
+/// injection.
+pub struct BuildContext {
+    /// Context root directory.
+    pub dir: PathBuf,
+    /// All regular files, keyed (and therefore ordered) by relative path.
+    files: BTreeMap<String, ContextFile>,
+}
+
+impl BuildContext {
+    /// Scan a context directory, hashing every file (batched through the
+    /// engine).
+    pub fn scan(dir: &Path, engine: &dyn HashEngine) -> Result<BuildContext> {
+        Self::scan_cached(dir, engine, None)
+    }
+
+    /// Scan with an optional persistent scan-cache file: files whose
+    /// (size, mtime) match the cache reuse their recorded digest root and
+    /// skip hashing entirely.
+    pub fn scan_cached(
+        dir: &Path,
+        engine: &dyn HashEngine,
+        cache_path: Option<&Path>,
+    ) -> Result<BuildContext> {
+        let mut rel_paths = Vec::new();
+        walk(dir, "", &mut rel_paths)?;
+        rel_paths.sort();
+
+        let cache = cache_path.and_then(load_cache);
+
+        // Load contents; decide per file whether the cached root is usable.
+        struct Pending {
+            rel_path: String,
+            data: Vec<u8>,
+            mtime: u128,
+            cached_root: Option<Digest>,
+        }
+        let mut pending = Vec::with_capacity(rel_paths.len());
+        for rel in rel_paths {
+            let path = dir.join(&rel);
+            let meta = std::fs::metadata(&path)?;
+            let mtime = meta
+                .modified()
+                .ok()
+                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                .map(|d| d.as_nanos())
+                .unwrap_or(0);
+            let data = std::fs::read(&path)?;
+            let cached_root = cache.as_ref().and_then(|c| {
+                c.get(&rel).and_then(|(size, stamp, root)| {
+                    if *size == data.len() as u64 && *stamp == mtime && mtime != 0 {
+                        Some(*root)
+                    } else {
+                        None
+                    }
+                })
+            });
+            pending.push(Pending {
+                rel_path: rel,
+                data,
+                mtime,
+                cached_root,
+            });
+        }
+
+        // One batched hash call over every chunk of every uncached file.
+        let mut batch: Vec<&[u8]> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::new(); // (file idx, chunk count)
+        for (i, p) in pending.iter().enumerate() {
+            if p.cached_root.is_none() {
+                let n_before = batch.len();
+                batch.extend(p.data.chunks(CHUNK_SIZE));
+                spans.push((i, batch.len() - n_before));
+            }
+        }
+        let digests = engine.hash_chunks(&batch);
+        drop(batch); // releases the borrows into `pending` before the move below
+
+        let mut roots: Vec<Option<Digest>> = pending.iter().map(|p| p.cached_root).collect();
+        let mut cursor = 0;
+        for (i, n_chunks) in spans {
+            let root = ChunkDigest::root_of(
+                &digests[cursor..cursor + n_chunks],
+                pending[i].data.len() as u64,
+            );
+            cursor += n_chunks;
+            roots[i] = Some(root);
+        }
+
+        let mut files = BTreeMap::new();
+        let mut cache_doc: Vec<(String, Json)> = Vec::new();
+        for (p, root) in pending.into_iter().zip(roots) {
+            let root = root.expect("every file has a digest root by now");
+            cache_doc.push((
+                p.rel_path.clone(),
+                Json::obj(vec![
+                    ("size", Json::num(p.data.len() as f64)),
+                    // Nanosecond mtimes exceed f64's exact-integer range;
+                    // store as a decimal string.
+                    ("mtime", Json::str(p.mtime.to_string())),
+                    ("root", Json::str(root.to_hex())),
+                ]),
+            ));
+            files.insert(
+                p.rel_path.clone(),
+                ContextFile {
+                    size: p.data.len() as u64,
+                    digest: root,
+                    rel_path: p.rel_path,
+                    data: p.data,
+                },
+            );
+        }
+
+        if let Some(path) = cache_path {
+            // Best effort: a failed cache write only costs the next scan.
+            if let Some(parent) = path.parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            let _ = std::fs::write(path, Json::Obj(cache_doc).to_string_compact());
+        }
+
+        Ok(BuildContext {
+            dir: dir.to_path_buf(),
+            files,
+        })
+    }
+
+    /// Number of files in the context.
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    /// Read a file's content by context-relative path.
+    pub fn read(&self, rel_path: &str) -> Result<Vec<u8>> {
+        self.files
+            .get(rel_path)
+            .map(|f| f.data.clone())
+            .ok_or_else(|| Error::Build(format!("context has no file {rel_path:?}")))
+    }
+
+    /// Select the files a `COPY <src> ...` instruction would copy, as
+    /// `(sub_path, file)` pairs ordered by sub path. `sub_path` is the
+    /// path **relative to `src`** (the piece COPY appends under a
+    /// directory destination); for a single-file src it is the basename.
+    pub fn select(&self, src: &str) -> Vec<(String, &ContextFile)> {
+        let src = normalize_src(src);
+        if src.is_empty() || src == "." {
+            return self
+                .files
+                .iter()
+                .map(|(p, f)| (p.clone(), f))
+                .collect();
+        }
+        if let Some(f) = self.files.get(src) {
+            let base = src.rsplit('/').next().unwrap_or(src);
+            return vec![(base.to_string(), f)];
+        }
+        let prefix = format!("{src}/");
+        self.files
+            .range(prefix.clone()..)
+            .take_while(|(p, _)| p.starts_with(&prefix))
+            .map(|(p, f)| (p[prefix.len()..].to_string(), f))
+            .collect()
+    }
+
+    /// Does `src` name a directory (vs a single file)? Directory sources
+    /// force directory-placement semantics even for one selected file.
+    pub fn src_is_dir(&self, src: &str) -> bool {
+        let src = normalize_src(src);
+        if src.is_empty() || src == "." {
+            return true;
+        }
+        if self.files.contains_key(src) {
+            return false;
+        }
+        let prefix = format!("{src}/");
+        self.files
+            .range(prefix.clone()..)
+            .next()
+            .map(|(p, _)| p.starts_with(&prefix))
+            .unwrap_or_else(|| self.dir.join(src).is_dir())
+    }
+
+    /// Combined digest of a COPY/ADD selection: sub paths, sizes and
+    /// content roots. This is Docker's cache criterion 3 ("the checksum
+    /// of imported files") — the value compared against
+    /// [`crate::oci::LayerMeta::source_checksum`].
+    pub fn copy_checksum(&self, src: &str) -> Digest {
+        let mut h = Sha256::new();
+        h.update(b"layerjet-copy-src\0");
+        for (sub, f) in self.select(src) {
+            h.update(sub.as_bytes());
+            h.update(&[0]);
+            h.update(&f.digest.0);
+            h.update(&f.size.to_le_bytes());
+        }
+        h.finalize()
+    }
+}
+
+/// Strip a leading `./` and any trailing `/` from a COPY source operand.
+fn normalize_src(src: &str) -> &str {
+    let src = src.strip_prefix("./").unwrap_or(src);
+    let src = src.trim_end_matches('/');
+    if src.is_empty() {
+        "."
+    } else {
+        src
+    }
+}
+
+/// Recursive sorted walk collecting relative file paths.
+fn walk(root: &Path, prefix: &str, out: &mut Vec<String>) -> Result<()> {
+    let dir = if prefix.is_empty() {
+        root.to_path_buf()
+    } else {
+        root.join(prefix)
+    };
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .map_err(|e| Error::Build(format!("cannot scan context {}: {e}", dir.display())))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel = if prefix.is_empty() {
+            name
+        } else {
+            format!("{prefix}/{name}")
+        };
+        if entry.file_type()?.is_dir() {
+            walk(root, &rel, out)?;
+        } else {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Parse a scan-cache file into `rel_path → (size, mtime, root)`.
+fn load_cache(path: &Path) -> Option<BTreeMap<String, (u64, u128, Digest)>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    let fields = match &doc {
+        Json::Obj(fields) => fields,
+        _ => return None,
+    };
+    let mut out = BTreeMap::new();
+    for (rel, entry) in fields {
+        let size = entry.get("size")?.as_u64()?;
+        let mtime: u128 = entry.get("mtime")?.as_str()?.parse().ok()?;
+        let root = Digest::parse(entry.get("root")?.as_str()?)?;
+        out.insert(rel.clone(), (size, mtime, root));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lj-ctx-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write(dir: &Path, files: &[(&str, &str)]) {
+        for (p, c) in files {
+            let path = dir.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+    }
+
+    #[test]
+    fn scan_orders_and_digests() {
+        let d = tmp("scan");
+        write(&d, &[("b.py", "bb"), ("a.py", "aa"), ("pkg/mod.py", "mm")]);
+        let ctx = BuildContext::scan(&d, &NativeEngine::new()).unwrap();
+        let all = ctx.select(".");
+        let names: Vec<&str> = all.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(names, vec!["a.py", "b.py", "pkg/mod.py"]);
+        let f = &all[0].1;
+        assert_eq!(f.size, 2);
+        assert_eq!(
+            f.digest,
+            ChunkDigest::compute(b"aa", &NativeEngine::new()).root
+        );
+        assert_eq!(ctx.read("pkg/mod.py").unwrap(), b"mm");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn select_file_dir_and_dot() {
+        let d = tmp("select");
+        write(
+            &d,
+            &[("app/main.py", "m"), ("app/sub/x.py", "x"), ("war.bin", "w")],
+        );
+        let ctx = BuildContext::scan(&d, &NativeEngine::new()).unwrap();
+
+        // Single file: basename as sub path.
+        let one = ctx.select("war.bin");
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].0, "war.bin");
+        assert!(!ctx.src_is_dir("war.bin"));
+
+        // Directory: sub paths relative to it.
+        let dir = ctx.select("app");
+        let subs: Vec<&str> = dir.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(subs, vec!["main.py", "sub/x.py"]);
+        assert!(ctx.src_is_dir("app"));
+        assert!(ctx.src_is_dir("."));
+
+        // `./dir/` normalizes like `dir`.
+        assert_eq!(ctx.select("./app/").len(), 2);
+
+        // Nested single file keeps only the basename as sub.
+        let nested = ctx.select("app/sub/x.py");
+        assert_eq!(nested[0].0, "x.py");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn copy_checksum_tracks_content_and_paths() {
+        let d = tmp("srcsum");
+        write(&d, &[("a.py", "v1"), ("b.py", "v1")]);
+        let eng = NativeEngine::new();
+        let ctx = BuildContext::scan(&d, &eng).unwrap();
+        let before = ctx.copy_checksum(".");
+        assert_eq!(before, ctx.copy_checksum("."), "deterministic");
+
+        std::fs::write(d.join("a.py"), "v2").unwrap();
+        let ctx2 = BuildContext::scan(&d, &eng).unwrap();
+        assert_ne!(before, ctx2.copy_checksum("."), "content change");
+
+        std::fs::write(d.join("c.py"), "v1").unwrap();
+        let ctx3 = BuildContext::scan(&d, &eng).unwrap();
+        assert_ne!(ctx2.copy_checksum("."), ctx3.copy_checksum("."), "file set change");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn scan_cache_round_trip_and_invalidation() {
+        let d = tmp("cache");
+        write(&d, &[("a.py", "aaaa"), ("big.bin", "0123456789")]);
+        let eng = NativeEngine::new();
+        let cache = d.join("cache/scan.json");
+        let ctx1 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert!(cache.exists());
+
+        // Unchanged rescan reproduces the same digests from the cache.
+        let ctx2 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert_eq!(
+            ctx1.select(".").iter().map(|(_, f)| f.digest).collect::<Vec<_>>(),
+            ctx2.select(".").iter().map(|(_, f)| f.digest).collect::<Vec<_>>(),
+        );
+
+        // A content change (different size) must invalidate the entry.
+        std::fs::write(d.join("a.py"), "bbbbbb").unwrap();
+        let ctx3 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert_ne!(
+            ctx1.select("a.py")[0].1.digest,
+            ctx3.select("a.py")[0].1.digest
+        );
+        assert_eq!(
+            ctx3.select("a.py")[0].1.digest,
+            ChunkDigest::compute(b"bbbbbb", &eng).root
+        );
+
+        // A corrupt cache file degrades to a full rescan.
+        std::fs::write(&cache, b"not json").unwrap();
+        let ctx4 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert_eq!(ctx4.len(), 2);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn multi_chunk_file_roots_match_chunk_digest() {
+        let d = tmp("chunks");
+        let blob: Vec<u8> = (0..3 * CHUNK_SIZE + 100).map(|i| (i % 251) as u8).collect();
+        std::fs::write(d.join("blob.bin"), &blob).unwrap();
+        let eng = NativeEngine::new();
+        let ctx = BuildContext::scan(&d, &eng).unwrap();
+        assert_eq!(
+            ctx.select("blob.bin")[0].1.digest,
+            ChunkDigest::compute(&blob, &eng).root
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let ghost = std::env::temp_dir().join("lj-ctx-definitely-missing");
+        assert!(BuildContext::scan(&ghost, &NativeEngine::new()).is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! Layer executors: the (simulated) toolchains behind each Dockerfile
+//! instruction.
+//!
+//! The environment has no real container runtime, so `RUN` commands and
+//! base-image pulls are modeled as **pure functions** of the instruction
+//! literal plus the relevant context files: `apt`/`pip`/`conda` installs
+//! synthesize deterministic per-package payloads, and `mvn package`
+//! actually "compiles" the context's `.java` sources through
+//! [`compile_java`] into a fat jar — so a source edit really changes the
+//! compile layer's bytes, which is what the cascade-rebuild experiments
+//! (paper scenario 4) measure. Determinism is load-bearing: rebuilding an
+//! unchanged instruction must produce byte-identical layers (Fig. 2's
+//! "fall-through rebuilds identical layers — pure waste"), and `jobs=N`
+//! parallel builds must be bit-identical to `jobs=1`.
+
+use super::context::BuildContext;
+use crate::hash::Digest;
+use crate::tar::TarBuilder;
+use crate::util::prng::Prng;
+use crate::{Error, Result};
+
+/// Bytes synthesized per `apt install` package.
+pub const APT_PACKAGE_BYTES: usize = 1_310_720; // 1.25 MiB
+/// Bytes synthesized per `conda` dependency.
+pub const CONDA_DEP_BYTES: usize = 1_310_720; // 1.25 MiB
+/// Bytes synthesized per `pip install` package.
+pub const PIP_PACKAGE_BYTES: usize = 262_144; // 256 KiB
+/// Bytes synthesized for `apt update` package lists.
+pub const APT_LISTS_BYTES: usize = 196_608; // 192 KiB
+/// Bytes synthesized per Maven dependency on `mvn dependency:resolve`.
+pub const MVN_DEP_BYTES: usize = 393_216; // 384 KiB
+/// Bytes bundled per Maven dependency into a packaged fat jar.
+pub const MVN_LIB_BYTES: usize = 49_152; // 48 KiB
+/// Bytes synthesized for an unrecognized RUN command.
+pub const GENERIC_RUN_BYTES: usize = 65_536; // 64 KiB
+
+/// Join a COPY/ADD destination with the current working directory and
+/// normalize to an **archive-relative** path (no leading or trailing
+/// slashes). Shared with [`crate::inject::detect::CopySpec`], which must
+/// place files exactly like the builder does.
+pub fn join(workdir: &str, dst: &str) -> String {
+    let abs = if dst.starts_with('/') {
+        dst.to_string()
+    } else {
+        format!("{}/{}", workdir.trim_end_matches('/'), dst)
+    };
+    abs.trim_matches('/').to_string()
+}
+
+/// Archive path of one selected context file for `COPY <src> <dst>`:
+/// `sub` is the selection sub-path, `multi` whether the selection is
+/// directory-shaped. Mirrors `CopySpec::archive_path` exactly (the
+/// `detect_no_changes_after_build` test enforces parity).
+pub fn copy_dest(workdir: &str, dst: &str, sub: &str, multi: bool) -> String {
+    let dst_is_dir = dst.ends_with('/') || multi;
+    let dst_base = join(workdir, dst);
+    if dst_is_dir {
+        if dst_base.is_empty() {
+            sub.to_string()
+        } else {
+            format!("{dst_base}/{sub}")
+        }
+    } else {
+        dst_base
+    }
+}
+
+/// The simulated `javac`: a deterministic, content-sensitive source →
+/// "bytecode" transform. Also used by the scenario-3 workload, which
+/// compiles its `.war` *outside* the image build, and by the tests that
+/// check a cascade rebuild really recompiled the new source.
+pub fn compile_java(source: &[u8]) -> Vec<u8> {
+    let digest = Digest::of(source);
+    let mut out = Vec::with_capacity(source.len() + 48);
+    out.extend_from_slice(&[0xCA, 0xFE, 0xBA, 0xBE, 0x00, 0x00, 0x00, 0x34]);
+    out.extend_from_slice(&digest.0);
+    out.extend_from_slice(&(source.len() as u64).to_le_bytes());
+    out.extend(source.iter().map(|b| b.rotate_left(3) ^ 0x5a));
+    out
+}
+
+/// Deterministic pseudo-random payload for a simulated artifact.
+pub fn synth_payload(key: &str, bytes: usize) -> Vec<u8> {
+    let mut rng = Prng::new(fnv64(key.as_bytes()));
+    let mut buf = vec![0u8; bytes];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+fn fnv64(data: &[u8]) -> u64 {
+    data.iter()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ *b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Synthesize the rootfs file set of a base image (`FROM <image>`),
+/// deterministic in the image name so every daemon derives the same base
+/// layer (cross-image and cross-machine base-layer deduplication).
+pub fn base_image_files(image: &str) -> Vec<(String, Vec<u8>)> {
+    let payload_bytes = if image.contains("miniconda") {
+        1_048_576
+    } else if image.contains("ubuntu") {
+        786_432
+    } else if image.contains("java") {
+        524_288
+    } else {
+        262_144
+    };
+    let slug: String = image
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    vec![
+        (
+            "etc/os-release".to_string(),
+            format!("NAME=\"layerjet base\"\nIMAGE={image}\n").into_bytes(),
+        ),
+        (
+            "bin/sh".to_string(),
+            synth_payload(&format!("sh:{image}"), 65_536),
+        ),
+        (
+            format!("usr/lib/{slug}/base.img"),
+            synth_payload(&format!("base:{image}"), payload_bytes),
+        ),
+    ]
+}
+
+/// Execute a `RUN` command: returns the files the command generates, as
+/// `(archive_path, content)` pairs. Compound `a && b` commands run each
+/// part in order.
+pub fn run_command(
+    command: &str,
+    workdir: &str,
+    ctx: &BuildContext,
+) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut files = Vec::new();
+    for part in command.split("&&") {
+        run_single(part.trim(), workdir, ctx, &mut files)?;
+    }
+    Ok(files)
+}
+
+fn run_single(
+    cmd: &str,
+    workdir: &str,
+    ctx: &BuildContext,
+    out: &mut Vec<(String, Vec<u8>)>,
+) -> Result<()> {
+    let tokens: Vec<&str> = cmd.split_whitespace().collect();
+    let program = tokens.first().copied().unwrap_or("");
+    match program {
+        "apt" | "apt-get" => {
+            if tokens.contains(&"install") {
+                for pkg in packages_after_install(&tokens) {
+                    out.push((
+                        format!("var/cache/apt/archives/{pkg}.deb"),
+                        synth_payload(&format!("apt:{pkg}"), APT_PACKAGE_BYTES),
+                    ));
+                    out.push((
+                        format!("usr/share/doc/{pkg}/copyright"),
+                        format!("{pkg}: simulated package\n").into_bytes(),
+                    ));
+                }
+            } else {
+                out.push((
+                    format!("var/lib/apt/lists/{:016x}.index", fnv64(cmd.as_bytes())),
+                    synth_payload(&format!("apt-lists:{cmd}"), APT_LISTS_BYTES),
+                ));
+            }
+        }
+        "pip" | "pip3" => {
+            for pkg in packages_after_install(&tokens) {
+                out.push((
+                    format!("usr/lib/python3/site-packages/{pkg}/__init__.bin"),
+                    synth_payload(&format!("pip:{pkg}"), PIP_PACKAGE_BYTES),
+                ));
+            }
+        }
+        "conda" => {
+            // `conda env update -f environment.yaml`: payloads keyed by the
+            // environment file's dependency list *and* content, so an edited
+            // environment produces a different layer on rebuild.
+            let env = ctx.read("environment.yaml").unwrap_or_default();
+            let env_key = Digest::of(&env).short();
+            let deps = conda_dependencies(&env);
+            if deps.is_empty() {
+                out.push((
+                    "opt/conda/env.log".to_string(),
+                    synth_payload(&format!("conda:{cmd}"), GENERIC_RUN_BYTES),
+                ));
+            }
+            for dep in deps {
+                out.push((
+                    format!("opt/conda/pkgs/{dep}.tar.zst"),
+                    synth_payload(&format!("conda:{dep}:{env_key}"), CONDA_DEP_BYTES),
+                ));
+            }
+        }
+        "mvn" => {
+            let pom = ctx.read("pom.xml").unwrap_or_default();
+            let deps = pom_dependencies(&pom);
+            if cmd.contains("dependency:resolve") {
+                for dep in &deps {
+                    out.push((
+                        format!("root/.m2/repository/{dep}/{dep}.jar"),
+                        synth_payload(&format!("mvn:dep:{dep}"), MVN_DEP_BYTES),
+                    ));
+                }
+            } else if cmd.contains("verify") {
+                out.push((
+                    "root/.m2/verify.log".to_string(),
+                    synth_payload(&format!("mvn:verify:{}", Digest::of(&pom).short()), 16_384),
+                ));
+            } else if cmd.contains("package") {
+                let jar = package_fat_jar(ctx, &deps)?;
+                out.push((join(workdir, "target/app-jar-with-dependencies.jar"), jar));
+            } else {
+                out.push((
+                    format!("var/log/layerjet/mvn-{:016x}.log", fnv64(cmd.as_bytes())),
+                    synth_payload(&format!("mvn:{cmd}"), GENERIC_RUN_BYTES),
+                ));
+            }
+        }
+        "javac" => {
+            for (stem, class) in compile_context_java(ctx) {
+                out.push((join(workdir, &format!("{stem}.class")), class));
+            }
+        }
+        "" => {}
+        _ => {
+            out.push((
+                format!("var/log/layerjet/run-{:016x}.log", fnv64(cmd.as_bytes())),
+                synth_payload(&format!("run:{cmd}"), GENERIC_RUN_BYTES),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// `mvn package`: compile every `.java` in the context and bundle the
+/// classes plus per-dependency lib payloads into a (tar-shaped) fat jar.
+fn package_fat_jar(ctx: &BuildContext, deps: &[String]) -> Result<Vec<u8>> {
+    let mut jar = TarBuilder::new();
+    jar.append_file(
+        "META-INF/MANIFEST.MF",
+        b"Manifest-Version: 1.0\nBuilt-By: layerjet\n",
+    )
+    .map_err(|e| Error::Build(format!("jar: {e}")))?;
+    for (stem, class) in compile_context_java(ctx) {
+        jar.append_file(&format!("{stem}.class"), &class)
+            .map_err(|e| Error::Build(format!("jar: {e}")))?;
+    }
+    for dep in deps {
+        jar.append_file(
+            &format!("lib/{dep}.jar"),
+            &synth_payload(&format!("mvn:lib:{dep}"), MVN_LIB_BYTES),
+        )
+        .map_err(|e| Error::Build(format!("jar: {e}")))?;
+    }
+    Ok(jar.finish())
+}
+
+/// All `.java` files of the context, compiled, keyed by class-file stem
+/// (flat names, later paths win on stem collisions — deterministic).
+fn compile_context_java(ctx: &BuildContext) -> Vec<(String, Vec<u8>)> {
+    let mut classes = std::collections::BTreeMap::new();
+    for (rel, f) in ctx.select(".") {
+        if let Some(name) = rel.rsplit('/').next() {
+            if let Some(stem) = name.strip_suffix(".java") {
+                classes.insert(stem.to_string(), compile_java(f.bytes()));
+            }
+        }
+    }
+    classes.into_iter().collect()
+}
+
+/// Package operands after an `install` token, skipping flags.
+fn packages_after_install(tokens: &[&str]) -> Vec<String> {
+    let Some(at) = tokens.iter().position(|t| *t == "install") else {
+        return Vec::new();
+    };
+    tokens[at + 1..]
+        .iter()
+        .filter(|t| !t.starts_with('-'))
+        .map(|t| t.trim_matches(|c: char| !c.is_ascii_alphanumeric() && c != '.' && c != '_').to_string())
+        .filter(|t| !t.is_empty())
+        .collect()
+}
+
+/// Dependency names from a conda `environment.yaml` (the `- name` items
+/// under `dependencies:`).
+fn conda_dependencies(yaml: &[u8]) -> Vec<String> {
+    let text = String::from_utf8_lossy(yaml);
+    let mut in_deps = false;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.starts_with("dependencies:") {
+            in_deps = true;
+            continue;
+        }
+        if in_deps {
+            if let Some(name) = trimmed.strip_prefix("- ") {
+                out.push(name.trim().to_string());
+            } else if !trimmed.is_empty() && !line.starts_with(' ') {
+                in_deps = false;
+            }
+        }
+    }
+    out
+}
+
+/// `<artifactId>` values from a `pom.xml`, minus the first (the project's
+/// own id): the dependency list.
+fn pom_dependencies(pom: &[u8]) -> Vec<String> {
+    let text = String::from_utf8_lossy(pom);
+    let mut out = Vec::new();
+    let mut rest: &str = &text;
+    while let Some(start) = rest.find("<artifactId>") {
+        rest = &rest[start + "<artifactId>".len()..];
+        if let Some(end) = rest.find("</artifactId>") {
+            out.push(rest[..end].trim().to_string());
+            rest = &rest[end..];
+        } else {
+            break;
+        }
+    }
+    if out.is_empty() {
+        out
+    } else {
+        out.split_off(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+    use std::path::PathBuf;
+
+    fn ctx_with(files: &[(&str, &str)]) -> (BuildContext, PathBuf) {
+        let d = std::env::temp_dir().join(format!(
+            "lj-exec-{}-{}",
+            fnv64(format!("{files:?}").as_bytes()),
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        for (p, c) in files {
+            let path = d.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+        (BuildContext::scan(&d, &NativeEngine::new()).unwrap(), d)
+    }
+
+    #[test]
+    fn join_normalizes_paths() {
+        assert_eq!(join("/", "/root/"), "root");
+        assert_eq!(join("/", "/usr/app/app.war"), "usr/app/app.war");
+        assert_eq!(join("/code", "pom.xml"), "code/pom.xml");
+        assert_eq!(join("/code", "target/app.jar"), "code/target/app.jar");
+        assert_eq!(join("/", "/"), "");
+    }
+
+    #[test]
+    fn copy_dest_matches_paper_layouts() {
+        assert_eq!(copy_dest("/", "/root/", "main.py", true), "root/main.py");
+        assert_eq!(copy_dest("/", "/usr/app/app.war", "app.war", false), "usr/app/app.war");
+        assert_eq!(copy_dest("/code", "pom.xml", "pom.xml", false), "code/pom.xml");
+        assert_eq!(copy_dest("/code", "/code/src", "main/App.java", true), "code/src/main/App.java");
+    }
+
+    #[test]
+    fn compile_java_is_deterministic_and_content_sensitive() {
+        let a = compile_java(b"class App {}");
+        assert_eq!(a, compile_java(b"class App {}"));
+        assert_ne!(a, compile_java(b"class App { int x; }"));
+        assert_eq!(&a[..4], &[0xCA, 0xFE, 0xBA, 0xBE]);
+    }
+
+    #[test]
+    fn base_images_differ_by_name_only() {
+        let a = base_image_files("python:alpine");
+        let b = base_image_files("python:alpine");
+        let c = base_image_files("ubuntu:latest");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let total: usize = c.iter().map(|(_, d)| d.len()).sum();
+        assert!(total > 512 << 10, "ubuntu base should carry real payload");
+    }
+
+    #[test]
+    fn apt_and_pip_generate_per_package_payloads() {
+        let (ctx, d) = ctx_with(&[]);
+        let files =
+            run_command("apt update && apt install curl git -y", "/", &ctx).unwrap();
+        let debs: Vec<&String> = files
+            .iter()
+            .map(|(p, _)| p)
+            .filter(|p| p.ends_with(".deb"))
+            .collect();
+        assert_eq!(debs.len(), 2, "{files:?}");
+        let total: usize = files.iter().map(|(_, c)| c.len()).sum();
+        assert!(total > 2 * APT_PACKAGE_BYTES);
+
+        let pip = run_command("pip install pkg0a pkg0b", "/", &ctx).unwrap();
+        assert_eq!(pip.len(), 2);
+        assert_ne!(pip[0].1, pip[1].1, "distinct packages, distinct bytes");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn conda_reads_environment_yaml() {
+        let (ctx, d) = ctx_with(&[(
+            "environment.yaml",
+            "name: app\ndependencies:\n  - numpy\n  - scipy\n",
+        )]);
+        let files = run_command("conda env update -f environment.yaml", "/", &ctx).unwrap();
+        assert_eq!(files.len(), 2);
+        assert!(files[0].0.contains("numpy"));
+        let bytes: usize = files.iter().map(|(_, c)| c.len()).sum();
+        assert_eq!(bytes, 2 * CONDA_DEP_BYTES);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn mvn_package_compiles_context_sources() {
+        let (ctx, d) = ctx_with(&[
+            (
+                "pom.xml",
+                "<project><artifactId>app</artifactId><dependency><artifactId>gson</artifactId></dependency></project>",
+            ),
+            ("src/App.java", "class App {}"),
+        ]);
+        let files = run_command("mvn package", "/code", &ctx).unwrap();
+        assert_eq!(files.len(), 1);
+        assert_eq!(files[0].0, "code/target/app-jar-with-dependencies.jar");
+        let jar = crate::tar::TarReader::new(&files[0].1).unwrap();
+        let class = jar.find("App.class").expect("compiled class in jar");
+        assert_eq!(class.data(&files[0].1), compile_java(b"class App {}"));
+        assert!(jar.find("lib/gson.jar").is_some(), "pom dependency bundled");
+
+        // Resolve emits one artifact per pom dependency.
+        let resolved = run_command("mvn dependency:resolve", "/code", &ctx).unwrap();
+        assert_eq!(resolved.len(), 1);
+        assert!(resolved[0].0.contains("gson"));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn pom_parsing_skips_project_artifact() {
+        let pom = b"<project><artifactId>me</artifactId>\
+                    <dependency><artifactId>a</artifactId></dependency>\
+                    <dependency><artifactId>b</artifactId></dependency></project>";
+        assert_eq!(pom_dependencies(pom), vec!["a".to_string(), "b".to_string()]);
+        assert!(pom_dependencies(b"").is_empty());
+    }
+
+    #[test]
+    fn unknown_commands_still_produce_deterministic_output() {
+        let (ctx, d) = ctx_with(&[]);
+        let a = run_command("make -j8", "/", &ctx).unwrap();
+        let b = run_command("make -j8", "/", &ctx).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

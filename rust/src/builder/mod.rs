@@ -1,0 +1,858 @@
+//! The baseline build engine: Dockerfile → image, with Docker's layer
+//! cache and fall-through semantics (paper §I.A, §II.C).
+//!
+//! Architecture (one build pass):
+//!
+//! 1. **Scan** ([`context`]) — the build context is read once and every
+//!    file gets a chunk-digest root via one batched [`HashEngine`] call
+//!    (the data-parallel hot path; see [`parallel`]). A per-context scan
+//!    cache makes steady-state rescans metadata-only.
+//! 2. **Plan** ([`cache`]) — walk the Dockerfile deriving each layer's
+//!    permanent id and probing the layer store with Docker's cache
+//!    criteria. One miss breaks the cache for every later step
+//!    (fall-through) — decisions therefore never depend on rebuilt
+//!    content, which is what makes step execution parallelizable.
+//! 3. **Execute** ([`executor`]) — every cache-missed step's layer
+//!    content is generated, archived and hashed. Steps are independent
+//!    jobs: a [`std::thread::scope`] worker pool sized by
+//!    [`BuildOptions::jobs`] runs them concurrently, bit-identical to a
+//!    sequential build.
+//! 4. **Finalize** — metas are chained (parent checksums), layers and
+//!    sidecars are persisted, the image config is assembled and tagged.
+//!
+//! The simulated toolchain/daemon overheads live in [`CostModel`]; unit
+//! tests run [`CostModel::instant`], benches use the default scaled-down
+//! dockerd profile.
+
+pub mod cache;
+pub mod context;
+pub mod executor;
+pub mod parallel;
+
+pub use cache::{CacheDecision, MissReason};
+pub use context::{BuildContext, ContextFile};
+pub use parallel::ParallelEngine;
+
+use crate::dockerfile::{Dockerfile, Instruction, LayerKind};
+use crate::hash::{ChunkDigest, Digest, HashEngine, ShaCheckpoint};
+use crate::oci::{HistoryEntry, Image, ImageConfig, ImageId, ImageRef, LayerId, LayerMeta};
+use crate::store::{ImageStore, LayerStore, LAYER_VERSION};
+use crate::tar::TarBuilder;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Simulated toolchain/daemon costs, scaled ~100× below real dockerd
+/// (EXPERIMENTS.md §Perf): a fixed per-step container overhead, a cache
+/// probe cost, and per-byte charges for archiving layer content and for
+/// the toolchain work a `RUN` command stands in for. Unit tests use
+/// [`CostModel::instant`] (pure compute); benches use the default so the
+/// docker-vs-injection ratios land in the paper's regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostModel {
+    /// Fixed overhead per rebuilt step (container setup/commit).
+    pub step_overhead: Duration,
+    /// Overhead per cache-served step (probe + metadata read).
+    pub cache_probe: Duration,
+    /// Simulated IO cost per byte archived into a layer tar.
+    pub archive_ns_per_byte: u64,
+    /// Simulated toolchain cost per byte a `RUN` command generates
+    /// (package downloads, compiles).
+    pub toolchain_ns_per_byte: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            step_overhead: Duration::from_millis(15),
+            cache_probe: Duration::from_micros(150),
+            archive_ns_per_byte: 30,
+            toolchain_ns_per_byte: 20,
+        }
+    }
+}
+
+impl CostModel {
+    /// Zero-cost model: no simulated sleeps, pure compute. Used by unit
+    /// tests so assertions are about work done, not wall clock.
+    pub fn instant() -> CostModel {
+        CostModel {
+            step_overhead: Duration::ZERO,
+            cache_probe: Duration::ZERO,
+            archive_ns_per_byte: 0,
+            toolchain_ns_per_byte: 0,
+        }
+    }
+
+    fn charge(&self, d: Duration) {
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    pub(crate) fn charge_step(&self) {
+        self.charge(self.step_overhead);
+    }
+
+    pub(crate) fn charge_cache_probe(&self) {
+        self.charge(self.cache_probe);
+    }
+
+    pub(crate) fn charge_archive(&self, bytes: u64) {
+        self.charge(Duration::from_nanos(bytes * self.archive_ns_per_byte));
+    }
+
+    pub(crate) fn charge_toolchain(&self, bytes: u64) {
+        self.charge(Duration::from_nanos(bytes * self.toolchain_ns_per_byte));
+    }
+}
+
+/// Options for one build.
+#[derive(Clone, Debug)]
+pub struct BuildOptions {
+    /// Disable the layer cache entirely (`docker build --no-cache`).
+    pub no_cache: bool,
+    /// Simulated toolchain cost profile.
+    pub cost: CostModel,
+    /// Worker threads for executing independent layer jobs. `1` is the
+    /// sequential baseline; `jobs = N` builds are bit-identical to it.
+    pub jobs: usize,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions {
+            no_cache: false,
+            cost: CostModel::default(),
+            jobs: 1,
+        }
+    }
+}
+
+/// Per-step outcome of a build.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// 1-based step number (`Step 2/6` in the transcript).
+    pub step: usize,
+    /// The instruction literal.
+    pub instruction: String,
+    /// Permanent layer id at this slot.
+    pub layer_id: LayerId,
+    /// Layer revision (content checksum) after this build.
+    pub checksum: Digest,
+    /// Served from cache?
+    pub cached: bool,
+    /// Why the cache missed, when it did.
+    pub miss_reason: Option<MissReason>,
+    /// Config (empty) layer?
+    pub empty_layer: bool,
+    /// Tar bytes written for this step (0 when cached or empty).
+    pub bytes: u64,
+    /// Time spent on this step.
+    pub duration: Duration,
+}
+
+/// The result of one build.
+#[derive(Clone, Debug)]
+pub struct BuildReport {
+    pub image_id: ImageId,
+    pub reference: ImageRef,
+    pub steps: Vec<StepReport>,
+    /// Docker-style build transcript (`Step 1/3 : FROM …`).
+    pub transcript: String,
+    pub duration: Duration,
+}
+
+impl BuildReport {
+    /// Number of steps that were not served from cache.
+    pub fn rebuilt_steps(&self) -> usize {
+        self.steps.iter().filter(|s| !s.cached).count()
+    }
+
+    /// Total layer-tar bytes written by this build (the re-archive work
+    /// Docker's fall-through wastes; paper §II.B).
+    pub fn bytes_written(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes).sum()
+    }
+}
+
+/// What a planned step has to execute.
+enum StepWork {
+    /// `FROM <image>`: synthesize the base rootfs.
+    Base { image: String },
+    /// `COPY`/`ADD`: archive a context selection.
+    Copy {
+        src: String,
+        dst: String,
+        workdir: String,
+    },
+    /// `RUN`: simulated toolchain execution.
+    Run { command: String, workdir: String },
+    /// Config instruction: empty layer.
+    Config,
+}
+
+/// One fully planned step: identity, cache decision, and the work to do.
+struct PlannedStep {
+    literal: String,
+    layer_id: LayerId,
+    parent: Option<LayerId>,
+    kind: LayerKind,
+    decision: CacheDecision,
+    work: StepWork,
+    /// Context-selection digest for `COPY`/`ADD` steps (computed once
+    /// for the cache probe, reused when persisting the rebuilt meta).
+    source_checksum: Option<Digest>,
+}
+
+/// A rebuilt layer, produced by a worker job: content plus every hash
+/// artifact the store needs (computed once, in the job, in parallel with
+/// other layers).
+struct BuiltLayer {
+    tar: Vec<u8>,
+    checksum: Digest,
+    chunk_digest: ChunkDigest,
+    checkpoints: Vec<ShaCheckpoint>,
+    file_index: Option<Vec<(String, u64, Digest)>>,
+    duration: Duration,
+}
+
+/// The build engine. Borrows the stores and the hash engine; one value
+/// can serve many builds.
+pub struct Builder<'a> {
+    layers: &'a LayerStore,
+    images: &'a ImageStore,
+    engine: &'a dyn HashEngine,
+    /// Optional persistent context scan-cache file (the daemon wires a
+    /// per-context path here).
+    pub scan_cache: Option<PathBuf>,
+}
+
+impl<'a> Builder<'a> {
+    pub fn new(
+        layers: &'a LayerStore,
+        images: &'a ImageStore,
+        engine: &'a dyn HashEngine,
+    ) -> Builder<'a> {
+        Builder {
+            layers,
+            images,
+            engine,
+            scan_cache: None,
+        }
+    }
+
+    /// `docker build -t <tag> <ctx_dir>`.
+    pub fn build(&self, ctx_dir: &Path, tag: &ImageRef, opts: &BuildOptions) -> Result<BuildReport> {
+        let t0 = Instant::now();
+        let dockerfile = Dockerfile::from_dir(ctx_dir)?;
+        dockerfile.validate()?;
+        let ctx = BuildContext::scan_cached(ctx_dir, self.engine, self.scan_cache.as_deref())?;
+        let plan = self.plan(&dockerfile, tag, &ctx, opts)?;
+        let built = self.execute(&plan, &ctx, opts)?;
+        self.finalize(t0, tag, &dockerfile, plan, built, opts)
+    }
+
+    /// Phase 1: derive layer identities and make every cache decision.
+    ///
+    /// Strict Docker semantics: the first miss breaks the chain, so
+    /// decisions depend only on *stored* metadata, never on content that
+    /// is yet to be rebuilt — which is what lets phase 2 run steps
+    /// concurrently.
+    fn plan(
+        &self,
+        dockerfile: &Dockerfile,
+        tag: &ImageRef,
+        ctx: &BuildContext,
+        opts: &BuildOptions,
+    ) -> Result<Vec<PlannedStep>> {
+        let mut workdir = "/".to_string();
+        // Replay a locally-tagged base image's workdir, as detection does.
+        if let Some(base) = dockerfile.base_image() {
+            if let Ok((_, base_img)) = self.images.get_by_ref(&ImageRef::parse(base)) {
+                if !base_img.config.working_dir.is_empty() {
+                    workdir = base_img.config.working_dir.clone();
+                }
+            }
+        }
+
+        let mut steps = Vec::with_capacity(dockerfile.steps());
+        let mut parent: Option<LayerId> = None;
+        let mut parent_checksum: Option<Digest> = None;
+        let mut broken = false;
+        for (_, inst) in &dockerfile.instructions {
+            let literal = inst.literal();
+            let (namespace, work) = match inst {
+                // Base layers are namespaced by the base image itself so
+                // unrelated projects share (and deduplicate) them.
+                Instruction::From { image } => (
+                    image.as_str(),
+                    StepWork::Base {
+                        image: image.clone(),
+                    },
+                ),
+                Instruction::Copy { src, dst } | Instruction::Add { src, dst } => (
+                    tag.name.as_str(),
+                    StepWork::Copy {
+                        src: src.clone(),
+                        dst: dst.clone(),
+                        workdir: workdir.clone(),
+                    },
+                ),
+                Instruction::Run { command } => (
+                    tag.name.as_str(),
+                    StepWork::Run {
+                        command: command.clone(),
+                        workdir: workdir.clone(),
+                    },
+                ),
+                _ => (tag.name.as_str(), StepWork::Config),
+            };
+            let layer_id = LayerId::derive(namespace, parent.as_ref(), &literal);
+
+            let source_checksum = match &work {
+                StepWork::Copy { src, .. } => {
+                    if ctx.select(src).is_empty() {
+                        return Err(Error::Build(format!("COPY {src}: no files in context")));
+                    }
+                    Some(ctx.copy_checksum(src))
+                }
+                _ => None,
+            };
+            let decision = if opts.no_cache {
+                CacheDecision::Miss(MissReason::NoCache)
+            } else if broken {
+                CacheDecision::Miss(MissReason::FallThrough)
+            } else {
+                cache::probe(self.layers, &layer_id, &literal, parent_checksum, source_checksum)
+            };
+            match &decision {
+                CacheDecision::Hit(meta) => parent_checksum = Some(meta.checksum),
+                CacheDecision::Miss(_) => {
+                    broken = true;
+                    parent_checksum = None;
+                }
+            }
+            if let Instruction::Workdir { path } = inst {
+                workdir = path.clone();
+            }
+            steps.push(PlannedStep {
+                literal,
+                layer_id,
+                parent,
+                kind: inst.kind(),
+                decision,
+                work,
+                source_checksum,
+            });
+            parent = Some(layer_id);
+        }
+        Ok(steps)
+    }
+
+    /// Phase 2: run every cache-missed step as an independent job on a
+    /// scoped worker pool of `opts.jobs` threads. Content generation and
+    /// hashing are pure per step, so `jobs = N` output is bit-identical
+    /// to `jobs = 1`.
+    fn execute(
+        &self,
+        plan: &[PlannedStep],
+        ctx: &BuildContext,
+        opts: &BuildOptions,
+    ) -> Result<Vec<Option<BuiltLayer>>> {
+        let misses: Vec<usize> = plan
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.decision.is_hit())
+            .map(|(i, _)| i)
+            .collect();
+        let mut results: Vec<Option<BuiltLayer>> = plan.iter().map(|_| None).collect();
+        if misses.is_empty() {
+            return Ok(results);
+        }
+        let jobs = opts.jobs.max(1).min(misses.len());
+        if jobs == 1 {
+            for i in misses {
+                results[i] = Some(self.execute_step(&plan[i], ctx, opts)?);
+            }
+            return Ok(results);
+        }
+
+        type Slot = Mutex<Option<Result<BuiltLayer>>>;
+        let queue = Mutex::new(misses.into_iter());
+        let slots: Vec<Slot> = plan.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let i = match queue.lock().unwrap().next() {
+                        Some(i) => i,
+                        None => break,
+                    };
+                    let built = self.execute_step(&plan[i], ctx, opts);
+                    *slots[i].lock().unwrap() = Some(built);
+                });
+            }
+        });
+        for (i, slot) in slots.into_iter().enumerate() {
+            if let Some(res) = slot.into_inner().unwrap() {
+                results[i] = Some(res?);
+            }
+        }
+        Ok(results)
+    }
+
+    /// Build one step's layer content and hash artifacts.
+    fn execute_step(
+        &self,
+        step: &PlannedStep,
+        ctx: &BuildContext,
+        opts: &BuildOptions,
+    ) -> Result<BuiltLayer> {
+        let t0 = Instant::now();
+        let cost = &opts.cost;
+        let mut file_index = None;
+        let mut toolchain_bytes = 0u64;
+        let tar = match &step.work {
+            StepWork::Base { image } => {
+                let files = executor::base_image_files(image);
+                toolchain_bytes = files.iter().map(|(_, c)| c.len() as u64).sum();
+                tar_sorted(files)?
+            }
+            StepWork::Copy { src, dst, workdir } => {
+                let selected = ctx.select(src);
+                let multi = selected.len() > 1 || ctx.src_is_dir(src);
+                let mut entries: Vec<(String, &ContextFile)> = selected
+                    .into_iter()
+                    .map(|(sub, f)| (executor::copy_dest(workdir, dst, &sub, multi), f))
+                    .collect();
+                entries.sort_by(|a, b| a.0.cmp(&b.0));
+                let total: usize = entries.iter().map(|(_, f)| f.bytes().len() + 1024).sum();
+                let mut b = TarBuilder::with_capacity(total);
+                for (path, f) in &entries {
+                    b.append_file(path, f.bytes())
+                        .map_err(|e| Error::Build(format!("archive {path}: {e}")))?;
+                }
+                file_index = Some(
+                    entries
+                        .iter()
+                        .map(|(p, f)| (p.clone(), f.size, f.digest))
+                        .collect(),
+                );
+                b.finish()
+            }
+            StepWork::Run { command, workdir } => {
+                let files = executor::run_command(command, workdir, ctx)?;
+                toolchain_bytes = files.iter().map(|(_, c)| c.len() as u64).sum();
+                tar_sorted(files)?
+            }
+            StepWork::Config => TarBuilder::new().finish(),
+        };
+
+        // Simulated dockerd/toolchain time; sleeps overlap across jobs,
+        // which is exactly the parallel-build throughput win.
+        cost.charge_step();
+        cost.charge_toolchain(toolchain_bytes);
+        if !matches!(step.work, StepWork::Config) {
+            cost.charge_archive(tar.len() as u64);
+        }
+
+        let (checksum, checkpoints) = crate::hash::hash_with_checkpoints(&tar);
+        let chunk_digest = ChunkDigest::compute(&tar, self.engine);
+        Ok(BuiltLayer {
+            tar,
+            checksum,
+            chunk_digest,
+            checkpoints,
+            file_index,
+            duration: t0.elapsed(),
+        })
+    }
+
+    /// Phase 3: chain parent checksums, persist rebuilt layers, assemble
+    /// the image config, tag it, and render the transcript.
+    fn finalize(
+        &self,
+        t0: Instant,
+        tag: &ImageRef,
+        dockerfile: &Dockerfile,
+        plan: Vec<PlannedStep>,
+        built: Vec<Option<BuiltLayer>>,
+        opts: &BuildOptions,
+    ) -> Result<BuildReport> {
+        let n = plan.len();
+        let mut config = ImageConfig::default();
+        let mut layer_ids = Vec::with_capacity(n);
+        let mut diff_ids = Vec::with_capacity(n);
+        let mut chunk_roots = Vec::with_capacity(n);
+        let mut history = Vec::with_capacity(n);
+        let mut steps = Vec::with_capacity(n);
+        let mut transcript = String::new();
+        let mut parent_checksum: Option<Digest> = None;
+
+        for (i, (step, built)) in plan.into_iter().zip(built).enumerate() {
+            apply_config(&mut config, &dockerfile.instructions[i].1);
+            let empty = step.kind == LayerKind::Config;
+            transcript.push_str(&format!("Step {}/{} : {}\n", i + 1, n, step.literal));
+
+            let (checksum, chunk_root, bytes, cached, miss_reason, duration) =
+                match (&step.decision, built) {
+                    (CacheDecision::Hit(meta), _) => {
+                        let tp = Instant::now();
+                        opts.cost.charge_cache_probe();
+                        transcript.push_str(" ---> Using cache\n");
+                        (meta.checksum, meta.chunk_root, 0u64, true, None, tp.elapsed())
+                    }
+                    (CacheDecision::Miss(reason), Some(b)) => {
+                        let meta = LayerMeta {
+                            id: step.layer_id,
+                            parent: step.parent,
+                            parent_checksum,
+                            checksum: b.checksum,
+                            chunk_root: b.chunk_digest.root,
+                            created_by: step.literal.clone(),
+                            source_checksum: step.source_checksum.unwrap_or(Digest([0u8; 32])),
+                            is_empty_layer: empty,
+                            size: if empty { 0 } else { b.tar.len() as u64 },
+                            version: LAYER_VERSION.into(),
+                        };
+                        self.layers
+                            .put_layer_prehashed(&meta, &b.tar, &b.chunk_digest, &b.checkpoints)?;
+                        if let Some(index) = &b.file_index {
+                            self.layers.write_file_index(&step.layer_id, index)?;
+                        }
+                        let bytes = if empty { 0 } else { b.tar.len() as u64 };
+                        (
+                            b.checksum,
+                            b.chunk_digest.root,
+                            bytes,
+                            false,
+                            Some(*reason),
+                            b.duration,
+                        )
+                    }
+                    (CacheDecision::Miss(reason), None) => {
+                        // execute() builds every planned miss; defensive.
+                        return Err(Error::Build(format!(
+                            "step {} ({}) missed the cache ({reason}) but was never built",
+                            i + 1,
+                            step.literal
+                        )));
+                    }
+                };
+            transcript.push_str(&format!(" ---> {}\n", step.layer_id.short()));
+
+            layer_ids.push(step.layer_id);
+            diff_ids.push(checksum);
+            chunk_roots.push(chunk_root);
+            history.push(HistoryEntry {
+                created_by: step.literal.clone(),
+                empty_layer: empty,
+            });
+            steps.push(StepReport {
+                step: i + 1,
+                instruction: step.literal,
+                layer_id: step.layer_id,
+                checksum,
+                cached,
+                miss_reason,
+                empty_layer: empty,
+                bytes,
+                duration,
+            });
+            parent_checksum = Some(checksum);
+        }
+
+        let image = Image {
+            architecture: "amd64".into(),
+            os: "linux".into(),
+            config,
+            layer_ids,
+            diff_ids,
+            chunk_roots,
+            history,
+        };
+        let image_id = self.images.put(&image)?;
+        self.images.tag(tag, &image_id)?;
+        transcript.push_str(&format!(
+            "Successfully built {}\nSuccessfully tagged {}\n",
+            image_id.short(),
+            tag
+        ));
+
+        Ok(BuildReport {
+            image_id,
+            reference: tag.clone(),
+            steps,
+            transcript,
+            duration: t0.elapsed(),
+        })
+    }
+}
+
+/// Archive generated files as a deterministic (name-sorted, deduped) tar.
+fn tar_sorted(mut files: Vec<(String, Vec<u8>)>) -> Result<Vec<u8>> {
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    files.dedup_by(|a, b| a.0 == b.0);
+    let total: usize = files.iter().map(|(_, c)| c.len() + 1024).sum();
+    let mut b = TarBuilder::with_capacity(total);
+    for (path, content) in &files {
+        b.append_file(path, content)
+            .map_err(|e| Error::Build(format!("archive {path}: {e}")))?;
+    }
+    Ok(b.finish())
+}
+
+/// Fold a config instruction into the image's runtime configuration.
+fn apply_config(config: &mut ImageConfig, inst: &Instruction) {
+    match inst {
+        Instruction::Env { key, value } => {
+            if let Some(slot) = config.env.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = value.clone();
+            } else {
+                config.env.push((key.clone(), value.clone()));
+            }
+        }
+        Instruction::Cmd { argv } => config.cmd = argv.clone(),
+        Instruction::Entrypoint { argv } => config.entrypoint = argv.clone(),
+        Instruction::Workdir { path } => config.working_dir = path.clone(),
+        Instruction::Expose { port } => {
+            if !config.exposed_ports.contains(port) {
+                config.exposed_ports.push(*port);
+            }
+        }
+        Instruction::Label { key, value } => {
+            if let Some(slot) = config.labels.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = value.clone();
+            } else {
+                config.labels.push((key.clone(), value.clone()));
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+
+    fn fresh(tag: &str) -> (ImageStore, LayerStore, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-builder-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (
+            ImageStore::open(&d).unwrap(),
+            LayerStore::open(&d).unwrap(),
+            d,
+        )
+    }
+
+    fn write_ctx(dir: &Path, dockerfile: &str, files: &[(&str, &str)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+        for (p, c) in files {
+            let path = dir.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+    }
+
+    fn opts() -> BuildOptions {
+        BuildOptions {
+            no_cache: false,
+            cost: CostModel::instant(),
+            jobs: 1,
+        }
+    }
+
+    const DF: &str = "FROM python:alpine\nCOPY . /root/\nWORKDIR /root\nCMD [\"python\", \"main.py\"]\n";
+
+    #[test]
+    fn first_build_then_full_cache_hit() {
+        let (images, layers, d) = fresh("cache");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+
+        let r1 = b.build(&ctx, &tag, &opts()).unwrap();
+        assert_eq!(r1.steps.len(), 4);
+        assert_eq!(r1.rebuilt_steps(), 4);
+        assert!(r1.transcript.contains("Step 1/4 : FROM python:alpine"));
+        assert!(r1.bytes_written() > 0);
+
+        let r2 = b.build(&ctx, &tag, &opts()).unwrap();
+        assert_eq!(r2.rebuilt_steps(), 0, "{:?}", r2.steps);
+        assert_eq!(r2.image_id, r1.image_id);
+        assert!(r2.transcript.contains("Using cache"));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn change_at_step_k_falls_through_to_the_end() {
+        let (images, layers, d) = fresh("fall");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        b.build(&ctx, &tag, &opts()).unwrap();
+
+        std::fs::write(ctx.join("main.py"), "print('v2')\n").unwrap();
+        let r = b.build(&ctx, &tag, &opts()).unwrap();
+        assert!(r.steps[0].cached, "FROM stays cached");
+        assert_eq!(r.steps[1].miss_reason, Some(MissReason::SourceChanged));
+        assert_eq!(r.steps[2].miss_reason, Some(MissReason::FallThrough));
+        assert_eq!(r.steps[3].miss_reason, Some(MissReason::FallThrough));
+        assert_eq!(r.rebuilt_steps(), 3);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rebuild_of_unchanged_instruction_is_byte_identical() {
+        // Fig. 2's waste: fall-through rebuilds identical layers.
+        let (images, layers, d) = fresh("ident");
+        let ctx = d.join("ctx");
+        let df = "FROM python:alpine\nCOPY . /app/\nRUN pip install flask\nCMD [\"python\", \"app/main.py\"]\n";
+        write_ctx(&ctx, df, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        let r1 = b.build(&ctx, &tag, &opts()).unwrap();
+
+        std::fs::write(ctx.join("main.py"), "print('v2')\n").unwrap();
+        let r2 = b.build(&ctx, &tag, &opts()).unwrap();
+        assert!(!r2.steps[2].cached, "pip layer falls through");
+        assert_eq!(
+            r1.steps[2].checksum, r2.steps[2].checksum,
+            "identical rebuild — pure waste"
+        );
+        assert_ne!(r1.steps[1].checksum, r2.steps[1].checksum);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn no_cache_rebuilds_everything_deterministically() {
+        let (images, layers, d) = fresh("nocache");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        let r1 = b.build(&ctx, &tag, &opts()).unwrap();
+        let mut o = opts();
+        o.no_cache = true;
+        let r2 = b.build(&ctx, &tag, &o).unwrap();
+        assert_eq!(r2.rebuilt_steps(), 4);
+        assert_eq!(r2.steps[1].miss_reason, Some(MissReason::NoCache));
+        assert_eq!(r1.image_id, r2.image_id, "determinism");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn parallel_jobs_build_bit_identical_images() {
+        let eng = NativeEngine::new();
+        let df = "FROM python:alpine\nCOPY . /app/\nRUN pip install alpha beta\nRUN pip install gamma\nRUN apt update\nEXPOSE 8080\nCMD [\"python\", \"app/main.py\"]\n";
+        let build_with_jobs = |jobs: usize, sub: &str| {
+            let (images, layers, d) = fresh(sub);
+            let ctx = d.join("ctx");
+            write_ctx(&ctx, df, &[("main.py", "print('v1')\n"), ("lib.py", "x = 1\n")]);
+            let b = Builder::new(&layers, &images, &eng);
+            let mut o = opts();
+            o.jobs = jobs;
+            let r = b
+                .build(&ctx, &ImageRef::parse("par:v1"), &o)
+                .unwrap();
+            let (_, img) = images.get_by_ref(&ImageRef::parse("par:v1")).unwrap();
+            let tars: Vec<Vec<u8>> = img
+                .layer_ids
+                .iter()
+                .map(|l| layers.read_tar(l).unwrap())
+                .collect();
+            std::fs::remove_dir_all(&d).unwrap();
+            (r.image_id, img.diff_ids.clone(), tars)
+        };
+        let (id1, diffs1, tars1) = build_with_jobs(1, "jobs1");
+        let (id4, diffs4, tars4) = build_with_jobs(4, "jobs4");
+        assert_eq!(id1, id4, "jobs=4 must be bit-identical to jobs=1");
+        assert_eq!(diffs1, diffs4);
+        assert_eq!(tars1, tars4);
+    }
+
+    #[test]
+    fn base_layers_dedupe_across_images() {
+        let (images, layers, d) = fresh("dedup");
+        let ctx_a = d.join("a");
+        let ctx_b = d.join("b");
+        write_ctx(&ctx_a, DF, &[("main.py", "print('a')\n")]);
+        write_ctx(&ctx_b, DF, &[("main.py", "print('b')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        b.build(&ctx_a, &ImageRef::parse("svc-a:1"), &opts()).unwrap();
+        let r = b.build(&ctx_b, &ImageRef::parse("svc-b:1"), &opts()).unwrap();
+        assert!(r.steps[0].cached, "shared base layer must hit cache");
+        let (_, ia) = images.get_by_ref(&ImageRef::parse("svc-a:1")).unwrap();
+        let (_, ib) = images.get_by_ref(&ImageRef::parse("svc-b:1")).unwrap();
+        assert_eq!(ia.layer_ids[0], ib.layer_ids[0]);
+        assert_ne!(ia.layer_ids[1], ib.layer_ids[1], "distinct namespaces");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn empty_layers_verify_and_carry_empty_tar_checksum() {
+        let (images, layers, d) = fresh("empty");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "x\n")]);
+        let eng = NativeEngine::new();
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &ImageRef::parse("app:v1"), &opts())
+            .unwrap();
+        let (_, img) = images.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        // WORKDIR and CMD are empty layers.
+        assert!(img.history[2].empty_layer && img.history[3].empty_layer);
+        let empty_tar = TarBuilder::new().finish();
+        assert_eq!(img.diff_ids[2], Digest::of(&empty_tar));
+        for lid in &img.layer_ids {
+            assert!(layers.verify(lid).unwrap());
+            let tar = layers.read_tar(lid).unwrap();
+            assert_eq!(Digest::of(&tar), img.diff_ids[img.layer_index(lid).unwrap()]);
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn copy_layer_writes_file_index_for_detection() {
+        let (images, layers, d) = fresh("index");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        Builder::new(&layers, &images, &eng)
+            .build(&ctx, &ImageRef::parse("app:v1"), &opts())
+            .unwrap();
+        let (_, img) = images.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        let index = layers.file_index(&img.layer_ids[1]).expect("file index sidecar");
+        let paths: Vec<&str> = index.iter().map(|(p, _, _)| p.as_str()).collect();
+        assert_eq!(paths, vec!["root/Dockerfile", "root/main.py"]);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn empty_copy_selection_is_an_error() {
+        let (images, layers, d) = fresh("nosrc");
+        let ctx = d.join("ctx");
+        write_ctx(
+            &ctx,
+            "FROM python:alpine\nCOPY missing.py /app/\nCMD [\"python\"]\n",
+            &[("main.py", "x\n")],
+        );
+        let eng = NativeEngine::new();
+        let err = Builder::new(&layers, &images, &eng).build(
+            &ctx,
+            &ImageRef::parse("app:v1"),
+            &opts(),
+        );
+        assert!(err.is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

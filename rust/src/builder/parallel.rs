@@ -1,0 +1,167 @@
+//! Data-parallel hashing: shard chunk batches across OS threads.
+//!
+//! The chunk digest hashes every 4 KiB chunk independently (see
+//! [`crate::hash::chunked`]), so a batch is embarrassingly parallel. The
+//! [`ParallelEngine`] wrapper turns any [`HashEngine`] into a sharded
+//! one with **bit-identical** output (chunks keep their order; each
+//! shard is a contiguous sub-batch), which makes it safe to drop into
+//! every call site: context scans, layer checksumming in
+//! [`super::Builder`], and the injection fast path's incremental
+//! re-hash. Small batches bypass the thread pool entirely — spawn
+//! overhead would swamp a handful of compressions.
+
+use crate::hash::{Digest, HashEngine, NativeEngine};
+
+/// Below this many chunks (256 KiB of payload) sharding is not worth the
+/// thread spawns; the batch runs inline on the caller's thread.
+pub const PARALLEL_THRESHOLD_CHUNKS: usize = 64;
+
+/// Hash a chunk batch by splitting it into up to `threads` contiguous
+/// shards executed on a [`std::thread::scope`] pool. Output order (and
+/// therefore every digest) is identical to `engine.hash_chunks(chunks)`.
+pub fn shard_hash_chunks(
+    engine: &dyn HashEngine,
+    chunks: &[&[u8]],
+    threads: usize,
+) -> Vec<Digest> {
+    if threads <= 1 || chunks.len() < PARALLEL_THRESHOLD_CHUNKS {
+        return engine.hash_chunks(chunks);
+    }
+    let shards = threads.min(chunks.len());
+    let per_shard = chunks.len().div_ceil(shards);
+    let mut out = Vec::with_capacity(chunks.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .chunks(per_shard)
+            .map(|shard| scope.spawn(move || engine.hash_chunks(shard)))
+            .collect();
+        for handle in handles {
+            out.extend(handle.join().expect("hash shard panicked"));
+        }
+    });
+    out
+}
+
+/// A [`HashEngine`] adapter that runs any inner engine's chunk batches
+/// data-parallel across a fixed number of threads.
+pub struct ParallelEngine<E: HashEngine = NativeEngine> {
+    inner: E,
+    threads: usize,
+    name: String,
+}
+
+impl ParallelEngine<NativeEngine> {
+    /// Parallel wrapper over the native engine.
+    pub fn new(threads: usize) -> Self {
+        Self::with_engine(NativeEngine::new(), threads)
+    }
+
+    /// Size the pool by the machine's available parallelism.
+    pub fn auto() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(threads)
+    }
+}
+
+impl<E: HashEngine> ParallelEngine<E> {
+    /// Wrap an arbitrary inner engine.
+    pub fn with_engine(inner: E, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let name = format!("parallel({})x{}", inner.name(), threads);
+        ParallelEngine {
+            inner,
+            threads,
+            name,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl<E: HashEngine> HashEngine for ParallelEngine<E> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn hash_chunks(&self, chunks: &[&[u8]]) -> Vec<Digest> {
+        shard_hash_chunks(&self.inner, chunks, self.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::{ChunkDigest, CHUNK_SIZE};
+    use crate::util::prop;
+
+    #[test]
+    fn parallel_matches_native_on_fixed_shapes() {
+        let native = NativeEngine::new();
+        let par = ParallelEngine::new(4);
+        // Empty batch, single chunk, many chunks, short tail chunk.
+        let big: Vec<Vec<u8>> = (0..PARALLEL_THRESHOLD_CHUNKS * 3 + 1)
+            .map(|i| vec![i as u8; if i % 7 == 0 { 33 } else { CHUNK_SIZE }])
+            .collect();
+        let cases: Vec<Vec<&[u8]>> = vec![
+            vec![],
+            vec![&big[0]],
+            big.iter().map(|c| c.as_slice()).collect(),
+        ];
+        for case in cases {
+            assert_eq!(par.hash_chunks(&case), native.hash_chunks(&case));
+        }
+    }
+
+    #[test]
+    fn parallel_matches_native_on_random_batches() {
+        prop::check("parallel engine == native engine", 30, |g| {
+            let threads = 1 + g.below(7) as usize;
+            let n = g.len(0, 200);
+            let chunks: Vec<Vec<u8>> = (0..n).map(|_| g.vec_u8(0, CHUNK_SIZE)).collect();
+            let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+            let native = NativeEngine::new().hash_chunks(&refs);
+            let par = ParallelEngine::new(threads).hash_chunks(&refs);
+            if par == native {
+                Ok(())
+            } else {
+                Err(format!("mismatch: threads={threads} n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn chunk_digest_roots_agree_through_the_wrapper() {
+        let data: Vec<u8> = (0..CHUNK_SIZE * 200 + 17).map(|i| (i % 253) as u8).collect();
+        let a = ChunkDigest::compute(&data, &NativeEngine::new());
+        let b = ChunkDigest::compute(&data, &ParallelEngine::new(4));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wrapper_composes_with_itself() {
+        // Nesting must still be bit-identical (it is just sharding twice).
+        let data = vec![7u8; CHUNK_SIZE * 130];
+        let nested = ParallelEngine::with_engine(ParallelEngine::new(2), 2);
+        assert_eq!(
+            ChunkDigest::compute(&data, &nested),
+            ChunkDigest::compute(&data, &NativeEngine::new())
+        );
+        assert!(nested.name().starts_with("parallel(parallel(native)x2)x2"));
+    }
+
+    #[test]
+    fn small_batches_stay_inline() {
+        // Just a behavioral smoke check: tiny batches return correctly.
+        let par = ParallelEngine::new(8);
+        let c = vec![1u8; 100];
+        assert_eq!(
+            par.hash_chunks(&[&c]),
+            NativeEngine::new().hash_chunks(&[&c])
+        );
+        assert_eq!(par.threads(), 8);
+    }
+}

@@ -134,7 +134,11 @@ fn serve(
     cost: CostModel,
 ) -> BuildOutcome {
     let t0 = Instant::now();
-    let build_opts = BuildOptions { no_cache: false, cost };
+    let build_opts = BuildOptions {
+        no_cache: false,
+        cost,
+        jobs: 1,
+    };
     let inject_opts = |cascade: bool| InjectOptions {
         mode: InjectMode::Implicit,
         cascade,

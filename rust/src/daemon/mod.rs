@@ -41,6 +41,13 @@ impl Daemon {
         })
     }
 
+    /// Open a daemon whose hashing hot path (context scans, layer
+    /// checksumming, injection re-hash) shards chunk batches across
+    /// `threads` OS threads — bit-identical output to the native engine.
+    pub fn with_parallel_hashing(root: &Path, threads: usize) -> Result<Daemon> {
+        Self::with_engine(root, Arc::new(crate::hash::ParallelEngine::new(threads)))
+    }
+
     pub fn root(&self) -> &Path {
         &self.root
     }
@@ -51,7 +58,15 @@ impl Daemon {
 
     /// `docker build -t <tag> <ctx>`.
     pub fn build(&self, ctx_dir: &Path, tag: &str) -> Result<BuildReport> {
-        self.build_with(ctx_dir, tag, &BuildOptions { no_cache: false, cost: self.cost })
+        self.build_with(
+            ctx_dir,
+            tag,
+            &BuildOptions {
+                no_cache: false,
+                cost: self.cost,
+                jobs: 1,
+            },
+        )
     }
 
     pub fn build_with(&self, ctx_dir: &Path, tag: &str, opts: &BuildOptions) -> Result<BuildReport> {

@@ -82,9 +82,11 @@ impl ChunkDigest {
         let new_count = Self::chunk_count(new_data.len() as u64);
         let old_count = self.chunks.len();
         let mut dirty = vec![false; new_count];
-        // Chunks overlapping a changed range are dirty.
+        // Chunks overlapping a changed range are dirty. A blob shrunk to
+        // zero length has no chunks to mark (and `new_count - 1` below
+        // would underflow), whatever ranges the caller reports.
         for r in changed {
-            if r.start >= r.end {
+            if r.start >= r.end || new_count == 0 {
                 continue;
             }
             let first = (r.start as usize) / CHUNK_SIZE;
@@ -249,6 +251,19 @@ mod tests {
                 Err(format!("len={} edits={:?}", len, changed))
             }
         });
+    }
+
+    #[test]
+    fn update_shrink_to_empty_with_changed_ranges() {
+        // Regression: `last.min(new_count - 1)` underflowed when the new
+        // blob is empty but the caller still reports changed ranges (a
+        // member spliced down to nothing reports the removed span).
+        let data = vec![1u8; CHUNK_SIZE * 2 + 17];
+        let cd = ChunkDigest::compute(&data, &eng());
+        let (cd2, rehashed) = cd.update(&[], &[0..data.len() as u64], &eng());
+        assert_eq!(cd2, ChunkDigest::compute(&[], &eng()));
+        assert_eq!(cd2.chunks.len(), 0);
+        assert_eq!(rehashed, 0);
     }
 
     #[test]

@@ -88,7 +88,6 @@ impl HashEngine for NativeEngine {
         chunks.iter().map(|c| Self::chunk_digest(c)).collect()
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;

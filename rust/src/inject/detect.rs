@@ -314,6 +314,7 @@ mod tests {
         BuildOptions {
             no_cache: false,
             cost: CostModel::instant(),
+            jobs: 1,
         }
     }
 

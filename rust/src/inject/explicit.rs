@@ -147,6 +147,7 @@ pub fn inject_explicit(
             &BuildOptions {
                 no_cache: false,
                 cost: opts.cost,
+                jobs: 1,
             },
         )?;
         new_image_id = report.image_id;
@@ -213,7 +214,7 @@ mod tests {
         let eng = NativeEngine::new();
         let tag = ImageRef::parse("app:v1");
         Builder::new(&layers, &images, &eng)
-            .build(&ctx, &tag, &BuildOptions { no_cache: false, cost: CostModel::instant() })
+            .build(&ctx, &tag, &BuildOptions { no_cache: false, cost: CostModel::instant(), jobs: 1 })
             .unwrap();
 
         std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
@@ -244,7 +245,7 @@ mod tests {
             let ctx = d.join("ctx");
             write_ctx(&ctx, DF, &[("main.py", "print('v1')\n"), ("lib.py", "a=1\n")]);
             Builder::new(&layers, &images, &eng)
-                .build(&ctx, &ImageRef::parse("app:v1"), &BuildOptions { no_cache: false, cost: CostModel::instant() })
+                .build(&ctx, &ImageRef::parse("app:v1"), &BuildOptions { no_cache: false, cost: CostModel::instant(), jobs: 1 })
                 .unwrap();
             std::fs::write(ctx.join("lib.py"), "a=1\nb=2\n").unwrap();
             (images, layers, ctx, d)
@@ -291,7 +292,7 @@ mod tests {
         let eng = NativeEngine::new();
         let tag = ImageRef::parse("app:v1");
         Builder::new(&layers, &images, &eng)
-            .build(&ctx, &tag, &BuildOptions { no_cache: false, cost: CostModel::instant() })
+            .build(&ctx, &tag, &BuildOptions { no_cache: false, cost: CostModel::instant(), jobs: 1 })
             .unwrap();
         std::fs::write(ctx.join("Dockerfile"), "FROM python:alpine\nCOPY . /app/\nCMD [\"python\", \"main.py\"]\n").unwrap();
         assert!(inject_explicit(&tag, &tag, &ctx, &images, &layers, &eng, &opts()).is_err());

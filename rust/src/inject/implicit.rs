@@ -203,6 +203,7 @@ pub fn inject_implicit(
             &BuildOptions {
                 no_cache: false,
                 cost: opts.cost,
+                jobs: 1,
             },
         )?;
         new_image_id = report.image_id;
@@ -281,6 +282,7 @@ mod tests {
         BuildOptions {
             no_cache: false,
             cost: CostModel::instant(),
+            jobs: 1,
         }
     }
 

@@ -18,7 +18,32 @@
 //!   mechanism and the injection checksum-bypass step.
 //!
 //! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
-//! crate) so Python never runs on the build path.
+//! crate, behind the `pjrt` feature) so Python never runs on the build
+//! path.
+//!
+//! ## The build engine ([`builder`])
+//!
+//! A build pass runs four phases:
+//!
+//! 1. **scan** ([`builder::context`]) — the build context is read once;
+//!    every file's 4 KiB chunks are hashed in a single batched
+//!    [`hash::HashEngine::hash_chunks`] call (the data-parallel hot
+//!    path), with a per-context scan cache for steady-state rescans;
+//! 2. **plan** ([`builder::cache`]) — layer ids are derived and Docker's
+//!    cache criteria are probed; the first miss breaks the chain for all
+//!    later steps (fall-through, §II.C), so decisions never depend on
+//!    content that is yet to be rebuilt;
+//! 3. **execute** ([`builder::executor`]) — each cache-missed layer is
+//!    generated, archived and hashed as an independent job on a
+//!    [`std::thread::scope`] pool sized by [`builder::BuildOptions::jobs`]
+//!    — `jobs = N` output is bit-identical to `jobs = 1`;
+//! 4. **finalize** — parent checksums are chained, layers and sidecars
+//!    persisted, the image config assembled and tagged.
+//!
+//! [`builder::ParallelEngine`] (re-exported as [`hash::ParallelEngine`])
+//! wraps any [`hash::HashEngine`] and shards chunk batches across
+//! threads with bit-identical output, accelerating context scans, layer
+//! checksumming, and the injection fast path alike.
 //!
 //! Quick start (see `examples/quickstart.rs` for the full tour):
 //!
@@ -56,35 +81,26 @@ pub mod prelude {
     pub use crate::coordinator::{BuildCoordinator, BuildRequest, BuildStrategy};
     pub use crate::daemon::Daemon;
     pub use crate::dockerfile::Dockerfile;
-    pub use crate::hash::{Digest, HashEngine, NativeEngine, Sha256};
+    pub use crate::hash::{Digest, HashEngine, NativeEngine, ParallelEngine, Sha256};
     pub use crate::inject::{InjectMode, InjectOptions, InjectReport};
     pub use crate::oci::{Image, ImageId, ImageRef, LayerId};
     pub use crate::registry::RemoteRegistry;
     pub use crate::workload::{Scenario, ScenarioKind};
 }
 
-/// Library-wide error type.
-#[derive(thiserror::Error, Debug)]
+/// Library-wide error type. (The offline environment has no `thiserror`;
+/// `Display`/`Error`/`From` are hand-implemented below.)
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("tar error: {0}")]
     Tar(String),
-    #[error("dockerfile parse error at line {line}: {msg}")]
     Dockerfile { line: usize, msg: String },
-    #[error("build error: {0}")]
     Build(String),
-    #[error("store error: {0}")]
     Store(String),
-    #[error("inject error: {0}")]
     Inject(String),
-    #[error("registry error: {0}")]
     Registry(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("{0}")]
     Other(String),
 }
 
@@ -92,6 +108,40 @@ impl Error {
     /// Shorthand for a free-form error.
     pub fn msg(s: impl Into<String>) -> Self {
         Error::Other(s.into())
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Tar(m) => write!(f, "tar error: {m}"),
+            Error::Dockerfile { line, msg } => {
+                write!(f, "dockerfile parse error at line {line}: {msg}")
+            }
+            Error::Build(m) => write!(f, "build error: {m}"),
+            Error::Store(m) => write!(f, "store error: {m}"),
+            Error::Inject(m) => write!(f, "inject error: {m}"),
+            Error::Registry(m) => write!(f, "registry error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Other(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 

@@ -16,10 +16,12 @@ const USAGE: &str = "\
 layerjet — rapid container image building via layer code injection
 (reproduction of Wang & Bao, CS.DC 2019)
 
-USAGE: layerjet [--root DIR] [--engine native|pjrt|auto] <COMMAND>
+USAGE: layerjet [--root DIR] [--engine native|parallel[:N]|pjrt|auto] <COMMAND>
 
 COMMANDS:
-  build -t NAME:TAG CTX [--no-cache]     build an image from a context dir
+  build -t NAME:TAG CTX [--no-cache] [--jobs N]
+                                         build an image from a context dir
+                                         (--jobs N runs layer jobs on N threads)
   inject -t NAME:TAG CTX [--to NAME:TAG] [--explicit] [--cascade] [--clone]
                                          inject context changes into an image
   save NAME:TAG -o FILE                  export an image bundle (docker save)
@@ -113,6 +115,13 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
         let engine: std::sync::Arc<dyn layerjet::hash::HashEngine> = match engine_choice.as_str() {
             "native" => std::sync::Arc::new(layerjet::hash::NativeEngine::new()),
             "pjrt" => std::sync::Arc::new(runtime::PjrtEngine::load_default()?),
+            "parallel" => std::sync::Arc::new(layerjet::hash::ParallelEngine::auto()),
+            other if other.starts_with("parallel:") => {
+                let threads = other["parallel:".len()..].parse().map_err(|_| {
+                    layerjet::Error::msg(format!("bad --engine thread count in {other:?}"))
+                })?;
+                std::sync::Arc::new(layerjet::hash::ParallelEngine::new(threads))
+            }
             _ => runtime::best_engine(),
         };
         Daemon::with_engine(&root, engine)
@@ -124,6 +133,14 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 .opt("-t")
                 .ok_or_else(|| layerjet::Error::msg("build: missing -t NAME:TAG"))?;
             let no_cache = cli.has("--no-cache");
+            let jobs = cli
+                .opt("--jobs")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("build: bad --jobs {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(1);
             let ctx = cli
                 .pos()
                 .ok_or_else(|| layerjet::Error::msg("build: missing context dir"))?;
@@ -134,6 +151,7 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 &BuildOptions {
                     no_cache,
                     cost: CostModel::default(),
+                    jobs,
                 },
             )?;
             print!("{}", report.transcript);

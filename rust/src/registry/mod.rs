@@ -254,7 +254,7 @@ mod tests {
             .build(
                 ctx,
                 &ImageRef::parse(tag),
-                &BuildOptions { no_cache: false, cost: CostModel::instant() },
+                &BuildOptions { no_cache: false, cost: CostModel::instant(), jobs: 1 },
             )
             .unwrap();
     }

@@ -66,15 +66,31 @@ impl LayerStore {
     ) -> Result<ChunkDigest> {
         let (digest, ckpts) = crate::hash::hash_with_checkpoints(tar);
         debug_assert_eq!(meta.checksum, digest, "meta checksum must match tar");
+        let cd = ChunkDigest::compute(tar, engine);
+        self.put_layer_prehashed(meta, tar, &cd, &ckpts)?;
+        Ok(cd)
+    }
+
+    /// Store a layer whose hash artifacts the caller already computed —
+    /// the build engine hashes each layer inside its (parallel) worker
+    /// job, so the store must not pay a second full pass.
+    pub fn put_layer_prehashed(
+        &self,
+        meta: &LayerMeta,
+        tar: &[u8],
+        cd: &ChunkDigest,
+        ckpts: &[crate::hash::ShaCheckpoint],
+    ) -> Result<()> {
+        debug_assert_eq!(meta.checksum, Digest::of(tar), "meta checksum must match tar");
+        debug_assert_eq!(meta.chunk_root, cd.root, "meta chunk root must match digest");
         let dir = self.layer_dir(&meta.id);
         std::fs::create_dir_all(&dir)?;
         std::fs::write(dir.join("version"), LAYER_VERSION)?;
         std::fs::write(dir.join("layer.tar"), tar)?;
-        let cd = ChunkDigest::compute(tar, engine);
-        self.write_chunk_sidecar(&meta.id, &cd)?;
-        self.write_sha_checkpoints(&meta.id, &ckpts)?;
+        self.write_chunk_sidecar(&meta.id, cd)?;
+        self.write_sha_checkpoints(&meta.id, ckpts)?;
         std::fs::write(dir.join("json"), meta.to_json().to_string_pretty())?;
-        Ok(cd)
+        Ok(())
     }
 
     /// Read a layer's metadata (`json` file).

@@ -50,7 +50,7 @@ fn scenario2_work_accounting() {
     inject.cost = cost;
     let mut scenario = Scenario::generate(ScenarioKind::PythonLarge, &root.join("p"), 3).unwrap();
     let tag = scenario.tag();
-    let opts = BuildOptions { no_cache: false, cost };
+    let opts = BuildOptions { no_cache: false, cost, jobs: 1 };
     docker.build_with(&scenario.dir, &tag, &opts).unwrap();
     inject.build_with(&scenario.dir, &tag, &opts).unwrap();
 
@@ -108,7 +108,7 @@ fn scenario4_cascade_parity() {
     inject.cost = cost;
     let mut scenario = Scenario::generate(ScenarioKind::JavaLarge, &root.join("p"), 4).unwrap();
     let tag = scenario.tag();
-    let opts = BuildOptions { no_cache: false, cost };
+    let opts = BuildOptions { no_cache: false, cost, jobs: 1 };
     docker.build_with(&scenario.dir, &tag, &opts).unwrap();
     inject.build_with(&scenario.dir, &tag, &opts).unwrap();
 
@@ -144,7 +144,7 @@ fn redeploy_war_via_registry() {
     let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
     let mut scenario = Scenario::generate(ScenarioKind::JavaTiny, &root.join("p"), 5).unwrap();
     let tag = scenario.tag();
-    dev.build_with(&scenario.dir, &tag, &BuildOptions { no_cache: false, cost })
+    dev.build_with(&scenario.dir, &tag, &BuildOptions { no_cache: false, cost, jobs: 1 })
         .unwrap();
     dev.push(&tag, &remote).unwrap();
 

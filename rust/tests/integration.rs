@@ -211,6 +211,7 @@ fn no_cache_rebuild_matches_injected_state() {
             &BuildOptions {
                 no_cache: true,
                 cost: CostModel::instant(),
+                jobs: 1,
             },
         )
         .unwrap();

@@ -1,0 +1,157 @@
+//! Parallelism invariants: the data-parallel hashing engine and the
+//! multi-job build engine must be *indistinguishable* from their
+//! sequential baselines — identical digests, identical image ids,
+//! identical layer bytes.
+
+use layerjet::builder::{BuildOptions, CostModel};
+use layerjet::daemon::Daemon;
+use layerjet::hash::{ChunkDigest, HashEngine, NativeEngine, ParallelEngine, CHUNK_SIZE};
+use layerjet::util::prop;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-par-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn write_ctx(dir: &Path, dockerfile: &str, files: &[(&str, &str)]) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+    for (p, c) in files {
+        let path = dir.join(p);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, c).unwrap();
+    }
+}
+
+/// Property: for random batch shapes — empty batches, one chunk, more
+/// chunks than threads, short tail chunks — the parallel engine's
+/// digests are bit-identical to the native engine's.
+#[test]
+fn parallel_engine_equals_native_on_random_batch_shapes() {
+    prop::check("ParallelEngine == NativeEngine (batch shapes)", 40, |g| {
+        let threads = 1 + g.below(8) as usize;
+        // Bias the shape mix toward the interesting regimes.
+        let n = match g.below(4) {
+            0 => 0,
+            1 => 1,
+            2 => threads + g.len(1, 32),        // more chunks than threads
+            _ => g.len(2, 3 * threads.max(2)),  // around the thread count
+        };
+        let chunks: Vec<Vec<u8>> = (0..n)
+            .map(|i| {
+                if i == n - 1 {
+                    g.vec_u8(0, 37) // short tail chunk
+                } else {
+                    g.vec_u8(0, CHUNK_SIZE)
+                }
+            })
+            .collect();
+        let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let native = NativeEngine::new().hash_chunks(&refs);
+        let parallel = ParallelEngine::new(threads).hash_chunks(&refs);
+        if native == parallel {
+            Ok(())
+        } else {
+            Err(format!("digests diverged: threads={threads} n={n}"))
+        }
+    });
+}
+
+/// Chunk-digest roots agree through the wrapper on batches large enough
+/// to actually engage the thread pool.
+#[test]
+fn parallel_engine_roots_match_on_large_buffers() {
+    let data: Vec<u8> = (0..CHUNK_SIZE * 300 + 1234).map(|i| (i % 241) as u8).collect();
+    let native = ChunkDigest::compute(&data, &NativeEngine::new());
+    for threads in [2, 4, 8] {
+        assert_eq!(
+            native,
+            ChunkDigest::compute(&data, &ParallelEngine::new(threads)),
+            "threads={threads}"
+        );
+    }
+}
+
+/// End-to-end: a jobs=4 build produces byte-identical image state to a
+/// jobs=1 build of the same context.
+#[test]
+fn jobs4_build_is_byte_identical_to_jobs1() {
+    let root = tmp("jobs");
+    let df = "FROM python:alpine\n\
+              COPY . /app/\n\
+              RUN pip install alpha beta\n\
+              RUN apt update && apt install curl -y\n\
+              WORKDIR /app\n\
+              CMD [\"python\", \"main.py\"]\n";
+    let build = |jobs: usize, sub: &str| {
+        let daemon_root = root.join(sub);
+        let ctx = root.join(format!("{sub}-ctx"));
+        write_ctx(&ctx, df, &[("main.py", "print('v1')\n"), ("util.py", "u = 1\n")]);
+        let mut daemon = Daemon::new(&daemon_root).unwrap();
+        daemon.cost = CostModel::instant();
+        let report = daemon
+            .build_with(
+                &ctx,
+                "par:latest",
+                &BuildOptions {
+                    no_cache: false,
+                    cost: CostModel::instant(),
+                    jobs,
+                },
+            )
+            .unwrap();
+        let (_, img) = daemon.image("par:latest").unwrap();
+        let tars: Vec<Vec<u8>> = img
+            .layer_ids
+            .iter()
+            .map(|l| daemon.layers.read_tar(l).unwrap())
+            .collect();
+        assert!(daemon.verify_image("par:latest").unwrap());
+        (report.image_id, img.layer_ids.clone(), img.diff_ids.clone(), tars)
+    };
+
+    let (id1, layers1, diffs1, tars1) = build(1, "seq");
+    let (id4, layers4, diffs4, tars4) = build(4, "par");
+    assert_eq!(id1, id4, "image ids must match");
+    assert_eq!(layers1, layers4);
+    assert_eq!(diffs1, diffs4);
+    assert_eq!(tars1, tars4, "layer tars must be byte-identical");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// A daemon running the parallel hashing engine interoperates with a
+/// native-engine daemon: same builds, same image ids, and injection
+/// stays integrity-clean.
+#[test]
+fn parallel_hashing_daemon_matches_native_daemon() {
+    let root = tmp("engine");
+    let ctx = root.join("ctx");
+    write_ctx(
+        &ctx,
+        "FROM python:alpine\nCOPY . /root/\nCMD [\"python\", \"main.py\"]\n",
+        &[("main.py", "print('v1')\n"), ("assets.bin", "0123456789")],
+    );
+
+    let mut native = Daemon::new(&root.join("native")).unwrap();
+    native.cost = CostModel::instant();
+    let mut parallel = Daemon::with_parallel_hashing(&root.join("parallel"), 4).unwrap();
+    parallel.cost = CostModel::instant();
+
+    let rn = native.build(&ctx, "app:v1").unwrap();
+    let rp = parallel.build(&ctx, "app:v1").unwrap();
+    assert_eq!(rn.image_id, rp.image_id);
+
+    std::fs::write(ctx.join("main.py"), "print('v1')\nprint('v2')\n").unwrap();
+    let inj = parallel.inject(&ctx, "app:v1", "app:v2").unwrap();
+    assert_eq!(inj.patched.len(), 1);
+    assert!(parallel.verify_image("app:v2").unwrap());
+
+    // The native daemon reaches the same state by rebuilding.
+    native.build(&ctx, "app:v2").unwrap();
+    let (_, img_n) = native.image("app:v2").unwrap();
+    let (_, img_p) = parallel.image("app:v2").unwrap();
+    assert_eq!(img_n.diff_ids, img_p.diff_ids);
+    std::fs::remove_dir_all(&root).unwrap();
+}
