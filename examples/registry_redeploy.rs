@@ -64,8 +64,10 @@ fn main() -> layerjet::Result<()> {
     );
     let push = machine_a.push("app:v3", &remote)?;
     println!(
-        "    ACCEPTED: {} uploaded under the fresh layer id",
-        layerjet::util::human_bytes(push.bytes_uploaded)
+        "    ACCEPTED: {} uploaded under the fresh layer id \
+         ({} deduped — the clone's unchanged chunks were already remote)",
+        layerjet::util::human_bytes(push.bytes_uploaded),
+        layerjet::util::human_bytes(push.bytes_deduped)
     );
 
     println!("[4] machine B pulls app:v3 and verifies");

@@ -1,0 +1,203 @@
+//! **Chunk-addressed registry transport** — redeploy dedup ratio and
+//! pipelined push throughput, with a machine-readable baseline
+//! (`BENCH_registry_push.json`) so later transport PRs have a
+//! trajectory to beat.
+//!
+//! Two experiments:
+//! * **dedup** — build, push, then repeatedly one-line clone-inject and
+//!   re-push: the wire bytes per redeploy vs the COPY layer's size (the
+//!   paper's O(size-of-change) claim applied to the redeploy loop);
+//! * **pipeline** — wall time of a cold multi-layer push at 1/2/4/8
+//!   transport workers, against fresh remotes so dedup can't flatter
+//!   the higher jobs levels.
+//!
+//! `cargo bench --bench registry_push` (set `LAYERJET_TRIALS` to
+//! override the trial count).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::bench::time_trials;
+use layerjet::builder::CostModel;
+use layerjet::daemon::Daemon;
+use layerjet::inject::InjectOptions;
+use layerjet::registry::{PushOptions, RemoteRegistry};
+use layerjet::stats::summarize;
+use layerjet::util::json::Json;
+use layerjet::util::prng::Prng;
+use std::path::Path;
+
+const JOBS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let n = common::trials(8);
+    let root = common::bench_root("registry-push");
+    let (layer_bytes, mean_uploaded) = dedup_sweep(&root, n);
+    let pipeline = pipeline_sweep(&root, n);
+    emit_baseline(n, layer_bytes, mean_uploaded, &pipeline);
+
+    // Shape assertion (this PR's acceptance bar): a one-line redeploy
+    // must upload under 25% of the layer — a pure protocol property,
+    // independent of the machine's core count.
+    let fraction = mean_uploaded / layer_bytes as f64;
+    assert!(
+        fraction < 0.25,
+        "one-line redeploy uploaded {:.1}% of the layer — chunk negotiation regressed",
+        fraction * 100.0
+    );
+    eprintln!("registry_push shape checks OK ({:.2}% of the layer per redeploy)", fraction * 100.0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Build a project whose COPY layer is dominated by a deterministic
+/// asset blob; the mutable source file sorts last so edits stay
+/// chunk-local in the layer tar.
+fn write_project(dir: &Path, asset_len: usize, layers: usize) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut df = String::from("FROM python:alpine\n");
+    for l in 0..layers {
+        df.push_str(&format!("COPY part{l} /srv/part{l}/\n"));
+    }
+    df.push_str("CMD [\"python\", \"main.py\"]\n");
+    std::fs::write(dir.join("Dockerfile"), df).unwrap();
+    let mut rng = Prng::new(0xd0cc);
+    for l in 0..layers {
+        let part = dir.join(format!("part{l}"));
+        std::fs::create_dir_all(&part).unwrap();
+        let mut asset = vec![0u8; asset_len];
+        rng.fill_bytes(&mut asset);
+        std::fs::write(part.join("aa_assets.bin"), &asset).unwrap();
+        std::fs::write(part.join("zz_main.py"), "print('v1')\n").unwrap();
+    }
+}
+
+/// Redeploy loop: one-line clone-inject then push. Returns the COPY
+/// layer's tar size and the mean wire bytes per redeploy push.
+fn dedup_sweep(root: &Path, n: usize) -> (u64, f64) {
+    let proj = root.join("dedup-proj");
+    write_project(&proj, 2 << 20, 1);
+    let mut dev = Daemon::new(&root.join("dedup-daemon")).unwrap();
+    dev.cost = CostModel::instant();
+    dev.build(&proj, "rbench:v0").unwrap();
+    let remote = RemoteRegistry::open(&root.join("dedup-remote")).unwrap();
+    let seed = dev.push("rbench:v0", &remote).unwrap();
+
+    let (_, img) = dev.image("rbench:v0").unwrap();
+    let layer_bytes = dev.layers.read_tar(&img.layer_ids[1]).unwrap().len() as u64;
+
+    let mut uploaded = Vec::new();
+    for trial in 0..n {
+        let main_path = proj.join("part0/zz_main.py");
+        let main = std::fs::read_to_string(&main_path).unwrap();
+        std::fs::write(&main_path, format!("{main}print('rev {trial}')\n")).unwrap();
+        let from = if trial == 0 { "rbench:v0".into() } else { format!("rbench:v{trial}") };
+        let to = format!("rbench:v{}", trial + 1);
+        dev.inject_with(
+            &proj,
+            &from,
+            &to,
+            &InjectOptions {
+                clone_for_redeploy: true,
+                cost: CostModel::instant(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let report = dev.push(&to, &remote).unwrap();
+        uploaded.push(report.bytes_uploaded as f64);
+    }
+    let mean = summarize(&uploaded).mean;
+
+    let mut table = Table::new(
+        &format!("one-line redeploy push, {} KiB COPY layer ({n} trials)", layer_bytes >> 10),
+        &["push", "wire bytes", "fraction of layer"],
+    );
+    table.row(vec![
+        "initial".into(),
+        seed.bytes_uploaded.to_string(),
+        format!("{:.1}%", 100.0 * seed.bytes_uploaded as f64 / layer_bytes as f64),
+    ]);
+    table.row(vec![
+        "redeploy (mean)".into(),
+        format!("{mean:.0}"),
+        format!("{:.2}%", 100.0 * mean / layer_bytes as f64),
+    ]);
+    table.print();
+    (layer_bytes, mean)
+}
+
+/// Cold pushes of a multi-layer image at several transport widths.
+/// Returns `(jobs, mean seconds)` per point.
+fn pipeline_sweep(root: &Path, n: usize) -> Vec<(usize, f64)> {
+    let proj = root.join("pipe-proj");
+    write_project(&proj, 1 << 20, 6);
+    let mut dev = Daemon::new(&root.join("pipe-daemon")).unwrap();
+    dev.cost = CostModel::instant();
+    dev.build(&proj, "pbench:v0").unwrap();
+
+    let mut table = Table::new(
+        &format!("cold push, 6 × 1 MiB COPY layers ({n} trials)"),
+        &["jobs", "mean", "speedup vs 1"],
+    );
+    let mut out = Vec::new();
+    let mut base = 0.0;
+    for jobs in JOBS {
+        let opts = PushOptions { jobs, whole_tar: false };
+        let t = summarize(&time_trials(1, n, |trial| {
+            // A fresh remote per push: measure the wire, not the dedup.
+            let rdir = root.join(format!("pipe-remote-j{jobs}-{trial}"));
+            let _ = std::fs::remove_dir_all(&rdir);
+            let remote = RemoteRegistry::open(&rdir).unwrap();
+            dev.push_with("pbench:v0", &remote, &opts).unwrap();
+        }));
+        if jobs == 1 {
+            base = t.mean;
+        }
+        table.row(vec![
+            jobs.to_string(),
+            fmt_secs(t.mean),
+            format!("{:.2}x", base / t.mean.max(1e-12)),
+        ]);
+        out.push((jobs, t.mean));
+    }
+    table.print();
+    out
+}
+
+/// Write the machine-readable baseline: once into `bench_results/` and
+/// once at the repository root (the trajectory file later transport PRs
+/// compare against).
+fn emit_baseline(n: usize, layer_bytes: u64, mean_uploaded: f64, pipeline: &[(usize, f64)]) {
+    let point = |(jobs, mean): &(usize, f64)| {
+        Json::obj(vec![
+            ("jobs", Json::num(*jobs as f64)),
+            ("mean_s", Json::num(*mean)),
+        ])
+    };
+    let speedup_4j = pipeline
+        .iter()
+        .find(|(j, _)| *j == 4)
+        .map(|(_, m)| pipeline[0].1 / m.max(1e-12))
+        .unwrap_or(f64::NAN);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("registry_push")),
+        ("measured", Json::Bool(true)),
+        ("trials", Json::num(n as f64)),
+        ("copy_layer_bytes", Json::num(layer_bytes as f64)),
+        ("redeploy_mean_uploaded_bytes", Json::num(mean_uploaded)),
+        (
+            "redeploy_upload_fraction",
+            Json::num(mean_uploaded / layer_bytes as f64),
+        ),
+        ("push_cold", Json::Arr(pipeline.iter().map(point).collect())),
+        ("push_speedup_4j", Json::num(speedup_4j)),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_registry_push.json", &text).expect("write baseline");
+    // Repo root (cargo bench runs from the package dir `rust/`).
+    if std::fs::write("../BENCH_registry_push.json", &text).is_ok() {
+        eprintln!("wrote ../BENCH_registry_push.json");
+    }
+    eprintln!("wrote bench_results/BENCH_registry_push.json");
+}

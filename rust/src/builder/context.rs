@@ -54,8 +54,11 @@ impl BuildContext {
     }
 
     /// Scan with an optional persistent scan-cache file: files whose
-    /// (size, mtime) match the cache reuse their recorded digest root and
-    /// skip hashing entirely.
+    /// (size, mtime, fingerprint) match the cache reuse their recorded
+    /// digest root and skip full hashing. The fingerprint — a cheap hash
+    /// of just the first and last chunk (see [`fingerprint`]) — is the
+    /// third key that kills same-tick same-size rewrite aliasing, which
+    /// (size, mtime) alone cannot distinguish.
     pub fn scan_cached(
         dir: &Path,
         engine: &dyn HashEngine,
@@ -72,6 +75,7 @@ impl BuildContext {
             rel_path: String,
             data: Vec<u8>,
             mtime: u128,
+            fp: Digest,
             cached_root: Option<Digest>,
         }
         let mut pending = Vec::with_capacity(rel_paths.len());
@@ -85,9 +89,20 @@ impl BuildContext {
                 .map(|d| d.as_nanos())
                 .unwrap_or(0);
             let data = std::fs::read(&path)?;
+            // Only a persisted cache ever reads the fingerprint; skip
+            // the (small) extra hash on cache-less scans.
+            let fp = if cache_path.is_some() {
+                fingerprint(&data)
+            } else {
+                Digest([0u8; 32])
+            };
             let cached_root = cache.as_ref().and_then(|c| {
-                c.get(&rel).and_then(|(size, stamp, root)| {
-                    if *size == data.len() as u64 && *stamp == mtime && mtime != 0 {
+                c.get(&rel).and_then(|(size, stamp, cached_fp, root)| {
+                    let fresh = *size == data.len() as u64
+                        && *stamp == mtime
+                        && mtime != 0
+                        && *cached_fp == fp;
+                    if fresh {
                         Some(*root)
                     } else {
                         None
@@ -98,6 +113,7 @@ impl BuildContext {
                 rel_path: rel,
                 data,
                 mtime,
+                fp,
                 cached_root,
             });
         }
@@ -130,16 +146,19 @@ impl BuildContext {
         let mut cache_doc: Vec<(String, Json)> = Vec::new();
         for (p, root) in pending.into_iter().zip(roots) {
             let root = root.expect("every file has a digest root by now");
-            cache_doc.push((
-                p.rel_path.clone(),
-                Json::obj(vec![
-                    ("size", Json::num(p.data.len() as f64)),
-                    // Nanosecond mtimes exceed f64's exact-integer range;
-                    // store as a decimal string.
-                    ("mtime", Json::str(p.mtime.to_string())),
-                    ("root", Json::str(root.to_hex())),
-                ]),
-            ));
+            if cache_path.is_some() {
+                cache_doc.push((
+                    p.rel_path.clone(),
+                    Json::obj(vec![
+                        ("size", Json::num(p.data.len() as f64)),
+                        // Nanosecond mtimes exceed f64's exact-integer
+                        // range; store as a decimal string.
+                        ("mtime", Json::str(p.mtime.to_string())),
+                        ("fp", Json::str(p.fp.to_hex())),
+                        ("root", Json::str(root.to_hex())),
+                    ]),
+                ));
+            }
             files.insert(
                 p.rel_path.clone(),
                 ContextFile {
@@ -242,6 +261,22 @@ impl BuildContext {
     }
 }
 
+/// Cheap content fingerprint for the scan cache: SHA-256 over the first
+/// chunk, the last chunk, and the length. At most 8 KiB hashed per file
+/// — O(1) in file size, unlike the full chunk-digest pass it guards —
+/// yet any rewrite that (size, mtime) would alias must also leave both
+/// boundary chunks byte-identical to slip through.
+fn fingerprint(data: &[u8]) -> Digest {
+    let mut h = Sha256::new();
+    h.update(b"layerjet-scan-fp\0");
+    h.update(&data[..data.len().min(CHUNK_SIZE)]);
+    if data.len() > CHUNK_SIZE {
+        h.update(&data[data.len() - CHUNK_SIZE..]);
+    }
+    h.update(&(data.len() as u64).to_le_bytes());
+    h.finalize()
+}
+
 /// Strip a leading `./` and any trailing `/` from a COPY source operand.
 fn normalize_src(src: &str) -> &str {
     let src = src.strip_prefix("./").unwrap_or(src);
@@ -280,8 +315,10 @@ fn walk(root: &Path, prefix: &str, out: &mut Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// Parse a scan-cache file into `rel_path → (size, mtime, root)`.
-fn load_cache(path: &Path) -> Option<BTreeMap<String, (u64, u128, Digest)>> {
+/// Parse a scan-cache file into `rel_path → (size, mtime, fp, root)`.
+/// Entries without a fingerprint (a pre-fingerprint cache) are dropped,
+/// which simply costs those files one rehash.
+fn load_cache(path: &Path) -> Option<BTreeMap<String, (u64, u128, Digest, Digest)>> {
     let text = std::fs::read_to_string(path).ok()?;
     let doc = Json::parse(&text).ok()?;
     let fields = match &doc {
@@ -292,8 +329,12 @@ fn load_cache(path: &Path) -> Option<BTreeMap<String, (u64, u128, Digest)>> {
     for (rel, entry) in fields {
         let size = entry.get("size")?.as_u64()?;
         let mtime: u128 = entry.get("mtime")?.as_str()?.parse().ok()?;
+        let fp = match entry.get("fp").and_then(|v| v.as_str()).and_then(Digest::parse) {
+            Some(fp) => fp,
+            None => continue,
+        };
         let root = Digest::parse(entry.get("root")?.as_str()?)?;
-        out.insert(rel.clone(), (size, mtime, root));
+        out.insert(rel.clone(), (size, mtime, fp, root));
     }
     Some(out)
 }
@@ -418,6 +459,78 @@ mod tests {
         std::fs::write(&cache, b"not json").unwrap();
         let ctx4 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
         assert_eq!(ctx4.len(), 2);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_kills_same_tick_same_size_alias() {
+        let d = tmp("fp");
+        write(&d, &[("a.py", "AAAA")]);
+        let eng = NativeEngine::new();
+        let cache = d.join("cache/scan.json");
+        let ctx1 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        let old_root = ctx1.select("a.py")[0].1.digest;
+        let old_fp = fingerprint(b"AAAA");
+
+        // Same-size rewrite.
+        std::fs::write(d.join("a.py"), "BBBB").unwrap();
+        // Forge the aliasing cache entry: the file's CURRENT mtime (as
+        // the scanner computes it) with the STALE root and fingerprint —
+        // exactly what a same-tick same-size rewrite leaves behind on
+        // filesystems with coarse timestamps.
+        let mtime = std::fs::metadata(d.join("a.py"))
+            .unwrap()
+            .modified()
+            .ok()
+            .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+            .map(|du| du.as_nanos())
+            .unwrap_or(0);
+        assert_ne!(mtime, 0, "test needs a real mtime");
+        let forge = |fp: Digest, root: Digest| {
+            let doc = Json::Obj(vec![(
+                "a.py".to_string(),
+                Json::obj(vec![
+                    ("size", Json::num(4.0)),
+                    ("mtime", Json::str(mtime.to_string())),
+                    ("fp", Json::str(fp.to_hex())),
+                    ("root", Json::str(root.to_hex())),
+                ]),
+            )]);
+            std::fs::write(&cache, doc.to_string_compact()).unwrap();
+        };
+        forge(old_fp, old_root);
+        let ctx2 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert_eq!(
+            ctx2.select("a.py")[0].1.digest,
+            ChunkDigest::compute(b"BBBB", &eng).root,
+            "stale fingerprint must force a rehash despite matching size+mtime"
+        );
+        assert_ne!(ctx2.select("a.py")[0].1.digest, old_root);
+
+        // Control: with the CORRECT fingerprint the cached root is
+        // trusted verbatim — proving the fingerprint (not size/mtime)
+        // made the call above.
+        let sentinel = Digest::of(b"sentinel-root");
+        forge(fingerprint(b"BBBB"), sentinel);
+        let ctx3 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert_eq!(ctx3.select("a.py")[0].1.digest, sentinel);
+
+        // A pre-fingerprint cache entry (no "fp" field) degrades to a
+        // rehash rather than a stale hit.
+        let doc = Json::Obj(vec![(
+            "a.py".to_string(),
+            Json::obj(vec![
+                ("size", Json::num(4.0)),
+                ("mtime", Json::str(mtime.to_string())),
+                ("root", Json::str(old_root.to_hex())),
+            ]),
+        )]);
+        std::fs::write(&cache, doc.to_string_compact()).unwrap();
+        let ctx4 = BuildContext::scan_cached(&d, &eng, Some(&cache)).unwrap();
+        assert_eq!(
+            ctx4.select("a.py")[0].1.digest,
+            ChunkDigest::compute(b"BBBB", &eng).root
+        );
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -40,7 +40,6 @@ use crate::store::{ImageStore, LayerStore, LAYER_VERSION};
 use crate::tar::TarBuilder;
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Simulated toolchain/daemon costs, scaled ~100× below real dockerd
@@ -351,10 +350,10 @@ impl<'a> Builder<'a> {
         Ok(steps)
     }
 
-    /// Phase 2: run every cache-missed step as an independent job on a
-    /// scoped worker pool of `opts.jobs` threads. Content generation and
-    /// hashing are pure per step, so `jobs = N` output is bit-identical
-    /// to `jobs = 1`.
+    /// Phase 2: run every cache-missed step as an independent job on the
+    /// shared scoped worker pool ([`parallel::scoped_index_map`]) of
+    /// `opts.jobs` threads. Content generation and hashing are pure per
+    /// step, so `jobs = N` output is bit-identical to `jobs = 1`.
     fn execute(
         &self,
         plan: &[PlannedStep],
@@ -371,33 +370,11 @@ impl<'a> Builder<'a> {
         if misses.is_empty() {
             return Ok(results);
         }
-        let jobs = opts.jobs.max(1).min(misses.len());
-        if jobs == 1 {
-            for i in misses {
-                results[i] = Some(self.execute_step(&plan[i], ctx, opts)?);
-            }
-            return Ok(results);
-        }
-
-        type Slot = Mutex<Option<Result<BuiltLayer>>>;
-        let queue = Mutex::new(misses.into_iter());
-        let slots: Vec<Slot> = plan.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..jobs {
-                scope.spawn(|| loop {
-                    let i = match queue.lock().unwrap().next() {
-                        Some(i) => i,
-                        None => break,
-                    };
-                    let built = self.execute_step(&plan[i], ctx, opts);
-                    *slots[i].lock().unwrap() = Some(built);
-                });
-            }
-        });
-        for (i, slot) in slots.into_iter().enumerate() {
-            if let Some(res) = slot.into_inner().unwrap() {
-                results[i] = Some(res?);
-            }
+        let built = parallel::scoped_index_map(misses.len(), opts.jobs, |slot| {
+            self.execute_step(&plan[misses[slot]], ctx, opts)
+        })?;
+        for (i, b) in misses.into_iter().zip(built) {
+            results[i] = Some(b);
         }
         Ok(results)
     }

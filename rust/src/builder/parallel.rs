@@ -11,6 +11,8 @@
 //! overhead would swamp a handful of compressions.
 
 use crate::hash::{Digest, HashEngine, NativeEngine};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Below this many chunks (256 KiB of payload) sharding is not worth the
 /// thread spawns; the batch runs inline on the caller's thread.
@@ -40,6 +42,62 @@ pub fn shard_hash_chunks(
         }
     });
     out
+}
+
+/// Run `f(0) .. f(n-1)` on a [`std::thread::scope`] pool of up to `jobs`
+/// worker threads, returning the results in index order — the shared
+/// fan-out primitive behind parallel layer jobs and the registry's
+/// pipelined push/pull transport. Workers pull indices from a shared
+/// cursor, so long items don't serialize behind short ones. On the first
+/// error remaining indices are abandoned and that error is returned
+/// (in-flight items still run to completion; any side effects they
+/// perform must be idempotent, as content-addressed writes are).
+pub fn scoped_index_map<T, F>(n: usize, jobs: usize, f: F) -> crate::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> crate::Result<T> + Sync,
+{
+    let jobs = jobs.max(1).min(n.max(1));
+    if jobs == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<_> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let result = f(i);
+                if result.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    let mut first_err = None;
+    for slot in slots {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            // Abandoned after a failure elsewhere.
+            None => {}
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
 }
 
 /// A [`HashEngine`] adapter that runs any inner engine's chunk batches
@@ -151,6 +209,30 @@ mod tests {
             ChunkDigest::compute(&data, &NativeEngine::new())
         );
         assert!(nested.name().starts_with("parallel(parallel(native)x2)x2"));
+    }
+
+    #[test]
+    fn scoped_index_map_preserves_order() {
+        for jobs in [1, 3, 8] {
+            let out = scoped_index_map(20, jobs, |i| Ok(i * i)).unwrap();
+            assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+        let empty: Vec<usize> = scoped_index_map(0, 4, |i| Ok(i + 1)).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn scoped_index_map_propagates_errors() {
+        for jobs in [1, 4] {
+            let r: crate::Result<Vec<usize>> = scoped_index_map(16, jobs, |i| {
+                if i == 7 {
+                    Err(crate::Error::msg("boom"))
+                } else {
+                    Ok(i)
+                }
+            });
+            assert!(r.is_err(), "jobs={jobs}");
+        }
     }
 
     #[test]

@@ -104,8 +104,7 @@ impl BlobStore {
     pub fn chunk_digest(&self, digest: &Digest, engine: &dyn HashEngine) -> Result<ChunkDigest> {
         let path = self.chunks_path(digest);
         if path.exists() {
-            let bytes = std::fs::read(&path)?;
-            if let Some(cd) = Self::decode_chunks(&bytes) {
+            if let Some(cd) = ChunkDigest::decode(&std::fs::read(&path)?) {
                 return Ok(cd);
             }
             // Corrupt sidecar: fall through and rebuild.
@@ -117,39 +116,8 @@ impl BlobStore {
     }
 
     fn write_chunks(&self, digest: &Digest, cd: &ChunkDigest) -> Result<()> {
-        let mut buf = Vec::with_capacity(8 + 32 * cd.chunks.len() + 32);
-        buf.extend_from_slice(&cd.total_len.to_le_bytes());
-        buf.extend_from_slice(&cd.root.0);
-        for c in &cd.chunks {
-            buf.extend_from_slice(&c.0);
-        }
-        std::fs::write(self.chunks_path(digest), buf)?;
+        std::fs::write(self.chunks_path(digest), cd.encode())?;
         Ok(())
-    }
-
-    fn decode_chunks(bytes: &[u8]) -> Option<ChunkDigest> {
-        if bytes.len() < 40 || (bytes.len() - 40) % 32 != 0 {
-            return None;
-        }
-        let total_len = u64::from_le_bytes(bytes[..8].try_into().ok()?);
-        let mut root = [0u8; 32];
-        root.copy_from_slice(&bytes[8..40]);
-        let mut chunks = Vec::new();
-        for c in bytes[40..].chunks_exact(32) {
-            let mut d = [0u8; 32];
-            d.copy_from_slice(c);
-            chunks.push(Digest(d));
-        }
-        let cd = ChunkDigest {
-            chunks,
-            total_len,
-            root: Digest(root),
-        };
-        // Integrity: root must match.
-        if ChunkDigest::root_of(&cd.chunks, total_len) != cd.root {
-            return None;
-        }
-        Some(cd)
     }
 
     /// Verify a blob's content matches its digest (Docker's integrity

@@ -17,6 +17,7 @@ pub use metrics::CoordinatorMetrics;
 use crate::builder::{BuildOptions, CostModel};
 use crate::daemon::Daemon;
 use crate::inject::{InjectMode, InjectOptions};
+use crate::registry::{PullOptions, RemoteRegistry};
 use crate::Result;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -79,6 +80,25 @@ impl BuildCoordinator {
             workers,
             cost: CostModel::default(),
         }
+    }
+
+    /// Warm every worker daemon's store from a remote registry before a
+    /// batch: each worker pulls the given tags through the
+    /// chunk-addressed transport (layers already local are skipped, so
+    /// re-warming between batches costs only the delta). Workers warm
+    /// concurrently; `jobs` sizes each worker's pull pipeline. Returns
+    /// the total number of layers fetched across the farm.
+    pub fn warm(&self, remote: &RemoteRegistry, tags: &[String], jobs: usize) -> Result<usize> {
+        let fetched =
+            crate::builder::parallel::scoped_index_map(self.workers, self.workers, |worker_id| {
+                let daemon = Daemon::new(&self.root.join(format!("worker-{worker_id}")))?;
+                let mut layers = 0;
+                for tag in tags {
+                    layers += daemon.pull_with(tag, remote, &PullOptions { jobs })?.layers_fetched;
+                }
+                Ok(layers)
+            })?;
+        Ok(fetched.into_iter().sum())
     }
 
     /// Process a batch of requests to completion; returns outcomes in
@@ -284,6 +304,32 @@ mod tests {
         assert!(!workers.is_empty() && workers.len() <= 2);
         assert_eq!(metrics.completed, 4);
         assert!(metrics.throughput_rps > 0.0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn warm_pulls_tags_into_every_worker() {
+        let root = tmp("warm");
+        let _ = std::fs::remove_dir_all(&root);
+        // Seed machine builds and pushes.
+        let mut seed = crate::daemon::Daemon::new(&root.join("seed")).unwrap();
+        seed.cost = CostModel::instant();
+        let scenario = Scenario::generate(ScenarioKind::PythonTiny, &root.join("proj"), 3).unwrap();
+        seed.build(&scenario.dir, &scenario.tag()).unwrap();
+        let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+        seed.push(&scenario.tag(), &remote).unwrap();
+
+        let coordinator = BuildCoordinator::new(&root.join("farm"), 2);
+        let tags = vec![scenario.tag()];
+        let fetched = coordinator.warm(&remote, &tags, 2).unwrap();
+        assert!(fetched > 0, "cold farm must fetch layers");
+        for w in 0..2 {
+            let daemon = crate::daemon::Daemon::new(&root.join("farm").join(format!("worker-{w}")))
+                .unwrap();
+            assert!(daemon.verify_image(&scenario.tag()).unwrap(), "worker {w} warm");
+        }
+        // Re-warming is a no-op: every layer already local.
+        assert_eq!(coordinator.warm(&remote, &tags, 2).unwrap(), 0);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

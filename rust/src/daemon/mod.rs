@@ -6,7 +6,7 @@ use crate::builder::{BuildOptions, BuildReport, Builder, CostModel};
 use crate::hash::{HashEngine, NativeEngine};
 use crate::inject::{explicit, implicit, InjectMode, InjectOptions, InjectReport};
 use crate::oci::{Image, ImageId, ImageRef};
-use crate::registry::{PushReport, RemoteRegistry};
+use crate::registry::{PullOptions, PullReport, PushOptions, PushReport, RemoteRegistry};
 use crate::store::{ImageStore, LayerStore};
 use crate::Result;
 use std::path::{Path, PathBuf};
@@ -126,14 +126,48 @@ impl Daemon {
         crate::store::load_bundle(bundle, &self.images, &self.layers, self.engine.as_ref())
     }
 
-    /// `docker push`.
+    /// `docker push` (serial transport).
     pub fn push(&self, tag: &str, remote: &RemoteRegistry) -> Result<PushReport> {
-        remote.push(&ImageRef::parse(tag), &self.images, &self.layers)
+        self.push_with(tag, remote, &PushOptions::default())
     }
 
-    /// `docker pull`.
+    /// Push with explicit transport options (pipelined workers, wire
+    /// mode). Uses this daemon's hash engine for chunk manifests.
+    pub fn push_with(
+        &self,
+        tag: &str,
+        remote: &RemoteRegistry,
+        opts: &PushOptions,
+    ) -> Result<PushReport> {
+        remote.push_with(
+            &ImageRef::parse(tag),
+            &self.images,
+            &self.layers,
+            self.engine.as_ref(),
+            opts,
+        )
+    }
+
+    /// `docker pull` (serial transport).
     pub fn pull(&self, tag: &str, remote: &RemoteRegistry) -> Result<ImageId> {
-        remote.pull(&ImageRef::parse(tag), &self.images, &self.layers)
+        Ok(self.pull_with(tag, remote, &PullOptions::default())?.image_id)
+    }
+
+    /// Pull with explicit transport options; layers are hashed exactly
+    /// once, through this daemon's engine.
+    pub fn pull_with(
+        &self,
+        tag: &str,
+        remote: &RemoteRegistry,
+        opts: &PullOptions,
+    ) -> Result<PullReport> {
+        remote.pull_with(
+            &ImageRef::parse(tag),
+            &self.images,
+            &self.layers,
+            self.engine.as_ref(),
+            opts,
+        )
     }
 
     /// Resolve + load an image by tag.

@@ -143,6 +143,51 @@ impl ChunkDigest {
         )
     }
 
+    /// Serialize to the shared on-disk format used by every chunk-digest
+    /// sidecar and by the registry's per-layer chunk manifests:
+    /// `u64_le(total_len) ∥ root ∥ chunk digests`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(40 + 32 * self.chunks.len());
+        buf.extend_from_slice(&self.total_len.to_le_bytes());
+        buf.extend_from_slice(&self.root.0);
+        for c in &self.chunks {
+            buf.extend_from_slice(&c.0);
+        }
+        buf
+    }
+
+    /// Decode the [`ChunkDigest::encode`] format. Returns `None` on a
+    /// malformed buffer or when the recorded root does not match the
+    /// recorded chunk digests (corruption), so callers can transparently
+    /// fall back to a fresh compute.
+    pub fn decode(bytes: &[u8]) -> Option<ChunkDigest> {
+        if bytes.len() < 40 || (bytes.len() - 40) % 32 != 0 {
+            return None;
+        }
+        let total_len = u64::from_le_bytes(bytes[..8].try_into().ok()?);
+        let mut root = [0u8; 32];
+        root.copy_from_slice(&bytes[8..40]);
+        let chunks: Vec<Digest> = bytes[40..]
+            .chunks_exact(32)
+            .map(|c| {
+                let mut d = [0u8; 32];
+                d.copy_from_slice(c);
+                Digest(d)
+            })
+            .collect();
+        if chunks.len() != Self::chunk_count(total_len) {
+            return None;
+        }
+        if Self::root_of(&chunks, total_len) != Digest(root) {
+            return None;
+        }
+        Some(ChunkDigest {
+            chunks,
+            total_len,
+            root: Digest(root),
+        })
+    }
+
     /// Indices of chunks whose digests differ between two summaries (plus
     /// all chunks present in only one of them).
     pub fn changed_chunks(&self, other: &ChunkDigest) -> Vec<usize> {
@@ -264,6 +309,20 @@ mod tests {
         assert_eq!(cd2, ChunkDigest::compute(&[], &eng()));
         assert_eq!(cd2.chunks.len(), 0);
         assert_eq!(rehashed, 0);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        for len in [0usize, 1, CHUNK_SIZE, CHUNK_SIZE * 3 + 5] {
+            let data = vec![0xabu8; len];
+            let cd = ChunkDigest::compute(&data, &eng());
+            assert_eq!(ChunkDigest::decode(&cd.encode()), Some(cd));
+        }
+        // Malformed and corrupt buffers are rejected.
+        assert_eq!(ChunkDigest::decode(b"short"), None);
+        let mut buf = ChunkDigest::compute(&vec![1u8; 5000], &eng()).encode();
+        buf[45] ^= 0xff; // flip a bit inside a chunk digest
+        assert_eq!(ChunkDigest::decode(&buf), None);
     }
 
     #[test]

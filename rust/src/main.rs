@@ -6,7 +6,7 @@
 use layerjet::builder::{BuildOptions, CostModel};
 use layerjet::daemon::Daemon;
 use layerjet::inject::{InjectMode, InjectOptions};
-use layerjet::registry::RemoteRegistry;
+use layerjet::registry::{PullOptions, PushOptions, RemoteRegistry};
 use layerjet::runtime;
 use layerjet::workload::{Scenario, ScenarioKind};
 use std::path::PathBuf;
@@ -26,8 +26,12 @@ COMMANDS:
                                          inject context changes into an image
   save NAME:TAG -o FILE                  export an image bundle (docker save)
   load FILE                              import a bundle (docker load)
-  push NAME:TAG --remote DIR             push to a (directory) registry
-  pull NAME:TAG --remote DIR             pull from a (directory) registry
+  push NAME:TAG --remote DIR [--jobs N] [--whole-tar]
+                                         push to a (directory) registry;
+                                         streams only chunks the remote lacks
+                                         (--whole-tar forces the v1 wire mode)
+  pull NAME:TAG --remote DIR [--jobs N]  pull from a (directory) registry,
+                                         reconstructing layers from chunks
   history NAME:TAG                       layer history (docker history)
   verify NAME:TAG                        image integrity check
   images                                 list tags
@@ -242,19 +246,39 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
             let remote_dir = cli
                 .opt("--remote")
                 .ok_or_else(|| layerjet::Error::msg(format!("{command}: missing --remote DIR")))?;
+            let jobs = cli
+                .opt("--jobs")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("{command}: bad --jobs {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(1);
+            let whole_tar = cli.has("--whole-tar");
             let daemon = open_daemon()?;
             let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
             if command == "push" {
-                let report = daemon.push(&tag, &remote)?;
+                let report = daemon.push_with(&tag, &remote, &PushOptions { jobs, whole_tar })?;
                 println!(
-                    "pushed {}: {} layers, {} uploaded",
+                    "pushed {}: {} layers, {} uploaded, {} deduped ({} chunks sent, {} reused{})",
                     report.reference,
                     report.layers.len(),
-                    layerjet::util::human_bytes(report.bytes_uploaded)
+                    layerjet::util::human_bytes(report.bytes_uploaded),
+                    layerjet::util::human_bytes(report.bytes_deduped),
+                    report.chunks_uploaded,
+                    report.chunks_deduped,
+                    if report.whole_tar { ", whole-tar mode" } else { "" },
                 );
             } else {
-                let id = daemon.pull(&tag, &remote)?;
-                println!("pulled {tag}: image {}", id.short());
+                let report = daemon.pull_with(&tag, &remote, &PullOptions { jobs })?;
+                println!(
+                    "pulled {tag}: image {} ({} layers fetched, {} already local, {} fetched, {} reused from staging)",
+                    report.image_id.short(),
+                    report.layers_fetched,
+                    report.layers_skipped,
+                    layerjet::util::human_bytes(report.bytes_fetched),
+                    layerjet::util::human_bytes(report.bytes_local),
+                );
             }
         }
         "history" => {

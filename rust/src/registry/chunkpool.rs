@@ -1,0 +1,184 @@
+//! Content-addressed chunk blob pool — the storage (and wire) unit of
+//! the chunk-granular registry transport.
+//!
+//! A pool is a flat directory of 4 KiB-or-smaller blobs, each named by
+//! the hex of its SHA-256 digest: `<pool>/<digest-hex>`. Two pools use
+//! this layout:
+//!
+//! * the **remote pool** at `<registry>/chunks/` — the deduplicated blob
+//!   store every pushed layer's manifest points into;
+//! * the local **pull staging pool** at
+//!   `<store>/pull-staging/<image-id>/` — chunks fetched by an in-flight
+//!   pull land here first, so an interrupted pull of the same image
+//!   resumes without re-fetching them.
+//!
+//! Writes are write-to-temp-then-rename, so concurrent writers of the
+//! same digest (two pipelined push workers whose layers share a chunk)
+//! are safe and idempotent: whoever renames last wins with identical
+//! content.
+
+use crate::hash::Digest;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic temp-name nonce so concurrent writers never collide.
+static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// A content-addressed pool of chunk blobs.
+pub struct ChunkPool {
+    root: PathBuf,
+}
+
+impl ChunkPool {
+    /// Open a pool, creating its directory if needed.
+    pub fn open(root: &Path) -> Result<ChunkPool> {
+        std::fs::create_dir_all(root)?;
+        Ok(ChunkPool {
+            root: root.to_path_buf(),
+        })
+    }
+
+    /// Reference a pool without creating anything on disk — used by pull
+    /// against remotes that may not have a pool at all (legacy layout).
+    pub fn at(root: &Path) -> ChunkPool {
+        ChunkPool {
+            root: root.to_path_buf(),
+        }
+    }
+
+    /// Pool directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn chunk_path(&self, digest: &Digest) -> PathBuf {
+        self.root.join(digest.to_hex())
+    }
+
+    /// Is a chunk present? This is the push negotiation primitive: a
+    /// chunk that answers `true` is never sent over the wire.
+    pub fn has(&self, digest: &Digest) -> bool {
+        self.chunk_path(digest).exists()
+    }
+
+    /// Fetch a chunk's bytes; a missing chunk is a registry error.
+    pub fn get(&self, digest: &Digest) -> Result<Vec<u8>> {
+        std::fs::read(self.chunk_path(digest)).map_err(|e| {
+            Error::Registry(format!("chunk {} missing from pool: {e}", digest.short()))
+        })
+    }
+
+    /// Fetch a chunk's bytes, `None` when absent.
+    pub fn try_get(&self, digest: &Digest) -> Option<Vec<u8>> {
+        std::fs::read(self.chunk_path(digest)).ok()
+    }
+
+    /// Commit a chunk. Idempotent; returns `false` when the chunk was
+    /// already present (dedup hit). The caller vouches that `data`
+    /// hashes to `digest` under the chunk-digest scheme (an engine
+    /// digest over the padded chunk message — NOT `Digest::of(data)` —
+    /// so the pool cannot cheaply re-derive it here; pull verifies
+    /// fetched chunks through the engine instead).
+    pub fn put(&self, digest: &Digest, data: &[u8]) -> Result<bool> {
+        let path = self.chunk_path(digest);
+        if path.exists() {
+            return Ok(false);
+        }
+        let tmp = self.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, data)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(true)
+    }
+
+    /// Remove a chunk (e.g. a staging entry that failed verification).
+    /// No-op when absent.
+    pub fn remove(&self, digest: &Digest) -> Result<()> {
+        match std::fs::remove_file(self.chunk_path(digest)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Number of committed chunks.
+    pub fn len(&self) -> Result<usize> {
+        let mut n = 0;
+        for entry in std::fs::read_dir(&self.root)? {
+            if entry?.file_name().to_string_lossy().len() == 64 {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Total bytes of committed chunks.
+    pub fn disk_usage(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if entry.file_name().to_string_lossy().len() == 64 {
+                total += entry.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(tag: &str) -> (ChunkPool, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-pool-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        (ChunkPool::open(&d).unwrap(), d)
+    }
+
+    #[test]
+    fn put_get_has_round_trip() {
+        let (pool, d) = fresh("rt");
+        let data = vec![7u8; 4096];
+        let digest = Digest::of(&data);
+        assert!(!pool.has(&digest));
+        assert!(pool.put(&digest, &data).unwrap(), "first put is novel");
+        assert!(!pool.put(&digest, &data).unwrap(), "second put dedups");
+        assert!(pool.has(&digest));
+        assert_eq!(pool.get(&digest).unwrap(), data);
+        assert_eq!(pool.len().unwrap(), 1);
+        assert_eq!(pool.disk_usage().unwrap(), 4096);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_chunk_errors() {
+        let (pool, d) = fresh("missing");
+        let ghost = Digest::of(b"ghost");
+        assert!(pool.get(&ghost).is_err());
+        assert_eq!(pool.try_get(&ghost), None);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn concurrent_puts_of_same_chunk_are_safe() {
+        let (pool, d) = fresh("race");
+        let data = vec![9u8; 1000];
+        let digest = Digest::of(&data);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| pool.put(&digest, &data).unwrap());
+            }
+        });
+        assert_eq!(pool.get(&digest).unwrap(), data);
+        assert_eq!(pool.len().unwrap(), 1);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

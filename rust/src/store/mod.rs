@@ -40,6 +40,12 @@ impl LayerStore {
         })
     }
 
+    /// Store root directory (hosts `overlay2/` plus transport scratch
+    /// space such as the registry pull staging pool).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
     /// Directory of one layer: `<root>/overlay2/<layer-id>/`.
     pub fn layer_dir(&self, id: &LayerId) -> PathBuf {
         self.root.join("overlay2").join(id.to_hex())
@@ -125,11 +131,19 @@ impl LayerStore {
         Ok(())
     }
 
+    /// Load the chunk-digest sidecar if present and well-formed, without
+    /// touching `layer.tar` — for callers (like the registry push
+    /// pipeline) that already hold the tar and can recompute more
+    /// cheaply than [`LayerStore::chunk_digest`]'s re-read fallback.
+    pub fn try_chunk_sidecar(&self, id: &LayerId) -> Option<ChunkDigest> {
+        ChunkDigest::decode(&std::fs::read(self.layer_dir(id).join("layer.chunks")).ok()?)
+    }
+
     /// Load the chunk-digest sidecar (recomputing on miss/corruption).
     pub fn chunk_digest(&self, id: &LayerId, engine: &dyn HashEngine) -> Result<ChunkDigest> {
         let path = self.layer_dir(id).join("layer.chunks");
         if path.exists() {
-            if let Some(cd) = decode_chunk_sidecar(&std::fs::read(&path)?) {
+            if let Some(cd) = ChunkDigest::decode(&std::fs::read(&path)?) {
                 return Ok(cd);
             }
         }
@@ -217,13 +231,7 @@ impl LayerStore {
 
     /// Write/replace the chunk-digest sidecar.
     pub fn write_chunk_sidecar(&self, id: &LayerId, cd: &ChunkDigest) -> Result<()> {
-        let mut buf = Vec::with_capacity(40 + 32 * cd.chunks.len());
-        buf.extend_from_slice(&cd.total_len.to_le_bytes());
-        buf.extend_from_slice(&cd.root.0);
-        for c in &cd.chunks {
-            buf.extend_from_slice(&c.0);
-        }
-        std::fs::write(self.layer_dir(id).join("layer.chunks"), buf)?;
+        std::fs::write(self.layer_dir(id).join("layer.chunks"), cd.encode())?;
         Ok(())
     }
 
@@ -260,31 +268,6 @@ impl LayerStore {
         let tar = self.read_tar(id)?;
         Ok(Digest::of(&tar) == meta.checksum)
     }
-}
-
-fn decode_chunk_sidecar(bytes: &[u8]) -> Option<ChunkDigest> {
-    if bytes.len() < 40 || (bytes.len() - 40) % 32 != 0 {
-        return None;
-    }
-    let total_len = u64::from_le_bytes(bytes[..8].try_into().ok()?);
-    let mut root = [0u8; 32];
-    root.copy_from_slice(&bytes[8..40]);
-    let chunks: Vec<Digest> = bytes[40..]
-        .chunks_exact(32)
-        .map(|c| {
-            let mut d = [0u8; 32];
-            d.copy_from_slice(c);
-            Digest(d)
-        })
-        .collect();
-    if ChunkDigest::root_of(&chunks, total_len) != Digest(root) {
-        return None;
-    }
-    Some(ChunkDigest {
-        chunks,
-        total_len,
-        root: Digest(root),
-    })
 }
 
 #[cfg(test)]
