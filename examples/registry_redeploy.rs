@@ -81,6 +81,24 @@ fn main() -> layerjet::Result<()> {
     assert!(content.contains("VERSION = 3"), "{content}");
     println!("    machine B sees VERSION = 3 — redeploy round trip OK");
 
+    println!("[5] registry maintenance: scrub the chunk pool, gc untagged images");
+    let scrub = remote.scrub()?;
+    println!(
+        "    scrub: {} chunks re-hashed, {} dropped (a rotted chunk would be \
+         deleted here and repaired by the next push)",
+        scrub.chunks_checked, scrub.chunks_dropped
+    );
+    remote.untag(&ImageRef::parse("app:v1"))?;
+    let gc = remote.gc()?;
+    println!(
+        "    gc after untagging app:v1: {} image(s), {} layer(s), {} chunk(s) removed \
+         ({} reclaimed); app:v3 still serves",
+        gc.images_dropped,
+        gc.layers_dropped,
+        gc.chunks_dropped,
+        layerjet::util::human_bytes(gc.bytes_reclaimed)
+    );
+
     std::fs::remove_dir_all(&root)?;
     Ok(())
 }

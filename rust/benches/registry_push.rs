@@ -3,10 +3,15 @@
 //! (`BENCH_registry_push.json`) so later transport PRs have a
 //! trajectory to beat.
 //!
-//! Two experiments:
+//! Three experiments:
 //! * **dedup** — build, push, then repeatedly one-line clone-inject and
 //!   re-push: the wire bytes per redeploy vs the COPY layer's size (the
 //!   paper's O(size-of-change) claim applied to the redeploy loop);
+//! * **shifted insert** — insert one line near the TOP of the COPY
+//!   payload (shifting every downstream tar byte) and re-push under
+//!   both wire formats: content-defined chunking must stay O(change)
+//!   (< 10% of the layer) where the fixed 4 KiB grid re-uploads the
+//!   shifted bulk — the headline number fixed chunking cannot hit;
 //! * **pipeline** — wall time of a cold multi-layer push at 1/2/4/8
 //!   transport workers, against fresh remotes so dedup can't flatter
 //!   the higher jobs levels.
@@ -33,20 +38,124 @@ fn main() {
     let n = common::trials(8);
     let root = common::bench_root("registry-push");
     let (layer_bytes, mean_uploaded) = dedup_sweep(&root, n);
+    let shifted = shifted_insert_sweep(&root, n);
     let pipeline = pipeline_sweep(&root, n);
-    emit_baseline(n, layer_bytes, mean_uploaded, &pipeline);
+    emit_baseline(n, layer_bytes, mean_uploaded, &shifted, &pipeline);
 
-    // Shape assertion (this PR's acceptance bar): a one-line redeploy
-    // must upload under 25% of the layer — a pure protocol property,
-    // independent of the machine's core count.
+    // Shape assertions (the transport's acceptance bars): a one-line
+    // append-redeploy must upload under 25% of the layer, and a
+    // shifted INSERT under 10% — pure protocol properties, independent
+    // of the machine's core count. The second is the one fixed-offset
+    // chunking cannot satisfy (its control leg re-uploads the bulk).
     let fraction = mean_uploaded / layer_bytes as f64;
     assert!(
         fraction < 0.25,
         "one-line redeploy uploaded {:.1}% of the layer — chunk negotiation regressed",
         fraction * 100.0
     );
-    eprintln!("registry_push shape checks OK ({:.2}% of the layer per redeploy)", fraction * 100.0);
+    assert!(
+        shifted.cdc_fraction < 0.10,
+        "shifted insert uploaded {:.1}% of the layer under CDC — shift robustness regressed",
+        shifted.cdc_fraction * 100.0
+    );
+    eprintln!(
+        "registry_push shape checks OK ({:.2}% per append redeploy, {:.2}% per shifted insert; \
+         fixed-chunk control {:.1}%)",
+        fraction * 100.0,
+        shifted.cdc_fraction * 100.0,
+        shifted.fixed_fraction * 100.0
+    );
     let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Shifted-insert accounting: mean upload fraction of the COPY layer
+/// under the CDC (v2) and fixed-chunk (v1) wire formats.
+struct ShiftedInsert {
+    cdc_fraction: f64,
+    fixed_fraction: f64,
+    cdc_mean_uploaded: f64,
+    fixed_mean_uploaded: f64,
+}
+
+/// Insert one line near the top of the dominant asset each trial (every
+/// downstream tar byte shifts), clone-inject, and push under both wire
+/// formats against separate remotes.
+fn shifted_insert_sweep(root: &Path, n: usize) -> ShiftedInsert {
+    let proj = root.join("shift-proj");
+    write_project(&proj, 2 << 20, 1);
+    let mut dev = Daemon::new(&root.join("shift-daemon")).unwrap();
+    dev.cost = CostModel::instant();
+    dev.build(&proj, "sbench:v0").unwrap();
+    let cdc_remote = RemoteRegistry::open(&root.join("shift-remote-cdc")).unwrap();
+    let fixed_remote = RemoteRegistry::open(&root.join("shift-remote-fixed")).unwrap();
+    dev.push("sbench:v0", &cdc_remote).unwrap();
+    dev.push_with(
+        "sbench:v0",
+        &fixed_remote,
+        &PushOptions { manifest_v1: true, ..Default::default() },
+    )
+    .unwrap();
+
+    let mut cdc_fractions = Vec::new();
+    let mut fixed_fractions = Vec::new();
+    let mut cdc_uploaded = Vec::new();
+    let mut fixed_uploaded = Vec::new();
+    for trial in 0..n {
+        let asset_path = proj.join("part0/aa_assets.bin");
+        let asset = std::fs::read(&asset_path).unwrap();
+        let line = format!("# inserted line, rev {trial}\n");
+        let mut shifted = Vec::with_capacity(asset.len() + line.len());
+        shifted.extend_from_slice(&asset[..97]);
+        shifted.extend_from_slice(line.as_bytes());
+        shifted.extend_from_slice(&asset[97..]);
+        std::fs::write(&asset_path, &shifted).unwrap();
+        let from = if trial == 0 { "sbench:v0".into() } else { format!("sbench:v{trial}") };
+        let to = format!("sbench:v{}", trial + 1);
+        dev.inject_with(
+            &proj,
+            &from,
+            &to,
+            &InjectOptions {
+                clone_for_redeploy: true,
+                cost: CostModel::instant(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (_, img) = dev.image(&to).unwrap();
+        let layer_bytes = dev.layers.read_tar(&img.layer_ids[1]).unwrap().len() as f64;
+        let cdc = dev.push(&to, &cdc_remote).unwrap();
+        let fixed = dev
+            .push_with(&to, &fixed_remote, &PushOptions { manifest_v1: true, ..Default::default() })
+            .unwrap();
+        cdc_fractions.push(cdc.bytes_uploaded as f64 / layer_bytes);
+        fixed_fractions.push(fixed.bytes_uploaded as f64 / layer_bytes);
+        cdc_uploaded.push(cdc.bytes_uploaded as f64);
+        fixed_uploaded.push(fixed.bytes_uploaded as f64);
+    }
+    let out = ShiftedInsert {
+        cdc_fraction: summarize(&cdc_fractions).mean,
+        fixed_fraction: summarize(&fixed_fractions).mean,
+        cdc_mean_uploaded: summarize(&cdc_uploaded).mean,
+        fixed_mean_uploaded: summarize(&fixed_uploaded).mean,
+    };
+
+    let mut table = Table::new(
+        &format!("one-line SHIFTED insert near the top of a ~2 MiB COPY layer ({n} trials)"),
+        &["wire format", "mean wire bytes", "fraction of layer"],
+    );
+    table.row(vec![
+        "v2 content-defined".into(),
+        format!("{:.0}", out.cdc_mean_uploaded),
+        format!("{:.2}%", 100.0 * out.cdc_fraction),
+    ]);
+    table.row(vec![
+        "v1 fixed 4 KiB".into(),
+        format!("{:.0}", out.fixed_mean_uploaded),
+        format!("{:.1}%", 100.0 * out.fixed_fraction),
+    ]);
+    table.print();
+    out
 }
 
 /// Build a project whose COPY layer is dominated by a deterministic
@@ -142,7 +251,7 @@ fn pipeline_sweep(root: &Path, n: usize) -> Vec<(usize, f64)> {
     let mut out = Vec::new();
     let mut base = 0.0;
     for jobs in JOBS {
-        let opts = PushOptions { jobs, whole_tar: false };
+        let opts = PushOptions { jobs, ..Default::default() };
         let t = summarize(&time_trials(1, n, |trial| {
             // A fresh remote per push: measure the wire, not the dedup.
             let rdir = root.join(format!("pipe-remote-j{jobs}-{trial}"));
@@ -167,7 +276,13 @@ fn pipeline_sweep(root: &Path, n: usize) -> Vec<(usize, f64)> {
 /// Write the machine-readable baseline: once into `bench_results/` and
 /// once at the repository root (the trajectory file later transport PRs
 /// compare against).
-fn emit_baseline(n: usize, layer_bytes: u64, mean_uploaded: f64, pipeline: &[(usize, f64)]) {
+fn emit_baseline(
+    n: usize,
+    layer_bytes: u64,
+    mean_uploaded: f64,
+    shifted: &ShiftedInsert,
+    pipeline: &[(usize, f64)],
+) {
     let point = |(jobs, mean): &(usize, f64)| {
         Json::obj(vec![
             ("jobs", Json::num(*jobs as f64)),
@@ -188,6 +303,15 @@ fn emit_baseline(n: usize, layer_bytes: u64, mean_uploaded: f64, pipeline: &[(us
         (
             "redeploy_upload_fraction",
             Json::num(mean_uploaded / layer_bytes as f64),
+        ),
+        (
+            "shifted_insert",
+            Json::obj(vec![
+                ("cdc_mean_uploaded_bytes", Json::num(shifted.cdc_mean_uploaded)),
+                ("cdc_upload_fraction", Json::num(shifted.cdc_fraction)),
+                ("fixed_mean_uploaded_bytes", Json::num(shifted.fixed_mean_uploaded)),
+                ("fixed_upload_fraction", Json::num(shifted.fixed_fraction)),
+            ]),
         ),
         ("push_cold", Json::Arr(pipeline.iter().map(point).collect())),
         ("push_speedup_4j", Json::num(speedup_4j)),

@@ -14,9 +14,44 @@ use crate::hash::{Digest, HashEngine, NativeEngine};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Below this many chunks (256 KiB of payload) sharding is not worth the
-/// thread spawns; the batch runs inline on the caller's thread.
+/// Below this many chunks (256 KiB of payload at the fixed chunk size)
+/// sharding is not worth the thread spawns; the batch runs inline on
+/// the caller's thread. Shared with the registry's CDC span digesting
+/// ([`crate::registry::cdc::digest_spans`]), whose spans are the same
+/// order of magnitude.
 pub const PARALLEL_THRESHOLD_CHUNKS: usize = 64;
+
+/// Generic contiguous-shard fan-out: split `items` into up to `threads`
+/// contiguous shards, run `f` on each shard on a [`std::thread::scope`]
+/// pool, and concatenate the per-shard results in order — so the output
+/// is bit-identical to `f(items)` whenever `f` maps each item
+/// independently. Batches under [`PARALLEL_THRESHOLD_CHUNKS`] run
+/// inline. Shared by the engine sharding below and the registry's CDC
+/// span/slice digesting ([`crate::registry::cdc`]).
+pub fn shard_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&[T]) -> Vec<R> + Sync,
+{
+    if threads <= 1 || items.len() < PARALLEL_THRESHOLD_CHUNKS {
+        return f(items);
+    }
+    let shards = threads.min(items.len());
+    let per_shard = items.len().div_ceil(shards);
+    let mut out = Vec::with_capacity(items.len());
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(per_shard)
+            .map(|shard| scope.spawn(move || f(shard)))
+            .collect();
+        for handle in handles {
+            out.extend(handle.join().expect("shard worker panicked"));
+        }
+    });
+    out
+}
 
 /// Hash a chunk batch by splitting it into up to `threads` contiguous
 /// shards executed on a [`std::thread::scope`] pool. Output order (and
@@ -26,22 +61,7 @@ pub fn shard_hash_chunks(
     chunks: &[&[u8]],
     threads: usize,
 ) -> Vec<Digest> {
-    if threads <= 1 || chunks.len() < PARALLEL_THRESHOLD_CHUNKS {
-        return engine.hash_chunks(chunks);
-    }
-    let shards = threads.min(chunks.len());
-    let per_shard = chunks.len().div_ceil(shards);
-    let mut out = Vec::with_capacity(chunks.len());
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = chunks
-            .chunks(per_shard)
-            .map(|shard| scope.spawn(move || engine.hash_chunks(shard)))
-            .collect();
-        for handle in handles {
-            out.extend(handle.join().expect("hash shard panicked"));
-        }
-    });
-    out
+    shard_map(chunks, threads, |shard| engine.hash_chunks(shard))
 }
 
 /// Run `f(0) .. f(n-1)` on a [`std::thread::scope`] pool of up to `jobs`

@@ -11,6 +11,13 @@
 //!   the per-chunk compressions: the native Rust path, the data-parallel
 //!   sharded wrapper ([`ParallelEngine`]), or the AOT-compiled XLA
 //!   executable via PJRT ([`crate::runtime`]).
+//!
+//! The fixed 4 KiB grid here is the **hashing kernel** (layer identity,
+//! sidecars, injection re-hash) and is deliberately distinct from how
+//! bytes are grouped on the registry wire: the transport chunks content
+//! at data-defined boundaries ([`crate::registry::cdc`]) so dedup
+//! survives insertions, while layer identity stays pinned to this
+//! module's digests.
 
 pub mod chunked;
 pub mod engine;

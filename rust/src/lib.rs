@@ -84,7 +84,7 @@ pub mod prelude {
     pub use crate::hash::{Digest, HashEngine, NativeEngine, ParallelEngine, Sha256};
     pub use crate::inject::{InjectMode, InjectOptions, InjectReport};
     pub use crate::oci::{Image, ImageId, ImageRef, LayerId};
-    pub use crate::registry::RemoteRegistry;
+    pub use crate::registry::{PullOptions, PushOptions, RemoteRegistry};
     pub use crate::workload::{Scenario, ScenarioKind};
 }
 

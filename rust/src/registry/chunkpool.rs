@@ -1,9 +1,13 @@
 //! Content-addressed chunk blob pool — the storage (and wire) unit of
 //! the chunk-granular registry transport.
 //!
-//! A pool is a flat directory of 4 KiB-or-smaller blobs, each named by
-//! the hex of its SHA-256 digest: `<pool>/<digest-hex>`. Two pools use
-//! this layout:
+//! A pool is a flat directory of blobs, each named by the hex of its
+//! SHA-256 digest: `<pool>/<digest-hex>`. Blob sizes follow the wire
+//! format that wrote them: content-defined chunks up to
+//! [`MAX_CHUNK`](super::cdc::MAX_CHUNK) (8 KiB) named by the digest of
+//! their raw bytes (v2 manifests), or fixed 4 KiB chunks named by the
+//! padded engine digest (v1 manifests); the two coexist in one pool.
+//! Two pools use this layout:
 //!
 //! * the **remote pool** at `<registry>/chunks/` — the deduplicated blob
 //!   store every pushed layer's manifest points into;
@@ -103,6 +107,27 @@ impl ChunkPool {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
             Err(e) => Err(e.into()),
         }
+    }
+
+    /// Every committed chunk digest (in-flight `.tmp-*` writes are
+    /// skipped). The iteration primitive behind
+    /// [`scrub`](super::RemoteRegistry::scrub) and
+    /// [`gc`](super::RemoteRegistry::gc); an absent pool directory
+    /// yields an empty list (legacy remotes have no pool).
+    pub fn list(&self) -> Result<Vec<Digest>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(entries) => entries,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(e.into()),
+        };
+        for entry in entries {
+            if let Some(digest) = Digest::parse(&entry?.file_name().to_string_lossy()) {
+                out.push(digest);
+            }
+        }
+        out.sort_by_key(|d| d.0);
+        Ok(out)
     }
 
     /// Number of committed chunks.

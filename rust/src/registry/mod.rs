@@ -12,9 +12,7 @@
 //!
 //! # Transport protocol
 //!
-//! Two wire models coexist, negotiated per registry:
-//!
-//! **v2 — chunk-addressed (the default).** The remote layout is
+//! The chunk-addressed remote layout is
 //!
 //! ```text
 //! <root>/chunks/<chunk-digest>        — deduplicated chunk blob pool
@@ -24,42 +22,93 @@
 //! <root>/tags.json
 //! ```
 //!
-//! A layer is represented remotely by its **chunk manifest** (the
-//! [`ChunkDigest`] encoding: total length, root, and the digest of every
-//! fixed 4 KiB chunk) plus the pool blobs the manifest points into. Push
-//! **negotiates**: for each chunk of each layer it asks the pool
-//! "have you got this digest?" and streams only the novel chunks — so a
-//! clone-inject redeploy whose COPY layer differs by one edit uploads
-//! O(changed chunks) bytes instead of O(layer). Pull reassembles each
-//! layer tar from the manifest, preferring the local staging pool
-//! (chunks fetched by a previously interrupted pull) over the wire, and
-//! verifies every fetched chunk against its declared digest before
-//! committing it.
+//! A layer is represented remotely by its **chunk manifest** plus the
+//! pool blobs the manifest points into. Push **negotiates**: for each
+//! chunk of each layer it asks the pool "have you got this digest?" and
+//! streams only the novel chunks — so a clone-inject redeploy whose
+//! COPY layer differs by one edit uploads O(changed chunks) bytes
+//! instead of O(layer). Pull reassembles each layer tar from the
+//! manifest, preferring the local staging pool (chunks fetched by a
+//! previously interrupted pull) over the wire, and verifies every
+//! transferred chunk against its declared digest before committing it.
 //!
-//! **v1 — whole-tar fallback.** A registry without a chunk pool (opened
-//! via [`RemoteRegistry::open_legacy`], modelling a pre-chunk
-//! deployment) stores `layers/<layer-id>/layer.tar` and push falls back
-//! to uploading whole verified tarballs; pull reads them back. The two
-//! models interoperate per layer: a pull consults the manifest when one
-//! exists and the tar otherwise, so a v1 registry later reopened with
-//! chunk support serves mixed layouts transparently.
+//! ## Manifest codecs
+//!
+//! **v2 — content-defined chunks (the default writer).** The tar is
+//! split by the FastCDC-style chunker in [`cdc`] (gear rolling hash,
+//! normalized chunking with min/avg/max = 2/4/8 KiB — the exact
+//! parameters, gear seed and masks are documented there and are part of
+//! this wire contract: changing them silently breaks cross-version
+//! dedup, though never correctness, since v2 manifests carry explicit
+//! per-chunk lengths). Each chunk is pool-addressed by the SHA-256 of
+//! its **raw bytes**, so the pool can re-derive every v2 chunk's name
+//! from its content alone — what [`RemoteRegistry::scrub`] exploits.
+//! Content-defined boundaries make dedup **shift-robust**: a one-line
+//! insertion near the top of a layer re-uploads only the chunks around
+//! the edit, where the fixed 4 KiB grid of v1 would invalidate every
+//! chunk downstream of the insertion (~100% of the layer).
+//!
+//! **v1 — fixed 4 KiB chunks (read compatibility).** The
+//! [`ChunkDigest`] encoding: total length, root, and the engine digest
+//! (padded 4104-byte chunk message — see
+//! [`crate::hash::engine::chunk_message_blocks`]) of every fixed-size
+//! chunk. Still written on request ([`PushOptions::manifest_v1`], the
+//! benchmark baseline and cross-version escape hatch) and always
+//! readable: pull detects the codec per layer (v2 manifests carry a
+//! magic + self-digest; v1 manifests are root-checked), so remotes
+//! populated by older builds keep serving.
+//!
+//! **Legacy — whole-tar.** A registry without a chunk pool (opened via
+//! [`RemoteRegistry::open_legacy`], modelling a pre-chunk deployment)
+//! stores `layers/<layer-id>/layer.tar`; push falls back to uploading
+//! whole verified tarballs, pull reads them back.
+//!
+//! ## Compatibility matrix
+//!
+//! | remote \ writer        | v2 (CDC) push      | v1 forced push     | old (pre-CDC) build |
+//! |------------------------|--------------------|--------------------|---------------------|
+//! | chunk pool present     | v2 manifest        | v1 manifest        | v1 manifest         |
+//! | legacy (no pool)       | whole tar          | whole tar          | whole tar           |
+//! |                        |                    |                    |                     |
+//! | **pull** of any layer  | by manifest codec  | by manifest codec  | v1 + tar only       |
+//!
+//! All three layer representations coexist in one remote and pull
+//! per-layer. v1 and v2 chunks never dedup against each other (different
+//! boundaries *and* different digest schemes) — that cost is the reason
+//! the chunking parameters are frozen as wire contract.
 //!
 //! # Pipelining
 //!
 //! Push and pull run their per-layer work — read, verify, chunk,
 //! negotiate, transfer — on a scoped worker pool
 //! ([`crate::builder::parallel::scoped_index_map`]) sized by
-//! [`PushOptions::jobs`]/[`PullOptions::jobs`]. During push only
-//! content-addressed pool writes happen concurrently; everything the
-//! registry *serves* (checksum traces, manifests, image configs, tags)
-//! commits serially, in layer order, only after every layer has
-//! verified. A pipelined push therefore produces a bit-identical remote
-//! tree to a serial one, and an interrupted push leaves at worst orphan
-//! pool chunks — which the next push negotiates away instead of
-//! re-uploading.
+//! [`PushOptions::jobs`]/[`PullOptions::jobs`]; a single-layer v2 push
+//! additionally shards the CDC chunk digesting across the same width
+//! ([`cdc::digest_spans`]), so the rolling hash never serializes the
+//! redeploy hot path. During push only content-addressed pool writes
+//! happen concurrently; everything the registry *serves* (checksum
+//! traces, manifests, image configs, tags) commits serially, in layer
+//! order, only after every layer has verified. A pipelined push
+//! therefore produces a bit-identical remote tree to a serial one, and
+//! an interrupted push leaves at worst orphan pool chunks — which the
+//! next push negotiates away instead of re-uploading.
+//!
+//! # Maintenance
+//!
+//! * [`RemoteRegistry::scrub`] re-hashes every pool chunk and deletes
+//!   mismatches; layers whose manifests reference a dropped chunk are
+//!   **demoted** (checksum trace removed) so the next push of any image
+//!   containing them re-uploads just the missing chunks instead of
+//!   trusting `has()` forever — rot is repaired by routine redeploys.
+//! * [`RemoteRegistry::gc`] mark-and-sweeps from `tags.json`: untagged
+//!   image configs, their unreferenced layer dirs, and pool chunks no
+//!   surviving manifest references are deleted. Run it quiesced (a
+//!   concurrent push's not-yet-committed chunks look like garbage).
 
+pub mod cdc;
 pub mod chunkpool;
 
+pub use cdc::CdcManifest;
 pub use chunkpool::ChunkPool;
 
 use crate::builder::parallel::scoped_index_map;
@@ -91,9 +140,14 @@ pub struct PushOptions {
     /// `1` is the sequential baseline; any `jobs` level produces a
     /// bit-identical remote tree.
     pub jobs: usize,
-    /// Force the v1 whole-tar wire mode even against a chunk-capable
-    /// remote (benchmark baseline / escape hatch).
+    /// Force the legacy whole-tar wire mode even against a
+    /// chunk-capable remote (benchmark baseline / escape hatch).
     pub whole_tar: bool,
+    /// Write v1 fixed-chunk manifests instead of v2 content-defined
+    /// ones: the cross-version escape hatch, and the benchmark baseline
+    /// that shows why shift-robust chunking matters. Ignored in
+    /// whole-tar mode.
+    pub manifest_v1: bool,
 }
 
 impl Default for PushOptions {
@@ -101,6 +155,7 @@ impl Default for PushOptions {
         PushOptions {
             jobs: 1,
             whole_tar: false,
+            manifest_v1: false,
         }
     }
 }
@@ -157,6 +212,37 @@ pub struct PullReport {
     pub chunks_local: usize,
 }
 
+/// Result of a [`RemoteRegistry::scrub`] pass over the chunk pool.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Pool chunks re-hashed.
+    pub chunks_checked: usize,
+    /// Chunks whose bytes no longer matched their content address —
+    /// deleted, so the next push re-uploads them instead of trusting
+    /// `has()`.
+    pub chunks_dropped: usize,
+    /// Bytes those dropped chunks occupied.
+    pub bytes_dropped: u64,
+    /// Layers whose manifest referenced a dropped chunk: their checksum
+    /// trace is removed so the next push of any image containing them
+    /// re-commits (and thereby re-uploads the missing chunks) instead of
+    /// skipping the layer as `AlreadyExists`.
+    pub layers_demoted: usize,
+}
+
+/// Result of a [`RemoteRegistry::gc`] mark-and-sweep.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Image configs not reachable from any tag — deleted.
+    pub images_dropped: usize,
+    /// Layer directories not referenced by any surviving image — deleted.
+    pub layers_dropped: usize,
+    /// Pool chunks no surviving manifest references — deleted.
+    pub chunks_dropped: usize,
+    /// Pool bytes reclaimed by the chunk sweep.
+    pub bytes_reclaimed: u64,
+}
+
 /// What one pipelined push worker produced for one layer.
 struct LayerUpload {
     /// Whole-tar digest — hashed exactly once, used both for the
@@ -164,12 +250,23 @@ struct LayerUpload {
     digest: Digest,
     /// Retained only in whole-tar mode (chunked mode commits via pool).
     tar: Vec<u8>,
-    /// The chunk manifest to commit (`None` in whole-tar mode).
-    manifest: Option<ChunkDigest>,
+    /// The encoded chunk manifest to commit (`None` in whole-tar mode):
+    /// v2 ([`CdcManifest::encode`]) by default, v1
+    /// ([`ChunkDigest::encode`]) under [`PushOptions::manifest_v1`].
+    manifest: Option<Vec<u8>>,
     bytes_uploaded: u64,
     bytes_deduped: u64,
     chunks_uploaded: usize,
     chunks_deduped: usize,
+}
+
+/// Per-layer transfer accounting shared by the pull paths.
+#[derive(Default)]
+struct ChunkStats {
+    bytes_fetched: u64,
+    bytes_local: u64,
+    chunks_fetched: usize,
+    chunks_local: usize,
 }
 
 /// What one pipelined pull worker did for one layer.
@@ -236,10 +333,11 @@ impl RemoteRegistry {
             .and_then(|s| Digest::parse(s.trim()))
     }
 
-    /// The remote's chunk manifest for a layer, if it stores one (v2
-    /// layers). `None` for whole-tar (v1) layers or corrupt manifests.
-    pub fn layer_manifest(&self, id: &LayerId) -> Option<ChunkDigest> {
-        ChunkDigest::decode(&std::fs::read(self.layer_dir(id).join("layer.chunks")).ok()?)
+    /// The remote's chunk manifest for a layer, if it stores one, in
+    /// whichever codec it was pushed with. `None` for whole-tar (legacy)
+    /// layers or corrupt manifests.
+    pub fn layer_manifest(&self, id: &LayerId) -> Option<LayerManifest> {
+        decode_manifest(&std::fs::read(self.layer_dir(id).join("layer.chunks")).ok()?)
     }
 
     /// Push an image (resolved from the local stores) with the default
@@ -342,23 +440,6 @@ impl RemoteRegistry {
                     chunks_deduped: 0,
                 });
             };
-            // Manifest: reuse the store's sidecar when it demonstrably
-            // describes this tar (length and image-declared root agree);
-            // recompute from the already-loaded bytes otherwise (e.g. a
-            // sidecar gone stale after a raw in-place tar write) — never
-            // re-reading the tar from disk.
-            let cd = match layers.try_chunk_sidecar(lid) {
-                Some(cd) if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] => {
-                    cd
-                }
-                _ => ChunkDigest::compute(&tar, engine),
-            };
-            if cd.root != image.chunk_roots[i] {
-                return Err(Error::Registry(format!(
-                    "layer {} chunk root does not match the image's metadata",
-                    lid.short()
-                )));
-            }
             let mut up = LayerUpload {
                 digest,
                 tar: Vec::new(),
@@ -368,8 +449,11 @@ impl RemoteRegistry {
                 chunks_uploaded: 0,
                 chunks_deduped: 0,
             };
-            for (j, chunk_digest) in cd.chunks.iter().enumerate() {
-                let chunk = &tar[j * CHUNK_SIZE..((j + 1) * CHUNK_SIZE).min(tar.len())];
+            // Stream one chunk through the claim/negotiate/upload gate.
+            // Accounting is deterministic at any `jobs` width: duplicate
+            // chunks carry identical bytes, so whichever worker claims
+            // first, the totals are the same.
+            let mut send = |chunk_digest: &Digest, chunk: &[u8]| -> Result<()> {
                 let first_claim = claimed.lock().unwrap().insert(*chunk_digest);
                 if first_claim && !pool.has(chunk_digest) {
                     pool.put(chunk_digest, chunk)?;
@@ -379,8 +463,70 @@ impl RemoteRegistry {
                     up.bytes_deduped += chunk.len() as u64;
                     up.chunks_deduped += 1;
                 }
+                Ok(())
+            };
+            if opts.manifest_v1 {
+                // v1 writer: fixed 4 KiB chunks named by engine digests.
+                // Manifest: reuse the store's sidecar when it demonstrably
+                // describes this tar (length and image-declared root
+                // agree); recompute from the already-loaded bytes
+                // otherwise (e.g. a sidecar gone stale after a raw
+                // in-place tar write) — never re-reading the tar.
+                let cd = match layers.try_chunk_sidecar(lid) {
+                    Some(cd)
+                        if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] =>
+                    {
+                        cd
+                    }
+                    _ => ChunkDigest::compute(&tar, engine),
+                };
+                if cd.root != image.chunk_roots[i] {
+                    return Err(Error::Registry(format!(
+                        "layer {} chunk root does not match the image's metadata",
+                        lid.short()
+                    )));
+                }
+                for (j, chunk_digest) in cd.chunks.iter().enumerate() {
+                    send(chunk_digest, &tar[j * CHUNK_SIZE..((j + 1) * CHUNK_SIZE).min(tar.len())])?;
+                }
+                up.manifest = Some(cd.encode());
+            } else {
+                // v2 writer: content-defined chunks named by the SHA-256
+                // of their raw bytes. Layer-identity validation stays as
+                // strict as the v1 writer's: the image's fixed-chunk
+                // root must describe this tar — vouched by the store's
+                // sidecar when it demonstrably agrees (free), recomputed
+                // from the already-loaded bytes otherwise — so a stale
+                // `chunk_roots` entry fails here, on the machine that
+                // can fix it, not at every later pull.
+                let root = match layers.try_chunk_sidecar(lid) {
+                    Some(cd)
+                        if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] =>
+                    {
+                        cd.root
+                    }
+                    _ => ChunkDigest::compute(&tar, engine).root,
+                };
+                if root != image.chunk_roots[i] {
+                    return Err(Error::Registry(format!(
+                        "layer {} chunk root does not match the image's metadata",
+                        lid.short()
+                    )));
+                }
+                // When this push uploads a single layer (the redeploy
+                // hot path) the layer pipeline is idle, so the span
+                // digesting borrows its width instead; multi-layer
+                // pushes already saturate it one layer per worker.
+                let span_jobs = if uploads.len() == 1 { opts.jobs } else { 1 };
+                let manifest = CdcManifest::from_data(&tar, span_jobs);
+                let mut offset = 0usize;
+                for (chunk_digest, len) in &manifest.chunks {
+                    let chunk = &tar[offset..offset + *len as usize];
+                    offset += *len as usize;
+                    send(chunk_digest, chunk)?;
+                }
+                up.manifest = Some(manifest.encode());
             }
-            up.manifest = Some(cd);
             Ok(up)
         })?;
 
@@ -402,7 +548,7 @@ impl RemoteRegistry {
             let dir = self.layer_dir(&image.layer_ids[i]);
             std::fs::create_dir_all(&dir)?;
             match &up.manifest {
-                Some(cd) => std::fs::write(dir.join("layer.chunks"), cd.encode())?,
+                Some(encoded) => std::fs::write(dir.join("layer.chunks"), encoded)?,
                 None => std::fs::write(dir.join("layer.tar"), &up.tar)?,
             }
             // The digest computed during verification IS the checksum
@@ -443,12 +589,15 @@ impl RemoteRegistry {
     /// the local store whose content verifies against the declared
     /// checksum are skipped, and chunks fetched by an earlier
     /// interrupted pull are replayed from the staging pool instead of
-    /// the wire. Each layer's tar is
-    /// hashed exactly once (the checkpointed store pass); every
-    /// transferred chunk — staged or wire-fetched — is verified against
-    /// its declared digest in a batched engine call before use, and a
-    /// poisoned staging entry (torn write from a crash) is dropped and
-    /// re-fetched instead of wedging the pull.
+    /// the wire. Every transferred chunk — staged or wire-fetched — is
+    /// verified against its declared digest before use, under the
+    /// manifest's addressing scheme (sharded raw SHA-256 for v2, a
+    /// batched engine call for v1), and a poisoned staging entry (torn
+    /// write from a crash) is dropped and re-fetched instead of wedging
+    /// the pull. Whole-tar passes per layer: the checkpointed store
+    /// hash, plus — for v2 layers, whose wire chunks are decoupled from
+    /// the fixed-chunk kernel — one engine pass rebuilding the local
+    /// chunk sidecar.
     pub fn pull_with(
         &self,
         r: &ImageRef,
@@ -463,11 +612,7 @@ impl RemoteRegistry {
             .and_then(|v| v.as_str())
             .and_then(ImageId::parse)
             .ok_or_else(|| Error::Registry(format!("remote has no tag {r}")))?;
-        let text = std::fs::read_to_string(
-            self.root.join("images").join(format!("{}.json", image_id.to_hex())),
-        )
-        .map_err(|e| Error::Registry(format!("remote image {} missing: {e}", image_id.short())))?;
-        let image = Image::from_json(&Json::parse(&text).map_err(Error::Json)?)?;
+        let image = self.load_image(&image_id)?;
 
         let pool = ChunkPool::at(&self.chunk_pool_dir());
         // Staging is keyed by image id: a resumed pull of the same image
@@ -477,7 +622,7 @@ impl RemoteRegistry {
             ChunkPool::open(&layers.root().join("pull-staging").join(image_id.to_hex()))?;
 
         let results = scoped_index_map(image.layer_ids.len(), opts.jobs, |i| {
-            self.pull_layer(&image, i, layers, engine, &pool, &staging)
+            self.pull_layer(&image, i, layers, engine, &pool, &staging, opts.jobs)
         })?;
 
         let stored = images.put(&image)?;
@@ -515,6 +660,9 @@ impl RemoteRegistry {
     }
 
     /// Transfer + store one layer (a pipelined pull worker's job).
+    /// `verify_jobs` sizes the sharded raw-SHA verification of v2
+    /// chunks — the analogue of a parallel engine verifying v1 batches.
+    #[allow(clippy::too_many_arguments)]
     fn pull_layer(
         &self,
         image: &Image,
@@ -523,6 +671,7 @@ impl RemoteRegistry {
         engine: &dyn HashEngine,
         pool: &ChunkPool,
         staging: &ChunkPool,
+        verify_jobs: usize,
     ) -> Result<LayerPull> {
         let lid = image.layer_ids[i];
         let declared = image.diff_ids[i];
@@ -538,97 +687,77 @@ impl RemoteRegistry {
                 }
             }
         }
-        let mut bytes_fetched = 0u64;
-        let mut bytes_local = 0u64;
-        let mut chunks_fetched = 0usize;
-        let mut chunks_local = 0usize;
-        // A present-but-undecodable manifest is corruption, not a v1
+        // A present-but-undecodable manifest is corruption, not a legacy
         // layer — falling through to the tar path would mask it behind
         // a misleading "layer missing" error.
         let manifest_path = self.layer_dir(&lid).join("layer.chunks");
         let manifest = if manifest_path.exists() {
-            Some(ChunkDigest::decode(&std::fs::read(&manifest_path)?).ok_or_else(|| {
+            Some(decode_manifest(&std::fs::read(&manifest_path)?).ok_or_else(|| {
                 Error::Registry(format!("remote manifest for layer {} is corrupt", lid.short()))
             })?)
         } else {
             None
         };
+        let mut stats = ChunkStats::default();
         let (tar, cd) = match manifest {
-            Some(cd) => {
+            Some(LayerManifest::V2(m)) => {
+                // v2: variable-size chunks, addressed by raw SHA-256.
+                let expected: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
+                let chunk_bytes = resolve_chunks(
+                    &lid,
+                    &expected,
+                    pool,
+                    staging,
+                    &mut stats,
+                    &|slices: &[&[u8]]| cdc::digest_slices(slices, verify_jobs),
+                )?;
+                let mut tar = Vec::with_capacity(m.total_len as usize);
+                for (j, bytes) in chunk_bytes.iter().enumerate() {
+                    if bytes.len() as u64 != m.chunks[j].1 as u64 {
+                        return Err(Error::Registry(format!(
+                            "remote chunk {j} of layer {} is {} bytes, manifest says {}",
+                            lid.short(),
+                            bytes.len(),
+                            m.chunks[j].1
+                        )));
+                    }
+                    tar.extend_from_slice(bytes);
+                }
+                if tar.len() as u64 != m.total_len {
+                    return Err(Error::Registry(format!(
+                        "remote layer {} chunks reassemble to {} bytes, manifest says {}",
+                        lid.short(),
+                        tar.len(),
+                        m.total_len
+                    )));
+                }
+                // The local sidecar stays on the fixed-chunk hashing
+                // kernel: wire format and layer identity are independent.
+                let cd = ChunkDigest::compute(&tar, engine);
                 if cd.root != image.chunk_roots[i] {
                     return Err(Error::Registry(format!(
                         "remote manifest for layer {} does not match the image's chunk root",
                         lid.short()
                     )));
                 }
-                // Resolve every chunk to VERIFIED bytes before assembly.
-                // Staged bytes are as untrusted as wire bytes — a
-                // crashed pull can commit a torn write into staging — so
-                // both sources go through the engine, and a poisoned
-                // staging entry is dropped and re-fetched rather than
-                // wedging every future pull of this image.
-                let n = cd.chunks.len();
-                let mut chunk_bytes: Vec<Vec<u8>> = Vec::with_capacity(n);
-                let mut staged: Vec<bool> = Vec::with_capacity(n);
-                for chunk_digest in &cd.chunks {
-                    match staging.try_get(chunk_digest) {
-                        Some(bytes) => {
-                            chunk_bytes.push(bytes);
-                            staged.push(true);
-                        }
-                        None => {
-                            chunk_bytes.push(pool.get(chunk_digest)?);
-                            staged.push(false);
-                        }
-                    }
+                (tar, cd)
+            }
+            Some(LayerManifest::V1(cd)) => {
+                // v1: fixed 4 KiB chunks, addressed by engine digests.
+                if cd.root != image.chunk_roots[i] {
+                    return Err(Error::Registry(format!(
+                        "remote manifest for layer {} does not match the image's chunk root",
+                        lid.short()
+                    )));
                 }
-                let slices: Vec<&[u8]> = chunk_bytes.iter().map(|b| b.as_slice()).collect();
-                let digests = engine.hash_chunks(&slices);
-                drop(slices);
-                let mut retry: Vec<usize> = Vec::new();
-                for j in 0..n {
-                    if digests[j] == cd.chunks[j] {
-                        continue;
-                    }
-                    if !staged[j] {
-                        return Err(Error::Registry(format!(
-                            "remote chunk {j} of layer {} corrupt",
-                            lid.short()
-                        )));
-                    }
-                    staging.remove(&cd.chunks[j])?;
-                    retry.push(j);
-                }
-                if !retry.is_empty() {
-                    let mut refetched = Vec::with_capacity(retry.len());
-                    for &j in &retry {
-                        refetched.push(pool.get(&cd.chunks[j])?);
-                    }
-                    let slices: Vec<&[u8]> = refetched.iter().map(|b| b.as_slice()).collect();
-                    let redigests = engine.hash_chunks(&slices);
-                    drop(slices);
-                    for (k, &j) in retry.iter().enumerate() {
-                        if redigests[k] != cd.chunks[j] {
-                            return Err(Error::Registry(format!(
-                                "remote chunk {j} of layer {} corrupt",
-                                lid.short()
-                            )));
-                        }
-                    }
-                    for (k, &j) in retry.iter().enumerate() {
-                        chunk_bytes[j] = std::mem::take(&mut refetched[k]);
-                        staged[j] = false;
-                    }
-                }
-                for (j, bytes) in chunk_bytes.iter().enumerate() {
-                    if staged[j] {
-                        bytes_local += bytes.len() as u64;
-                        chunks_local += 1;
-                    } else {
-                        bytes_fetched += bytes.len() as u64;
-                        chunks_fetched += 1;
-                    }
-                }
+                let chunk_bytes = resolve_chunks(
+                    &lid,
+                    &cd.chunks,
+                    pool,
+                    staging,
+                    &mut stats,
+                    &|slices: &[&[u8]]| engine.hash_chunks(slices),
+                )?;
                 let mut tar = Vec::with_capacity(cd.total_len as usize);
                 for bytes in &chunk_bytes {
                     tar.extend_from_slice(bytes);
@@ -641,24 +770,24 @@ impl RemoteRegistry {
                         cd.total_len
                     )));
                 }
-                // Stage what came over the wire — only after it verified.
-                for (j, bytes) in chunk_bytes.iter().enumerate() {
-                    if !staged[j] {
-                        staging.put(&cd.chunks[j], bytes)?;
-                    }
-                }
                 (tar, cd)
             }
             None => {
-                // v1 layer: whole tar over the wire.
+                // Legacy layer: whole tar over the wire.
                 let tar = std::fs::read(self.layer_dir(&lid).join("layer.tar")).map_err(|e| {
                     Error::Registry(format!("remote layer {} missing: {e}", lid.short()))
                 })?;
-                bytes_fetched += tar.len() as u64;
+                stats.bytes_fetched += tar.len() as u64;
                 let cd = ChunkDigest::compute(&tar, engine);
                 (tar, cd)
             }
         };
+        let ChunkStats {
+            bytes_fetched,
+            bytes_local,
+            chunks_fetched,
+            chunks_local,
+        } = stats;
         // The layer's single full hashing pass: integrity on pull, plus
         // the SHA checkpoints the store persists for later injections.
         let (digest, ckpts) = crate::hash::hash_with_checkpoints(&tar);
@@ -686,6 +815,169 @@ impl RemoteRegistry {
         })
     }
 
+    /// Drop a tag (the precondition for [`RemoteRegistry::gc`] to
+    /// collect anything). Returns whether the tag existed.
+    pub fn untag(&self, r: &ImageRef) -> Result<bool> {
+        let tags = self.load_tags()?;
+        let key = r.to_string();
+        let Json::Obj(fields) = tags else {
+            return Err(Error::Registry("tags.json is not an object".into()));
+        };
+        let before = fields.len();
+        let kept: Vec<(String, Json)> = fields.into_iter().filter(|(k, _)| *k != key).collect();
+        let existed = kept.len() != before;
+        if existed {
+            std::fs::write(self.tags_path(), Json::Obj(kept).to_string_pretty())?;
+        }
+        Ok(existed)
+    }
+
+    /// Re-hash every pool chunk and delete the ones whose bytes no
+    /// longer match their content address (bit rot, torn writes) —
+    /// the detection half of pool maintenance.
+    ///
+    /// Push negotiation trusts `has()`: without this pass, a rotted
+    /// chunk fails every pull loudly but is never re-uploaded, because
+    /// every pusher skips chunks the pool claims to hold. Scrub closes
+    /// the loop: the rotted blob is deleted, and any layer whose
+    /// manifest references it is **demoted** (its checksum trace
+    /// removed), so the next push of an image containing that layer
+    /// re-commits it — re-uploading only the missing chunks, since the
+    /// intact ones still negotiate away.
+    ///
+    /// A chunk is intact when its bytes re-derive its name under either
+    /// pool addressing scheme: SHA-256 of the raw bytes (v2) or the
+    /// padded engine digest (v1, chunks ≤ 4 KiB only).
+    pub fn scrub(&self) -> Result<ScrubReport> {
+        let mut report = ScrubReport::default();
+        if !self.supports_chunks() {
+            return Ok(report);
+        }
+        let pool = ChunkPool::at(&self.chunk_pool_dir());
+        let mut dropped: HashSet<Digest> = HashSet::new();
+        for digest in pool.list()? {
+            let Some(bytes) = pool.try_get(&digest) else {
+                continue;
+            };
+            report.chunks_checked += 1;
+            let intact = Digest::of(&bytes) == digest
+                || (bytes.len() <= CHUNK_SIZE && NativeEngine::chunk_digest(&bytes) == digest);
+            if !intact {
+                pool.remove(&digest)?;
+                report.chunks_dropped += 1;
+                report.bytes_dropped += bytes.len() as u64;
+                dropped.insert(digest);
+            }
+        }
+        if dropped.is_empty() {
+            return Ok(report);
+        }
+        // Demote every layer whose manifest references a dropped chunk:
+        // with the checksum trace gone, push's phase-1 negotiation sees
+        // the layer as missing and re-commits it instead of skipping.
+        for lid in self.list_layer_dirs()? {
+            let Some(manifest) = self.layer_manifest(&lid) else {
+                continue;
+            };
+            let poisoned = match &manifest {
+                LayerManifest::V2(m) => m.chunks.iter().any(|(d, _)| dropped.contains(d)),
+                LayerManifest::V1(cd) => cd.chunks.iter().any(|d| dropped.contains(d)),
+            };
+            if poisoned && self.layer_dir(&lid).join("checksum").exists() {
+                std::fs::remove_file(self.layer_dir(&lid).join("checksum"))?;
+                report.layers_demoted += 1;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Mark-and-sweep over the per-layer manifests: delete image configs
+    /// no tag references, layer directories no surviving image
+    /// references, and pool chunks no surviving manifest references —
+    /// the remote analogue of the local `prune`.
+    ///
+    /// Must run quiesced: an in-flight push's not-yet-committed pool
+    /// chunks are indistinguishable from garbage. A corrupt manifest on
+    /// a *live* layer aborts the sweep (deleting chunks it might
+    /// reference would turn detectable corruption into data loss) —
+    /// repair via [`RemoteRegistry::scrub`] + re-push first.
+    pub fn gc(&self) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        let live_images: HashSet<ImageId> = self.tags()?.into_iter().map(|(_, id)| id).collect();
+        let mut live_layers: HashSet<LayerId> = HashSet::new();
+        for id in &live_images {
+            live_layers.extend(self.load_image(id)?.layer_ids.iter().copied());
+        }
+        // Sweep image configs.
+        for entry in std::fs::read_dir(self.root.join("images"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let id = name.strip_suffix(".json").and_then(ImageId::parse);
+            if id.map(|id| !live_images.contains(&id)).unwrap_or(false) {
+                std::fs::remove_file(entry.path())?;
+                report.images_dropped += 1;
+            }
+        }
+        // Sweep layer dirs, marking live chunks as we keep them.
+        let mut live_chunks: HashSet<Digest> = HashSet::new();
+        for lid in self.list_layer_dirs()? {
+            if !live_layers.contains(&lid) {
+                std::fs::remove_dir_all(self.layer_dir(&lid))?;
+                report.layers_dropped += 1;
+                continue;
+            }
+            let manifest_path = self.layer_dir(&lid).join("layer.chunks");
+            if !manifest_path.exists() {
+                continue; // legacy whole-tar layer: no chunks to mark
+            }
+            match decode_manifest(&std::fs::read(&manifest_path)?) {
+                Some(LayerManifest::V2(m)) => live_chunks.extend(m.chunks.iter().map(|(d, _)| *d)),
+                Some(LayerManifest::V1(cd)) => live_chunks.extend(cd.chunks.iter().copied()),
+                None => {
+                    return Err(Error::Registry(format!(
+                        "gc aborted: live layer {} has a corrupt manifest (scrub + re-push first)",
+                        lid.short()
+                    )));
+                }
+            }
+        }
+        // Sweep the pool.
+        if self.supports_chunks() {
+            let pool = ChunkPool::at(&self.chunk_pool_dir());
+            for digest in pool.list()? {
+                if !live_chunks.contains(&digest) {
+                    if let Some(bytes) = pool.try_get(&digest) {
+                        report.bytes_reclaimed += bytes.len() as u64;
+                    }
+                    pool.remove(&digest)?;
+                    report.chunks_dropped += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Every layer id with a directory on this remote.
+    fn list_layer_dirs(&self) -> Result<Vec<LayerId>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("layers"))? {
+            if let Some(lid) = LayerId::parse(&entry?.file_name().to_string_lossy()) {
+                out.push(lid);
+            }
+        }
+        out.sort_by_key(|l| l.to_hex());
+        Ok(out)
+    }
+
+    /// Load a remote image config by id.
+    fn load_image(&self, id: &ImageId) -> Result<Image> {
+        let text = std::fs::read_to_string(
+            self.root.join("images").join(format!("{}.json", id.to_hex())),
+        )
+        .map_err(|e| Error::Registry(format!("remote image {} missing: {e}", id.short())))?;
+        Image::from_json(&Json::parse(&text).map_err(Error::Json)?)
+    }
+
     /// All remote tags.
     pub fn tags(&self) -> Result<Vec<(ImageRef, ImageId)>> {
         let tags = self.load_tags()?;
@@ -703,6 +995,109 @@ impl RemoteRegistry {
     fn load_tags(&self) -> Result<Json> {
         Json::parse(&std::fs::read_to_string(self.tags_path())?).map_err(Error::Json)
     }
+}
+
+/// A remote layer's chunk manifest, in whichever codec it was written.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerManifest {
+    /// Fixed 4 KiB chunks addressed by engine digests (the pre-CDC wire
+    /// format; still written under [`PushOptions::manifest_v1`]).
+    V1(ChunkDigest),
+    /// Content-defined chunks with explicit lengths, addressed by the
+    /// SHA-256 of their raw bytes.
+    V2(CdcManifest),
+}
+
+/// Decode a `layer.chunks` file, trying the v2 codec (magic +
+/// self-digest) first and the v1 codec (root-checked) second. `None`
+/// means corruption: neither codec's integrity check passed.
+fn decode_manifest(bytes: &[u8]) -> Option<LayerManifest> {
+    if let Some(m) = CdcManifest::decode(bytes) {
+        return Some(LayerManifest::V2(m));
+    }
+    ChunkDigest::decode(bytes).map(LayerManifest::V1)
+}
+
+/// Resolve every expected chunk to VERIFIED bytes, preferring the local
+/// staging pool over the wire. Staged bytes are as untrusted as wire
+/// bytes — a crashed pull can commit a torn write into staging — so both
+/// sources go through `hash_batch` (the codec's addressing scheme), and
+/// a poisoned staging entry is dropped and re-fetched rather than
+/// wedging every future pull of this image. Wire-fetched chunks are
+/// staged once they verify, so an interrupted pull resumes for free.
+fn resolve_chunks(
+    lid: &LayerId,
+    expected: &[Digest],
+    pool: &ChunkPool,
+    staging: &ChunkPool,
+    stats: &mut ChunkStats,
+    hash_batch: &dyn Fn(&[&[u8]]) -> Vec<Digest>,
+) -> Result<Vec<Vec<u8>>> {
+    let n = expected.len();
+    let mut chunk_bytes: Vec<Vec<u8>> = Vec::with_capacity(n);
+    let mut staged: Vec<bool> = Vec::with_capacity(n);
+    for chunk_digest in expected {
+        match staging.try_get(chunk_digest) {
+            Some(bytes) => {
+                chunk_bytes.push(bytes);
+                staged.push(true);
+            }
+            None => {
+                chunk_bytes.push(pool.get(chunk_digest)?);
+                staged.push(false);
+            }
+        }
+    }
+    let slices: Vec<&[u8]> = chunk_bytes.iter().map(|b| b.as_slice()).collect();
+    let digests = hash_batch(&slices);
+    drop(slices);
+    let mut retry: Vec<usize> = Vec::new();
+    for j in 0..n {
+        if digests[j] == expected[j] {
+            continue;
+        }
+        if !staged[j] {
+            return Err(Error::Registry(format!(
+                "remote chunk {j} of layer {} corrupt",
+                lid.short()
+            )));
+        }
+        staging.remove(&expected[j])?;
+        retry.push(j);
+    }
+    if !retry.is_empty() {
+        let mut refetched = Vec::with_capacity(retry.len());
+        for &j in &retry {
+            refetched.push(pool.get(&expected[j])?);
+        }
+        let slices: Vec<&[u8]> = refetched.iter().map(|b| b.as_slice()).collect();
+        let redigests = hash_batch(&slices);
+        drop(slices);
+        for (k, &j) in retry.iter().enumerate() {
+            if redigests[k] != expected[j] {
+                return Err(Error::Registry(format!(
+                    "remote chunk {j} of layer {} corrupt",
+                    lid.short()
+                )));
+            }
+        }
+        for (k, &j) in retry.iter().enumerate() {
+            chunk_bytes[j] = std::mem::take(&mut refetched[k]);
+            staged[j] = false;
+        }
+    }
+    for (j, bytes) in chunk_bytes.iter().enumerate() {
+        if staged[j] {
+            stats.bytes_local += bytes.len() as u64;
+            stats.chunks_local += 1;
+        } else {
+            stats.bytes_fetched += bytes.len() as u64;
+            stats.chunks_fetched += 1;
+            // Stage what came over the wire — only after it verified.
+            staging.put(&expected[j], bytes)?;
+        }
+    }
+    Ok(chunk_bytes)
 }
 
 #[cfg(test)]
@@ -793,8 +1188,11 @@ mod tests {
             let dir = remote.layer_dir(lid);
             assert!(dir.join("layer.chunks").exists(), "manifest missing");
             assert!(dir.join("checksum").exists(), "checksum trace missing");
-            assert!(!dir.join("layer.tar").exists(), "v2 stores chunks, not tars");
-            assert!(remote.layer_manifest(lid).is_some());
+            assert!(!dir.join("layer.tar").exists(), "chunked push stores chunks, not tars");
+            assert!(
+                matches!(remote.layer_manifest(lid), Some(LayerManifest::V2(_))),
+                "default writer emits v2 (content-defined) manifests"
+            );
         }
         let pool = ChunkPool::at(&remote.chunk_pool_dir());
         assert!(!pool.is_empty().unwrap());
@@ -956,6 +1354,133 @@ mod tests {
             .pull(&ImageRef::parse("ghost:1"), &images, &layers, &NativeEngine::new())
             .is_err());
         std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    /// Rot one pool chunk in place (keeping its name); returns its size.
+    fn rot_one_chunk(pool_dir: &std::path::Path) -> u64 {
+        let victim = std::fs::read_dir(pool_dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .find(|e| e.file_name().to_string_lossy().len() == 64)
+            .unwrap()
+            .path();
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&victim, &bytes).unwrap();
+        bytes.len() as u64
+    }
+
+    #[test]
+    fn scrub_on_clean_pool_drops_nothing() {
+        let (images, layers, remote, d) = fresh("scrub-clean");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+        let report = remote.scrub().unwrap();
+        assert!(report.chunks_checked > 0);
+        assert_eq!(report.chunks_dropped, 0);
+        assert_eq!(report.layers_demoted, 0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn scrub_drops_rot_and_next_push_repairs() {
+        let (images, layers, remote, d) = fresh("scrub-heal");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+
+        let rotted_len = rot_one_chunk(&remote.chunk_pool_dir());
+        let report = remote.scrub().unwrap();
+        assert_eq!(report.chunks_dropped, 1);
+        assert_eq!(report.bytes_dropped, rotted_len);
+        assert!(report.layers_demoted >= 1, "the referencing layer must demote");
+
+        // The next push re-commits the demoted layer, re-uploading ONLY
+        // the dropped chunk — the trust-`has()` poisoning gap, closed.
+        let repair = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+        assert!(repair.chunks_uploaded >= 1, "the dropped chunk travels again");
+        assert!(
+            repair.layers.iter().any(|(_, s)| *s != LayerPushStatus::AlreadyExists),
+            "a demoted layer re-commits instead of AlreadyExists"
+        );
+
+        // And the remote serves pulls again.
+        let (images2, layers2, _, d2) = fresh("scrub-heal-pull");
+        remote
+            .pull(&ImageRef::parse("app:v1"), &images2, &layers2, &NativeEngine::new())
+            .unwrap();
+        let (_, img) = images2.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers2.verify(lid).unwrap());
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn scrub_accepts_v1_engine_addressed_chunks() {
+        let (images, layers, remote, d) = fresh("scrub-v1");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('v1')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        let eng = NativeEngine::new();
+        remote
+            .push_with(
+                &ImageRef::parse("app:v1"),
+                &images,
+                &layers,
+                &eng,
+                &PushOptions { manifest_v1: true, ..Default::default() },
+            )
+            .unwrap();
+        let report = remote.scrub().unwrap();
+        assert!(report.chunks_checked > 0);
+        assert_eq!(
+            report.chunks_dropped, 0,
+            "v1 pool chunks are intact under the engine addressing scheme"
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn gc_collects_only_untagged_images() {
+        let (images, layers, remote, d) = fresh("gc");
+        let ctx1 = d.join("ctx1");
+        let ctx2 = d.join("ctx2");
+        write_ctx(&ctx1, DF, &[("main.py", "print('keep me')\n")]);
+        write_ctx(&ctx2, DF, &[("main.py", "print('collect me')\n")]);
+        build(&images, &layers, &ctx1, "app-a:1");
+        build(&images, &layers, &ctx2, "app-b:1");
+        remote.push(&ImageRef::parse("app-a:1"), &images, &layers).unwrap();
+        remote.push(&ImageRef::parse("app-b:1"), &images, &layers).unwrap();
+
+        // Everything tagged: gc is a no-op.
+        assert_eq!(remote.gc().unwrap(), GcReport::default());
+
+        assert!(remote.untag(&ImageRef::parse("app-b:1")).unwrap());
+        assert!(!remote.untag(&ImageRef::parse("app-b:1")).unwrap(), "second untag is a no-op");
+        let report = remote.gc().unwrap();
+        assert_eq!(report.images_dropped, 1);
+        assert!(report.layers_dropped >= 1, "app-b's unshared layers go");
+        assert!(report.chunks_dropped >= 1, "app-b's unshared chunks go");
+        assert!(report.bytes_reclaimed > 0);
+
+        // The shared base layer and everything app-a needs survives.
+        let (images2, layers2, _, d2) = fresh("gc-pull");
+        remote
+            .pull(&ImageRef::parse("app-a:1"), &images2, &layers2, &NativeEngine::new())
+            .unwrap();
+        let (_, img) = images2.get_by_ref(&ImageRef::parse("app-a:1")).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers2.verify(lid).unwrap());
+        }
+        // Idempotent.
+        assert_eq!(remote.gc().unwrap(), GcReport::default());
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! and resume-after-interrupt on both push and pull.
 
 use layerjet::prelude::*;
-use layerjet::registry::{LayerPushStatus, PullOptions, PushOptions};
+use layerjet::registry::{LayerManifest, LayerPushStatus, PullOptions, PushOptions};
 use layerjet::util::prng::Prng;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -69,10 +69,10 @@ fn pipelined_push_is_bit_identical_to_serial() {
     let serial_remote = RemoteRegistry::open(&root.join("remote-serial")).unwrap();
     let piped_remote = RemoteRegistry::open(&root.join("remote-piped")).unwrap();
     let s = dev
-        .push_with("app:v1", &serial_remote, &PushOptions { jobs: 1, whole_tar: false })
+        .push_with("app:v1", &serial_remote, &PushOptions { jobs: 1, ..Default::default() })
         .unwrap();
     let p = dev
-        .push_with("app:v1", &piped_remote, &PushOptions { jobs: 4, whole_tar: false })
+        .push_with("app:v1", &piped_remote, &PushOptions { jobs: 4, ..Default::default() })
         .unwrap();
     assert_eq!(s.bytes_uploaded, p.bytes_uploaded);
     assert_eq!(s.bytes_deduped, p.bytes_deduped);
@@ -112,7 +112,7 @@ fn one_line_redeploy_uploads_a_fraction_of_the_layer() {
     )
     .unwrap();
     let report = dev
-        .push_with("app:v2", &remote, &PushOptions { jobs: 4, whole_tar: false })
+        .push_with("app:v2", &remote, &PushOptions { jobs: 4, ..Default::default() })
         .unwrap();
 
     // Only the cloned COPY layer travels, and of it only the chunks the
@@ -134,6 +134,148 @@ fn one_line_redeploy_uploads_a_fraction_of_the_layer() {
     std::fs::remove_dir_all(&root).unwrap();
 }
 
+/// THE acceptance bar of the CDC wire format: inserting one line near
+/// the top of a previously pushed multi-chunk COPY payload shifts every
+/// downstream tar byte, yet the redeploy push uploads < 10% of the
+/// layer — while the fixed-chunk v1 wire format re-uploads the shifted
+/// bulk (the failure mode content-defined chunking exists to fix).
+#[test]
+fn shifted_insert_redeploy_uploads_under_10_percent() {
+    let root = tmp("shifted");
+    let proj = root.join("proj");
+    write_project(&proj, 512 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+
+    let cdc_remote = RemoteRegistry::open(&root.join("remote-cdc")).unwrap();
+    let v1_remote = RemoteRegistry::open(&root.join("remote-v1")).unwrap();
+    dev.push_with("app:v1", &cdc_remote, &PushOptions { jobs: 2, ..Default::default() })
+        .unwrap();
+    dev.push_with(
+        "app:v1",
+        &v1_remote,
+        &PushOptions { jobs: 2, manifest_v1: true, ..Default::default() },
+    )
+    .unwrap();
+
+    // Insert one line near the TOP of the dominant asset: every tar
+    // byte after it shifts by a non-chunk-aligned amount.
+    let asset_path = proj.join("aa_assets.bin");
+    let asset = std::fs::read(&asset_path).unwrap();
+    let line = b"# one inserted line\n";
+    let mut shifted = Vec::with_capacity(asset.len() + line.len());
+    shifted.extend_from_slice(&asset[..97]);
+    shifted.extend_from_slice(line);
+    shifted.extend_from_slice(&asset[97..]);
+    std::fs::write(&asset_path, &shifted).unwrap();
+    dev.inject_with(
+        &proj,
+        "app:v1",
+        "app:v2",
+        &InjectOptions {
+            clone_for_redeploy: true,
+            cost: CostModel::instant(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let (_, img) = dev.image("app:v2").unwrap();
+    let layer_bytes = dev.layers.read_tar(&img.layer_ids[1]).unwrap().len() as u64;
+
+    let cdc = dev
+        .push_with("app:v2", &cdc_remote, &PushOptions { jobs: 2, ..Default::default() })
+        .unwrap();
+    assert!(cdc.bytes_uploaded > 0, "the edit itself must travel");
+    assert!(
+        cdc.bytes_uploaded < layer_bytes / 10,
+        "shifted insert uploaded {} of a {}-byte layer under CDC (must be < 10%)",
+        cdc.bytes_uploaded,
+        layer_bytes
+    );
+    assert!(
+        cdc.bytes_deduped > layer_bytes * 8 / 10,
+        "the shifted-but-unchanged bulk must negotiate away ({} deduped)",
+        cdc.bytes_deduped
+    );
+
+    // Control: the fixed-chunk grid re-uploads everything downstream of
+    // the insertion — the cost this PR removes.
+    let fixed = dev
+        .push_with(
+            "app:v2",
+            &v1_remote,
+            &PushOptions { jobs: 2, manifest_v1: true, ..Default::default() },
+        )
+        .unwrap();
+    assert!(
+        fixed.bytes_uploaded > layer_bytes / 2,
+        "fixed chunking should have re-uploaded the shifted bulk ({} of {})",
+        fixed.bytes_uploaded,
+        layer_bytes
+    );
+
+    // Both wire formats still deliver a byte-correct image.
+    let prod = daemon(&root.join("prod"));
+    prod.pull("app:v2", &cdc_remote).unwrap();
+    assert!(prod.verify_image("app:v2").unwrap());
+    let prod_v1 = daemon(&root.join("prod-v1"));
+    prod_v1.pull("app:v2", &v1_remote).unwrap();
+    assert!(prod_v1.verify_image("app:v2").unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Compatibility: a remote populated with v1 fixed-chunk manifests (a
+/// pre-CDC pusher) pulls under the new code, and the codecs coexist
+/// per layer in one remote.
+#[test]
+fn v1_fixed_chunk_manifests_still_pull() {
+    let root = tmp("v1-compat");
+    let proj = root.join("proj");
+    write_project(&proj, 96 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push_with("app:v1", &remote, &PushOptions { manifest_v1: true, ..Default::default() })
+        .unwrap();
+    let (_, img) = dev.image("app:v1").unwrap();
+    for lid in &img.layer_ids {
+        assert!(
+            matches!(remote.layer_manifest(lid), Some(LayerManifest::V1(_))),
+            "forced v1 push must write v1 manifests"
+        );
+    }
+
+    let prod = daemon(&root.join("prod"));
+    prod.pull("app:v1", &remote).unwrap();
+    assert!(prod.verify_image("app:v1").unwrap());
+
+    // A later v2-writer push into the SAME remote coexists: the new
+    // layer gets a v2 manifest, the old layers stay v1, and both pull.
+    std::fs::write(proj.join("zz_main.py"), "print('v2')\n").unwrap();
+    dev.inject_with(
+        &proj,
+        "app:v1",
+        "app:v2",
+        &InjectOptions {
+            clone_for_redeploy: true,
+            cost: CostModel::instant(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    dev.push_with("app:v2", &remote, &PushOptions::default()).unwrap();
+    let (_, img2) = dev.image("app:v2").unwrap();
+    assert!(
+        matches!(remote.layer_manifest(&img2.layer_ids[1]), Some(LayerManifest::V2(_))),
+        "the cloned layer is written with the v2 codec"
+    );
+    let prod2 = daemon(&root.join("prod2"));
+    prod2.pull("app:v2", &remote).unwrap();
+    assert!(prod2.verify_image("app:v2").unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
 /// An interrupted push (chunks streamed, commit never reached) resumes
 /// without re-uploading the committed chunks.
 #[test]
@@ -146,7 +288,7 @@ fn interrupted_push_resumes_without_reuploading_chunks() {
     let rdir = root.join("remote");
     let remote = RemoteRegistry::open(&rdir).unwrap();
     let first = dev
-        .push_with("app:v1", &remote, &PushOptions { jobs: 2, whole_tar: false })
+        .push_with("app:v1", &remote, &PushOptions { jobs: 2, ..Default::default() })
         .unwrap();
     assert!(first.bytes_uploaded > 0);
 
@@ -158,7 +300,7 @@ fn interrupted_push_resumes_without_reuploading_chunks() {
     let remote = RemoteRegistry::open(&rdir).unwrap();
 
     let retry = dev
-        .push_with("app:v1", &remote, &PushOptions { jobs: 2, whole_tar: false })
+        .push_with("app:v1", &remote, &PushOptions { jobs: 2, ..Default::default() })
         .unwrap();
     assert!(
         retry.layers.iter().all(|(_, s)| *s != LayerPushStatus::AlreadyExists),
