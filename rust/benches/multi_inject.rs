@@ -1,0 +1,199 @@
+//! **Multi-layer targeted injection** — k changed layers out of n, the
+//! cascade-DAG path against the rebuild-after-first-change control leg,
+//! with a machine-readable baseline (`BENCH_multi_inject.json`).
+//!
+//! The project is n independent COPY layers (no step consumes another's
+//! output), so the DAG cascade of every edit is empty: the injection
+//! path does O(k) layer patches and zero step re-executions, while the
+//! Docker control leg — whose cache falls through linearly — re-executes
+//! every step after the first change regardless of k.
+//!
+//! `cargo bench --bench multi_inject` (set `LAYERJET_TRIALS` to override
+//! the trial count).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::builder::BuildOptions;
+use layerjet::daemon::Daemon;
+use layerjet::inject::InjectOptions;
+use layerjet::stats::summarize;
+use layerjet::util::json::Json;
+use layerjet::util::prng::Prng;
+use std::path::Path;
+use std::time::Instant;
+
+/// COPY layers in the project (steps = n + FROM + CMD).
+const N_PARTS: usize = 10;
+/// Changed-layer counts swept per run.
+const KS: [usize; 3] = [1, 3, 6];
+
+struct Point {
+    k: usize,
+    control_steps_rebuilt: usize,
+    cascade_steps_rebuilt: usize,
+    patched_layers: usize,
+    control_mean_s: f64,
+    cascade_mean_s: f64,
+}
+
+fn main() {
+    let n = common::trials(8);
+    let root = common::bench_root("multi-inject");
+    let mut points = Vec::new();
+    for k in KS {
+        points.push(sweep_k(&root, k, n));
+    }
+
+    let mut table = Table::new(
+        &format!("k changed of {N_PARTS} COPY layers ({n} trials): cascade vs fall-through"),
+        &["k", "control steps", "cascade steps", "control mean", "cascade mean", "speedup"],
+    );
+    for p in &points {
+        table.row(vec![
+            p.k.to_string(),
+            p.control_steps_rebuilt.to_string(),
+            p.cascade_steps_rebuilt.to_string(),
+            fmt_secs(p.control_mean_s),
+            fmt_secs(p.cascade_mean_s),
+            format!("{:.1}x", p.control_mean_s / p.cascade_mean_s.max(1e-12)),
+        ]);
+    }
+    table.print();
+    emit_baseline(n, &points);
+
+    // Shape assertions — pure work accounting, machine-independent: the
+    // control leg falls through to the end while the cascade leg
+    // re-executes nothing (the edits have no dependents).
+    for p in &points {
+        assert_eq!(
+            p.control_steps_rebuilt, N_PARTS,
+            "k={}: fall-through must rebuild every step after the first change",
+            p.k
+        );
+        assert_eq!(
+            p.cascade_steps_rebuilt, 0,
+            "k={}: independent COPY edits must re-execute nothing",
+            p.k
+        );
+        assert_eq!(p.patched_layers, p.k, "k={}: exactly k layers patched", p.k);
+    }
+    eprintln!("multi_inject shape checks OK");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Evenly spread k edited part indices starting at part 1 (so the
+/// control leg's fall-through covers nearly the whole Dockerfile).
+fn edited_parts(k: usize) -> Vec<usize> {
+    (0..k).map(|i| 1 + i * (N_PARTS - 1) / k).collect()
+}
+
+fn write_project(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut df = String::from("FROM python:alpine\n");
+    for l in 0..N_PARTS {
+        df.push_str(&format!("COPY part{l} /srv/part{l}/\n"));
+    }
+    df.push_str("CMD [\"python\", \"main.py\"]\n");
+    std::fs::write(dir.join("Dockerfile"), df).unwrap();
+    let mut rng = Prng::new(0xca5cade);
+    for l in 0..N_PARTS {
+        let part = dir.join(format!("part{l}"));
+        std::fs::create_dir_all(&part).unwrap();
+        let mut asset = vec![0u8; 256 << 10];
+        rng.fill_bytes(&mut asset);
+        std::fs::write(part.join("aa_assets.bin"), &asset).unwrap();
+        std::fs::write(part.join("zz_main.py"), "print('v0')\n").unwrap();
+    }
+}
+
+fn sweep_k(root: &Path, k: usize, trials: usize) -> Point {
+    let proj = root.join(format!("proj-k{k}"));
+    write_project(&proj);
+    let control = Daemon::new(&root.join(format!("control-k{k}"))).unwrap();
+    let inject = Daemon::new(&root.join(format!("inject-k{k}"))).unwrap();
+    let build_opts = BuildOptions::default();
+    let inject_opts = InjectOptions::default();
+    let tag = "minj:v1";
+    control.build_with(&proj, tag, &build_opts).unwrap();
+    inject.build_with(&proj, tag, &build_opts).unwrap();
+
+    let parts = edited_parts(k);
+    let mut control_s = Vec::with_capacity(trials);
+    let mut cascade_s = Vec::with_capacity(trials);
+    let (mut control_rebuilt, mut cascade_rebuilt, mut patched) = (0usize, 0usize, 0usize);
+    // One untimed warm-up revision, then the timed trials.
+    for trial in 0..trials + 1 {
+        for part in &parts {
+            let path = proj.join(format!("part{part}/zz_main.py"));
+            let text = std::fs::read_to_string(&path).unwrap();
+            std::fs::write(&path, format!("{text}print('rev {trial}')\n")).unwrap();
+        }
+
+        let t0 = Instant::now();
+        let control_report = control.build_with(&proj, tag, &build_opts).unwrap();
+        let control_elapsed = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let inject_report = inject.inject_with(&proj, tag, tag, &inject_opts).unwrap();
+        let cascade_elapsed = t0.elapsed().as_secs_f64();
+
+        if trial == 0 {
+            continue; // warm-up
+        }
+        control_s.push(control_elapsed);
+        cascade_s.push(cascade_elapsed);
+        control_rebuilt = control_report.rebuilt_steps();
+        patched = inject_report.patched.len();
+        cascade_rebuilt = inject_report
+            .cascade_accounting
+            .as_ref()
+            .map(|a| a.steps_rebuilt)
+            .unwrap_or(0);
+    }
+    Point {
+        k,
+        control_steps_rebuilt: control_rebuilt,
+        cascade_steps_rebuilt: cascade_rebuilt,
+        patched_layers: patched,
+        control_mean_s: summarize(&control_s).mean,
+        cascade_mean_s: summarize(&cascade_s).mean,
+    }
+}
+
+/// Write the machine-readable baseline: once into `bench_results/` and
+/// once at the repository root (the trajectory file later PRs compare
+/// against).
+fn emit_baseline(trials: usize, points: &[Point]) {
+    let arr = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("k_changed", Json::num(p.k as f64)),
+                ("control_steps_rebuilt", Json::num(p.control_steps_rebuilt as f64)),
+                ("cascade_steps_rebuilt", Json::num(p.cascade_steps_rebuilt as f64)),
+                ("patched_layers", Json::num(p.patched_layers as f64)),
+                ("control_mean_s", Json::num(p.control_mean_s)),
+                ("cascade_mean_s", Json::num(p.cascade_mean_s)),
+                (
+                    "speedup",
+                    Json::num(p.control_mean_s / p.cascade_mean_s.max(1e-12)),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("multi_inject")),
+        ("measured", Json::Bool(true)),
+        ("trials", Json::num(trials as f64)),
+        ("n_copy_layers", Json::num(N_PARTS as f64)),
+        ("points", Json::Arr(arr)),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_multi_inject.json", &text).expect("write baseline");
+    if std::fs::write("../BENCH_multi_inject.json", &text).is_ok() {
+        eprintln!("wrote ../BENCH_multi_inject.json");
+    }
+    eprintln!("wrote bench_results/BENCH_multi_inject.json");
+}

@@ -85,6 +85,7 @@ pub fn run_scenario_experiment(
         clone_for_redeploy: false,
         cost,
         scan_cache: None, // the daemon fills this in
+        jobs: 1,
     };
 
     // Initial v0 build on both daemons (untimed — both methods start from

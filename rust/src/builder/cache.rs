@@ -35,6 +35,9 @@ pub enum MissReason {
     SourceChanged,
     /// An earlier step missed; Docker disables the cache downstream.
     FallThrough,
+    /// The step is in the dirty set of a dependency-DAG rebuild: a step
+    /// it consumes (per [`crate::inject::plan`]) changed.
+    DagInvalidated,
 }
 
 impl fmt::Display for MissReason {
@@ -46,6 +49,7 @@ impl fmt::Display for MissReason {
             MissReason::ParentChanged => "parent layer revised",
             MissReason::SourceChanged => "context sources changed",
             MissReason::FallThrough => "upstream miss (fall-through)",
+            MissReason::DagInvalidated => "invalidated by dependency cascade",
         })
     }
 }
@@ -57,6 +61,12 @@ pub enum CacheDecision {
     Hit(Box<LayerMeta>),
     /// Rebuild, for the given reason.
     Miss(MissReason),
+    /// DAG-mode only: no layer under the derived id, but the old image's
+    /// layer at this slot has the same instruction and sources — its
+    /// content is provably what a rebuild would produce, so it is copied
+    /// under the new id instead of re-executing the step (the carried
+    /// meta is the old layer's).
+    Adopt(Box<LayerMeta>),
 }
 
 impl CacheDecision {
@@ -64,10 +74,14 @@ impl CacheDecision {
         matches!(self, CacheDecision::Hit(_))
     }
 
+    pub fn is_miss(&self) -> bool {
+        matches!(self, CacheDecision::Miss(_))
+    }
+
     pub fn miss_reason(&self) -> Option<MissReason> {
         match self {
-            CacheDecision::Hit(_) => None,
             CacheDecision::Miss(r) => Some(*r),
+            _ => None,
         }
     }
 }
@@ -84,6 +98,27 @@ pub fn probe(
     parent_checksum: Option<Digest>,
     source_checksum: Option<Digest>,
 ) -> CacheDecision {
+    match probe_unchained(layers, id, literal, source_checksum) {
+        CacheDecision::Hit(meta) if meta.parent_checksum != parent_checksum => {
+            CacheDecision::Miss(MissReason::ParentChanged)
+        }
+        decision => decision,
+    }
+}
+
+/// Probe **without** the parent-revision chain check (criterion 3) — the
+/// DAG-mode probe, and the shared body of [`probe`]. Sound alone only
+/// when the caller has established, via the step-dependency DAG, that
+/// this step does not consume any content that changed upstream; a
+/// layer's bytes then cannot depend on the parent revision drift the
+/// strict probe would reject. The stale chain link is repaired (not
+/// trusted) by the build's finalize pass.
+pub fn probe_unchained(
+    layers: &LayerStore,
+    id: &LayerId,
+    literal: &str,
+    source_checksum: Option<Digest>,
+) -> CacheDecision {
     if !layers.exists(id) {
         return CacheDecision::Miss(MissReason::FirstBuild);
     }
@@ -93,9 +128,6 @@ pub fn probe(
     };
     if meta.created_by != literal {
         return CacheDecision::Miss(MissReason::InstructionChanged);
-    }
-    if meta.parent_checksum != parent_checksum {
-        return CacheDecision::Miss(MissReason::ParentChanged);
     }
     if let Some(src) = source_checksum {
         if meta.source_checksum != src {
@@ -178,5 +210,34 @@ mod tests {
     fn miss_reasons_render() {
         assert_eq!(MissReason::FallThrough.to_string(), "upstream miss (fall-through)");
         assert_eq!(MissReason::NoCache.to_string(), "--no-cache");
+        assert_eq!(
+            MissReason::DagInvalidated.to_string(),
+            "invalidated by dependency cascade"
+        );
+    }
+
+    #[test]
+    fn probe_unchained_tolerates_parent_drift_only() {
+        let (layers, d) = fresh("unchained");
+        let src = Digest::of(b"sources");
+        let meta = sample_layer(&layers, "COPY . /app/", src);
+        let drifted_parent = Some(Digest::of(b"revised parent"));
+        // Strict: parent drift is a miss. Unchained: still a hit.
+        assert_eq!(
+            probe(&layers, &meta.id, "COPY . /app/", drifted_parent, Some(src)).miss_reason(),
+            Some(MissReason::ParentChanged)
+        );
+        assert!(probe_unchained(&layers, &meta.id, "COPY . /app/", Some(src)).is_hit());
+        // Literal and source changes still miss.
+        assert_eq!(
+            probe_unchained(&layers, &meta.id, "COPY . /other/", Some(src)).miss_reason(),
+            Some(MissReason::InstructionChanged)
+        );
+        assert_eq!(
+            probe_unchained(&layers, &meta.id, "COPY . /app/", Some(Digest::of(b"edited")))
+                .miss_reason(),
+            Some(MissReason::SourceChanged)
+        );
+        std::fs::remove_dir_all(&d).unwrap();
     }
 }

@@ -12,6 +12,13 @@
 //!    criteria. One miss breaks the cache for every later step
 //!    (fall-through) — decisions therefore never depend on rebuilt
 //!    content, which is what makes step execution parallelizable.
+//!    Alternatively, a [`DirtyScope`] replaces the linear fall-through
+//!    with a dependency-DAG dirty set (see [`crate::inject::plan`]):
+//!    only invalidated steps rebuild, clean steps keep their cache hits
+//!    across parent-revision drift (the stale chain links are repaired
+//!    in finalize), and clean steps whose derived id shifted — an edit
+//!    upstream changed an instruction literal — **adopt** the old
+//!    image's layer content instead of re-executing the toolchain.
 //! 3. **Execute** ([`executor`]) — every cache-missed step's layer
 //!    content is generated, archived and hashed. Steps are independent
 //!    jobs: a [`std::thread::scope`] worker pool sized by
@@ -129,6 +136,32 @@ impl Default for BuildOptions {
     }
 }
 
+/// A dependency-DAG rebuild scope: the alternative to Docker's strict
+/// fall-through. Produced by the injection pipeline from a
+/// [`crate::inject::plan::StepDag`]; consumed by [`Builder::build_scoped`].
+///
+/// Soundness contract: `dirty` must contain every step whose inputs
+/// (consumed context files, consumed upstream layer content, governing
+/// config scope) changed since `old_image` was built. Steps outside the
+/// set are then free to be served from cache ignoring parent-revision
+/// drift, or adopted byte-for-byte from `old_image`'s corresponding slot
+/// when an upstream literal edit shifted their derived layer id.
+#[derive(Clone, Copy, Debug)]
+pub struct DirtyScope<'a> {
+    /// Step indices that must re-execute.
+    pub dirty: &'a std::collections::BTreeSet<usize>,
+    /// The image this build revises — the adoption source for clean
+    /// steps whose derived layer id no longer exists in the store.
+    pub old_image: Option<&'a Image>,
+    /// Steps the planner proved safe to adopt: their content is a pure
+    /// function of the instruction literal, the (checksum-compared)
+    /// sources and their upstream layers. A `RUN` whose executor reads
+    /// context files directly is excluded — detection cannot see those
+    /// files change, so adopting it could carry stale content (see
+    /// [`crate::inject::plan::StepDag::adoptable_steps`]).
+    pub adoptable: &'a std::collections::BTreeSet<usize>,
+}
+
 /// Per-step outcome of a build.
 #[derive(Clone, Debug)]
 pub struct StepReport {
@@ -142,6 +175,9 @@ pub struct StepReport {
     pub checksum: Digest,
     /// Served from cache?
     pub cached: bool,
+    /// Adopted: content copied from the old image's slot under a fresh
+    /// derived id, without re-executing the step (DAG mode only).
+    pub adopted: bool,
     /// Why the cache missed, when it did.
     pub miss_reason: Option<MissReason>,
     /// Config (empty) layer?
@@ -164,9 +200,20 @@ pub struct BuildReport {
 }
 
 impl BuildReport {
-    /// Number of steps that were not served from cache.
+    /// Number of steps that actually re-executed their toolchain work
+    /// (neither served from cache nor adopted).
     pub fn rebuilt_steps(&self) -> usize {
-        self.steps.iter().filter(|s| !s.cached).count()
+        self.steps.iter().filter(|s| !s.cached && !s.adopted).count()
+    }
+
+    /// Number of steps served from cache.
+    pub fn cached_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.cached).count()
+    }
+
+    /// Number of steps adopted from the old image (DAG mode).
+    pub fn adopted_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.adopted).count()
     }
 
     /// Total layer-tar bytes written by this build (the re-archive work
@@ -242,13 +289,29 @@ impl<'a> Builder<'a> {
         }
     }
 
-    /// `docker build -t <tag> <ctx_dir>`.
+    /// `docker build -t <tag> <ctx_dir>` — strict Docker cache semantics.
     pub fn build(&self, ctx_dir: &Path, tag: &ImageRef, opts: &BuildOptions) -> Result<BuildReport> {
+        self.build_scoped(ctx_dir, tag, opts, None)
+    }
+
+    /// Build with an optional dependency-DAG scope: `None` is the strict
+    /// Docker fall-through; `Some(scope)` rebuilds only the dirty
+    /// sub-DAG, serving every clean step from cache (tolerating — and
+    /// repairing — parent-revision drift) or adopting it from the old
+    /// image. Independent dirty branches execute in parallel on the
+    /// `opts.jobs` worker pool like any other cache misses.
+    pub fn build_scoped(
+        &self,
+        ctx_dir: &Path,
+        tag: &ImageRef,
+        opts: &BuildOptions,
+        scope: Option<&DirtyScope<'_>>,
+    ) -> Result<BuildReport> {
         let t0 = Instant::now();
         let dockerfile = Dockerfile::from_dir(ctx_dir)?;
         dockerfile.validate()?;
         let ctx = BuildContext::scan_cached(ctx_dir, self.engine, self.scan_cache.as_deref())?;
-        let plan = self.plan(&dockerfile, tag, &ctx, opts)?;
+        let plan = self.plan(&dockerfile, tag, &ctx, opts, scope)?;
         let built = self.execute(&plan, &ctx, opts)?;
         self.finalize(t0, tag, &dockerfile, plan, built, opts)
     }
@@ -258,13 +321,16 @@ impl<'a> Builder<'a> {
     /// Strict Docker semantics: the first miss breaks the chain, so
     /// decisions depend only on *stored* metadata, never on content that
     /// is yet to be rebuilt — which is what lets phase 2 run steps
-    /// concurrently.
+    /// concurrently. Under a [`DirtyScope`] the fall-through is replaced
+    /// by DAG membership: dirty steps miss, everything else is a hit or
+    /// an adoption (decisions still depend only on stored metadata).
     fn plan(
         &self,
         dockerfile: &Dockerfile,
         tag: &ImageRef,
         ctx: &BuildContext,
         opts: &BuildOptions,
+        scope: Option<&DirtyScope<'_>>,
     ) -> Result<Vec<PlannedStep>> {
         let mut workdir = "/".to_string();
         // Replay a locally-tagged base image's workdir, as detection does.
@@ -280,7 +346,7 @@ impl<'a> Builder<'a> {
         let mut parent: Option<LayerId> = None;
         let mut parent_checksum: Option<Digest> = None;
         let mut broken = false;
-        for (_, inst) in &dockerfile.instructions {
+        for (idx, (_, inst)) in dockerfile.instructions.iter().enumerate() {
             let literal = inst.literal();
             let (namespace, work) = match inst {
                 // Base layers are namespaced by the base image itself so
@@ -321,6 +387,16 @@ impl<'a> Builder<'a> {
             };
             let decision = if opts.no_cache {
                 CacheDecision::Miss(MissReason::NoCache)
+            } else if let Some(scope) = scope {
+                if scope.dirty.contains(&idx) {
+                    CacheDecision::Miss(MissReason::DagInvalidated)
+                } else {
+                    match cache::probe_unchained(self.layers, &layer_id, &literal, source_checksum)
+                    {
+                        hit @ CacheDecision::Hit(_) => hit,
+                        miss => self.try_adopt(scope, idx, &literal, source_checksum).unwrap_or(miss),
+                    }
+                }
             } else if broken {
                 CacheDecision::Miss(MissReason::FallThrough)
             } else {
@@ -328,6 +404,7 @@ impl<'a> Builder<'a> {
             };
             match &decision {
                 CacheDecision::Hit(meta) => parent_checksum = Some(meta.checksum),
+                CacheDecision::Adopt(meta) => parent_checksum = Some(meta.checksum),
                 CacheDecision::Miss(_) => {
                     broken = true;
                     parent_checksum = None;
@@ -350,6 +427,38 @@ impl<'a> Builder<'a> {
         Ok(steps)
     }
 
+    /// DAG-mode adoption probe: a clean step whose derived id shifted
+    /// (an upstream literal edit re-keyed the id chain) can reuse the
+    /// old image's layer at the same slot, provided that layer was built
+    /// by the **same instruction from the same sources** — the executors
+    /// are pure functions of those inputs, so the content is exactly
+    /// what re-executing would produce.
+    fn try_adopt(
+        &self,
+        scope: &DirtyScope<'_>,
+        idx: usize,
+        literal: &str,
+        source_checksum: Option<Digest>,
+    ) -> Option<CacheDecision> {
+        let old = scope.old_image?;
+        if !scope.adoptable.contains(&idx) {
+            return None;
+        }
+        if idx >= old.layer_ids.len() || old.history[idx].created_by != literal {
+            return None;
+        }
+        let meta = self.layers.meta(&old.layer_ids[idx]).ok()?;
+        if meta.created_by != literal {
+            return None;
+        }
+        if let Some(src) = source_checksum {
+            if meta.source_checksum != src {
+                return None;
+            }
+        }
+        Some(CacheDecision::Adopt(Box::new(meta)))
+    }
+
     /// Phase 2: run every cache-missed step as an independent job on the
     /// shared scoped worker pool ([`parallel::scoped_index_map`]) of
     /// `opts.jobs` threads. Content generation and hashing are pure per
@@ -363,7 +472,7 @@ impl<'a> Builder<'a> {
         let misses: Vec<usize> = plan
             .iter()
             .enumerate()
-            .filter(|(_, s)| !s.decision.is_hit())
+            .filter(|(_, s)| s.decision.is_miss())
             .map(|(i, _)| i)
             .collect();
         let mut results: Vec<Option<BuiltLayer>> = plan.iter().map(|_| None).collect();
@@ -469,26 +578,84 @@ impl<'a> Builder<'a> {
 
         for (i, (step, built)) in plan.into_iter().zip(built).enumerate() {
             apply_config(&mut config, &dockerfile.instructions[i].1);
-            let empty = step.kind == LayerKind::Config;
-            transcript.push_str(&format!("Step {}/{} : {}\n", i + 1, n, step.literal));
+            let PlannedStep {
+                literal,
+                layer_id,
+                parent,
+                kind,
+                decision,
+                work: _,
+                source_checksum,
+            } = step;
+            let empty = kind == LayerKind::Config;
+            transcript.push_str(&format!("Step {}/{} : {}\n", i + 1, n, literal));
 
-            let (checksum, chunk_root, bytes, cached, miss_reason, duration) =
-                match (&step.decision, built) {
-                    (CacheDecision::Hit(meta), _) => {
+            let (checksum, chunk_root, bytes, cached, adopted, miss_reason, duration) =
+                match (decision, built) {
+                    (CacheDecision::Hit(mut meta), _) => {
                         let tp = Instant::now();
                         opts.cost.charge_cache_probe();
                         transcript.push_str(" ---> Using cache\n");
-                        (meta.checksum, meta.chunk_root, 0u64, true, None, tp.elapsed())
+                        // A DAG-scoped build tolerates parent-revision
+                        // drift on clean steps; repair the stale chain
+                        // link here so the *next* strict build still sees
+                        // an unbroken cache chain. (Strict plans enforced
+                        // equality, so this is a no-op for them.)
+                        if meta.parent_checksum != parent_checksum {
+                            meta.parent_checksum = parent_checksum;
+                            self.layers.write_meta(&meta)?;
+                        }
+                        (meta.checksum, meta.chunk_root, 0u64, true, false, None, tp.elapsed())
+                    }
+                    (CacheDecision::Adopt(old_meta), _) => {
+                        // Clean step, shifted id: copy the old slot's
+                        // content and hash artifacts under the new id —
+                        // no toolchain, no archiving, no re-hashing.
+                        let tp = Instant::now();
+                        opts.cost.charge_cache_probe();
+                        transcript
+                            .push_str(&format!(" ---> Adopted from {}\n", old_meta.id.short()));
+                        let tar = self.layers.read_tar(&old_meta.id)?;
+                        let cd = self.layers.chunk_digest(&old_meta.id, self.engine)?;
+                        let ckpts = self
+                            .layers
+                            .sha_checkpoints(&old_meta.id)
+                            .unwrap_or_else(|| crate::hash::hash_with_checkpoints(&tar).1);
+                        let meta = LayerMeta {
+                            id: layer_id,
+                            parent,
+                            parent_checksum,
+                            checksum: old_meta.checksum,
+                            chunk_root: old_meta.chunk_root,
+                            created_by: literal.clone(),
+                            source_checksum: old_meta.source_checksum,
+                            is_empty_layer: empty,
+                            size: old_meta.size,
+                            version: LAYER_VERSION.into(),
+                        };
+                        self.layers.put_layer_prehashed(&meta, &tar, &cd, &ckpts)?;
+                        if let Some(index) = self.layers.file_index(&old_meta.id) {
+                            self.layers.write_file_index(&layer_id, &index)?;
+                        }
+                        (
+                            old_meta.checksum,
+                            old_meta.chunk_root,
+                            0u64,
+                            false,
+                            true,
+                            None,
+                            tp.elapsed(),
+                        )
                     }
                     (CacheDecision::Miss(reason), Some(b)) => {
                         let meta = LayerMeta {
-                            id: step.layer_id,
-                            parent: step.parent,
+                            id: layer_id,
+                            parent,
                             parent_checksum,
                             checksum: b.checksum,
                             chunk_root: b.chunk_digest.root,
-                            created_by: step.literal.clone(),
-                            source_checksum: step.source_checksum.unwrap_or(Digest([0u8; 32])),
+                            created_by: literal.clone(),
+                            source_checksum: source_checksum.unwrap_or(Digest([0u8; 32])),
                             is_empty_layer: empty,
                             size: if empty { 0 } else { b.tar.len() as u64 },
                             version: LAYER_VERSION.into(),
@@ -496,7 +663,7 @@ impl<'a> Builder<'a> {
                         self.layers
                             .put_layer_prehashed(&meta, &b.tar, &b.chunk_digest, &b.checkpoints)?;
                         if let Some(index) = &b.file_index {
-                            self.layers.write_file_index(&step.layer_id, index)?;
+                            self.layers.write_file_index(&layer_id, index)?;
                         }
                         let bytes = if empty { 0 } else { b.tar.len() as u64 };
                         (
@@ -504,34 +671,35 @@ impl<'a> Builder<'a> {
                             b.chunk_digest.root,
                             bytes,
                             false,
-                            Some(*reason),
+                            false,
+                            Some(reason),
                             b.duration,
                         )
                     }
                     (CacheDecision::Miss(reason), None) => {
                         // execute() builds every planned miss; defensive.
                         return Err(Error::Build(format!(
-                            "step {} ({}) missed the cache ({reason}) but was never built",
+                            "step {} ({literal}) missed the cache ({reason}) but was never built",
                             i + 1,
-                            step.literal
                         )));
                     }
                 };
-            transcript.push_str(&format!(" ---> {}\n", step.layer_id.short()));
+            transcript.push_str(&format!(" ---> {}\n", layer_id.short()));
 
-            layer_ids.push(step.layer_id);
+            layer_ids.push(layer_id);
             diff_ids.push(checksum);
             chunk_roots.push(chunk_root);
             history.push(HistoryEntry {
-                created_by: step.literal.clone(),
+                created_by: literal.clone(),
                 empty_layer: empty,
             });
             steps.push(StepReport {
                 step: i + 1,
-                instruction: step.literal,
-                layer_id: step.layer_id,
+                instruction: literal,
+                layer_id,
                 checksum,
                 cached,
+                adopted,
                 miss_reason,
                 empty_layer: empty,
                 bytes,
@@ -812,6 +980,78 @@ mod tests {
         let paths: Vec<&str> = index.iter().map(|(p, _, _)| p.as_str()).collect();
         assert_eq!(paths, vec!["root/Dockerfile", "root/main.py"]);
         std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn dirty_scope_rebuilds_only_marked_steps_and_repairs_chain() {
+        let (images, layers, d) = fresh("dirty");
+        let ctx = d.join("ctx");
+        let df = "FROM python:alpine\nCOPY . /app/\nRUN pip install flask\nCMD [\"python\"]\n";
+        write_ctx(&ctx, df, &[("main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        let r1 = b.build(&ctx, &tag, &opts()).unwrap();
+        let (_, img) = images.get_by_ref(&tag).unwrap();
+
+        // Re-execute only step 2: everything else stays a cache hit even
+        // though nothing here tracks the parent chain strictly.
+        let dirty: std::collections::BTreeSet<usize> = [2].into_iter().collect();
+        let adoptable: std::collections::BTreeSet<usize> = (0..4).collect();
+        let scope = DirtyScope { dirty: &dirty, old_image: Some(&img), adoptable: &adoptable };
+        let r2 = b.build_scoped(&ctx, &tag, &opts(), Some(&scope)).unwrap();
+        assert_eq!(r2.rebuilt_steps(), 1);
+        assert_eq!(r2.steps[2].miss_reason, Some(MissReason::DagInvalidated));
+        assert!(r2.steps[0].cached && r2.steps[1].cached && r2.steps[3].cached);
+        assert_eq!(r2.image_id, r1.image_id, "deterministic re-execution");
+
+        // The pass repaired any chain drift: a strict build is all hits.
+        let r3 = b.build(&ctx, &tag, &opts()).unwrap();
+        assert_eq!(r3.rebuilt_steps(), 0, "{:?}", r3.steps);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn dirty_scope_adopts_across_shifted_layer_ids() {
+        // An upstream literal edit (EXPOSE port) re-keys every downstream
+        // derived id; clean steps must adopt the old image's content
+        // instead of re-executing toolchains.
+        let (images, layers, d) = fresh("adopt");
+        let ctx = d.join("ctx");
+        let df_v1 = "FROM python:alpine\nEXPOSE 8080\nCOPY app /srv/app/\nRUN pip install flask\nCMD [\"python\"]\n";
+        write_ctx(&ctx, df_v1, &[("app/main.py", "print('v1')\n")]);
+        let eng = NativeEngine::new();
+        let b = Builder::new(&layers, &images, &eng);
+        let tag = ImageRef::parse("app:v1");
+        b.build(&ctx, &tag, &opts()).unwrap();
+        let (_, old_img) = images.get_by_ref(&tag).unwrap();
+
+        std::fs::write(ctx.join("Dockerfile"), df_v1.replace("8080", "9090")).unwrap();
+        let dirty: std::collections::BTreeSet<usize> = [1].into_iter().collect();
+        let adoptable: std::collections::BTreeSet<usize> = (0..5).collect();
+        let scope = DirtyScope { dirty: &dirty, old_image: Some(&old_img), adoptable: &adoptable };
+        let r = b.build_scoped(&ctx, &tag, &opts(), Some(&scope)).unwrap();
+        assert!(r.steps[0].cached, "FROM id is unshifted (namespaced by base)");
+        assert!(!r.steps[1].cached && !r.steps[1].adopted, "edited step re-executes");
+        assert!(r.steps[2].adopted && r.steps[3].adopted && r.steps[4].adopted, "{:?}", r.steps);
+        assert_eq!(r.rebuilt_steps(), 1);
+
+        // Adoption must be invisible in the result: identical to a
+        // from-scratch build of the edited Dockerfile.
+        let (images2, layers2, d2) = fresh("adopt-scratch");
+        write_ctx(&d2.join("ctx"), &df_v1.replace("8080", "9090"), &[("app/main.py", "print('v1')\n")]);
+        let rs = Builder::new(&layers2, &images2, &eng)
+            .build(&d2.join("ctx"), &tag, &opts())
+            .unwrap();
+        assert_eq!(r.image_id, rs.image_id, "adopted image == scratch image");
+        let (_, a) = images.get_by_ref(&tag).unwrap();
+        let (_, s) = images2.get_by_ref(&tag).unwrap();
+        for (la, ls) in a.layer_ids.iter().zip(&s.layer_ids) {
+            assert_eq!(layers.read_tar(la).unwrap(), layers2.read_tar(ls).unwrap());
+        }
+        assert!(a.config.exposed_ports.contains(&9090));
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
     }
 
     #[test]

@@ -17,11 +17,13 @@ pub use metrics::CoordinatorMetrics;
 use crate::builder::{BuildOptions, CostModel};
 use crate::daemon::Daemon;
 use crate::inject::{InjectMode, InjectOptions};
-use crate::registry::{PullOptions, RemoteRegistry};
+use crate::registry::{
+    GcReport, PullOptions, PushOptions, PushReport, RemoteRegistry, ScrubReport,
+};
 use crate::Result;
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock, RwLockReadGuard};
 use std::time::{Duration, Instant};
 
 /// How a request should be served.
@@ -64,11 +66,27 @@ pub struct BuildOutcome {
     pub detail: String,
 }
 
+/// Result of one [`BuildCoordinator::maintain`] pass.
+#[derive(Clone, Debug)]
+pub struct MaintenanceReport {
+    pub scrub: ScrubReport,
+    pub gc: GcReport,
+}
+
+/// A live push permit: while any permit exists, [`BuildCoordinator::maintain`]
+/// is excluded — `registry gc` run against a half-committed push would
+/// sweep its not-yet-referenced pool chunks as garbage. Dropping the
+/// permit completes the quiesce handshake.
+pub struct PushPermit<'a>(#[allow(dead_code)] RwLockReadGuard<'a, ()>);
+
 /// The coordinator: a worker pool over per-worker daemons.
 pub struct BuildCoordinator {
     root: PathBuf,
     workers: usize,
     pub cost: CostModel,
+    /// The maintenance quiesce handshake: pushes take it shared,
+    /// [`Self::maintain`] takes it exclusive.
+    quiesce: RwLock<()>,
 }
 
 impl BuildCoordinator {
@@ -79,7 +97,46 @@ impl BuildCoordinator {
             root: root.to_path_buf(),
             workers,
             cost: CostModel::default(),
+            quiesce: RwLock::new(()),
         }
+    }
+
+    /// Claim a push permit. Held internally by [`Self::push_from`]; a
+    /// pipeline pushing outside the coordinator can claim one explicitly
+    /// to join the maintenance handshake. Do **not** call `push_from`
+    /// while already holding a permit — a queued `maintain` writer could
+    /// deadlock the nested read.
+    pub fn begin_push(&self) -> PushPermit<'_> {
+        PushPermit(self.quiesce.read().unwrap())
+    }
+
+    /// Push a tag from one worker's daemon, under a push permit.
+    pub fn push_from(
+        &self,
+        worker: usize,
+        tag: &str,
+        remote: &RemoteRegistry,
+        opts: &PushOptions,
+    ) -> Result<PushReport> {
+        assert!(worker < self.workers);
+        let _permit = self.begin_push();
+        let daemon = Daemon::new(&self.root.join(format!("worker-{worker}")))?;
+        daemon.push_with(tag, remote, opts)
+    }
+
+    /// Scheduled registry maintenance under the quiesce handshake: waits
+    /// for every in-flight push permit to drop, then — with new pushes
+    /// held off — runs `registry scrub` (drop rotted pool chunks, demote
+    /// affected layers) and `registry gc` (mark-and-sweep untagged
+    /// images, unreferenced layers, orphaned chunks). The exclusive hold
+    /// is what makes gc safe: a concurrent push's not-yet-committed
+    /// chunks would otherwise be indistinguishable from garbage.
+    pub fn maintain(&self, remote: &RemoteRegistry) -> Result<MaintenanceReport> {
+        let _quiesced = self.quiesce.write().unwrap();
+        Ok(MaintenanceReport {
+            scrub: remote.scrub()?,
+            gc: remote.gc()?,
+        })
     }
 
     /// Warm every worker daemon's store from a remote registry before a
@@ -165,6 +222,7 @@ fn serve(
         clone_for_redeploy: false,
         cost,
         scan_cache: None, // the daemon fills this in
+        jobs: 1,
     };
     let (strategy_used, result): (String, Result<String>) = match request.strategy {
         BuildStrategy::DockerRebuild => (
@@ -330,6 +388,67 @@ mod tests {
         }
         // Re-warming is a no-op: every layer already local.
         assert_eq!(coordinator.warm(&remote, &tags, 2).unwrap(), 0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn maintain_quiesces_in_flight_pushes() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let root = tmp("maintain");
+        let _ = std::fs::remove_dir_all(&root);
+        let coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+        // Seed worker-0 with two images: one stays tagged, one becomes
+        // garbage for gc to prove it still collects.
+        let mut worker = crate::daemon::Daemon::new(&root.join("farm").join("worker-0")).unwrap();
+        worker.cost = CostModel::instant();
+        let keep_ctx = root.join("p-keep");
+        let garbage_ctx = root.join("p-garbage");
+        for (dir, main) in [(&keep_ctx, "print('keep')\n"), (&garbage_ctx, "print('garbage')\n")] {
+            std::fs::create_dir_all(dir).unwrap();
+            std::fs::write(
+                dir.join("Dockerfile"),
+                "FROM python:alpine\nCOPY main.py main.py\nCMD [\"python\", \"main.py\"]\n",
+            )
+            .unwrap();
+            std::fs::write(dir.join("main.py"), main).unwrap();
+        }
+        worker.build(&keep_ctx, "keep:v1").unwrap();
+        worker.build(&garbage_ctx, "garbage:v1").unwrap();
+
+        let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+        coordinator
+            .push_from(0, "garbage:v1", &remote, &PushOptions::default())
+            .unwrap();
+        remote.untag(&crate::oci::ImageRef::parse("garbage:v1")).unwrap();
+
+        // The handshake: while a queued push holds its permit, maintain
+        // must wait — gc cannot sweep chunks the push is about to
+        // reference.
+        let done = AtomicBool::new(false);
+        let report = std::thread::scope(|scope| {
+            let permit = coordinator.begin_push();
+            let handle = scope.spawn(|| {
+                let r = coordinator.maintain(&remote);
+                done.store(true, Ordering::SeqCst);
+                r
+            });
+            std::thread::sleep(Duration::from_millis(100));
+            assert!(
+                !done.load(Ordering::SeqCst),
+                "maintain must block on the in-flight push permit"
+            );
+            // The queued push completes under the held permit: its
+            // chunks, manifests and tag commit before gc can mark.
+            worker.push("keep:v1", &remote).unwrap();
+            drop(permit);
+            handle.join().unwrap().unwrap()
+        });
+        assert!(report.gc.images_dropped >= 1, "untagged image must be collected");
+        // Everything the concurrent push referenced survived the sweep:
+        // a cold machine can still pull and verify the tag.
+        let puller = crate::daemon::Daemon::new(&root.join("puller")).unwrap();
+        puller.pull("keep:v1", &remote).unwrap();
+        assert!(puller.verify_image("keep:v1").unwrap());
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -66,10 +66,17 @@ pub struct ChangePlan {
     pub old_image_id: ImageId,
     pub old_image: Image,
     pub changes: Vec<StepChange>,
-    /// True if a changed content layer is followed by a RUN step that
-    /// looks like a compile/package command — the compiled-language case
+    /// The step-dependency DAG of the (new) Dockerfile against the
+    /// current context — the partial order the downstream pass schedules
+    /// against ([`super::plan`]).
+    pub dag: super::plan::StepDag,
+    /// Per-change cascades and the union dirty set the changes induce.
+    pub invalidation: super::plan::Invalidation,
+    /// True if a changed content layer feeds a downstream content step
+    /// (compile, package install reading the changed file, …) — the case
     /// where injection alone is unsound (paper §IV scenario 4) and
-    /// `--cascade` is required.
+    /// `--cascade` is required. DAG-derived and file-sensitive: an
+    /// unrelated edit in the same COPY layer does not trip it.
     pub downstream_compile: bool,
 }
 
@@ -91,14 +98,6 @@ impl ChangePlan {
             .iter()
             .any(|c| matches!(c.kind, ChangeKind::InstructionEdit { .. }))
     }
-}
-
-/// Commands whose output depends on source content: a changed source
-/// layer feeding one of these downstream requires a cascade rebuild.
-fn is_compile_command(cmd: &str) -> bool {
-    ["mvn", "javac", "gcc", "g++", "cargo build", "make", "go build"]
-        .iter()
-        .any(|t| cmd.contains(t))
 }
 
 /// Walk the Dockerfile against the old image, line by line (§III.A).
@@ -124,6 +123,7 @@ pub fn detect(
             }
         }
     }
+    let initial_workdir = workdir.clone();
 
     for (idx, (_, inst)) in dockerfile.instructions.iter().enumerate() {
         let literal = inst.literal();
@@ -210,23 +210,18 @@ pub fn detect(
         });
     }
 
-    // Compiled-language hazard: a content change followed by a compile RUN.
-    let first_content_change = changes
-        .iter()
-        .filter(|c| matches!(c.kind, ChangeKind::Content { .. }))
-        .map(|c| c.step)
-        .min();
-    let downstream_compile = match first_content_change {
-        Some(step) => dockerfile.instructions[step + 1..]
-            .iter()
-            .any(|(_, i)| matches!(i, Instruction::Run { command } if is_compile_command(command))),
-        None => false,
-    };
+    // Map the changes onto the step-dependency DAG: per-layer cascades
+    // instead of "everything after the first change".
+    let dag = super::plan::StepDag::analyze(dockerfile, ctx, &initial_workdir);
+    let invalidation = super::plan::invalidation(&dag, &changes);
+    let downstream_compile = invalidation.needs_cascade;
 
     Ok(ChangePlan {
         old_image_id,
         old_image,
         changes,
+        dag,
+        invalidation,
         downstream_compile,
     })
 }

@@ -7,9 +7,9 @@
 
 use super::checksum::rewrite_occurrences;
 use super::detect::{detect, ChangeKind};
-use super::implicit::{apply_file_changes, guard_plan};
+use super::implicit::{apply_file_changes, downstream_pass, guard_plan};
 use super::{InjectMode, InjectOptions, InjectReport, PatchedLayer};
-use crate::builder::{BuildContext, BuildOptions, Builder};
+use crate::builder::BuildContext;
 use crate::dockerfile::Dockerfile;
 use crate::hash::{ChunkDigest, Digest, HashEngine};
 use crate::oci::{ImageRef, LayerMeta};
@@ -132,27 +132,26 @@ pub fn inject_explicit(
         images.tag(new_tag, &new_image_id)?;
     }
 
-    // Type-2 / cascade handling identical to the implicit path.
+    // The downstream pass, identical to the implicit path: rebuild only
+    // the invalidated sub-DAG of the (now loaded-back) patched image.
+    let patched_image = images.get(&new_image_id)?;
+    let (cascade, cascade_accounting, built_id) = downstream_pass(
+        &plan,
+        ctx_dir,
+        new_tag,
+        images,
+        layers,
+        engine,
+        opts,
+        &patched_image,
+    )?;
+    if let Some(id) = built_id {
+        new_image_id = id;
+    }
     let has_config_edits = plan
         .changes
         .iter()
         .any(|c| matches!(c.kind, ChangeKind::ConfigEdit { .. }));
-    let mut cascade = None;
-    if opts.cascade || has_config_edits {
-        let mut builder = Builder::new(layers, images, engine);
-        builder.scan_cache = opts.scan_cache.clone();
-        let report = builder.build(
-            ctx_dir,
-            new_tag,
-            &BuildOptions {
-                no_cache: false,
-                cost: opts.cost,
-                jobs: 1,
-            },
-        )?;
-        new_image_id = report.image_id;
-        cascade = Some(report);
-    }
 
     Ok(InjectReport {
         mode: InjectMode::Explicit,
@@ -165,6 +164,7 @@ pub fn inject_explicit(
         patch_duration,
         hash_duration,
         cascade,
+        cascade_accounting,
         delegated_to_build: has_config_edits,
     })
 }
@@ -172,7 +172,7 @@ pub fn inject_explicit(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::builder::CostModel;
+    use crate::builder::{BuildOptions, Builder, CostModel};
     use crate::hash::NativeEngine;
     use std::path::PathBuf;
 

@@ -6,12 +6,12 @@
 
 use super::checksum::rewrite_image_digests;
 use super::detect::{detect, ChangeKind, ChangePlan};
-use super::{InjectMode, InjectOptions, InjectReport, PatchedLayer};
-use crate::builder::{BuildContext, BuildOptions, Builder};
+use super::{CascadeAccounting, InjectMode, InjectOptions, InjectReport, PatchedLayer};
+use crate::builder::{BuildContext, BuildOptions, BuildReport, Builder, DirtyScope};
 use crate::diff::{FileChange, FileChangeKind};
 use crate::dockerfile::Dockerfile;
 use crate::hash::{ChunkDigest, Digest, HashEngine};
-use crate::oci::ImageRef;
+use crate::oci::{Image, ImageId, ImageRef};
 use crate::store::{ImageStore, LayerStore};
 use crate::{Error, Result};
 use std::ops::Range;
@@ -188,27 +188,18 @@ pub fn inject_implicit(
     let mut new_image_id = images.put(&image)?;
     images.tag(new_tag, &new_image_id)?;
 
-    // Type-2 config edits and cascade rebuilds delegate to the engine.
+    // The downstream pass: rebuild exactly the invalidated sub-DAG
+    // (type-2 steps, compile steps fed by the patched layers), keep
+    // everything else cached or adopted, repair stale chain links.
+    let (cascade, cascade_accounting, built_id) =
+        downstream_pass(&plan, ctx_dir, new_tag, images, layers, engine, opts, &image)?;
+    if let Some(id) = built_id {
+        new_image_id = id;
+    }
     let has_config_edits = plan
         .changes
         .iter()
         .any(|c| matches!(c.kind, ChangeKind::ConfigEdit { .. }));
-    let mut cascade = None;
-    if opts.cascade || has_config_edits {
-        let mut builder = Builder::new(layers, images, engine);
-        builder.scan_cache = opts.scan_cache.clone();
-        let report = builder.build(
-            ctx_dir,
-            new_tag,
-            &BuildOptions {
-                no_cache: false,
-                cost: opts.cost,
-                jobs: 1,
-            },
-        )?;
-        new_image_id = report.image_id;
-        cascade = Some(report);
-    }
 
     Ok(InjectReport {
         mode: InjectMode::Implicit,
@@ -221,8 +212,96 @@ pub fn inject_implicit(
         patch_duration,
         hash_duration,
         cascade,
+        cascade_accounting,
         delegated_to_build: has_config_edits,
     })
+}
+
+/// The post-patch downstream pass, shared by both decomposition modes:
+/// run a [`DirtyScope`] build over the plan's invalidation set. Content
+/// layers patched in place are clean by construction (their stored
+/// source checksums were refreshed), so the pass rebuilds exactly the
+/// dependent sub-DAG — with unchanged interleaved steps staying cache
+/// hits, id-shifted clean steps adopting the old content, and stale
+/// parent-checksum chain links repaired so the *next* strict build is
+/// fully cached too. When nothing is dirty the pass degenerates to a
+/// pure chain-repair sweep and no cascade report is surfaced.
+///
+/// `clone_for_redeploy` images intentionally depart from the derived
+/// layer-id chain (the patched slots point at clones), so the engine
+/// cannot reason about them; the legacy strict delegate is kept for the
+/// (rare) clone + cascade combination.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn downstream_pass(
+    plan: &ChangePlan,
+    ctx_dir: &std::path::Path,
+    new_tag: &ImageRef,
+    images: &ImageStore,
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+    opts: &InjectOptions,
+    patched_image: &Image,
+) -> Result<(Option<BuildReport>, Option<CascadeAccounting>, Option<ImageId>)> {
+    if plan.changes.is_empty() {
+        return Ok((None, None, None));
+    }
+    let has_config_edits = plan
+        .changes
+        .iter()
+        .any(|c| matches!(c.kind, ChangeKind::ConfigEdit { .. }));
+    let build_opts = BuildOptions {
+        no_cache: false,
+        cost: opts.cost,
+        jobs: opts.jobs.max(1),
+    };
+    let mut builder = Builder::new(layers, images, engine);
+    builder.scan_cache = opts.scan_cache.clone();
+
+    if opts.clone_for_redeploy {
+        if opts.cascade || has_config_edits {
+            let report = builder.build(ctx_dir, new_tag, &build_opts)?;
+            let id = report.image_id;
+            return Ok((Some(report), None, Some(id)));
+        }
+        return Ok((None, None, None));
+    }
+
+    let adoptable = plan.dag.adoptable_steps();
+    let scope = DirtyScope {
+        dirty: &plan.invalidation.dirty,
+        old_image: Some(patched_image),
+        adoptable: &adoptable,
+    };
+    let report = builder.build_scoped(ctx_dir, new_tag, &build_opts, Some(&scope))?;
+    let accounting = CascadeAccounting {
+        steps_invalidated: plan.invalidation.dirty.len(),
+        steps_rebuilt: report.rebuilt_steps(),
+        steps_cached: report.cached_steps(),
+        steps_adopted: report.adopted_steps(),
+        seed_fallthrough_steps: plan
+            .changes
+            .iter()
+            .map(|c| c.step)
+            .min()
+            .map(|first| report.steps.len().saturating_sub(first))
+            .unwrap_or(0),
+        per_change: plan
+            .invalidation
+            .per_change
+            .iter()
+            .map(|(step, set)| (*step, set.iter().copied().collect()))
+            .collect(),
+    };
+    let id = report.image_id;
+    let surfaced = opts.cascade
+        || has_config_edits
+        || report.rebuilt_steps() > 0
+        || report.adopted_steps() > 0;
+    Ok((
+        if surfaced { Some(report) } else { None },
+        Some(accounting),
+        Some(id),
+    ))
 }
 
 /// Common validity checks for both decomposition modes.
@@ -241,12 +320,18 @@ pub(crate) fn guard_plan(plan: &ChangePlan, opts: &InjectOptions) -> Result<()> 
         )));
     }
     if plan.downstream_compile && !opts.cascade {
-        return Err(Error::Inject(
-            "changed sources feed a downstream compile step; literal injection cannot \
-             guarantee integrity for compiled code (paper §V) — pass --cascade to also \
-             rebuild the compile layer"
-                .into(),
-        ));
+        let dependents: Vec<String> = plan
+            .invalidation
+            .dirty
+            .iter()
+            .map(|s| format!("#{}", s + 1))
+            .collect();
+        return Err(Error::Inject(format!(
+            "changed sources feed downstream step(s) {}; literal injection cannot \
+             guarantee integrity for derived content (paper §V) — pass --cascade to also \
+             rebuild the dependent sub-DAG",
+            dependents.join(", ")
+        )));
     }
     Ok(())
 }

@@ -1,33 +1,53 @@
-//! **The paper's contribution**: targeted code injection into existing
-//! image layers with SHA-256 checksum bypass (paper §III).
+//! **The paper's contribution, extended to multi-layer targeted
+//! injection**: targeted code injection into existing image layers with
+//! SHA-256 checksum bypass (paper §III), where an edit that touches
+//! several layers triggers per-layer **cascades over a step-dependency
+//! DAG** instead of the linear rebuild-everything-after-the-first-change
+//! model (the paper's own §V future work).
 //!
 //! The flow is:
 //!
 //! 1. [`detect`] — "proceed down the Dockerfile line by line to check
 //!    which layer has been changed", classifying each change as *type 1*
-//!    (content: `COPY`/`ADD`) or *type 2* (configuration);
-//! 2. decompose the changed layer — [`explicit`] (via a `docker save`
+//!    (content: `COPY`/`ADD`) or *type 2* (configuration), and mapping
+//!    every change onto the [`plan`] step-dependency DAG: each change
+//!    carries the exact set of downstream steps it invalidates
+//!    ([`plan::Invalidation`]);
+//! 2. decompose each changed layer — [`explicit`] (via a `docker save`
 //!    bundle) or [`implicit`] (in place, in the layer store; "much
 //!    faster", which bench E8 quantifies);
-//! 3. patch only the changed files into `layer.tar` ([`crate::tar`]
+//! 3. patch only the changed files into each `layer.tar` ([`crate::tar`]
 //!    splicing), re-hash — full SHA-256 for the Docker-compatible
 //!    checksum plus an **O(changed-chunks)** chunk-digest update;
 //! 4. [`checksum`] — bypass the integrity test by rewriting every
 //!    occurrence of the old checksum ("update both the key and the
 //!    lock", §III.B);
-//! 5. for redeployment, [`clone`] the layer under a fresh id first
+//! 5. the **downstream pass** — a [`crate::builder::DirtyScope`] build
+//!    that re-executes only the union of the per-change cascades:
+//!    independent branches rebuild in parallel on the shared worker
+//!    pool, unchanged interleaved layers keep their cache hits (their
+//!    stale parent-checksum chain links are repaired, not invalidated),
+//!    and clean steps whose derived id shifted under a type-2 edit are
+//!    *adopted* byte-for-byte from the old image. Rebuild cost is
+//!    O(|invalidated sub-DAG|), not O(steps after the first change);
+//!    [`CascadeAccounting`] reports both numbers;
+//! 6. for redeployment, [`clone`] the layer under a fresh id first
 //!    (§III.C) so other images and the remote registry stay consistent.
 //!
-//! Type-2 (config) changes are delegated to the normal build engine: a
-//! config layer is an empty layer whose rebuild is free (§III.B end).
+//! Type-2 (config) changes ride the same downstream pass: the edited
+//! config step re-commits its (free) empty layer, and only the steps in
+//! its scope — placement under an edited `WORKDIR`, commands referencing
+//! an edited `ENV` key — are invalidated.
 
 pub mod checksum;
 pub mod clone;
 pub mod detect;
 pub mod explicit;
 pub mod implicit;
+pub mod plan;
 
 pub use detect::{ChangeKind, ChangePlan, CopySpec, StepChange};
+pub use plan::{Invalidation, StepDag};
 
 use crate::hash::Digest;
 use crate::oci::{ImageId, ImageRef, LayerId};
@@ -67,6 +87,9 @@ pub struct InjectOptions {
     pub cost: crate::builder::CostModel,
     /// Optional context scan-cache file (set by the daemon).
     pub scan_cache: Option<std::path::PathBuf>,
+    /// Worker threads for the downstream (cascade) pass: independent
+    /// dirty branches of the step DAG rebuild concurrently.
+    pub jobs: usize,
 }
 
 impl Default for InjectOptions {
@@ -77,6 +100,7 @@ impl Default for InjectOptions {
             clone_for_redeploy: false,
             cost: crate::builder::CostModel::default(),
             scan_cache: None,
+            jobs: 1,
         }
     }
 }
@@ -103,6 +127,27 @@ pub struct PatchedLayer {
     pub new_checksum: Digest,
 }
 
+/// Per-layer cascade accounting of the downstream pass: what the
+/// DAG-scoped rebuild actually did, against what the seed's linear
+/// "rebuild everything after the first change" policy would have done.
+#[derive(Clone, Debug, Default)]
+pub struct CascadeAccounting {
+    /// Steps the DAG marked dirty (the union of the per-change cascades).
+    pub steps_invalidated: usize,
+    /// Steps that actually re-executed in the downstream pass.
+    pub steps_rebuilt: usize,
+    /// Steps served from cache — including unchanged layers *between*
+    /// changed ones, which the linear model would have rebuilt.
+    pub steps_cached: usize,
+    /// Steps adopted byte-for-byte under a shifted derived id.
+    pub steps_adopted: usize,
+    /// What the seed behavior would have re-executed: every step from
+    /// the first change to the end of the Dockerfile.
+    pub seed_fallthrough_steps: usize,
+    /// Per change: `(changed step, downstream steps it invalidates)`.
+    pub per_change: Vec<(usize, Vec<usize>)>,
+}
+
 /// The result of an injection.
 #[derive(Clone, Debug)]
 pub struct InjectReport {
@@ -116,10 +161,14 @@ pub struct InjectReport {
     pub detect_duration: Duration,
     pub patch_duration: Duration,
     pub hash_duration: Duration,
-    /// Report of the cascade rebuild, when requested.
+    /// Report of the downstream (cascade) rebuild, when one re-executed
+    /// or adopted at least one step (or was explicitly requested).
     pub cascade: Option<crate::builder::BuildReport>,
-    /// True when the change was type-2 only and was delegated to the
-    /// build engine instead of patched.
+    /// DAG cascade accounting for the downstream pass (present whenever
+    /// changes were detected and the engine could reason about them).
+    pub cascade_accounting: Option<CascadeAccounting>,
+    /// True when the change included type-2 (config) edits that were
+    /// delegated to the build engine instead of patched.
     pub delegated_to_build: bool,
 }
 

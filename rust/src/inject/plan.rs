@@ -1,0 +1,613 @@
+//! Static step-dependency analysis: the partial order behind
+//! **multi-layer targeted injection** (the paper's own §V future work;
+//! cf. DOCTOR's instruction-level dependency analysis, arXiv:2504.01742,
+//! and Charliecloud's non-linear cache model, arXiv:2309.00166).
+//!
+//! Docker's cache treats a build as a chain: one changed step
+//! invalidates everything after it. In reality the steps form a partial
+//! order — `RUN pip install flask` does not read the files `COPY . /app/`
+//! imported, so a source edit should leave the pip layer alone.
+//! [`StepDag::analyze`] derives that partial order from static analysis
+//! of the Dockerfile against the build context:
+//!
+//! * `COPY`/`ADD` steps **produce** their destination archive paths and
+//!   import context files;
+//! * `RUN` steps **consume** context files and archive paths and
+//!   **produce** archive paths, per a per-toolchain model that mirrors
+//!   [`crate::builder::executor`] (`apt update` feeds `apt install`
+//!   through `var/lib/apt/lists/`, `mvn dependency:resolve` feeds
+//!   `mvn package` through `root/.m2/`, …). Unknown commands that look
+//!   like compilers/build drivers are **opaque** — assumed to read
+//!   everything built before them, degrading gracefully to the old
+//!   rebuild-everything-after behavior — while other unknown commands
+//!   mirror the executor's fallback arm exactly: a pure function of the
+//!   command literal, reading nothing;
+//! * `WORKDIR`/`ENV` define configuration scopes: a step whose output
+//!   placement uses the ambient workdir depends on the governing
+//!   `WORKDIR`, and a `RUN` that references `$KEY` depends on that
+//!   `ENV` step.
+//!
+//! [`invalidation`] then maps a set of detected changes
+//! ([`super::detect::StepChange`]) to the exact downstream sub-DAG each
+//! change dirties. The matching is **file-sensitive**: a changed
+//! `COPY . /root/` invalidates `RUN conda env update -f environment.yaml`
+//! only when `environment.yaml` itself is among the changed files — so a
+//! `main.py` edit in the same layer leaves the conda layer cached.
+
+use super::detect::{ChangeKind, StepChange};
+use crate::builder::{executor, BuildContext};
+use crate::dockerfile::{Dockerfile, Instruction, LayerKind};
+use std::collections::BTreeSet;
+
+/// A path claim in either the archive namespace (layer tar member paths)
+/// or the context namespace (paths relative to the build-context root).
+/// Claims from the two namespaces are never compared with each other.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Claim {
+    /// Exactly this path.
+    Exact(String),
+    /// The whole subtree under this prefix (`""` claims everything).
+    Subtree(String),
+    /// Every path with this suffix, anywhere (e.g. `".java"`).
+    Suffix(String),
+}
+
+impl Claim {
+    /// Does this claim cover a concrete path?
+    pub fn matches(&self, path: &str) -> bool {
+        match self {
+            Claim::Exact(p) => p == path,
+            Claim::Subtree(p) => {
+                p.is_empty()
+                    || path == p
+                    || (path.len() > p.len() && path.starts_with(p.as_str()) && path.as_bytes()[p.len()] == b'/')
+            }
+            Claim::Suffix(s) => path.ends_with(s.as_str()),
+        }
+    }
+
+    /// Could the two claims cover a common path? Conservative: `true`
+    /// whenever the answer is not a definite no.
+    pub fn overlaps(&self, other: &Claim) -> bool {
+        match (self, other) {
+            (Claim::Exact(p), o) => o.matches(p),
+            (s, Claim::Exact(p)) => s.matches(p),
+            (Claim::Subtree(a), Claim::Subtree(b)) => {
+                a.is_empty()
+                    || b.is_empty()
+                    || a == b
+                    || Claim::Subtree(a.clone()).matches(b)
+                    || Claim::Subtree(b.clone()).matches(a)
+            }
+            // A suffix claim can land anywhere, including inside any subtree.
+            (Claim::Suffix(_), _) | (_, Claim::Suffix(_)) => true,
+        }
+    }
+}
+
+/// What one step statically reads and writes.
+#[derive(Clone, Debug, Default)]
+struct StepIo {
+    /// Context files the step's executor reads (context-relative paths).
+    ctx_reads: Vec<Claim>,
+    /// Archive paths consumed from earlier layers.
+    archive_reads: Vec<Claim>,
+    /// Archive paths this step produces.
+    archive_writes: Vec<Claim>,
+    /// Unknown executor: treated as consuming everything produced before.
+    opaque: bool,
+    /// Output placement depends on the ambient workdir.
+    workdir_sensitive: bool,
+    /// The `WORKDIR` step governing this step's placement, if any.
+    workdir_step: Option<usize>,
+    /// `$KEY` names the step's command references.
+    env_refs: Vec<String>,
+    /// `ENV` key defined by this (config) step.
+    env_key: Option<String>,
+    /// Produces a content layer (FROM/COPY/ADD/RUN)?
+    is_content: bool,
+}
+
+/// The step-dependency DAG of one Dockerfile, resolved against a build
+/// context (COPY selections and toolchain inputs are context-dependent).
+#[derive(Clone, Debug)]
+pub struct StepDag {
+    steps: Vec<StepIo>,
+}
+
+impl StepDag {
+    /// Analyze a Dockerfile against its build context. `initial_workdir`
+    /// is the working directory in effect before step 0 — callers must
+    /// replay a locally-tagged base image's `working_dir` exactly as
+    /// [`super::detect::detect`] and the builder's planner do, so
+    /// workdir-derived claims resolve to the same archive paths the
+    /// executor will use.
+    pub fn analyze(dockerfile: &Dockerfile, ctx: &BuildContext, initial_workdir: &str) -> StepDag {
+        let mut steps = Vec::with_capacity(dockerfile.steps());
+        let mut workdir = if initial_workdir.is_empty() {
+            "/".to_string()
+        } else {
+            initial_workdir.to_string()
+        };
+        let mut last_workdir_step: Option<usize> = None;
+        for (idx, (_, inst)) in dockerfile.instructions.iter().enumerate() {
+            let mut io = StepIo {
+                is_content: inst.kind() == LayerKind::Content,
+                ..StepIo::default()
+            };
+            match inst {
+                Instruction::From { .. } => {
+                    // The base rootfs underlies everything.
+                    io.archive_writes.push(Claim::Subtree(String::new()));
+                }
+                Instruction::Copy { src, dst } | Instruction::Add { src, dst } => {
+                    let multi = ctx.select(src).len() > 1 || ctx.src_is_dir(src);
+                    let dst_base = executor::join(&workdir, dst);
+                    io.archive_writes.push(if dst.ends_with('/') || multi {
+                        Claim::Subtree(dst_base)
+                    } else {
+                        Claim::Exact(dst_base)
+                    });
+                    io.workdir_sensitive = !dst.starts_with('/');
+                    if io.workdir_sensitive {
+                        io.workdir_step = last_workdir_step;
+                    }
+                }
+                Instruction::Run { command } => {
+                    for part in command.split("&&") {
+                        analyze_run(part.trim(), &workdir, &mut io);
+                    }
+                    io.env_refs = env_refs(command);
+                    if io.workdir_sensitive || io.opaque {
+                        io.workdir_step = last_workdir_step;
+                    }
+                }
+                Instruction::Env { key, .. } => io.env_key = Some(key.clone()),
+                Instruction::Workdir { path } => {
+                    workdir = path.clone();
+                    last_workdir_step = Some(idx);
+                }
+                _ => {}
+            }
+            steps.push(io);
+        }
+        StepDag { steps }
+    }
+
+    /// Number of steps analyzed.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Steps whose layer content is a pure function of inputs the
+    /// builder can re-validate without executing: config steps, `FROM`,
+    /// `COPY`/`ADD` (the adoption probe compares source checksums), and
+    /// `RUN` commands with no declared context reads. A `RUN` that reads
+    /// context files directly (conda's env file, mvn's pom) — or an
+    /// opaque one — must never be adopted: detection cannot see those
+    /// files change unless a COPY imports them, so an adopted layer
+    /// could silently carry stale content.
+    pub fn adoptable_steps(&self) -> BTreeSet<usize> {
+        self.steps
+            .iter()
+            .enumerate()
+            .filter(|(_, io)| !io.opaque && io.ctx_reads.is_empty())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Direct step-level dependency: does step `j` consume what step `i`
+    /// produces? (Archive namespace only; config layers carry no files.)
+    fn depends(&self, j: usize, i: usize) -> bool {
+        if i >= j {
+            return false;
+        }
+        let (producer, consumer) = (&self.steps[i], &self.steps[j]);
+        if !producer.is_content || !consumer.is_content {
+            return false;
+        }
+        if consumer.opaque {
+            return true;
+        }
+        producer
+            .archive_writes
+            .iter()
+            .any(|w| consumer.archive_reads.iter().any(|r| r.overlaps(w)))
+    }
+
+    /// Close `dirty` downstream: any step consuming a dirty step's
+    /// outputs becomes dirty too. One forward sweep suffices because
+    /// edges only point forward.
+    fn close_downstream(&self, dirty: &mut BTreeSet<usize>) {
+        for j in 0..self.steps.len() {
+            if dirty.contains(&j) {
+                continue;
+            }
+            if (0..j).any(|i| dirty.contains(&i) && self.depends(j, i)) {
+                dirty.insert(j);
+            }
+        }
+    }
+
+    /// The downstream steps a **content** change at `step` invalidates,
+    /// given the changed files' context paths and archive paths. The
+    /// patched step itself is not included (it is patched in place, not
+    /// rebuilt). File-sensitive: a consumer is seeded only when one of
+    /// its declared reads covers a changed file.
+    pub fn content_cascade(
+        &self,
+        step: usize,
+        ctx_paths: &[&str],
+        archive_paths: &[&str],
+    ) -> BTreeSet<usize> {
+        let mut dirty = BTreeSet::new();
+        for j in (step + 1)..self.steps.len() {
+            let io = &self.steps[j];
+            if !io.is_content {
+                continue;
+            }
+            let hit = io.opaque
+                || ctx_paths.iter().any(|p| io.ctx_reads.iter().any(|c| c.matches(p)))
+                || archive_paths.iter().any(|p| io.archive_reads.iter().any(|c| c.matches(p)));
+            if hit {
+                dirty.insert(j);
+            }
+        }
+        self.close_downstream(&mut dirty);
+        dirty
+    }
+
+    /// The steps a **config** edit at `step` invalidates (including the
+    /// edited step itself, whose empty layer must re-commit under its new
+    /// literal): the steps inside the edited scope — placement under an
+    /// edited `WORKDIR`, commands referencing an edited `ENV` key — plus
+    /// their downstream closure.
+    pub fn config_cascade(&self, step: usize) -> BTreeSet<usize> {
+        let mut dirty = BTreeSet::new();
+        dirty.insert(step);
+        let edited = &self.steps[step];
+        for j in (step + 1)..self.steps.len() {
+            let io = &self.steps[j];
+            let in_workdir_scope = io.workdir_step == Some(step) && (io.workdir_sensitive || io.opaque);
+            let in_env_scope = edited
+                .env_key
+                .as_ref()
+                .map(|k| io.env_refs.iter().any(|r| r == k))
+                .unwrap_or(false);
+            if in_workdir_scope || in_env_scope {
+                dirty.insert(j);
+            }
+        }
+        self.close_downstream(&mut dirty);
+        dirty
+    }
+}
+
+/// `$KEY` / `${KEY}` names referenced in a command literal.
+fn env_refs(command: &str) -> Vec<String> {
+    let bytes = command.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(at) = command[i..].find('$') {
+        let mut k = i + at + 1;
+        if k < bytes.len() && bytes[k] == b'{' {
+            k += 1;
+        }
+        let start = k;
+        while k < bytes.len() && (bytes[k].is_ascii_alphanumeric() || bytes[k] == b'_') {
+            k += 1;
+        }
+        if k > start {
+            out.push(command[start..k].to_string());
+        }
+        i = k.max(i + at + 1);
+    }
+    out
+}
+
+/// The per-toolchain read/write model of one `RUN` command part —
+/// mirrors [`executor::run_command`]'s dispatch. Anything the executor
+/// model does not recognize is opaque (consumes everything earlier).
+fn analyze_run(cmd: &str, workdir: &str, io: &mut StepIo) {
+    let tokens: Vec<&str> = cmd.split_whitespace().collect();
+    match tokens.first().copied().unwrap_or("") {
+        "apt" | "apt-get" => {
+            if tokens.contains(&"install") {
+                io.archive_reads.push(Claim::Subtree("var/lib/apt/lists".into()));
+                io.archive_writes.push(Claim::Subtree("var/cache/apt/archives".into()));
+                io.archive_writes.push(Claim::Subtree("usr/share/doc".into()));
+            } else {
+                io.archive_writes.push(Claim::Subtree("var/lib/apt/lists".into()));
+            }
+        }
+        "pip" | "pip3" => {
+            io.archive_writes.push(Claim::Subtree("usr/lib/python3/site-packages".into()));
+        }
+        "conda" => {
+            io.ctx_reads.push(Claim::Exact("environment.yaml".into()));
+            io.archive_writes.push(Claim::Subtree("opt/conda".into()));
+        }
+        "mvn" => {
+            io.ctx_reads.push(Claim::Exact("pom.xml".into()));
+            if cmd.contains("dependency:resolve") {
+                io.archive_writes.push(Claim::Subtree("root/.m2/repository".into()));
+            } else if cmd.contains("verify") {
+                io.archive_writes.push(Claim::Exact("root/.m2/verify.log".into()));
+            } else if cmd.contains("package") {
+                io.ctx_reads.push(Claim::Suffix(".java".into()));
+                io.archive_reads.push(Claim::Subtree("root/.m2/repository".into()));
+                io.archive_writes.push(Claim::Subtree(executor::join(workdir, "target")));
+                io.workdir_sensitive = true;
+            } else {
+                io.archive_writes.push(Claim::Subtree("var/log/layerjet".into()));
+            }
+        }
+        "javac" => {
+            io.ctx_reads.push(Claim::Suffix(".java".into()));
+            io.archive_writes.push(Claim::Subtree(executor::join(workdir, "")));
+            io.workdir_sensitive = true;
+        }
+        "" => {}
+        _ => {
+            // The executor's fallback arm synthesizes a log payload from
+            // the command literal alone — reading nothing — so most
+            // unrecognized commands are pure. Commands that *look* like
+            // compilers/build drivers are the exception: treat them
+            // opaque (consume everything earlier) so the paper's
+            // compiled-language hazard keeps demanding --cascade even
+            // for toolchains the executor does not model.
+            io.opaque = looks_like_compile(cmd);
+            io.archive_writes.push(Claim::Subtree("var/log/layerjet".into()));
+        }
+    }
+}
+
+/// Unmodeled commands whose real-world output would depend on source
+/// content (the old detection heuristic, kept for paper fidelity).
+fn looks_like_compile(cmd: &str) -> bool {
+    ["gcc", "g++", "cargo build", "make", "go build", "npm", "tsc", "gradle", "cmake"]
+        .iter()
+        .any(|t| cmd.contains(t))
+}
+
+/// The full invalidation picture for a detected change set.
+#[derive(Clone, Debug, Default)]
+pub struct Invalidation {
+    /// Per change: `(changed step, downstream steps it invalidates)`.
+    pub per_change: Vec<(usize, BTreeSet<usize>)>,
+    /// Union of every cascade: the steps a downstream pass must rebuild.
+    /// Content-patched steps are *not* in here (patched in place);
+    /// config-edited steps are (their literal changed).
+    pub dirty: BTreeSet<usize>,
+    /// A changed content layer feeds at least one downstream content
+    /// step — injection alone is unsound and a cascade rebuild is
+    /// required (the compiled-language hazard, paper §IV scenario 4).
+    pub needs_cascade: bool,
+}
+
+/// Map detected changes to the sub-DAG they invalidate.
+pub fn invalidation(dag: &StepDag, changes: &[StepChange]) -> Invalidation {
+    let mut inv = Invalidation::default();
+    for change in changes {
+        let cascade = match &change.kind {
+            ChangeKind::Content { files, .. } => {
+                let ctx_paths: Vec<&str> = files
+                    .iter()
+                    .filter_map(|f| f.context_path.as_deref())
+                    .collect();
+                let archive_paths: Vec<&str> =
+                    files.iter().map(|f| f.archive_path.as_str()).collect();
+                let cascade = dag.content_cascade(change.step, &ctx_paths, &archive_paths);
+                if !cascade.is_empty() {
+                    inv.needs_cascade = true;
+                }
+                cascade
+            }
+            ChangeKind::ConfigEdit { .. } => {
+                if change.step < dag.len() {
+                    dag.config_cascade(change.step)
+                } else {
+                    BTreeSet::new()
+                }
+            }
+            // Structural edits are refused by the inject guard; for
+            // accounting, they behave like the old linear model.
+            ChangeKind::InstructionEdit { .. } => {
+                (change.step.min(dag.len())..dag.len()).collect()
+            }
+        };
+        inv.dirty.extend(cascade.iter().copied());
+        inv.per_change.push((change.step, cascade));
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NativeEngine;
+    use std::path::PathBuf;
+
+    fn ctx_with(tag: &str, files: &[(&str, &str)]) -> (BuildContext, PathBuf) {
+        let d = std::env::temp_dir().join(format!("lj-plan-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        for (p, c) in files {
+            let path = d.join(p);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, c).unwrap();
+        }
+        (BuildContext::scan(&d, &NativeEngine::new()).unwrap(), d)
+    }
+
+    fn cascade_of(dag: &StepDag, step: usize, ctx_paths: &[&str]) -> Vec<usize> {
+        dag.content_cascade(step, ctx_paths, &[]).into_iter().collect()
+    }
+
+    #[test]
+    fn claims_match_and_overlap() {
+        let sub = Claim::Subtree("code/src".into());
+        assert!(sub.matches("code/src/App.java"));
+        assert!(sub.matches("code/src"));
+        assert!(!sub.matches("code/srcx/App.java"));
+        assert!(Claim::Subtree(String::new()).matches("anything/at/all"));
+        assert!(Claim::Suffix(".java".into()).matches("a/b/C.java"));
+        assert!(Claim::Exact("pom.xml".into()).matches("pom.xml"));
+
+        assert!(sub.overlaps(&Claim::Exact("code/src/App.java".into())));
+        assert!(!sub.overlaps(&Claim::Exact("pom.xml".into())));
+        assert!(sub.overlaps(&Claim::Subtree("code".into())));
+        assert!(!sub.overlaps(&Claim::Subtree("root/.m2".into())));
+        assert!(sub.overlaps(&Claim::Suffix(".java".into())), "suffix is conservative");
+    }
+
+    #[test]
+    fn pip_does_not_depend_on_copied_sources() {
+        let (ctx, d) = ctx_with("pip", &[("Dockerfile", "x"), ("main.py", "print(1)\n")]);
+        let df = Dockerfile::parse(
+            "FROM python:alpine\nCOPY . /root/\nRUN pip install flask\nCMD [\"python\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        assert_eq!(cascade_of(&dag, 1, &["main.py"]), Vec::<usize>::new());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn conda_invalidated_only_by_its_environment_file() {
+        let (ctx, d) = ctx_with("conda", &[
+            ("Dockerfile", "x"),
+            ("main.py", "print(1)\n"),
+            ("environment.yaml", "dependencies:\n  - numpy\n"),
+        ]);
+        let df = Dockerfile::parse(
+            "FROM continuumio/miniconda3\nCOPY . /root/\nWORKDIR /root\n\
+             RUN apt update && apt install curl -y\nRUN conda env update -f environment.yaml\n\
+             CMD [\"python\", \"main.py\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        // main.py edit: neither apt nor conda consumes it.
+        assert_eq!(cascade_of(&dag, 1, &["main.py"]), Vec::<usize>::new());
+        // environment.yaml edit: exactly the conda step.
+        assert_eq!(cascade_of(&dag, 1, &["environment.yaml"]), vec![4]);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn maven_chain_is_transitive_and_file_sensitive() {
+        let (ctx, d) = ctx_with("mvn", &[
+            ("Dockerfile", "x"),
+            ("pom.xml", "<project><artifactId>a</artifactId></project>"),
+            ("src/App.java", "class App {}"),
+        ]);
+        // 0 FROM, 1 WORKDIR, 2 ADD pom, 3 resolve, 4 verify, 5 ADD src, 6 package, 7 CMD
+        let df = Dockerfile::parse(
+            "FROM ubuntu:latest\nWORKDIR /code\nADD pom.xml /code/pom.xml\n\
+             RUN [\"mvn\", \"dependency:resolve\"]\nRUN [\"mvn\", \"verify\"]\n\
+             ADD src /code/src\nRUN [\"mvn\", \"package\"]\nCMD [\"java\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        // A source edit dirties only the package step.
+        assert_eq!(cascade_of(&dag, 5, &["src/App.java"]), vec![6]);
+        // A pom edit dirties resolve + verify directly and package both
+        // directly (reads pom.xml) and transitively (reads .m2 written by
+        // resolve).
+        assert_eq!(cascade_of(&dag, 2, &["pom.xml"]), vec![3, 4, 6]);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn unknown_compilers_are_opaque_but_pure_commands_are_not() {
+        let (ctx, d) = ctx_with("opaque", &[("Dockerfile", "x"), ("main.c", "int main(){}\n")]);
+        let df = Dockerfile::parse(
+            "FROM ubuntu:latest\nCOPY . /src/\nRUN make -j8\nRUN echo done\nCMD [\"./a.out\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        // `make` looks like a build driver: opaque, must cascade. `echo`
+        // matches the executor's pure fallback arm: reads nothing, so a
+        // source edit leaves it cached (and it stays adoptable).
+        assert_eq!(cascade_of(&dag, 1, &["main.c"]), vec![2], "compile-like RUN must cascade");
+        let adoptable = dag.adoptable_steps();
+        assert!(!adoptable.contains(&2), "opaque step is never adoptable");
+        assert!(adoptable.contains(&3), "pure unknown RUN is adoptable");
+        assert!(adoptable.contains(&1) && adoptable.contains(&4));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn ctx_reading_runs_are_not_adoptable() {
+        let (ctx, d) = ctx_with("noadopt", &[
+            ("Dockerfile", "x"),
+            ("environment.yaml", "dependencies:\n  - numpy\n"),
+        ]);
+        let df = Dockerfile::parse(
+            "FROM continuumio/miniconda3\nCOPY main.py main.py\n\
+             RUN conda env update -f environment.yaml\nRUN pip install flask\nCMD [\"python\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        let adoptable = dag.adoptable_steps();
+        assert!(
+            !adoptable.contains(&2),
+            "conda reads environment.yaml from the context — adoption could go stale"
+        );
+        assert!(adoptable.contains(&3), "pip reads nothing from the context");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn apt_update_feeds_apt_install() {
+        let (ctx, d) = ctx_with("apt", &[("Dockerfile", "x")]);
+        let df = Dockerfile::parse(
+            "FROM ubuntu:latest\nRUN apt update\nRUN apt install -y curl\nCMD [\"sh\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        let mut dirty: BTreeSet<usize> = [1].into_iter().collect();
+        dag.close_downstream(&mut dirty);
+        assert!(dirty.contains(&2), "install consumes update's package lists");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn config_scopes_cascade() {
+        let (ctx, d) = ctx_with("scopes", &[
+            ("Dockerfile", "x"),
+            ("pom.xml", "<project><artifactId>a</artifactId></project>"),
+            ("src/App.java", "class App {}"),
+        ]);
+        // 0 FROM, 1 ENV, 2 WORKDIR, 3 ADD pom (relative dst!), 4 RUN mvn package,
+        // 5 RUN echo $MODE, 6 CMD
+        let df = Dockerfile::parse(
+            "FROM ubuntu:latest\nENV MODE=fast\nWORKDIR /code\nADD pom.xml pom.xml\n\
+             RUN [\"mvn\", \"package\"]\nRUN echo $MODE\nCMD [\"java\"]\n",
+        )
+        .unwrap();
+        let dag = StepDag::analyze(&df, &ctx, "/");
+        // WORKDIR edit: the relative-dst ADD, the workdir-writing mvn
+        // package, and the opaque echo are all in scope.
+        let wd: Vec<usize> = dag.config_cascade(2).into_iter().collect();
+        assert!(wd.contains(&2) && wd.contains(&3) && wd.contains(&4));
+        // ENV edit: only the $MODE-referencing RUN (opaque, so its own
+        // downstream closure would extend past it if anything followed).
+        let env: Vec<usize> = dag.config_cascade(1).into_iter().collect();
+        assert!(env.contains(&1) && env.contains(&5));
+        assert!(!env.contains(&4), "mvn never references $MODE");
+        // CMD-style edits cascade to nothing but themselves.
+        assert_eq!(dag.config_cascade(6).into_iter().collect::<Vec<_>>(), vec![6]);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn env_refs_parse() {
+        assert_eq!(env_refs("echo $MODE ${PATH}x $1a"), vec!["MODE", "PATH", "1a"]);
+        assert!(env_refs("no refs here").is_empty());
+    }
+}

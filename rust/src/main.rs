@@ -23,23 +23,37 @@ COMMANDS:
                                          build an image from a context dir
                                          (--jobs N runs layer jobs on N threads)
   inject -t NAME:TAG CTX [--to NAME:TAG] [--explicit] [--cascade] [--clone]
-                                         inject context changes into an image
+         [--jobs N]                      inject context changes into an image;
+                                         a multi-layer change rebuilds only
+                                         the dependent sub-DAG (--jobs N runs
+                                         independent cascade branches on N
+                                         threads)
   save NAME:TAG -o FILE                  export an image bundle (docker save)
   load FILE                              import a bundle (docker load)
-  push NAME:TAG --remote DIR [--jobs N] [--whole-tar] [--wire-v1]
+  push NAME:TAG --remote DIR [--jobs N] [--whole-tar] [--wire-v1] [--per-chunk]
                                          push to a (directory) registry;
                                          streams only content-defined chunks
-                                         the remote lacks (--whole-tar forces
-                                         the legacy wire mode, --wire-v1 the
-                                         fixed-chunk v1 manifests)
+                                         the remote lacks, negotiating one
+                                         batched round-trip per layer
+                                         (--whole-tar forces the legacy wire
+                                         mode, --wire-v1 the fixed-chunk v1
+                                         manifests, --per-chunk the per-chunk
+                                         negotiation of legacy remotes)
   pull NAME:TAG --remote DIR [--jobs N]  pull from a (directory) registry,
                                          reconstructing layers from chunks
   registry scrub --remote DIR            re-hash every pool chunk, drop rot,
                                          demote affected layers so the next
                                          push repairs them
+  registry untag NAME:TAG --remote DIR   drop a remote tag (what makes an
+                                         image collectable by gc)
   registry gc --remote DIR               mark-and-sweep: delete untagged
                                          images, unreferenced layers and
-                                         orphaned pool chunks
+                                         orphaned pool chunks. Run QUIESCED
+                                         (no concurrent push to the remote):
+                                         an in-flight push's uncommitted
+                                         chunks look like garbage. CI farms
+                                         should prefer the coordinator's
+                                         maintain() quiesce handshake.
   history NAME:TAG                       layer history (docker history)
   verify NAME:TAG                        image integrity check
   images                                 list tags
@@ -180,6 +194,14 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 .opt("-t")
                 .ok_or_else(|| layerjet::Error::msg("inject: missing -t NAME:TAG"))?;
             let to = cli.opt("--to").unwrap_or_else(|| tag.clone());
+            let jobs = cli
+                .opt("--jobs")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("inject: bad --jobs {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(1);
             let opts = InjectOptions {
                 mode: if cli.has("--explicit") {
                     InjectMode::Explicit
@@ -190,6 +212,7 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 clone_for_redeploy: cli.has("--clone"),
                 cost: CostModel::default(),
                 scan_cache: None, // the daemon fills this in
+                jobs,
             };
             let ctx = cli
                 .pos()
@@ -224,6 +247,29 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     c.rebuilt_steps(),
                     c.steps.len(),
                     layerjet::util::human_duration(c.duration)
+                );
+            }
+            if let Some(acc) = &report.cascade_accounting {
+                for (step, cascade) in &acc.per_change {
+                    let list = cascade
+                        .iter()
+                        .map(|s| format!("#{}", s + 1))
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    println!(
+                        "  change at step #{} invalidates {}",
+                        step + 1,
+                        if list.is_empty() { "nothing downstream".into() } else { list },
+                    );
+                }
+                println!(
+                    "cascade accounting: {} invalidated / {} rebuilt / {} cached / {} adopted \
+                     (rebuild-after-first-change would have re-run {})",
+                    acc.steps_invalidated,
+                    acc.steps_rebuilt,
+                    acc.steps_cached,
+                    acc.steps_adopted,
+                    acc.seed_fallthrough_steps,
                 );
             }
         }
@@ -264,19 +310,25 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 .unwrap_or(1);
             let whole_tar = cli.has("--whole-tar");
             let manifest_v1 = cli.has("--wire-v1");
+            let negotiate_per_chunk = cli.has("--per-chunk");
             let daemon = open_daemon()?;
             let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
             if command == "push" {
-                let report =
-                    daemon.push_with(&tag, &remote, &PushOptions { jobs, whole_tar, manifest_v1 })?;
+                let report = daemon.push_with(
+                    &tag,
+                    &remote,
+                    &PushOptions { jobs, whole_tar, manifest_v1, negotiate_per_chunk },
+                )?;
                 println!(
-                    "pushed {}: {} layers, {} uploaded, {} deduped ({} chunks sent, {} reused{})",
+                    "pushed {}: {} layers, {} uploaded, {} deduped ({} chunks sent, {} reused, \
+                     {} negotiation round-trip(s){})",
                     report.reference,
                     report.layers.len(),
                     layerjet::util::human_bytes(report.bytes_uploaded),
                     layerjet::util::human_bytes(report.bytes_deduped),
                     report.chunks_uploaded,
                     report.chunks_deduped,
+                    report.negotiation_round_trips,
                     if report.whole_tar { ", whole-tar mode" } else { "" },
                 );
             } else {
@@ -292,14 +344,25 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
             }
         }
         "registry" => {
-            let sub = cli
-                .pos()
-                .ok_or_else(|| layerjet::Error::msg("registry: missing subcommand (scrub|gc)"))?;
+            let sub = cli.pos().ok_or_else(|| {
+                layerjet::Error::msg("registry: missing subcommand (scrub|untag|gc)")
+            })?;
             let remote_dir = cli
                 .opt("--remote")
                 .ok_or_else(|| layerjet::Error::msg(format!("registry {sub}: missing --remote DIR")))?;
             let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
             match sub.as_str() {
+                "untag" => {
+                    let tag = cli
+                        .pos()
+                        .ok_or_else(|| layerjet::Error::msg("registry untag: missing NAME:TAG"))?;
+                    let existed = remote.untag(&layerjet::oci::ImageRef::parse(&tag))?;
+                    if existed {
+                        println!("untagged {tag}; `registry gc` will collect it if unreferenced");
+                    } else {
+                        println!("{tag}: no such remote tag");
+                    }
+                }
                 "scrub" => {
                     let r = remote.scrub()?;
                     println!(
@@ -316,6 +379,11 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     }
                 }
                 "gc" => {
+                    eprintln!(
+                        "note: gc must run quiesced — a concurrent push's uncommitted chunks \
+                         are indistinguishable from garbage (coordinator pipelines: use \
+                         BuildCoordinator::maintain, which takes the quiesce handshake)"
+                    );
                     let r = remote.gc()?;
                     println!(
                         "gc: {} image(s), {} layer(s), {} chunk(s) removed, {} reclaimed",
@@ -327,7 +395,7 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 }
                 other => {
                     return Err(layerjet::Error::msg(format!(
-                        "registry: unknown subcommand {other:?} (scrub|gc)"
+                        "registry: unknown subcommand {other:?} (scrub|untag|gc)"
                     )))
                 }
             }

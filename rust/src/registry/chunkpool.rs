@@ -60,10 +60,21 @@ impl ChunkPool {
         self.root.join(digest.to_hex())
     }
 
-    /// Is a chunk present? This is the push negotiation primitive: a
-    /// chunk that answers `true` is never sent over the wire.
+    /// Is a chunk present? This is the per-chunk push negotiation
+    /// primitive: a chunk that answers `true` is never sent over the
+    /// wire. Modern pushes negotiate whole layers at once through
+    /// [`ChunkPool::has_batch`]; this stays as the legacy-remote path.
     pub fn has(&self, digest: &Digest) -> bool {
         self.chunk_path(digest).exists()
+    }
+
+    /// Batched negotiation: answer [`ChunkPool::has`] for a whole
+    /// manifest's digests in one call — the one-round-trip-per-layer
+    /// primitive. A directory pool answers locally; over a real wire
+    /// this is the single request that replaces N per-chunk probes on
+    /// high-latency remotes.
+    pub fn has_batch(&self, digests: &[Digest]) -> Vec<bool> {
+        digests.iter().map(|d| self.has(d)).collect()
     }
 
     /// Fetch a chunk's bytes; a missing chunk is a registry error.

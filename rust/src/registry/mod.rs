@@ -23,8 +23,11 @@
 //! ```
 //!
 //! A layer is represented remotely by its **chunk manifest** plus the
-//! pool blobs the manifest points into. Push **negotiates**: for each
-//! chunk of each layer it asks the pool "have you got this digest?" and
+//! pool blobs the manifest points into. Push **negotiates**: per layer
+//! it asks the pool "which of these digests have you got?" in one
+//! batched round-trip ([`ChunkPool::has_batch`]; O(layers) round-trips
+//! total — [`PushOptions::negotiate_per_chunk`] keeps the per-chunk
+//! probe loop for legacy remotes without the batch endpoint) and
 //! streams only the novel chunks — so a clone-inject redeploy whose
 //! COPY layer differs by one edit uploads O(changed chunks) bytes
 //! instead of O(layer). Pull reassembles each layer tar from the
@@ -148,6 +151,12 @@ pub struct PushOptions {
     /// that shows why shift-robust chunking matters. Ignored in
     /// whole-tar mode.
     pub manifest_v1: bool,
+    /// Negotiate chunk existence one probe at a time instead of one
+    /// batched round-trip per layer — the escape hatch for legacy
+    /// remotes whose pool API lacks the batch endpoint. Costs O(chunks)
+    /// negotiation round-trips instead of O(layers); transferred bytes
+    /// are identical either way.
+    pub negotiate_per_chunk: bool,
 }
 
 impl Default for PushOptions {
@@ -156,6 +165,7 @@ impl Default for PushOptions {
             jobs: 1,
             whole_tar: false,
             manifest_v1: false,
+            negotiate_per_chunk: false,
         }
     }
 }
@@ -189,6 +199,11 @@ pub struct PushReport {
     pub chunks_uploaded: usize,
     /// Chunks deduplicated against the pool (or within this push).
     pub chunks_deduped: usize,
+    /// Existence-negotiation round-trips made against the chunk pool:
+    /// one per uploaded non-empty layer under batched negotiation, one
+    /// per distinct chunk under [`PushOptions::negotiate_per_chunk`],
+    /// zero in whole-tar mode.
+    pub negotiation_round_trips: usize,
     /// True when the v1 whole-tar wire mode was used.
     pub whole_tar: bool,
 }
@@ -417,6 +432,7 @@ impl RemoteRegistry {
         // charged), later claimers — other layers sharing the chunk —
         // count as dedup. Keeps accounting deterministic across `jobs`.
         let claimed: Mutex<HashSet<Digest>> = Mutex::new(HashSet::new());
+        let round_trips = std::sync::atomic::AtomicUsize::new(0);
         let uploaded: Vec<LayerUpload> = scoped_index_map(uploads.len(), opts.jobs, |slot| {
             let i = uploads[slot];
             let lid = &image.layer_ids[i];
@@ -449,13 +465,86 @@ impl RemoteRegistry {
                 chunks_uploaded: 0,
                 chunks_deduped: 0,
             };
-            // Stream one chunk through the claim/negotiate/upload gate.
-            // Accounting is deterministic at any `jobs` width: duplicate
-            // chunks carry identical bytes, so whichever worker claims
-            // first, the totals are the same.
-            let mut send = |chunk_digest: &Digest, chunk: &[u8]| -> Result<()> {
+            // Layer-identity validation, shared by both manifest codecs:
+            // the image's fixed-chunk root must describe this tar —
+            // vouched by the store's sidecar when it demonstrably agrees
+            // (length and image-declared root match; free), recomputed
+            // from the already-loaded bytes otherwise (e.g. a sidecar
+            // gone stale after a raw in-place tar write) — so a stale
+            // `chunk_roots` entry fails here, on the machine that can
+            // fix it, not at every later pull. Never re-reads the tar.
+            let cd = match layers.try_chunk_sidecar(lid) {
+                Some(cd) if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] => {
+                    cd
+                }
+                _ => ChunkDigest::compute(&tar, engine),
+            };
+            if cd.root != image.chunk_roots[i] {
+                return Err(Error::Registry(format!(
+                    "layer {} chunk root does not match the image's metadata",
+                    lid.short()
+                )));
+            }
+            // Derive the layer's wire chunk list — `(digest, byte range)`
+            // pairs — under the selected manifest codec.
+            let (encoded, spans): (Vec<u8>, Vec<(Digest, std::ops::Range<usize>)>) = if opts
+                .manifest_v1
+            {
+                // v1 writer: fixed 4 KiB chunks named by engine digests.
+                let spans = cd
+                    .chunks
+                    .iter()
+                    .enumerate()
+                    .map(|(j, d)| (*d, j * CHUNK_SIZE..((j + 1) * CHUNK_SIZE).min(tar.len())))
+                    .collect();
+                (cd.encode(), spans)
+            } else {
+                // v2 writer: content-defined chunks named by the SHA-256
+                // of their raw bytes. When this push uploads a single
+                // layer (the redeploy hot path) the layer pipeline is
+                // idle, so the span digesting borrows its width instead;
+                // multi-layer pushes already saturate it one layer per
+                // worker.
+                let span_jobs = if uploads.len() == 1 { opts.jobs } else { 1 };
+                let manifest = CdcManifest::from_data(&tar, span_jobs);
+                let mut offset = 0usize;
+                let spans = manifest
+                    .chunks
+                    .iter()
+                    .map(|(d, len)| {
+                        let range = offset..offset + *len as usize;
+                        offset = range.end;
+                        (*d, range)
+                    })
+                    .collect();
+                (manifest.encode(), spans)
+            };
+            // Negotiate: one batched existence round-trip for the whole
+            // layer by default; per-chunk probes (at claim time, exactly
+            // like the legacy wire) under `negotiate_per_chunk`. Either
+            // way the upload decision is `first claim && absent`, so the
+            // transferred set and the accounting are deterministic at
+            // any `jobs` width: duplicate chunks carry identical bytes,
+            // and only a chunk's first claimer ever uploads it.
+            let present: Vec<Option<bool>> = if opts.negotiate_per_chunk || spans.is_empty() {
+                vec![None; spans.len()]
+            } else {
+                round_trips.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let digests: Vec<Digest> = spans.iter().map(|(d, _)| *d).collect();
+                pool.has_batch(&digests).into_iter().map(Some).collect()
+            };
+            for ((chunk_digest, range), known) in spans.iter().zip(present) {
+                let chunk = &tar[range.clone()];
                 let first_claim = claimed.lock().unwrap().insert(*chunk_digest);
-                if first_claim && !pool.has(chunk_digest) {
+                let novel = first_claim
+                    && match known {
+                        Some(present) => !present,
+                        None => {
+                            round_trips.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            !pool.has(chunk_digest)
+                        }
+                    };
+                if novel {
                     pool.put(chunk_digest, chunk)?;
                     up.bytes_uploaded += chunk.len() as u64;
                     up.chunks_uploaded += 1;
@@ -463,70 +552,8 @@ impl RemoteRegistry {
                     up.bytes_deduped += chunk.len() as u64;
                     up.chunks_deduped += 1;
                 }
-                Ok(())
-            };
-            if opts.manifest_v1 {
-                // v1 writer: fixed 4 KiB chunks named by engine digests.
-                // Manifest: reuse the store's sidecar when it demonstrably
-                // describes this tar (length and image-declared root
-                // agree); recompute from the already-loaded bytes
-                // otherwise (e.g. a sidecar gone stale after a raw
-                // in-place tar write) — never re-reading the tar.
-                let cd = match layers.try_chunk_sidecar(lid) {
-                    Some(cd)
-                        if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] =>
-                    {
-                        cd
-                    }
-                    _ => ChunkDigest::compute(&tar, engine),
-                };
-                if cd.root != image.chunk_roots[i] {
-                    return Err(Error::Registry(format!(
-                        "layer {} chunk root does not match the image's metadata",
-                        lid.short()
-                    )));
-                }
-                for (j, chunk_digest) in cd.chunks.iter().enumerate() {
-                    send(chunk_digest, &tar[j * CHUNK_SIZE..((j + 1) * CHUNK_SIZE).min(tar.len())])?;
-                }
-                up.manifest = Some(cd.encode());
-            } else {
-                // v2 writer: content-defined chunks named by the SHA-256
-                // of their raw bytes. Layer-identity validation stays as
-                // strict as the v1 writer's: the image's fixed-chunk
-                // root must describe this tar — vouched by the store's
-                // sidecar when it demonstrably agrees (free), recomputed
-                // from the already-loaded bytes otherwise — so a stale
-                // `chunk_roots` entry fails here, on the machine that
-                // can fix it, not at every later pull.
-                let root = match layers.try_chunk_sidecar(lid) {
-                    Some(cd)
-                        if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] =>
-                    {
-                        cd.root
-                    }
-                    _ => ChunkDigest::compute(&tar, engine).root,
-                };
-                if root != image.chunk_roots[i] {
-                    return Err(Error::Registry(format!(
-                        "layer {} chunk root does not match the image's metadata",
-                        lid.short()
-                    )));
-                }
-                // When this push uploads a single layer (the redeploy
-                // hot path) the layer pipeline is idle, so the span
-                // digesting borrows its width instead; multi-layer
-                // pushes already saturate it one layer per worker.
-                let span_jobs = if uploads.len() == 1 { opts.jobs } else { 1 };
-                let manifest = CdcManifest::from_data(&tar, span_jobs);
-                let mut offset = 0usize;
-                for (chunk_digest, len) in &manifest.chunks {
-                    let chunk = &tar[offset..offset + *len as usize];
-                    offset += *len as usize;
-                    send(chunk_digest, chunk)?;
-                }
-                up.manifest = Some(manifest.encode());
             }
+            up.manifest = Some(encoded);
             Ok(up)
         })?;
 
@@ -541,6 +568,7 @@ impl RemoteRegistry {
             bytes_deduped: 0,
             chunks_uploaded: 0,
             chunks_deduped: 0,
+            negotiation_round_trips: round_trips.into_inner(),
             whole_tar: !chunked,
         };
         for (slot, &i) in uploads.iter().enumerate() {
@@ -621,8 +649,13 @@ impl RemoteRegistry {
         let staging =
             ChunkPool::open(&layers.root().join("pull-staging").join(image_id.to_hex()))?;
 
+        // Mirror push's width discipline: only a single-layer pull lends
+        // its full width to the per-layer chunk verification — handing
+        // every concurrent layer worker `opts.jobs` verify threads would
+        // spawn up to jobs² threads on a multi-layer image.
+        let verify_jobs = if image.layer_ids.len() == 1 { opts.jobs } else { 1 };
         let results = scoped_index_map(image.layer_ids.len(), opts.jobs, |i| {
-            self.pull_layer(&image, i, layers, engine, &pool, &staging, opts.jobs)
+            self.pull_layer(&image, i, layers, engine, &pool, &staging, verify_jobs)
         })?;
 
         let stored = images.put(&image)?;

@@ -1,0 +1,280 @@
+//! Correctness gate for multi-layer targeted injection: a multi-layer
+//! inject + sub-DAG rebuild must be **bit-identical** to a full
+//! from-scratch rebuild — same image id, same layer tars — while
+//! executing only the union of the per-change cascades. Covers the
+//! interleaved changed/unchanged pattern, a diamond-shaped dependency
+//! pattern, config-edit adoption, and the no-fall-through property.
+
+use layerjet::builder::{BuildOptions, CostModel};
+use layerjet::daemon::Daemon;
+use layerjet::inject::InjectOptions;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-minj-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn daemon(root: &Path) -> Daemon {
+    let mut daemon = Daemon::new(root).unwrap();
+    daemon.cost = CostModel::instant();
+    daemon
+}
+
+fn write_ctx(dir: &Path, dockerfile: &str, files: &[(&str, &str)]) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+    for (p, c) in files {
+        let path = dir.join(p);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, c).unwrap();
+    }
+}
+
+fn inject_opts(cascade: bool) -> InjectOptions {
+    InjectOptions {
+        cascade,
+        cost: CostModel::instant(),
+        ..InjectOptions::default()
+    }
+}
+
+fn build_opts() -> BuildOptions {
+    BuildOptions {
+        no_cache: false,
+        cost: CostModel::instant(),
+        jobs: 1,
+    }
+}
+
+/// The acceptance property: the injected daemon's image must be
+/// bit-identical — same image id, same layer tars — to a from-scratch
+/// build of the same context in a pristine store.
+fn assert_bit_identical_to_scratch(injected: &Daemon, ctx: &Path, tag: &str, scratch_root: &Path) {
+    let scratch = daemon(scratch_root);
+    let scratch_report = scratch.build_with(ctx, tag, &build_opts()).unwrap();
+    let (inj_id, inj_img) = injected.image(tag).unwrap();
+    assert_eq!(inj_id, scratch_report.image_id, "image ids must match");
+    let (_, scratch_img) = scratch.image(tag).unwrap();
+    assert_eq!(inj_img.layer_ids, scratch_img.layer_ids);
+    assert_eq!(inj_img.diff_ids, scratch_img.diff_ids);
+    for (a, b) in inj_img.layer_ids.iter().zip(&scratch_img.layer_ids) {
+        assert_eq!(
+            injected.layers.read_tar(a).unwrap(),
+            scratch.layers.read_tar(b).unwrap(),
+            "layer tar bytes must match"
+        );
+    }
+    assert!(injected.verify_image(tag).unwrap());
+}
+
+/// Changes in layers i and j with an unchanged, *independent* layer
+/// between them: the rebuild executes exactly the union of the two
+/// cascades, and the intermediate layer is a cache hit.
+#[test]
+fn interleaved_changes_rebuild_only_the_cascade_union() {
+    let root = tmp("interleaved");
+    let ctx = root.join("ctx");
+    // 0 FROM, 1 WORKDIR, 2 ADD pom (changed), 3 mvn resolve (cascade of 2),
+    // 4 apt update (unchanged + independent), 5 ADD src (changed),
+    // 6 mvn package (cascade of 2 and 5), 7 CMD.
+    let df = "FROM ubuntu:latest\nWORKDIR /code\nADD pom.xml pom.xml\n\
+              RUN [\"mvn\", \"dependency:resolve\"]\nRUN apt update\nADD src /code/src\n\
+              RUN [\"mvn\", \"package\"]\nCMD [\"java\", \"-jar\", \"target/app.jar\"]\n";
+    let pom_v1 = "<project><artifactId>app</artifactId><dependency><artifactId>gson</artifactId></dependency></project>";
+    write_ctx(&ctx, df, &[("pom.xml", pom_v1), ("src/App.java", "class App {}")]);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&ctx, "japp:v1").unwrap();
+
+    // Edit both content layers (modifications only, so splices stay
+    // byte-equivalent to sorted rebuilds).
+    let pom_v2 = pom_v1.replace(
+        "</project>",
+        "<dependency><artifactId>slf4j</artifactId></dependency></project>",
+    );
+    std::fs::write(ctx.join("pom.xml"), &pom_v2).unwrap();
+    std::fs::write(ctx.join("src/App.java"), "class App { int x; }").unwrap();
+
+    let report = dev
+        .inject_with(&ctx, "japp:v1", "japp:v1", &inject_opts(true))
+        .unwrap();
+    assert_eq!(report.patched.len(), 2, "both content layers patched in place");
+
+    let cascade = report.cascade.as_ref().expect("cascade report");
+    let rebuilt: Vec<usize> = cascade
+        .steps
+        .iter()
+        .filter(|s| !s.cached && !s.adopted)
+        .map(|s| s.step - 1)
+        .collect();
+    assert_eq!(rebuilt, vec![3, 6], "exactly the union of the two cascades");
+    assert!(
+        cascade.steps[4].cached,
+        "the unchanged layer BETWEEN the two changes must stay a cache hit: {:?}",
+        cascade.steps[4]
+    );
+    assert!(cascade.steps[2].cached && cascade.steps[5].cached, "patched layers hit");
+
+    let acc = report.cascade_accounting.as_ref().expect("accounting");
+    assert_eq!(acc.steps_invalidated, 2);
+    assert_eq!(acc.steps_rebuilt, 2);
+    assert_eq!(acc.steps_adopted, 0);
+    assert_eq!(
+        acc.seed_fallthrough_steps, 6,
+        "rebuild-after-first-change would re-run steps 2..8"
+    );
+    // Per-change cascades: the pom edit feeds resolve and package; the
+    // src edit feeds package only.
+    assert!(acc.per_change.contains(&(2, vec![3, 6])));
+    assert!(acc.per_change.contains(&(5, vec![6])));
+
+    assert_bit_identical_to_scratch(&dev, &ctx, "japp:v1", &root.join("scratch"));
+
+    // And the chain is repaired: a strict docker build right after is
+    // fully cached (no fall-through debt left behind).
+    let strict = dev.build(&ctx, "japp:v1").unwrap();
+    assert_eq!(strict.rebuilt_steps(), 0, "{:?}", strict.steps);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Diamond-shaped dependencies: FROM → {ADD pom, ADD src} → mvn package.
+/// A change on one shoulder rebuilds the join point only; the other
+/// shoulder stays cached; result bit-identical to scratch.
+#[test]
+fn diamond_dependency_rebuilds_join_only() {
+    let root = tmp("diamond");
+    let ctx = root.join("ctx");
+    // 0 FROM, 1 WORKDIR, 2 ADD pom, 3 ADD src, 4 mvn package, 5 CMD.
+    let df = "FROM ubuntu:latest\nWORKDIR /code\nADD pom.xml pom.xml\nADD src /code/src\n\
+              RUN [\"mvn\", \"package\"]\nCMD [\"java\"]\n";
+    write_ctx(
+        &ctx,
+        df,
+        &[
+            ("pom.xml", "<project><artifactId>app</artifactId><dependency><artifactId>gson</artifactId></dependency></project>"),
+            ("src/App.java", "class App {}"),
+        ],
+    );
+    let dev = daemon(&root.join("dev"));
+    dev.build(&ctx, "dia:v1").unwrap();
+
+    std::fs::write(ctx.join("src/App.java"), "class App { int answer = 42; }").unwrap();
+    let report = dev
+        .inject_with(&ctx, "dia:v1", "dia:v1", &inject_opts(true))
+        .unwrap();
+    assert_eq!(report.patched.len(), 1);
+    let cascade = report.cascade.as_ref().expect("cascade report");
+    assert!(!cascade.steps[4].cached, "join point (mvn package) rebuilds");
+    assert!(
+        cascade.steps[2].cached,
+        "the untouched diamond shoulder (ADD pom.xml) stays cached"
+    );
+    assert!(cascade.steps[3].cached, "the patched shoulder hits by source checksum");
+    assert_eq!(report.cascade_accounting.as_ref().unwrap().steps_rebuilt, 1);
+
+    assert_bit_identical_to_scratch(&dev, &ctx, "dia:v1", &root.join("scratch"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// A config (type-2) edit in the middle of the Dockerfile: downstream
+/// layer ids shift with the literal chain, but clean steps are adopted
+/// byte-for-byte instead of re-executing — and the result is still
+/// bit-identical to a scratch build.
+#[test]
+fn config_edit_adopts_downstream_layers() {
+    let root = tmp("cfg-adopt");
+    let ctx = root.join("ctx");
+    // 0 FROM, 1 EXPOSE (edited), 2 COPY app, 3 RUN pip, 4 CMD. The COPY
+    // imports a subdirectory, so the Dockerfile edit is config-only.
+    let df_v1 = "FROM python:alpine\nEXPOSE 8080\nCOPY app /srv/app/\nRUN pip install flask\nCMD [\"python\"]\n";
+    write_ctx(&ctx, df_v1, &[("app/main.py", "print('v1')\n")]);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&ctx, "cfg:v1").unwrap();
+
+    std::fs::write(ctx.join("Dockerfile"), df_v1.replace("8080", "9090")).unwrap();
+    let report = dev
+        .inject_with(&ctx, "cfg:v1", "cfg:v1", &inject_opts(false))
+        .unwrap();
+    assert!(report.delegated_to_build, "type-2 edit delegates to the engine");
+    assert!(report.patched.is_empty(), "nothing to patch, nothing patched");
+    let cascade = report.cascade.as_ref().expect("cascade report");
+    assert_eq!(cascade.rebuilt_steps(), 1, "only the edited (empty) config layer");
+    assert_eq!(cascade.adopted_steps(), 3, "COPY, RUN and CMD adopt under shifted ids");
+    assert!(cascade.steps[2].adopted && cascade.steps[3].adopted && cascade.steps[4].adopted);
+
+    let (_, img) = dev.image("cfg:v1").unwrap();
+    assert!(img.config.exposed_ports.contains(&9090));
+    assert_bit_identical_to_scratch(&dev, &ctx, "cfg:v1", &root.join("scratch"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// The headline no-fall-through property: an edit in an early COPY layer
+/// with an *independent* RUN after it leaves the RUN cached, and leaves
+/// no fall-through debt for the next strict build — where the seed
+/// behavior re-ran everything after the first change.
+#[test]
+fn unrelated_edit_leaves_no_fallthrough_debt() {
+    let root = tmp("no-fall");
+    let ctx = root.join("ctx");
+    // 0 FROM, 1 COPY srcA (changed), 2 RUN pip (independent),
+    // 3 COPY srcB (unchanged), 4 CMD.
+    let df = "FROM python:alpine\nCOPY srcA /srv/a/\nRUN pip install flask\nCOPY srcB /srv/b/\nCMD [\"python\"]\n";
+    write_ctx(
+        &ctx,
+        df,
+        &[("srcA/main.py", "print('a1')\n"), ("srcB/util.py", "print('b1')\n")],
+    );
+    let dev = daemon(&root.join("dev"));
+    dev.build(&ctx, "nf:v1").unwrap();
+
+    std::fs::write(ctx.join("srcA/main.py"), "print('a2')\n").unwrap();
+    let report = dev
+        .inject_with(&ctx, "nf:v1", "nf:v1", &inject_opts(false))
+        .unwrap();
+    assert_eq!(report.patched.len(), 1);
+    assert!(report.cascade.is_none(), "nothing downstream to rebuild");
+    let acc = report.cascade_accounting.as_ref().expect("accounting");
+    assert_eq!(acc.steps_invalidated, 0);
+    assert_eq!(acc.steps_rebuilt, 0);
+    assert_eq!(acc.seed_fallthrough_steps, 4, "the seed would have re-run steps 1..5");
+
+    // The next strict build sees a fully intact cache chain: zero
+    // rebuilds, where the seed's in-place patch left ParentChanged
+    // fall-through debt on every later step.
+    let strict = dev.build(&ctx, "nf:v1").unwrap();
+    assert_eq!(strict.rebuilt_steps(), 0, "{:?}", strict.steps);
+
+    assert_bit_identical_to_scratch(&dev, &ctx, "nf:v1", &root.join("scratch"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Adds and removes splice sorted, so even a file-set change stays
+/// bit-identical to the scratch rebuild.
+#[test]
+fn add_and_remove_stay_bit_identical() {
+    let root = tmp("addrm");
+    let ctx = root.join("ctx");
+    let df = "FROM python:alpine\nCOPY srcA /srv/a/\nCOPY srcB /srv/b/\nCMD [\"python\"]\n";
+    write_ctx(
+        &ctx,
+        df,
+        &[
+            ("srcA/main.py", "print('a1')\n"),
+            ("srcA/old.py", "gone\n"),
+            ("srcB/util.py", "print('b1')\n"),
+        ],
+    );
+    let dev = daemon(&root.join("dev"));
+    dev.build(&ctx, "ar:v1").unwrap();
+
+    std::fs::remove_file(ctx.join("srcA/old.py")).unwrap();
+    std::fs::write(ctx.join("srcA/fresh.py"), "print('new')\n").unwrap();
+    std::fs::write(ctx.join("srcB/util.py"), "print('b2')\n").unwrap();
+    let report = dev
+        .inject_with(&ctx, "ar:v1", "ar:v1", &inject_opts(false))
+        .unwrap();
+    assert_eq!(report.patched.len(), 2);
+    assert_bit_identical_to_scratch(&dev, &ctx, "ar:v1", &root.join("scratch"));
+    std::fs::remove_dir_all(&root).unwrap();
+}

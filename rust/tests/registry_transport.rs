@@ -387,3 +387,112 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
     assert!(poisoned.verify_image("app:v1").unwrap());
     std::fs::remove_dir_all(&root).unwrap();
 }
+
+/// A multi-layer project for the negotiation-batching assertions.
+fn write_multi_layer_project(dir: &Path, layers: usize) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut df = String::from("FROM python:alpine\n");
+    for l in 0..layers {
+        df.push_str(&format!("COPY part{l} /srv/part{l}/\n"));
+    }
+    df.push_str("CMD [\"python\", \"main.py\"]\n");
+    std::fs::write(dir.join("Dockerfile"), df).unwrap();
+    let mut rng = Prng::new(0xba7c4);
+    for l in 0..layers {
+        let part = dir.join(format!("part{l}"));
+        std::fs::create_dir_all(&part).unwrap();
+        let mut asset = vec![0u8; 64 * 1024];
+        rng.fill_bytes(&mut asset);
+        std::fs::write(part.join("aa_assets.bin"), &asset).unwrap();
+        std::fs::write(part.join("zz_main.py"), "print('v1')\n").unwrap();
+    }
+}
+
+/// Acceptance: chunk-existence negotiation is one batched round-trip per
+/// uploaded layer, not one probe per chunk — the high-latency-remote
+/// fix — while the per-chunk legacy mode stays available and transfers
+/// the identical byte set.
+#[test]
+fn negotiation_is_one_round_trip_per_layer() {
+    let root = tmp("negotiate");
+    let proj = root.join("proj");
+    write_multi_layer_project(&proj, 4);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "neg:v1").unwrap();
+    let (_, img) = dev.image("neg:v1").unwrap();
+
+    // Batched (default): one round-trip per uploaded layer (every layer
+    // tar — even an empty layer's end-of-archive blocks — carries at
+    // least one chunk on a cold remote).
+    let batched_remote = RemoteRegistry::open(&root.join("remote-batched")).unwrap();
+    let batched = dev
+        .push_with("neg:v1", &batched_remote, &PushOptions::default())
+        .unwrap();
+    assert_eq!(
+        batched.negotiation_round_trips,
+        img.layer_ids.len(),
+        "batched negotiation: one round-trip per uploaded layer"
+    );
+
+    // Per-chunk legacy mode: one probe per first-claimed chunk.
+    let legacy_remote = RemoteRegistry::open(&root.join("remote-legacy")).unwrap();
+    let legacy = dev
+        .push_with(
+            "neg:v1",
+            &legacy_remote,
+            &PushOptions { negotiate_per_chunk: true, ..Default::default() },
+        )
+        .unwrap();
+    assert!(
+        legacy.negotiation_round_trips >= legacy.chunks_uploaded,
+        "per-chunk mode probes every distinct chunk ({} round-trips, {} chunks)",
+        legacy.negotiation_round_trips,
+        legacy.chunks_uploaded
+    );
+    assert!(
+        legacy.negotiation_round_trips > batched.negotiation_round_trips,
+        "batching must collapse the per-chunk probes"
+    );
+
+    // Same transferred set either way: bit-identical remote trees.
+    assert_eq!(batched.bytes_uploaded, legacy.bytes_uploaded);
+    assert_eq!(batched.chunks_uploaded, legacy.chunks_uploaded);
+    assert_eq!(
+        tree_snapshot(&root.join("remote-batched")),
+        tree_snapshot(&root.join("remote-legacy")),
+        "negotiation mode must not change the remote tree"
+    );
+
+    // Layer-level dedup short-circuits negotiation entirely.
+    let again = dev
+        .push_with("neg:v1", &batched_remote, &PushOptions::default())
+        .unwrap();
+    assert_eq!(again.negotiation_round_trips, 0, "AlreadyExists layers negotiate nothing");
+
+    // A one-layer redeploy negotiates exactly once, at any jobs width.
+    std::fs::write(proj.join("part2/zz_main.py"), "print('v2')\n").unwrap();
+    dev.inject_with(
+        &proj,
+        "neg:v1",
+        "neg:v2",
+        &InjectOptions {
+            clone_for_redeploy: true,
+            cost: CostModel::instant(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for jobs in [1, 4] {
+        let rdir = root.join(format!("remote-redeploy-j{jobs}"));
+        let remote = RemoteRegistry::open(&rdir).unwrap();
+        dev.push_with("neg:v1", &remote, &PushOptions { jobs, ..Default::default() }).unwrap();
+        let redeploy = dev
+            .push_with("neg:v2", &remote, &PushOptions { jobs, ..Default::default() })
+            .unwrap();
+        assert_eq!(
+            redeploy.negotiation_round_trips, 1,
+            "jobs={jobs}: one changed layer, one negotiation round-trip"
+        );
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
