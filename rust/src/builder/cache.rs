@@ -15,7 +15,7 @@
 //! 4. for `COPY`/`ADD`: the recorded source checksum matches the current
 //!    context selection (criterion 3: imported files are content-checked).
 
-use crate::hash::Digest;
+use crate::hash::{Digest, Sha256};
 use crate::oci::{LayerId, LayerMeta};
 use crate::store::LayerStore;
 use std::fmt;
@@ -137,6 +137,45 @@ pub fn probe_unchained(
     CacheDecision::Hit(Box::new(meta))
 }
 
+/// Single-flight execution key for fleet scheduling: the same identity
+/// this module's cache probes compare — the derived permanent layer id
+/// (namespace ∥ parent id chain ∥ instruction literal) and, for
+/// `COPY`/`ADD`, the source-selection checksum — extended with the
+/// execution inputs read outside the cache key: the step class, the
+/// effective workdir, and (for context-reading `RUN`s) a whole-context
+/// fingerprint. Soundness contract: two steps with equal keys execute to
+/// byte-identical layers, because every executor is a pure function of
+/// exactly these inputs.
+pub fn flight_key(
+    id: &LayerId,
+    class: &str,
+    workdir: &str,
+    source_checksum: Option<Digest>,
+    ctx_fingerprint: Option<Digest>,
+) -> Digest {
+    let mut h = Sha256::new();
+    h.update(b"layerjet-step-flight\0");
+    h.update(id.to_hex().as_bytes());
+    h.update(&[0]);
+    h.update(class.as_bytes());
+    h.update(&[0]);
+    h.update(workdir.as_bytes());
+    h.update(&[0]);
+    if let Some(d) = source_checksum {
+        h.update(&[1]);
+        h.update(&d.0);
+    } else {
+        h.update(&[0]);
+    }
+    if let Some(d) = ctx_fingerprint {
+        h.update(&[1]);
+        h.update(&d.0);
+    } else {
+        h.update(&[0]);
+    }
+    h.finalize()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +243,25 @@ mod tests {
             Some(MissReason::SourceChanged)
         );
         std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn flight_key_separates_every_input() {
+        let id = LayerId::derive("test", None, "RUN pip install flask");
+        let other = LayerId::derive("test", None, "RUN pip install django");
+        let src = Digest::of(b"sources");
+        let fp = Digest::of(b"ctx");
+        let base = flight_key(&id, "run", "/app", None, None);
+        assert_eq!(base, flight_key(&id, "run", "/app", None, None), "deterministic");
+        assert_ne!(base, flight_key(&other, "run", "/app", None, None), "layer id");
+        assert_ne!(base, flight_key(&id, "run+ctx", "/app", None, Some(fp)), "class+ctx");
+        assert_ne!(base, flight_key(&id, "run", "/srv", None, None), "workdir");
+        assert_ne!(base, flight_key(&id, "run", "/app", Some(src), None), "source");
+        assert_ne!(
+            flight_key(&id, "run+ctx", "/app", None, Some(fp)),
+            flight_key(&id, "run+ctx", "/app", None, Some(Digest::of(b"ctx2"))),
+            "context fingerprint"
+        );
     }
 
     #[test]

@@ -35,10 +35,12 @@ pub mod cache;
 pub mod context;
 pub mod executor;
 pub mod parallel;
+pub mod sched;
 
 pub use cache::{CacheDecision, MissReason};
 pub use context::{BuildContext, ContextFile};
 pub use parallel::ParallelEngine;
+pub use sched::{RequestTicket, SchedContext, ScheduleAccounting, StepFlight, StepPool};
 
 use crate::dockerfile::{Dockerfile, Instruction, LayerKind};
 use crate::hash::{ChunkDigest, Digest, HashEngine, ShaCheckpoint};
@@ -46,7 +48,9 @@ use crate::oci::{HistoryEntry, Image, ImageConfig, ImageId, ImageRef, LayerId, L
 use crate::store::{ImageStore, LayerStore, LAYER_VERSION};
 use crate::tar::TarBuilder;
 use crate::{Error, Result};
+use sched::{Join, Latch};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Simulated toolchain/daemon costs, scaled ~100× below real dockerd
@@ -223,7 +227,9 @@ impl BuildReport {
     }
 }
 
-/// What a planned step has to execute.
+/// What a planned step has to execute. Owns its operands so a step job
+/// can be shipped to the shared fleet pool detached from the plan.
+#[derive(Clone)]
 enum StepWork {
     /// `FROM <image>`: synthesize the base rootfs.
     Base { image: String },
@@ -254,8 +260,9 @@ struct PlannedStep {
 
 /// A rebuilt layer, produced by a worker job: content plus every hash
 /// artifact the store needs (computed once, in the job, in parallel with
-/// other layers).
-struct BuiltLayer {
+/// other layers). Shared via `Arc` so single-flight dedup can hand one
+/// execution's result to every build that resolved the same step.
+pub(crate) struct BuiltLayer {
     tar: Vec<u8>,
     checksum: Digest,
     chunk_digest: ChunkDigest,
@@ -273,6 +280,12 @@ pub struct Builder<'a> {
     /// Optional persistent context scan-cache file (the daemon wires a
     /// per-context path here).
     pub scan_cache: Option<PathBuf>,
+    /// Optional fleet-scheduling context (set by the coordinator): step
+    /// jobs run on the shared [`StepPool`] under the global budget,
+    /// deduped against other queued requests via single-flight, and the
+    /// store phases serialize on the per-daemon lock. `None` keeps the
+    /// standalone behavior (a private `opts.jobs` scoped pool).
+    pub sched: Option<SchedContext>,
 }
 
 impl<'a> Builder<'a> {
@@ -286,6 +299,7 @@ impl<'a> Builder<'a> {
             images,
             engine,
             scan_cache: None,
+            sched: None,
         }
     }
 
@@ -310,9 +324,22 @@ impl<'a> Builder<'a> {
         let t0 = Instant::now();
         let dockerfile = Dockerfile::from_dir(ctx_dir)?;
         dockerfile.validate()?;
-        let ctx = BuildContext::scan_cached(ctx_dir, self.engine, self.scan_cache.as_deref())?;
+        // Under fleet scheduling, the phases that read or write the
+        // daemon state (scan incl. its cache file, plan incl. cache
+        // probes and adoption reads, finalize incl. layer/image writes)
+        // run inside the per-daemon store lock so concurrent builds on
+        // one daemon see a consistent store; step execution — the
+        // expensive part — runs outside it, on the shared pool. The lock
+        // is never held while waiting on the pool (see [`sched`]'s lock
+        // ordering).
+        let store_lock = self.sched.as_ref().map(|s| s.store_lock.clone());
+        let guard = store_lock.as_ref().map(|l| l.lock().unwrap());
+        let ctx =
+            Arc::new(BuildContext::scan_cached(ctx_dir, self.engine, self.scan_cache.as_deref())?);
         let plan = self.plan(&dockerfile, tag, &ctx, opts, scope)?;
+        drop(guard);
         let built = self.execute(&plan, &ctx, opts)?;
+        let _guard = store_lock.as_ref().map(|l| l.lock().unwrap());
         self.finalize(t0, tag, &dockerfile, plan, built, opts)
     }
 
@@ -459,100 +486,155 @@ impl<'a> Builder<'a> {
         Some(CacheDecision::Adopt(Box::new(meta)))
     }
 
-    /// Phase 2: run every cache-missed step as an independent job on the
-    /// shared scoped worker pool ([`parallel::scoped_index_map`]) of
-    /// `opts.jobs` threads. Content generation and hashing are pure per
-    /// step, so `jobs = N` output is bit-identical to `jobs = 1`.
+    /// Phase 2: run every cache-missed step as an independent job.
+    ///
+    /// Standalone (no [`SchedContext`]): the private scoped pool of
+    /// `opts.jobs` threads, exactly as before. Under the coordinator:
+    /// every miss becomes a job on the **shared** [`StepPool`] — the
+    /// ready set of this build's step DAG interleaves with every other
+    /// queued request under the fleet's global budget — and each job
+    /// first resolves its single-flight key: if another queued request
+    /// is already executing the identical step, this build waits for
+    /// that execution and adopts its layer bytes instead of re-running
+    /// the toolchain. Content generation and hashing are pure per step,
+    /// so any width and any dedup interleaving is bit-identical to
+    /// `jobs = 1`.
     fn execute(
         &self,
         plan: &[PlannedStep],
-        ctx: &BuildContext,
+        ctx: &Arc<BuildContext>,
         opts: &BuildOptions,
-    ) -> Result<Vec<Option<BuiltLayer>>> {
+    ) -> Result<Vec<Option<Arc<BuiltLayer>>>> {
         let misses: Vec<usize> = plan
             .iter()
             .enumerate()
             .filter(|(_, s)| s.decision.is_miss())
             .map(|(i, _)| i)
             .collect();
-        let mut results: Vec<Option<BuiltLayer>> = plan.iter().map(|_| None).collect();
+        let mut results: Vec<Option<Arc<BuiltLayer>>> = plan.iter().map(|_| None).collect();
+        if let Some(sc) = &self.sched {
+            let adopts = plan
+                .iter()
+                .filter(|s| matches!(s.decision, CacheDecision::Adopt(_)))
+                .count();
+            if adopts > 0 {
+                sc.ticket.note_adopted(adopts);
+            }
+        }
         if misses.is_empty() {
             return Ok(results);
         }
-        let built = parallel::scoped_index_map(misses.len(), opts.jobs, |slot| {
-            self.execute_step(&plan[misses[slot]], ctx, opts)
-        })?;
-        for (i, b) in misses.into_iter().zip(built) {
-            results[i] = Some(b);
+        match &self.sched {
+            Some(sc) => {
+                sc.ticket.begin_steps(misses.len());
+                // Execution-input fingerprint for ctx-reading RUNs (see
+                // [`cache::flight_key`]); cheap — it hashes the already
+                // scanned per-file digests, not content.
+                let ctx_fp = ctx.copy_checksum(".");
+                enum Pending {
+                    Done(Arc<BuiltLayer>),
+                    Lead(Arc<Latch<BuiltLayer>>),
+                    Wait(Digest),
+                }
+                // Submit every miss first (no intra-request barrier)...
+                let mut pending = Vec::with_capacity(misses.len());
+                for &i in &misses {
+                    let step = &plan[i];
+                    let key = step_flight_key(step, ctx, &ctx_fp);
+                    pending.push(match sc.flight.inner().begin(&key) {
+                        Some(Join::Done(v)) => {
+                            sc.ticket.note_deduped();
+                            Pending::Done(v)
+                        }
+                        Some(Join::Lead) => Pending::Lead(self.spawn_step(sc, key, step, ctx, opts)),
+                        None => Pending::Wait(key),
+                    });
+                }
+                // ...then resolve them in step order. On the first
+                // failure the request's ticket is cancelled, so its
+                // still-queued jobs short-circuit (abandoning their
+                // flight entries for other requests to re-lead) instead
+                // of burning the fleet budget on a dead build.
+                let fail = |e: String| {
+                    sc.ticket.cancel();
+                    Error::Build(e)
+                };
+                for (&i, p) in misses.iter().zip(pending) {
+                    let built = match p {
+                        Pending::Done(v) => v,
+                        Pending::Lead(latch) => latch.wait().map_err(fail)?,
+                        Pending::Wait(key) => match sc.flight.inner().join(&key) {
+                            Join::Done(v) => {
+                                sc.ticket.note_deduped();
+                                v
+                            }
+                            // The other request's execution failed and
+                            // abandoned the entry: lead the retry.
+                            Join::Lead => {
+                                let latch = self.spawn_step(sc, key, &plan[i], ctx, opts);
+                                latch.wait().map_err(fail)?
+                            }
+                        },
+                    };
+                    results[i] = Some(built);
+                }
+            }
+            None => {
+                let built = parallel::scoped_index_map(misses.len(), opts.jobs, |slot| {
+                    execute_step_work(&plan[misses[slot]].work, ctx, self.engine, &opts.cost)
+                })?;
+                for (i, b) in misses.into_iter().zip(built) {
+                    results[i] = Some(Arc::new(b));
+                }
+            }
         }
         Ok(results)
     }
 
-    /// Build one step's layer content and hash artifacts.
-    fn execute_step(
+    /// Enqueue one led step on the shared pool. The job owns everything
+    /// it touches (work clone, `Arc` context, `Arc` engine), so it runs
+    /// detached from this build's borrows; completion is published both
+    /// to the flight entry (for other requests) and the returned latch
+    /// (for this one).
+    fn spawn_step(
         &self,
+        sc: &SchedContext,
+        key: Digest,
         step: &PlannedStep,
-        ctx: &BuildContext,
+        ctx: &Arc<BuildContext>,
         opts: &BuildOptions,
-    ) -> Result<BuiltLayer> {
-        let t0 = Instant::now();
-        let cost = &opts.cost;
-        let mut file_index = None;
-        let mut toolchain_bytes = 0u64;
-        let tar = match &step.work {
-            StepWork::Base { image } => {
-                let files = executor::base_image_files(image);
-                toolchain_bytes = files.iter().map(|(_, c)| c.len() as u64).sum();
-                tar_sorted(files)?
-            }
-            StepWork::Copy { src, dst, workdir } => {
-                let selected = ctx.select(src);
-                let multi = selected.len() > 1 || ctx.src_is_dir(src);
-                let mut entries: Vec<(String, &ContextFile)> = selected
-                    .into_iter()
-                    .map(|(sub, f)| (executor::copy_dest(workdir, dst, &sub, multi), f))
-                    .collect();
-                entries.sort_by(|a, b| a.0.cmp(&b.0));
-                let total: usize = entries.iter().map(|(_, f)| f.bytes().len() + 1024).sum();
-                let mut b = TarBuilder::with_capacity(total);
-                for (path, f) in &entries {
-                    b.append_file(path, f.bytes())
-                        .map_err(|e| Error::Build(format!("archive {path}: {e}")))?;
+    ) -> Arc<Latch<BuiltLayer>> {
+        let latch = Arc::new(Latch::new());
+        let job_latch = latch.clone();
+        let flight = sc.flight.inner_arc();
+        let ticket = sc.ticket.clone();
+        let engine = sc.engine.clone();
+        let ctx = ctx.clone();
+        let work = step.work.clone();
+        let cost = opts.cost;
+        sc.pool.submit(
+            sc.ticket.clone(),
+            Box::new(move || {
+                // A failed request's leftover jobs exit without doing
+                // toolchain work; abandoning the flight entry lets any
+                // other request waiting on this step re-lead it.
+                if ticket.is_cancelled() {
+                    flight.abandon(&key);
+                    ticket.note_skipped();
+                    job_latch.set(Err("request cancelled after an earlier step failed".into()));
+                    return;
                 }
-                file_index = Some(
-                    entries
-                        .iter()
-                        .map(|(p, f)| (p.clone(), f.size, f.digest))
-                        .collect(),
-                );
-                b.finish()
-            }
-            StepWork::Run { command, workdir } => {
-                let files = executor::run_command(command, workdir, ctx)?;
-                toolchain_bytes = files.iter().map(|(_, c)| c.len() as u64).sum();
-                tar_sorted(files)?
-            }
-            StepWork::Config => TarBuilder::new().finish(),
-        };
-
-        // Simulated dockerd/toolchain time; sleeps overlap across jobs,
-        // which is exactly the parallel-build throughput win.
-        cost.charge_step();
-        cost.charge_toolchain(toolchain_bytes);
-        if !matches!(step.work, StepWork::Config) {
-            cost.charge_archive(tar.len() as u64);
-        }
-
-        let (checksum, checkpoints) = crate::hash::hash_with_checkpoints(&tar);
-        let chunk_digest = ChunkDigest::compute(&tar, self.engine);
-        Ok(BuiltLayer {
-            tar,
-            checksum,
-            chunk_digest,
-            checkpoints,
-            file_index,
-            duration: t0.elapsed(),
-        })
+                let result =
+                    execute_step_work(&work, &ctx, engine.as_ref(), &cost).map(Arc::new);
+                match &result {
+                    Ok(v) => flight.publish(&key, v.clone()),
+                    Err(_) => flight.abandon(&key),
+                }
+                ticket.note_executed();
+                job_latch.set(result.map_err(|e| e.to_string()));
+            }),
+        );
+        latch
     }
 
     /// Phase 3: chain parent checksums, persist rebuilt layers, assemble
@@ -563,7 +645,7 @@ impl<'a> Builder<'a> {
         tag: &ImageRef,
         dockerfile: &Dockerfile,
         plan: Vec<PlannedStep>,
-        built: Vec<Option<BuiltLayer>>,
+        built: Vec<Option<Arc<BuiltLayer>>>,
         opts: &BuildOptions,
     ) -> Result<BuildReport> {
         let n = plan.len();
@@ -592,10 +674,24 @@ impl<'a> Builder<'a> {
 
             let (checksum, chunk_root, bytes, cached, adopted, miss_reason, duration) =
                 match (decision, built) {
-                    (CacheDecision::Hit(mut meta), _) => {
+                    (CacheDecision::Hit(planned), _) => {
                         let tp = Instant::now();
                         opts.cost.charge_cache_probe();
                         transcript.push_str(" ---> Using cache\n");
+                        // Under fleet scheduling, re-read the stored meta
+                        // inside the finalize lock: a concurrent in-place
+                        // injection on this daemon may have revised the
+                        // layer since plan time. Emitting and chaining
+                        // the CURRENT revision keeps this image
+                        // self-consistent (diff_ids match stored tars),
+                        // and the chain repair below can never roll a
+                        // fresher revision's checksum back to the plan
+                        // snapshot. Without a race the re-read equals the
+                        // snapshot, so output is unchanged.
+                        let mut meta = match &self.sched {
+                            Some(_) => self.layers.meta(&planned.id)?,
+                            None => *planned,
+                        };
                         // A DAG-scoped build tolerates parent-revision
                         // drift on clean steps; repair the stale chain
                         // link here so the *next* strict build still sees
@@ -733,6 +829,125 @@ impl<'a> Builder<'a> {
             duration: t0.elapsed(),
         })
     }
+}
+
+/// Build one step's layer content and hash artifacts — a pure function
+/// of the step work, the (selected) context files, and the cost model
+/// (engines are bit-identical by contract, so the engine choice never
+/// affects the bytes). Free-standing so a fleet-scheduled step job can
+/// run it detached from the borrowing [`Builder`].
+fn execute_step_work(
+    work: &StepWork,
+    ctx: &BuildContext,
+    engine: &dyn HashEngine,
+    cost: &CostModel,
+) -> Result<BuiltLayer> {
+    let t0 = Instant::now();
+    let mut file_index = None;
+    let mut toolchain_bytes = 0u64;
+    let tar = match work {
+        StepWork::Base { image } => {
+            let files = executor::base_image_files(image);
+            toolchain_bytes = files.iter().map(|(_, c)| c.len() as u64).sum();
+            tar_sorted(files)?
+        }
+        StepWork::Copy { src, dst, workdir } => {
+            let selected = ctx.select(src);
+            let multi = selected.len() > 1 || ctx.src_is_dir(src);
+            let mut entries: Vec<(String, &ContextFile)> = selected
+                .into_iter()
+                .map(|(sub, f)| (executor::copy_dest(workdir, dst, &sub, multi), f))
+                .collect();
+            entries.sort_by(|a, b| a.0.cmp(&b.0));
+            let total: usize = entries.iter().map(|(_, f)| f.bytes().len() + 1024).sum();
+            let mut b = TarBuilder::with_capacity(total);
+            for (path, f) in &entries {
+                b.append_file(path, f.bytes())
+                    .map_err(|e| Error::Build(format!("archive {path}: {e}")))?;
+            }
+            file_index = Some(
+                entries
+                    .iter()
+                    .map(|(p, f)| (p.clone(), f.size, f.digest))
+                    .collect(),
+            );
+            b.finish()
+        }
+        StepWork::Run { command, workdir } => {
+            let files = executor::run_command(command, workdir, ctx)?;
+            toolchain_bytes = files.iter().map(|(_, c)| c.len() as u64).sum();
+            tar_sorted(files)?
+        }
+        StepWork::Config => TarBuilder::new().finish(),
+    };
+
+    // Simulated dockerd/toolchain time; sleeps overlap across jobs,
+    // which is exactly the parallel-build throughput win.
+    cost.charge_step();
+    cost.charge_toolchain(toolchain_bytes);
+    if !matches!(work, StepWork::Config) {
+        cost.charge_archive(tar.len() as u64);
+    }
+
+    let (checksum, checkpoints) = crate::hash::hash_with_checkpoints(&tar);
+    let chunk_digest = ChunkDigest::compute(&tar, engine);
+    Ok(BuiltLayer {
+        tar,
+        checksum,
+        chunk_digest,
+        checkpoints,
+        file_index,
+        duration: t0.elapsed(),
+    })
+}
+
+/// The single-flight identity of one step execution: the cache identity
+/// [`cache::probe`] checks (derived permanent layer id — which encodes
+/// the namespace, parent chain and instruction literal — plus the
+/// `COPY`/`ADD` source checksum), extended with the execution inputs the
+/// executor reads outside that key: the effective workdir, and — for
+/// `RUN` commands whose simulated toolchain reads context files (conda
+/// env files, maven poms, `javac` sources) — a fingerprint of the whole
+/// context. Two requests resolving the same key would produce
+/// byte-identical layers, so the step may execute once for both.
+fn step_flight_key(step: &PlannedStep, ctx: &BuildContext, ctx_fp: &Digest) -> Digest {
+    let (class, workdir, ctx_dep) = match &step.work {
+        StepWork::Base { .. } => ("base", "", None),
+        StepWork::Copy { src, workdir, .. } => {
+            // The placement shape is an executor input the selection
+            // checksum alone does not pin down (a single-file selection
+            // places differently under a directory-shaped source).
+            let multi = ctx.select(src).len() > 1 || ctx.src_is_dir(src);
+            (
+                if multi { "copy-dir" } else { "copy-file" },
+                workdir.as_str(),
+                None,
+            )
+        }
+        StepWork::Run { command, workdir } => {
+            if run_reads_context(command) {
+                ("run+ctx", workdir.as_str(), Some(*ctx_fp))
+            } else {
+                ("run", workdir.as_str(), None)
+            }
+        }
+        StepWork::Config => ("config", "", None),
+    };
+    cache::flight_key(&step.layer_id, class, workdir, step.source_checksum, ctx_dep)
+}
+
+/// Does this `RUN` command's executor read context files (so its output
+/// depends on more than the instruction literal)? Mirrors
+/// [`executor::run_command`]: `conda` reads `environment.yaml`, `mvn`
+/// reads `pom.xml` (and `package` compiles context sources), `javac`
+/// compiles every context `.java`. Conservative over `&&` compounds.
+fn run_reads_context(command: &str) -> bool {
+    command.split("&&").any(|part| {
+        matches!(
+            part.trim().split_whitespace().next().unwrap_or(""),
+            "conda" | "mvn" | "javac"
+        )
+    })
 }
 
 /// Archive generated files as a deterministic (name-sorted, deduped) tar.

@@ -12,7 +12,6 @@
 
 use crate::hash::{Digest, HashEngine, NativeEngine};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Below this many chunks (256 KiB of payload at the fixed chunk size)
 /// sharding is not worth the thread spawns; the batch runs inline on
@@ -66,12 +65,21 @@ pub fn shard_hash_chunks(
 
 /// Run `f(0) .. f(n-1)` on a [`std::thread::scope`] pool of up to `jobs`
 /// worker threads, returning the results in index order — the shared
-/// fan-out primitive behind parallel layer jobs and the registry's
+/// fan-out primitive behind standalone layer jobs and the registry's
 /// pipelined push/pull transport. Workers pull indices from a shared
-/// cursor, so long items don't serialize behind short ones. On the first
-/// error remaining indices are abandoned and that error is returned
+/// cursor, so long items don't serialize behind short ones; results
+/// stream back over one mpsc channel (no per-item `Mutex` slot
+/// allocations — hot repeated callers like the per-layer transport
+/// pipelines pay one channel per call). On the first error remaining
+/// indices are abandoned and the lowest-index error is returned
 /// (in-flight items still run to completion; any side effects they
 /// perform must be idempotent, as content-addressed writes are).
+///
+/// Under the coordinator's fleet scheduling, layer jobs bypass this
+/// per-call fan-out entirely and ride the persistent
+/// [`super::sched::StepPool`] workers instead (no thread spawns at all);
+/// this scoped form remains for borrowing callers, whose closures cannot
+/// outlive the call and therefore cannot ride a `'static` pool.
 pub fn scoped_index_map<T, F>(n: usize, jobs: usize, f: F) -> crate::Result<Vec<T>>
 where
     T: Send,
@@ -83,10 +91,14 @@ where
     }
     let next = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
-    let slots: Vec<_> = (0..n).map(|_| Mutex::new(None)).collect();
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, crate::Result<T>)>();
     std::thread::scope(|scope| {
+        let next = &next;
+        let failed = &failed;
+        let f = &f;
         for _ in 0..jobs {
-            scope.spawn(|| loop {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
                 if failed.load(Ordering::Relaxed) {
                     break;
                 }
@@ -98,26 +110,36 @@ where
                 if result.is_err() {
                     failed.store(true, Ordering::Relaxed);
                 }
-                *slots[i].lock().unwrap() = Some(result);
+                if tx.send((i, result)).is_err() {
+                    break;
+                }
             });
         }
     });
-    let mut out = Vec::with_capacity(n);
-    let mut first_err = None;
-    for slot in slots {
-        match slot.into_inner().unwrap() {
-            Some(Ok(v)) => out.push(v),
-            Some(Err(e)) => {
-                first_err.get_or_insert(e);
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let mut first_err: Option<(usize, crate::Error)> = None;
+    for (i, result) in rx {
+        match result {
+            Ok(v) => slots[i] = Some(v),
+            Err(e) => {
+                let lower = match &first_err {
+                    Some((j, _)) => i < *j,
+                    None => true,
+                };
+                if lower {
+                    first_err = Some((i, e));
+                }
             }
-            // Abandoned after a failure elsewhere.
-            None => {}
         }
     }
-    match first_err {
-        Some(e) => Err(e),
-        None => Ok(out),
+    if let Some((_, e)) = first_err {
+        return Err(e);
     }
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("every index completed without error"))
+        .collect())
 }
 
 /// A [`HashEngine`] adapter that runs any inner engine's chunk batches

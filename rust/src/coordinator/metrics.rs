@@ -16,6 +16,14 @@ pub struct CoordinatorMetrics {
     pub p95_service: Duration,
     pub max_service: Duration,
     pub wall: Duration,
+    /// Step jobs executed on the shared pool across the batch (the
+    /// fleet's actual toolchain work).
+    pub steps_scheduled: usize,
+    /// Steps resolved by single-flight dedup — work a per-request
+    /// scheduler would have executed again.
+    pub steps_deduped: usize,
+    /// Steps adopted byte-for-byte from old images (DAG adoption).
+    pub steps_adopted: usize,
 }
 
 impl CoordinatorMetrics {
@@ -46,13 +54,17 @@ impl CoordinatorMetrics {
             p95_service: Duration::from_secs_f64(p95),
             max_service: Duration::from_secs_f64(max),
             wall,
+            steps_scheduled: outcomes.iter().map(|o| o.sched.steps_scheduled).sum(),
+            steps_deduped: outcomes.iter().map(|o| o.sched.steps_deduped).sum(),
+            steps_adopted: outcomes.iter().map(|o| o.sched.steps_adopted).sum(),
         }
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} ok / {} failed | {:.2} req/s | service mean {} p50 {} p95 {} | wall {}",
+            "{} ok / {} failed | {:.2} req/s | service mean {} p50 {} p95 {} | wall {} | \
+             steps {} scheduled / {} deduped / {} adopted",
             self.completed,
             self.failed,
             self.throughput_rps,
@@ -60,6 +72,9 @@ impl CoordinatorMetrics {
             crate::util::human_duration(self.p50_service),
             crate::util::human_duration(self.p95_service),
             crate::util::human_duration(self.wall),
+            self.steps_scheduled,
+            self.steps_deduped,
+            self.steps_adopted,
         )
     }
 }
@@ -77,6 +92,11 @@ mod tests {
             service: Duration::from_millis(ms),
             ok,
             detail: String::new(),
+            sched: crate::builder::ScheduleAccounting {
+                steps_scheduled: 2,
+                steps_deduped: 1,
+                steps_adopted: 0,
+            },
         }
     }
 
@@ -89,7 +109,10 @@ mod tests {
         assert!((m.throughput_rps - 3.0).abs() < 1e-9);
         assert_eq!(m.mean_service, Duration::from_millis(20));
         assert_eq!(m.max_service, Duration::from_millis(30));
+        assert_eq!(m.steps_scheduled, 6);
+        assert_eq!(m.steps_deduped, 3);
         assert!(m.summary().contains("2 ok / 1 failed"));
+        assert!(m.summary().contains("6 scheduled / 3 deduped"));
     }
 
     #[test]

@@ -56,6 +56,12 @@ impl Daemon {
         self.engine.as_ref()
     }
 
+    /// Owned handle to this daemon's hash engine — fleet-scheduled step
+    /// jobs run detached from the daemon borrow and carry this instead.
+    pub fn engine_handle(&self) -> Arc<dyn HashEngine> {
+        self.engine.clone()
+    }
+
     /// `docker build -t <tag> <ctx>`.
     pub fn build(&self, ctx_dir: &Path, tag: &str) -> Result<BuildReport> {
         self.build_with(
@@ -70,8 +76,23 @@ impl Daemon {
     }
 
     pub fn build_with(&self, ctx_dir: &Path, tag: &str, opts: &BuildOptions) -> Result<BuildReport> {
+        self.build_scheduled(ctx_dir, tag, opts, None)
+    }
+
+    /// Build under an optional fleet-scheduling context (the coordinator
+    /// passes one per request): step jobs run on the shared pool with
+    /// single-flight dedup, store phases serialize on the per-daemon
+    /// lock. `None` is exactly [`Daemon::build_with`].
+    pub fn build_scheduled(
+        &self,
+        ctx_dir: &Path,
+        tag: &str,
+        opts: &BuildOptions,
+        sched: Option<crate::builder::SchedContext>,
+    ) -> Result<BuildReport> {
         let mut builder = Builder::new(&self.layers, &self.images, self.engine.as_ref());
         builder.scan_cache = Some(self.scan_cache_path(ctx_dir));
+        builder.sched = sched;
         builder.build(ctx_dir, &ImageRef::parse(tag), opts)
     }
 
@@ -99,6 +120,20 @@ impl Daemon {
         to_tag: &str,
         opts: &InjectOptions,
     ) -> Result<InjectReport> {
+        self.inject_scheduled(ctx_dir, from_tag, to_tag, opts, None)
+    }
+
+    /// Inject under an optional fleet-scheduling context: the patch
+    /// phase serializes on the per-daemon store lock and the downstream
+    /// cascade pass schedules its dirty steps on the shared pool.
+    pub fn inject_scheduled(
+        &self,
+        ctx_dir: &Path,
+        from_tag: &str,
+        to_tag: &str,
+        opts: &InjectOptions,
+        sched: Option<crate::builder::SchedContext>,
+    ) -> Result<InjectReport> {
         let from = ImageRef::parse(from_tag);
         let to = ImageRef::parse(to_tag);
         let mut opts = opts.clone();
@@ -106,12 +141,13 @@ impl Daemon {
             opts.scan_cache = Some(self.scan_cache_path(ctx_dir));
         }
         let opts = &opts;
+        let sched = sched.as_ref();
         match opts.mode {
-            InjectMode::Implicit => implicit::inject_implicit(
-                &from, &to, ctx_dir, &self.images, &self.layers, self.engine.as_ref(), opts,
+            InjectMode::Implicit => implicit::inject_implicit_scheduled(
+                &from, &to, ctx_dir, &self.images, &self.layers, self.engine.as_ref(), opts, sched,
             ),
-            InjectMode::Explicit => explicit::inject_explicit(
-                &from, &to, ctx_dir, &self.images, &self.layers, self.engine.as_ref(), opts,
+            InjectMode::Explicit => explicit::inject_explicit_scheduled(
+                &from, &to, ctx_dir, &self.images, &self.layers, self.engine.as_ref(), opts, sched,
             ),
         }
     }

@@ -29,7 +29,24 @@ pub fn inject_explicit(
     engine: &dyn HashEngine,
     opts: &InjectOptions,
 ) -> Result<InjectReport> {
+    inject_explicit_scheduled(r, new_tag, ctx_dir, images, layers, engine, opts, None)
+}
+
+/// [`inject_explicit`] under an optional fleet-scheduling context — see
+/// [`super::implicit::inject_implicit_scheduled`] for the locking model.
+#[allow(clippy::too_many_arguments)]
+pub fn inject_explicit_scheduled(
+    r: &ImageRef,
+    new_tag: &ImageRef,
+    ctx_dir: &std::path::Path,
+    images: &ImageStore,
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+    opts: &InjectOptions,
+    sched: Option<&crate::builder::SchedContext>,
+) -> Result<InjectReport> {
     let t_start = Instant::now();
+    let store_guard = sched.map(|s| s.store_lock.lock().unwrap());
     let ctx = BuildContext::scan_cached(ctx_dir, engine, opts.scan_cache.as_deref())?;
     let dockerfile = Dockerfile::from_dir(ctx_dir)?;
     dockerfile.validate()?;
@@ -135,6 +152,7 @@ pub fn inject_explicit(
     // The downstream pass, identical to the implicit path: rebuild only
     // the invalidated sub-DAG of the (now loaded-back) patched image.
     let patched_image = images.get(&new_image_id)?;
+    drop(store_guard);
     let (cascade, cascade_accounting, built_id) = downstream_pass(
         &plan,
         ctx_dir,
@@ -144,6 +162,7 @@ pub fn inject_explicit(
         engine,
         opts,
         &patched_image,
+        sched,
     )?;
     if let Some(id) = built_id {
         new_image_id = id;

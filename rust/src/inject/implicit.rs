@@ -76,7 +76,30 @@ pub fn inject_implicit(
     engine: &dyn HashEngine,
     opts: &InjectOptions,
 ) -> Result<InjectReport> {
+    inject_implicit_scheduled(r, new_tag, ctx_dir, images, layers, engine, opts, None)
+}
+
+/// [`inject_implicit`] under an optional fleet-scheduling context: the
+/// detect + patch phases (which read and write the daemon stores) hold
+/// the per-daemon store lock so concurrent builds on the same daemon
+/// never observe a half-patched layer, and the downstream cascade pass
+/// schedules its dirty steps on the shared step pool.
+#[allow(clippy::too_many_arguments)]
+pub fn inject_implicit_scheduled(
+    r: &ImageRef,
+    new_tag: &ImageRef,
+    ctx_dir: &std::path::Path,
+    images: &ImageStore,
+    layers: &LayerStore,
+    engine: &dyn HashEngine,
+    opts: &InjectOptions,
+    sched: Option<&crate::builder::SchedContext>,
+) -> Result<InjectReport> {
     let t_start = Instant::now();
+    // Store lock held through the patch + tag commit, released before
+    // the downstream pass (which takes it itself around its own store
+    // phases — holding it across would self-deadlock).
+    let store_guard = sched.map(|s| s.store_lock.lock().unwrap());
     let ctx = BuildContext::scan_cached(ctx_dir, engine, opts.scan_cache.as_deref())?;
     let dockerfile = Dockerfile::from_dir(ctx_dir)?;
     dockerfile.validate()?;
@@ -187,12 +210,13 @@ pub fn inject_implicit(
     // Persist the updated image and move the tag.
     let mut new_image_id = images.put(&image)?;
     images.tag(new_tag, &new_image_id)?;
+    drop(store_guard);
 
     // The downstream pass: rebuild exactly the invalidated sub-DAG
     // (type-2 steps, compile steps fed by the patched layers), keep
     // everything else cached or adopted, repair stale chain links.
     let (cascade, cascade_accounting, built_id) =
-        downstream_pass(&plan, ctx_dir, new_tag, images, layers, engine, opts, &image)?;
+        downstream_pass(&plan, ctx_dir, new_tag, images, layers, engine, opts, &image, sched)?;
     if let Some(id) = built_id {
         new_image_id = id;
     }
@@ -241,6 +265,7 @@ pub(crate) fn downstream_pass(
     engine: &dyn HashEngine,
     opts: &InjectOptions,
     patched_image: &Image,
+    sched: Option<&crate::builder::SchedContext>,
 ) -> Result<(Option<BuildReport>, Option<CascadeAccounting>, Option<ImageId>)> {
     if plan.changes.is_empty() {
         return Ok((None, None, None));
@@ -256,6 +281,7 @@ pub(crate) fn downstream_pass(
     };
     let mut builder = Builder::new(layers, images, engine);
     builder.scan_cache = opts.scan_cache.clone();
+    builder.sched = sched.cloned();
 
     if opts.clone_for_redeploy {
         if opts.cascade || has_config_edits {

@@ -54,6 +54,22 @@ COMMANDS:
                                          chunks look like garbage. CI farms
                                          should prefer the coordinator's
                                          maintain() quiesce handshake.
+  coordinate [--workers N] [--jobs N] [--strategy auto|build|inject|inject-cascade]
+         [--per-request] TAG=CTX [TAG=CTX ...]
+                                         run a CI batch: one request per
+                                         TAG=CTX pair over a farm of
+                                         worker daemons under --root.
+                                         Default scheduling is
+                                         step-level: one shared worker
+                                         pool (global --jobs budget)
+                                         interleaves the ready steps of
+                                         every queued request
+                                         (shortest-remaining-work first)
+                                         and identical steps across
+                                         requests execute once
+                                         (single-flight dedup).
+                                         --per-request keeps the legacy
+                                         one-request-per-worker loop
   history NAME:TAG                       layer history (docker history)
   verify NAME:TAG                        image integrity check
   images                                 list tags
@@ -332,7 +348,7 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     if report.whole_tar { ", whole-tar mode" } else { "" },
                 );
             } else {
-                let report = daemon.pull_with(&tag, &remote, &PullOptions { jobs })?;
+                let report = daemon.pull_with(&tag, &remote, &PullOptions { jobs, ..Default::default() })?;
                 println!(
                     "pulled {tag}: image {} ({} layers fetched, {} already local, {} fetched, {} reused from staging)",
                     report.image_id.short(),
@@ -398,6 +414,82 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                         "registry: unknown subcommand {other:?} (scrub|untag|gc)"
                     )))
                 }
+            }
+        }
+        "coordinate" => {
+            use layerjet::coordinator::{BuildCoordinator, BuildRequest, BuildStrategy, SchedMode};
+            let workers = cli
+                .opt("--workers")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("coordinate: bad --workers {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(2)
+                .max(1);
+            let jobs = cli
+                .opt("--jobs")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("coordinate: bad --jobs {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(workers);
+            let strategy = match cli.opt("--strategy").as_deref() {
+                None | Some("auto") => BuildStrategy::Auto,
+                Some("build") => BuildStrategy::DockerRebuild,
+                Some("inject") => BuildStrategy::Inject,
+                Some("inject-cascade") => BuildStrategy::InjectCascade,
+                Some(other) => {
+                    return Err(layerjet::Error::msg(format!(
+                        "coordinate: unknown --strategy {other:?} (auto|build|inject|inject-cascade)"
+                    )))
+                }
+            };
+            let mode = if cli.has("--per-request") {
+                SchedMode::PerRequest
+            } else {
+                SchedMode::StepLevel
+            };
+            let mut requests = Vec::new();
+            while let Some(spec) = cli.pos() {
+                let (tag, ctx) = spec.split_once('=').ok_or_else(|| {
+                    layerjet::Error::msg(format!("coordinate: bad request {spec:?}, want TAG=CTX"))
+                })?;
+                requests.push(BuildRequest {
+                    id: requests.len() as u64,
+                    project: PathBuf::from(ctx),
+                    tag: tag.to_string(),
+                    strategy,
+                });
+            }
+            if requests.is_empty() {
+                return Err(layerjet::Error::msg(
+                    "coordinate: no requests (pass TAG=CTX pairs)",
+                ));
+            }
+            let mut coordinator = BuildCoordinator::new(&root, workers);
+            coordinator.jobs = jobs;
+            let (outcomes, metrics) = coordinator.run_mode(requests, mode)?;
+            for o in &outcomes {
+                println!(
+                    "request {} [{}] on worker {}: {} in {} (queued {}) — {} | steps: {} scheduled, \
+                     {} deduped, {} adopted",
+                    o.id,
+                    o.strategy_used,
+                    o.worker,
+                    if o.ok { "ok" } else { "FAILED" },
+                    layerjet::util::human_duration(o.service),
+                    layerjet::util::human_duration(o.queue_wait),
+                    o.detail,
+                    o.sched.steps_scheduled,
+                    o.sched.steps_deduped,
+                    o.sched.steps_adopted,
+                );
+            }
+            println!("{}", metrics.summary());
+            if outcomes.iter().any(|o| !o.ok) {
+                return Err(layerjet::Error::msg("coordinate: some requests failed"));
             }
         }
         "history" => {

@@ -175,11 +175,68 @@ impl Default for PushOptions {
 pub struct PullOptions {
     /// Worker threads for the pipelined fetch → verify → store stage.
     pub jobs: usize,
+    /// Optional cross-pull chunk-fetch cache: concurrent pulls sharing
+    /// one cache (the coordinator's warm-up fans a tag out to many
+    /// worker daemons) fetch each remote chunk **once** — the first
+    /// puller leads the fetch, the rest adopt the bytes in memory. See
+    /// [`ChunkFetchCache`].
+    pub fetch_cache: Option<ChunkFetchCache>,
 }
 
 impl Default for PullOptions {
     fn default() -> Self {
-        PullOptions { jobs: 1 }
+        PullOptions {
+            jobs: 1,
+            fetch_cache: None,
+        }
+    }
+}
+
+/// A single-flight, in-memory chunk-fetch cache shared by concurrent
+/// pulls into *different* stores (per-worker daemons warming the same
+/// tags): keyed by the chunk's wire address, the first requester fetches
+/// from the remote pool, everyone else adopts the fetched bytes. Scoped
+/// to one warm-up batch — drop it to release the memory.
+#[derive(Clone, Default)]
+pub struct ChunkFetchCache {
+    inner: std::sync::Arc<crate::builder::sched::Flight<Vec<u8>>>,
+}
+
+impl ChunkFetchCache {
+    pub fn new() -> ChunkFetchCache {
+        ChunkFetchCache::default()
+    }
+
+    /// Fetch-once: returns the chunk bytes plus whether they were
+    /// satisfied by another puller's fetch (`true` = deduped). Each
+    /// retained chunk costs exactly one copy — the leader clones into
+    /// the cache and keeps its wire buffer zero-copy; followers clone
+    /// out of the cache instead of re-fetching.
+    fn get_or_fetch(
+        &self,
+        digest: &Digest,
+        fetch: impl FnOnce() -> Result<Vec<u8>>,
+    ) -> Result<(Vec<u8>, bool)> {
+        use crate::builder::sched::Join;
+        match self.inner.join(digest) {
+            Join::Done(bytes) => Ok((bytes.as_ref().clone(), true)),
+            Join::Lead => match fetch() {
+                Ok(bytes) => {
+                    self.inner.publish(digest, std::sync::Arc::new(bytes.clone()));
+                    Ok((bytes, false))
+                }
+                Err(e) => {
+                    self.inner.abandon(digest);
+                    Err(e)
+                }
+            },
+        }
+    }
+}
+
+impl std::fmt::Debug for ChunkFetchCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ChunkFetchCache")
     }
 }
 
@@ -225,6 +282,11 @@ pub struct PullReport {
     pub bytes_local: u64,
     pub chunks_fetched: usize,
     pub chunks_local: usize,
+    /// Chunks satisfied by another concurrent pull's fetch through a
+    /// shared [`ChunkFetchCache`] (cross-worker warm-up dedup).
+    pub chunks_shared: usize,
+    /// Bytes those shared chunks would otherwise have re-fetched.
+    pub bytes_shared: u64,
 }
 
 /// Result of a [`RemoteRegistry::scrub`] pass over the chunk pool.
@@ -282,6 +344,8 @@ struct ChunkStats {
     bytes_local: u64,
     chunks_fetched: usize,
     chunks_local: usize,
+    chunks_shared: usize,
+    bytes_shared: u64,
 }
 
 /// What one pipelined pull worker did for one layer.
@@ -292,7 +356,20 @@ enum LayerPull {
         bytes_local: u64,
         chunks_fetched: usize,
         chunks_local: usize,
+        chunks_shared: usize,
+        bytes_shared: u64,
     },
+}
+
+/// Where one resolved chunk's bytes came from.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ChunkSource {
+    /// The local staging pool (resume-after-interrupt).
+    Staged,
+    /// The remote pool, over the wire.
+    Wire,
+    /// Another concurrent pull's fetch, via a shared [`ChunkFetchCache`].
+    Shared,
 }
 
 /// An in-process remote registry backed by a directory (layout and
@@ -655,7 +732,16 @@ impl RemoteRegistry {
         // spawn up to jobs² threads on a multi-layer image.
         let verify_jobs = if image.layer_ids.len() == 1 { opts.jobs } else { 1 };
         let results = scoped_index_map(image.layer_ids.len(), opts.jobs, |i| {
-            self.pull_layer(&image, i, layers, engine, &pool, &staging, verify_jobs)
+            self.pull_layer(
+                &image,
+                i,
+                layers,
+                engine,
+                &pool,
+                &staging,
+                verify_jobs,
+                opts.fetch_cache.as_ref(),
+            )
         })?;
 
         let stored = images.put(&image)?;
@@ -669,6 +755,8 @@ impl RemoteRegistry {
             bytes_local: 0,
             chunks_fetched: 0,
             chunks_local: 0,
+            chunks_shared: 0,
+            bytes_shared: 0,
         };
         for p in results {
             match p {
@@ -678,12 +766,16 @@ impl RemoteRegistry {
                     bytes_local,
                     chunks_fetched,
                     chunks_local,
+                    chunks_shared,
+                    bytes_shared,
                 } => {
                     report.layers_fetched += 1;
                     report.bytes_fetched += bytes_fetched;
                     report.bytes_local += bytes_local;
                     report.chunks_fetched += chunks_fetched;
                     report.chunks_local += chunks_local;
+                    report.chunks_shared += chunks_shared;
+                    report.bytes_shared += bytes_shared;
                 }
             }
         }
@@ -705,6 +797,7 @@ impl RemoteRegistry {
         pool: &ChunkPool,
         staging: &ChunkPool,
         verify_jobs: usize,
+        fetch_cache: Option<&ChunkFetchCache>,
     ) -> Result<LayerPull> {
         let lid = image.layer_ids[i];
         let declared = image.diff_ids[i];
@@ -742,6 +835,7 @@ impl RemoteRegistry {
                     pool,
                     staging,
                     &mut stats,
+                    fetch_cache,
                     &|slices: &[&[u8]]| cdc::digest_slices(slices, verify_jobs),
                 )?;
                 let mut tar = Vec::with_capacity(m.total_len as usize);
@@ -789,6 +883,7 @@ impl RemoteRegistry {
                     pool,
                     staging,
                     &mut stats,
+                    fetch_cache,
                     &|slices: &[&[u8]]| engine.hash_chunks(slices),
                 )?;
                 let mut tar = Vec::with_capacity(cd.total_len as usize);
@@ -820,6 +915,8 @@ impl RemoteRegistry {
             bytes_local,
             chunks_fetched,
             chunks_local,
+            chunks_shared,
+            bytes_shared,
         } = stats;
         // The layer's single full hashing pass: integrity on pull, plus
         // the SHA checkpoints the store persists for later injections.
@@ -845,6 +942,8 @@ impl RemoteRegistry {
             bytes_local,
             chunks_fetched,
             chunks_local,
+            chunks_shared,
+            bytes_shared,
         })
     }
 
@@ -1058,27 +1157,41 @@ fn decode_manifest(bytes: &[u8]) -> Option<LayerManifest> {
 /// a poisoned staging entry is dropped and re-fetched rather than
 /// wedging every future pull of this image. Wire-fetched chunks are
 /// staged once they verify, so an interrupted pull resumes for free.
+#[allow(clippy::too_many_arguments)]
 fn resolve_chunks(
     lid: &LayerId,
     expected: &[Digest],
     pool: &ChunkPool,
     staging: &ChunkPool,
     stats: &mut ChunkStats,
+    fetch_cache: Option<&ChunkFetchCache>,
     hash_batch: &dyn Fn(&[&[u8]]) -> Vec<Digest>,
 ) -> Result<Vec<Vec<u8>>> {
     let n = expected.len();
     let mut chunk_bytes: Vec<Vec<u8>> = Vec::with_capacity(n);
-    let mut staged: Vec<bool> = Vec::with_capacity(n);
+    let mut source: Vec<ChunkSource> = Vec::with_capacity(n);
     for chunk_digest in expected {
         match staging.try_get(chunk_digest) {
             Some(bytes) => {
                 chunk_bytes.push(bytes);
-                staged.push(true);
+                source.push(ChunkSource::Staged);
             }
-            None => {
-                chunk_bytes.push(pool.get(chunk_digest)?);
-                staged.push(false);
-            }
+            None => match fetch_cache {
+                Some(cache) => {
+                    let (bytes, shared) =
+                        cache.get_or_fetch(chunk_digest, || pool.get(chunk_digest))?;
+                    chunk_bytes.push(bytes);
+                    source.push(if shared {
+                        ChunkSource::Shared
+                    } else {
+                        ChunkSource::Wire
+                    });
+                }
+                None => {
+                    chunk_bytes.push(pool.get(chunk_digest)?);
+                    source.push(ChunkSource::Wire);
+                }
+            },
         }
     }
     let slices: Vec<&[u8]> = chunk_bytes.iter().map(|b| b.as_slice()).collect();
@@ -1089,7 +1202,7 @@ fn resolve_chunks(
         if digests[j] == expected[j] {
             continue;
         }
-        if !staged[j] {
+        if source[j] != ChunkSource::Staged {
             return Err(Error::Registry(format!(
                 "remote chunk {j} of layer {} corrupt",
                 lid.short()
@@ -1116,18 +1229,29 @@ fn resolve_chunks(
         }
         for (k, &j) in retry.iter().enumerate() {
             chunk_bytes[j] = std::mem::take(&mut refetched[k]);
-            staged[j] = false;
+            source[j] = ChunkSource::Wire;
         }
     }
     for (j, bytes) in chunk_bytes.iter().enumerate() {
-        if staged[j] {
-            stats.bytes_local += bytes.len() as u64;
-            stats.chunks_local += 1;
-        } else {
-            stats.bytes_fetched += bytes.len() as u64;
-            stats.chunks_fetched += 1;
-            // Stage what came over the wire — only after it verified.
-            staging.put(&expected[j], bytes)?;
+        match source[j] {
+            ChunkSource::Staged => {
+                stats.bytes_local += bytes.len() as u64;
+                stats.chunks_local += 1;
+            }
+            ChunkSource::Shared => {
+                stats.bytes_shared += bytes.len() as u64;
+                stats.chunks_shared += 1;
+                // Stage adopted chunks exactly like wire fetches, so an
+                // interrupted pull resumes from staging instead of
+                // re-fetching what a sibling worker already pulled.
+                staging.put(&expected[j], bytes)?;
+            }
+            ChunkSource::Wire => {
+                stats.bytes_fetched += bytes.len() as u64;
+                stats.chunks_fetched += 1;
+                // Stage what came over the wire — only after it verified.
+                staging.put(&expected[j], bytes)?;
+            }
         }
     }
     Ok(chunk_bytes)

@@ -32,9 +32,14 @@ impl ImageStore {
     }
 
     /// Persist an image config; returns its content-derived id.
+    /// Content-addressed, so concurrent writers of the same image are
+    /// byte-identical; the atomic write makes the race torn-file-free.
     pub fn put(&self, image: &Image) -> Result<ImageId> {
         let id = image.id();
-        std::fs::write(self.image_path(&id), image.to_json().to_string_pretty())?;
+        super::write_atomic(
+            &self.image_path(&id),
+            image.to_json().to_string_pretty().as_bytes(),
+        )?;
         Ok(id)
     }
 
@@ -48,11 +53,14 @@ impl ImageStore {
         self.image_path(id).exists()
     }
 
-    /// Point `name:tag` at an image id.
+    /// Point `name:tag` at an image id. The tag map is a read-modify-
+    /// write of one file: racing taggers must be serialized externally
+    /// (the coordinator's per-daemon store lock does); the atomic write
+    /// only guarantees readers never see a torn map.
     pub fn tag(&self, r: &ImageRef, id: &ImageId) -> Result<()> {
         let mut repos = self.load_repos()?;
         repos.set(&r.to_string(), Json::str(id.to_hex()));
-        std::fs::write(self.repos_path(), repos.to_string_pretty())?;
+        super::write_atomic(&self.repos_path(), repos.to_string_pretty().as_bytes())?;
         Ok(())
     }
 
@@ -79,7 +87,7 @@ impl ImageStore {
         if let Json::Obj(fields) = &mut repos {
             fields.retain(|(k, _)| k != &r.to_string());
         }
-        std::fs::write(self.repos_path(), repos.to_string_pretty())?;
+        super::write_atomic(&self.repos_path(), repos.to_string_pretty().as_bytes())?;
         Ok(())
     }
 

@@ -10,6 +10,20 @@
 //! implicit-decomposition injection path (paper §III.A) can patch
 //! `layer.tar` in place — "changes can be made to the layer directly
 //! without having to export the image or import the image".
+//!
+//! ## Concurrency / lock surface
+//!
+//! Every store file is written **atomically** (unique temp file in the
+//! target directory, then rename), so two writers racing the same layer
+//! id — possible under the coordinator's fleet scheduling and parallel
+//! warm-up, where the racing writers carry byte-identical
+//! content-addressed data — leave a complete file from one of them,
+//! never a torn one. Atomicity is per-file only: cross-file invariants
+//! (tar ↔ json ↔ sidecars of one revision, the image tag map) are
+//! serialized by the coordinator's **per-daemon store lock**, which is
+//! taken around scan+plan / finalize / injection patching and released
+//! while steps execute. Lock order: daemon store lock → chunk pool;
+//! the store lock is never held while waiting on the step scheduler.
 
 mod bundle;
 mod images;
@@ -22,6 +36,32 @@ use crate::oci::{LayerId, LayerMeta};
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Write a file atomically: unique temp name in the same directory, then
+/// rename over the target. Concurrent writers of the same path (racing
+/// content-addressed writes under fleet scheduling) each land a complete
+/// file; the last rename wins.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let tmp = path.with_file_name(format!(
+        "{name}.tmp-{}-{}",
+        std::process::id(),
+        TMP_NONCE.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
 
 /// Version string written to each layer's `version` file.
 pub const LAYER_VERSION: &str = "1.0";
@@ -91,11 +131,13 @@ impl LayerStore {
         debug_assert_eq!(meta.chunk_root, cd.root, "meta chunk root must match digest");
         let dir = self.layer_dir(&meta.id);
         std::fs::create_dir_all(&dir)?;
-        std::fs::write(dir.join("version"), LAYER_VERSION)?;
-        std::fs::write(dir.join("layer.tar"), tar)?;
+        write_atomic(&dir.join("version"), LAYER_VERSION.as_bytes())?;
+        write_atomic(&dir.join("layer.tar"), tar)?;
         self.write_chunk_sidecar(&meta.id, cd)?;
         self.write_sha_checkpoints(&meta.id, ckpts)?;
-        std::fs::write(dir.join("json"), meta.to_json().to_string_pretty())?;
+        // The `json` goes last: a layer "exists" only once its metadata
+        // landed, so a racing reader never sees metadata ahead of data.
+        write_atomic(&dir.join("json"), meta.to_json().to_string_pretty().as_bytes())?;
         Ok(())
     }
 
@@ -113,7 +155,7 @@ impl LayerStore {
         if !dir.exists() {
             return Err(Error::Store(format!("layer {} missing", meta.id.short())));
         }
-        std::fs::write(dir.join("json"), meta.to_json().to_string_pretty())?;
+        write_atomic(&dir.join("json"), meta.to_json().to_string_pretty().as_bytes())?;
         Ok(())
     }
 
@@ -127,7 +169,7 @@ impl LayerStore {
     /// raw in-place write the implicit injection path uses before it
     /// fixes the checksums.
     pub fn write_tar_raw(&self, id: &LayerId, tar: &[u8]) -> Result<()> {
-        std::fs::write(self.tar_path(id), tar)?;
+        write_atomic(&self.tar_path(id), tar)?;
         Ok(())
     }
 
@@ -165,7 +207,7 @@ impl LayerStore {
                 buf.extend_from_slice(&w.to_le_bytes());
             }
         }
-        std::fs::write(self.layer_dir(id).join("layer.shakpt"), buf)?;
+        write_atomic(&self.layer_dir(id).join("layer.shakpt"), &buf)?;
         Ok(())
     }
 
@@ -207,9 +249,9 @@ impl LayerStore {
                 ("digest", Json::str(digest.prefixed())),
             ]));
         }
-        std::fs::write(
-            self.layer_dir(id).join("files.idx"),
-            Json::Arr(doc).to_string_compact(),
+        write_atomic(
+            &self.layer_dir(id).join("files.idx"),
+            Json::Arr(doc).to_string_compact().as_bytes(),
         )?;
         Ok(())
     }
@@ -231,7 +273,7 @@ impl LayerStore {
 
     /// Write/replace the chunk-digest sidecar.
     pub fn write_chunk_sidecar(&self, id: &LayerId, cd: &ChunkDigest) -> Result<()> {
-        std::fs::write(self.layer_dir(id).join("layer.chunks"), cd.encode())?;
+        write_atomic(&self.layer_dir(id).join("layer.chunks"), &cd.encode())?;
         Ok(())
     }
 

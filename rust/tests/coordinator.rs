@@ -1,0 +1,285 @@
+//! Acceptance tests for fleet-wide step-level scheduling: fairness (no
+//! convoying behind cold builds), single-flight dedup of identical
+//! steps, per-daemon store-lock exclusion, and bit-identical output at
+//! any pool width.
+
+use layerjet::builder::CostModel;
+use layerjet::coordinator::{BuildCoordinator, BuildRequest, BuildStrategy, SchedMode};
+use layerjet::daemon::Daemon;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-coordtest-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn write_ctx(dir: &Path, dockerfile: &str, files: &[(&str, &str)]) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("Dockerfile"), dockerfile).unwrap();
+    for (p, c) in files {
+        let path = dir.join(p);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, c).unwrap();
+    }
+}
+
+/// A cost model where only the per-step container overhead is simulated
+/// — makes step counts visible in wall clock without byte-rate noise.
+fn step_cost(ms: u64) -> CostModel {
+    CostModel {
+        step_overhead: Duration::from_millis(ms),
+        cache_probe: Duration::ZERO,
+        archive_ns_per_byte: 0,
+        toolchain_ns_per_byte: 0,
+    }
+}
+
+/// A cold project with `runs` independent RUN steps (plus FROM and CMD).
+fn cold_project(dir: &Path, base: &str, runs: usize) {
+    let mut df = format!("FROM {base}\n");
+    for i in 0..runs {
+        df.push_str(&format!("RUN pip install pkg{i:02}\n"));
+    }
+    df.push_str("CMD [\"python\"]\n");
+    write_ctx(dir, &df, &[("main.py", "print('cold')\n")]);
+}
+
+fn request(id: u64, project: &Path, tag: &str) -> BuildRequest {
+    BuildRequest {
+        id,
+        project: project.to_path_buf(),
+        tag: tag.to_string(),
+        strategy: BuildStrategy::DockerRebuild,
+    }
+}
+
+/// Image id + every layer tar for a tag in one worker's daemon.
+fn image_fingerprint(farm: &Path, worker: usize, tag: &str) -> (String, Vec<Vec<u8>>) {
+    let daemon = Daemon::new(&farm.join(format!("worker-{worker}"))).unwrap();
+    let (id, image) = daemon.image(tag).unwrap();
+    assert!(daemon.verify_image(tag).unwrap(), "{tag} must verify");
+    let tars = image
+        .layer_ids
+        .iter()
+        .map(|l| daemon.layers.read_tar(l).unwrap())
+        .collect();
+    (id.to_hex(), tars)
+}
+
+/// Fairness: a 3-step request queued behind an 18-step cold build on the
+/// same single-worker, single-job farm completes first — its steps
+/// outrank the cold build's under shortest-remaining-work, instead of
+/// waiting for the whole cold build as the per-request loop would.
+#[test]
+fn short_request_is_not_convoyed_by_cold_build() {
+    let root = tmp("fair");
+    let cold = root.join("cold");
+    let short = root.join("short");
+    cold_project(&cold, "ubuntu:latest", 16); // 18 steps total
+    write_ctx(
+        &short,
+        "FROM python:alpine\nCOPY . /app/\nCMD [\"python\"]\n",
+        &[("main.py", "print('quick')\n")],
+    );
+    let mut coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+    coordinator.cost = step_cost(10);
+    coordinator.jobs = 1;
+    // The cold build is first in the queue AND its driver starts first.
+    let (outcomes, metrics) = coordinator
+        .run(vec![request(1, &cold, "cold:latest"), request(2, &short, "short:latest")])
+        .unwrap();
+    assert!(outcomes.iter().all(|o| o.ok), "{outcomes:?}");
+    assert_eq!(
+        outcomes[0].id, 2,
+        "the short request must complete before the cold build: {outcomes:?}"
+    );
+    let by_id = |id| outcomes.iter().find(|o| o.id == id).unwrap();
+    assert!(
+        by_id(2).service < by_id(1).service,
+        "short service {:?} must undercut cold {:?}",
+        by_id(2).service,
+        by_id(1).service
+    );
+    assert_eq!(metrics.steps_scheduled, 18 + 3, "every step executed exactly once");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Single-flight dedup: two queued requests for the same project execute
+/// each shared step exactly once — one request leads every step job, the
+/// other adopts the results — and both land the identical image.
+#[test]
+fn shared_prefix_steps_execute_exactly_once() {
+    let root = tmp("dedup");
+    let proj = root.join("proj");
+    write_ctx(
+        &proj,
+        "FROM python:alpine\nCOPY . /app/\nRUN pip install alpha\nRUN pip install beta\n\
+         RUN apt update\nCMD [\"python\"]\n",
+        &[("main.py", "print('tenant')\n")],
+    );
+    let mut coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+    // Enough per-step cost that the second driver plans while the first
+    // request's steps are still executing (the single-flight window).
+    coordinator.cost = step_cost(30);
+    coordinator.jobs = 4;
+    let (outcomes, metrics) = coordinator
+        .run(vec![request(1, &proj, "app:latest"), request(2, &proj, "app:latest")])
+        .unwrap();
+    assert!(outcomes.iter().all(|o| o.ok), "{outcomes:?}");
+    // 6 steps in the Dockerfile: executed once for the whole queue...
+    assert_eq!(
+        metrics.steps_scheduled, 6,
+        "shared steps must execute exactly once across requests: {outcomes:?}"
+    );
+    // ...and the other request adopted every one of them in flight.
+    assert_eq!(
+        metrics.steps_deduped, 6,
+        "the twin request must dedup every step: {outcomes:?}"
+    );
+    // Both requests resolved to the same verified image.
+    let (id, _) = image_fingerprint(&root.join("farm"), 0, "app:latest");
+    assert!(!id.is_empty());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Per-daemon lock exclusion: two different projects built concurrently
+/// on ONE daemon (store phases interleaving under the per-daemon lock)
+/// produce exactly the store a serial per-request run produces.
+#[test]
+fn concurrent_builds_on_one_daemon_match_serial() {
+    let root = tmp("lock");
+    let p1 = root.join("p1");
+    let p2 = root.join("p2");
+    cold_project(&p1, "python:alpine", 4);
+    write_ctx(
+        &p2,
+        "FROM python:alpine\nCOPY . /srv/\nRUN pip install gamma\nCMD [\"python\"]\n",
+        &[("serve.py", "print('p2')\n")],
+    );
+    let batch = |farm: &str, mode| {
+        let mut c = BuildCoordinator::new(&root.join(farm), 1);
+        c.cost = step_cost(5);
+        c.jobs = 4;
+        let (outcomes, _) = c
+            .run_mode(
+                vec![request(1, &p1, "one:latest"), request(2, &p2, "two:latest")],
+                mode,
+            )
+            .unwrap();
+        assert!(outcomes.iter().all(|o| o.ok), "{outcomes:?}");
+    };
+    batch("farm-concurrent", SchedMode::StepLevel);
+    batch("farm-serial", SchedMode::PerRequest);
+    for tag in ["one:latest", "two:latest"] {
+        let a = image_fingerprint(&root.join("farm-concurrent"), 0, tag);
+        let b = image_fingerprint(&root.join("farm-serial"), 0, tag);
+        assert_eq!(a, b, "{tag}: concurrent store must equal serial store");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Acceptance: scheduler output is bit-identical to serial execution —
+/// same image ids and layer tars for every request at any `--jobs`
+/// width, including a deduped twin and a disjoint project in one batch.
+#[test]
+fn output_bit_identical_at_any_jobs_width() {
+    let root = tmp("width");
+    let shared = root.join("shared");
+    let other = root.join("other");
+    cold_project(&shared, "python:alpine", 5);
+    write_ctx(
+        &other,
+        "FROM ubuntu:latest\nCOPY . /opt/\nRUN apt update && apt install curl -y\nCMD [\"sh\"]\n",
+        &[("tool.sh", "echo hi\n")],
+    );
+    let batch = |farm: &str, jobs: usize| {
+        let mut c = BuildCoordinator::new(&root.join(farm), 2);
+        c.cost = CostModel::instant();
+        c.jobs = jobs;
+        let (outcomes, _) = c
+            .run(vec![
+                request(1, &shared, "shared:latest"),
+                request(2, &other, "other:latest"),
+                request(3, &shared, "shared:latest"),
+            ])
+            .unwrap();
+        assert!(outcomes.iter().all(|o| o.ok), "jobs={jobs}: {outcomes:?}");
+    };
+    batch("farm-j1", 1);
+    batch("farm-j8", 8);
+    // Serial reference: a standalone daemon building each project.
+    let reference = Daemon::new(&root.join("reference")).unwrap();
+    reference.build(&shared, "shared:latest").unwrap();
+    reference.build(&other, "other:latest").unwrap();
+    for tag in ["shared:latest", "other:latest"] {
+        let (ref_id, ref_image) = reference.image(tag).unwrap();
+        let ref_tars: Vec<Vec<u8>> = ref_image
+            .layer_ids
+            .iter()
+            .map(|l| reference.layers.read_tar(l).unwrap())
+            .collect();
+        for farm in ["farm-j1", "farm-j8"] {
+            // Request 1 (and 3) land on worker 0, request 2 on worker 1.
+            let worker = if tag == "shared:latest" { 0 } else { 1 };
+            let (id, tars) = image_fingerprint(&root.join(farm), worker, tag);
+            assert_eq!(id, ref_id.to_hex(), "{farm}/{tag}: image id drift");
+            assert_eq!(tars, ref_tars, "{farm}/{tag}: layer tar drift");
+        }
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Mixed strategies under the shared pool: a cascade injection queued
+/// with a cold build still lands the correct rebuilt image (its dirty
+/// steps ride the same pool as the cold build's).
+#[test]
+fn cascade_injection_rides_the_shared_pool() {
+    let root = tmp("cascade");
+    let proj = root.join("proj");
+    write_ctx(
+        &proj,
+        "FROM java:8\nCOPY src /code/src/\nRUN javac src/App.java\nCMD [\"java\", \"App\"]\n",
+        &[("src/App.java", "class App { int v = 1; }")],
+    );
+    let cold = root.join("cold");
+    cold_project(&cold, "ubuntu:latest", 6);
+    let mut coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+    coordinator.cost = step_cost(5);
+    coordinator.jobs = 2;
+    // Seed build of the java project.
+    let (outcomes, _) = coordinator
+        .run(vec![request(1, &proj, "app:latest")])
+        .unwrap();
+    assert!(outcomes[0].ok, "{outcomes:?}");
+    // Revise the source; queue the injection behind a cold build.
+    std::fs::write(proj.join("src/App.java"), "class App { int v = 2; }").unwrap();
+    let (outcomes, metrics) = coordinator
+        .run(vec![
+            request(2, &cold, "cold:latest"),
+            BuildRequest {
+                id: 3,
+                project: proj.clone(),
+                tag: "app:latest".into(),
+                strategy: BuildStrategy::InjectCascade,
+            },
+        ])
+        .unwrap();
+    assert!(outcomes.iter().all(|o| o.ok), "{outcomes:?}");
+    // The compile step re-executed on the pool (cold steps + >=1 dirty).
+    assert!(metrics.steps_scheduled > 8, "{metrics:?}");
+    // The recompiled class is in the image a fresh daemon would build.
+    let scratch = Daemon::new(&root.join("scratch")).unwrap();
+    scratch.build(&proj, "app:latest").unwrap();
+    let a = image_fingerprint(&root.join("farm"), 0, "app:latest");
+    let (sid, simage) = scratch.image("app:latest").unwrap();
+    let stars: Vec<Vec<u8>> = simage
+        .layer_ids
+        .iter()
+        .map(|l| scratch.layers.read_tar(l).unwrap())
+        .collect();
+    assert_eq!(a.0, sid.to_hex(), "cascade image == scratch image");
+    assert_eq!(a.1, stars);
+    std::fs::remove_dir_all(&root).unwrap();
+}

@@ -329,7 +329,7 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
     dev.push("app:v1", &remote).unwrap();
 
     let prod = daemon(&root.join("prod"));
-    let first = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 4 }).unwrap();
+    let first = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 4, ..Default::default() }).unwrap();
     assert_eq!(first.layers_skipped, 0);
     assert!(first.bytes_fetched > 0);
     assert!(prod.verify_image("app:v1").unwrap());
@@ -337,7 +337,7 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
     // Layer-level resume: drop one local layer; re-pull fetches just it.
     let (_, img) = prod.image("app:v1").unwrap();
     prod.layers.delete(&img.layer_ids[1]).unwrap();
-    let second = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1 }).unwrap();
+    let second = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() }).unwrap();
     assert_eq!(second.layers_fetched, 1);
     assert_eq!(second.layers_skipped, img.layer_ids.len() - 1);
     assert!(prod.verify_image("app:v1").unwrap());
@@ -347,7 +347,7 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
     let tar_path = prod.layers.tar_path(&img.layer_ids[1]);
     let tar = std::fs::read(&tar_path).unwrap();
     std::fs::write(&tar_path, &tar[..tar.len() / 2]).unwrap();
-    let repaired = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1 }).unwrap();
+    let repaired = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() }).unwrap();
     assert_eq!(repaired.layers_fetched, 1, "corrupt local layer must be re-fetched");
     assert!(prod.verify_image("app:v1").unwrap());
 
@@ -363,7 +363,7 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
         let entry = entry.unwrap();
         std::fs::copy(entry.path(), staging.join(entry.file_name())).unwrap();
     }
-    let third = cold.pull_with("app:v1", &remote, &PullOptions { jobs: 2 }).unwrap();
+    let third = cold.pull_with("app:v1", &remote, &PullOptions { jobs: 2, ..Default::default() }).unwrap();
     assert_eq!(third.bytes_fetched, 0, "every chunk staged => nothing fetched");
     assert!(third.bytes_local > 0);
     assert!(cold.verify_image("app:v1").unwrap());
@@ -382,7 +382,7 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
         .unwrap()
         .unwrap();
     std::fs::write(bad_staging.join(some_chunk.file_name()), b"torn write").unwrap();
-    let repaired2 = poisoned.pull_with("app:v1", &remote, &PullOptions { jobs: 1 }).unwrap();
+    let repaired2 = poisoned.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() }).unwrap();
     assert!(repaired2.bytes_fetched > 0);
     assert!(poisoned.verify_image("app:v1").unwrap());
     std::fs::remove_dir_all(&root).unwrap();
