@@ -116,6 +116,10 @@ struct SharedPoint {
     wall_s: f64,
     steps_scheduled: usize,
     steps_deduped: usize,
+    /// Transient step failures absorbed by the scheduler's retry policy.
+    /// Zero in a fault-free bench run; the field is in the baseline so a
+    /// hot retry loop (retries burning pool slots) shows up as a diff.
+    steps_retried: usize,
 }
 
 /// One shared-prefix trial: `TENANTS` workers each building the same
@@ -143,6 +147,7 @@ fn shared_trial(root: &Path, mode: SchedMode, jobs: usize) -> SharedPoint {
         wall_s,
         steps_scheduled: metrics.steps_scheduled,
         steps_deduped: metrics.steps_deduped,
+        steps_retried: metrics.steps_retried,
     }
 }
 
@@ -291,6 +296,7 @@ fn main() {
             "shared-prefix steps must execute exactly once across the fleet"
         );
         assert_eq!(p.steps_deduped, (TENANTS - 1) * single_build_steps);
+        assert_eq!(p.steps_retried, 0, "a fault-free bench run must not spend retries");
     }
     eprintln!(
         "coordinator_throughput shape checks OK (mixed wall {:.0}ms vs seed {:.0}ms; \
@@ -344,11 +350,13 @@ fn emit_baseline(
                     points[0].steps_deduped as f64,
                 )
             };
+            let retried: usize = points.iter().map(|p| p.steps_retried).sum();
             Json::obj(vec![
                 ("leg", Json::str(name.clone())),
                 ("wall_s", Json::num(mean(&points.iter().map(|p| p.wall_s).collect::<Vec<_>>()))),
                 ("steps_executed", Json::num(executed)),
                 ("steps_deduped", Json::num(deduped)),
+                ("steps_retried", Json::num(retried as f64)),
             ])
         })
         .collect();

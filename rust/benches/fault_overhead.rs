@@ -1,0 +1,129 @@
+//! **Robustness / fault hooks** — fault-free overhead of the injection
+//! harness on the durable-write path.
+//!
+//! Every durability boundary routes writes through
+//! `fault::durable_write`, whose disarmed fast path is a single relaxed
+//! atomic load before the real create + write + fsync. This bench pins
+//! that claim: the hooked path must sit within noise of the plain write,
+//! in all three states a production process can see —
+//!
+//! * `plain`      — `durable_write_plain`, no hook at all (baseline);
+//! * `disarmed`   — hooked, no plan installed (the production state);
+//! * `foreign`    — hooked, a plan armed but scoped to a different tree
+//!                  (the worst fault-free case: the slow path runs, the
+//!                  scope filter rejects before any hit is counted).
+//!
+//! `cargo bench --bench fault_overhead`
+
+mod common;
+
+use layerjet::fault::{self, FaultMode, FaultPlan};
+use std::path::Path;
+use std::time::Instant;
+
+/// Write + rename cycles mirroring `store::write_atomic`, returning mean
+/// seconds per operation.
+fn time_writes(dir: &Path, iters: usize, mut write: impl FnMut(&Path, &Path)) -> f64 {
+    let target = dir.join("payload.bin");
+    let tmp = dir.join("payload.bin.tmp-bench");
+    // Warm the page cache / dentry path before timing.
+    for _ in 0..iters / 10 + 1 {
+        write(&target, &tmp);
+        std::fs::rename(&tmp, &target).unwrap();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        write(&target, &tmp);
+        std::fs::rename(&tmp, &target).unwrap();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let iters = common::trials(400);
+    let root = common::bench_root("fault-overhead");
+    std::fs::create_dir_all(&root).unwrap();
+    let payload = vec![0xa5u8; 4096];
+
+    // Leg 1: the unhooked baseline.
+    let dir = root.join("plain");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plain = time_writes(&dir, iters, |_, tmp| {
+        fault::durable_write_plain(tmp, &payload).unwrap();
+    });
+
+    // Leg 2: hooked, disarmed — the production state.
+    let dir = root.join("disarmed");
+    std::fs::create_dir_all(&dir).unwrap();
+    let disarmed = time_writes(&dir, iters, |target, tmp| {
+        fault::durable_write("store.layer.tar", target, tmp, &payload).unwrap();
+    });
+
+    // Leg 3: hooked, armed, but scoped to a tree we never touch — the
+    // slow path runs and the scope filter rejects every arrival.
+    let elsewhere = root.join("elsewhere");
+    let guard = fault::install(
+        FaultPlan::fail_at("store.layer.tar", 0, FaultMode::Crash).scoped(&elsewhere),
+    );
+    let dir = root.join("foreign");
+    std::fs::create_dir_all(&dir).unwrap();
+    let foreign = time_writes(&dir, iters, |target, tmp| {
+        fault::durable_write("store.layer.tar", target, tmp, &payload).unwrap();
+    });
+    drop(guard);
+
+    // The check-only hook (negotiation, step entry, chunk reads) has no
+    // I/O to hide behind; time it raw, disarmed.
+    let probes = 4_000_000usize;
+    let probe_path = root.join("probe");
+    let t0 = Instant::now();
+    for _ in 0..probes {
+        fault::check("builder.step", &probe_path).unwrap();
+    }
+    let check_ns = t0.elapsed().as_secs_f64() * 1e9 / probes as f64;
+
+    let ns = |s: f64| s * 1e9;
+    eprintln!("fault-free durable write, {iters} iters of 4 KiB write+fsync+rename:");
+    eprintln!("  plain            {:>10.0} ns/op", ns(plain));
+    eprintln!("  hooked disarmed  {:>10.0} ns/op  ({:.3}x plain)", ns(disarmed), disarmed / plain);
+    eprintln!("  hooked foreign   {:>10.0} ns/op  ({:.3}x plain)", ns(foreign), foreign / plain);
+    eprintln!("  bare check()     {:>10.2} ns/op  (disarmed, no I/O)", check_ns);
+
+    common::write_csv(
+        "fault_overhead.csv",
+        &format!(
+            "leg,ns_per_op,vs_plain\nplain,{:.0},1.0\ndisarmed,{:.0},{:.4}\nforeign,{:.0},{:.4}\ncheck_disarmed,{:.2},\n",
+            ns(plain),
+            ns(disarmed),
+            disarmed / plain,
+            ns(foreign),
+            foreign / plain,
+            check_ns,
+        ),
+    );
+
+    // The acceptance claim: hooks are free when no fault is injected.
+    // fsync dominates the write path, so even a generous bound would
+    // only trip on a real regression (e.g. taking a lock on the fast
+    // path).
+    assert!(
+        disarmed <= plain * 3.0,
+        "disarmed fault hook must be within noise of the plain write \
+         ({:.0} ns vs {:.0} ns)",
+        ns(disarmed),
+        ns(plain)
+    );
+    assert!(
+        foreign <= plain * 3.0,
+        "an armed-but-foreign-scope plan must not tax fault-free writes \
+         ({:.0} ns vs {:.0} ns)",
+        ns(foreign),
+        ns(plain)
+    );
+    assert!(
+        check_ns < 1000.0,
+        "the disarmed check() hook must stay in the nanosecond regime ({check_ns:.1} ns)"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}

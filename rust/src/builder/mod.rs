@@ -581,7 +581,13 @@ impl<'a> Builder<'a> {
             }
             None => {
                 let built = parallel::scoped_index_map(misses.len(), opts.jobs, |slot| {
-                    execute_step_work(&plan[misses[slot]].work, ctx, self.engine, &opts.cost)
+                    // Same transient-fault absorption as fleet-scheduled
+                    // steps; retries are uncounted here (no ticket).
+                    crate::fault::RetryPolicy::default()
+                        .run(|| {
+                            execute_step_work(&plan[misses[slot]].work, ctx, self.engine, &opts.cost)
+                        })
+                        .0
                 })?;
                 for (i, b) in misses.into_iter().zip(built) {
                     results[i] = Some(Arc::new(b));
@@ -624,8 +630,12 @@ impl<'a> Builder<'a> {
                     job_latch.set(Err("request cancelled after an earlier step failed".into()));
                     return;
                 }
-                let result =
-                    execute_step_work(&work, &ctx, engine.as_ref(), &cost).map(Arc::new);
+                let (res, retries) = crate::fault::RetryPolicy::default()
+                    .run(|| execute_step_work(&work, &ctx, engine.as_ref(), &cost));
+                if retries > 0 {
+                    ticket.note_retried(retries as usize);
+                }
+                let result = res.map(Arc::new);
                 match &result {
                     Ok(v) => flight.publish(&key, v.clone()),
                     Err(_) => flight.abandon(&key),
@@ -842,6 +852,11 @@ fn execute_step_work(
     engine: &dyn HashEngine,
     cost: &CostModel,
 ) -> Result<BuiltLayer> {
+    // Fault boundary for step execution: injected transient faults here
+    // are absorbed by the caller's retry loop; crash faults fail the
+    // step (and with it the request) without poisoning other requests —
+    // the flight entry is abandoned so followers re-lead.
+    crate::fault::check("builder.step", &ctx.dir)?;
     let t0 = Instant::now();
     let mut file_index = None;
     let mut toolchain_bytes = 0u64;

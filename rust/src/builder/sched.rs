@@ -67,6 +67,9 @@ pub struct ScheduleAccounting {
     pub steps_deduped: usize,
     /// Steps adopted byte-for-byte from the old image (DAG adoption).
     pub steps_adopted: usize,
+    /// Transient step failures absorbed by the retry policy (each count
+    /// is one re-execution of a step that then went on to finish).
+    pub steps_retried: usize,
 }
 
 /// One queued request's scheduling identity: its remaining-work priority
@@ -77,6 +80,7 @@ pub struct RequestTicket {
     scheduled: AtomicUsize,
     deduped: AtomicUsize,
     adopted: AtomicUsize,
+    retried: AtomicUsize,
     /// Set when the request's build failed: its still-queued step jobs
     /// short-circuit instead of burning the fleet budget.
     cancelled: std::sync::atomic::AtomicBool,
@@ -115,6 +119,11 @@ impl RequestTicket {
         self.adopted.fetch_add(n, Ordering::SeqCst);
     }
 
+    /// `n` transient step failures were retried away during execution.
+    pub(crate) fn note_retried(&self, n: usize) {
+        self.retried.fetch_add(n, Ordering::SeqCst);
+    }
+
     /// A queued job was dropped without executing (request cancelled).
     pub(crate) fn note_skipped(&self) {
         self.remaining.fetch_sub(1, Ordering::SeqCst);
@@ -136,6 +145,7 @@ impl RequestTicket {
             steps_scheduled: self.scheduled.load(Ordering::SeqCst),
             steps_deduped: self.deduped.load(Ordering::SeqCst),
             steps_adopted: self.adopted.load(Ordering::SeqCst),
+            steps_retried: self.retried.load(Ordering::SeqCst),
         }
     }
 }

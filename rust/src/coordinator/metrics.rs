@@ -24,6 +24,9 @@ pub struct CoordinatorMetrics {
     pub steps_deduped: usize,
     /// Steps adopted byte-for-byte from old images (DAG adoption).
     pub steps_adopted: usize,
+    /// Transient step failures absorbed by retries across the batch —
+    /// work the fleet redid without failing any request.
+    pub steps_retried: usize,
 }
 
 impl CoordinatorMetrics {
@@ -57,6 +60,7 @@ impl CoordinatorMetrics {
             steps_scheduled: outcomes.iter().map(|o| o.sched.steps_scheduled).sum(),
             steps_deduped: outcomes.iter().map(|o| o.sched.steps_deduped).sum(),
             steps_adopted: outcomes.iter().map(|o| o.sched.steps_adopted).sum(),
+            steps_retried: outcomes.iter().map(|o| o.sched.steps_retried).sum(),
         }
     }
 
@@ -64,7 +68,7 @@ impl CoordinatorMetrics {
     pub fn summary(&self) -> String {
         format!(
             "{} ok / {} failed | {:.2} req/s | service mean {} p50 {} p95 {} | wall {} | \
-             steps {} scheduled / {} deduped / {} adopted",
+             steps {} scheduled / {} deduped / {} adopted / {} retried",
             self.completed,
             self.failed,
             self.throughput_rps,
@@ -75,6 +79,7 @@ impl CoordinatorMetrics {
             self.steps_scheduled,
             self.steps_deduped,
             self.steps_adopted,
+            self.steps_retried,
         )
     }
 }
@@ -96,6 +101,7 @@ mod tests {
                 steps_scheduled: 2,
                 steps_deduped: 1,
                 steps_adopted: 0,
+                steps_retried: 1,
             },
         }
     }
@@ -111,8 +117,10 @@ mod tests {
         assert_eq!(m.max_service, Duration::from_millis(30));
         assert_eq!(m.steps_scheduled, 6);
         assert_eq!(m.steps_deduped, 3);
+        assert_eq!(m.steps_retried, 3);
         assert!(m.summary().contains("2 ok / 1 failed"));
         assert!(m.summary().contains("6 scheduled / 3 deduped"));
+        assert!(m.summary().contains("3 retried"));
     }
 
     #[test]

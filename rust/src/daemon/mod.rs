@@ -96,6 +96,14 @@ impl Daemon {
         builder.build(ctx_dir, &ImageRef::parse(tag), opts)
     }
 
+    /// Re-run the store's crash-consistency sweep and report what it
+    /// found. [`LayerStore::open`] already ran one when this daemon was
+    /// constructed; this is the explicit `layerjet recover` entry point
+    /// (e.g. after an operator cleaned up a wedged build by hand).
+    pub fn recover(&self) -> Result<crate::store::StoreRecovery> {
+        self.layers.recover()
+    }
+
     /// Per-context scan-cache file under the daemon state dir.
     fn scan_cache_path(&self, ctx_dir: &Path) -> PathBuf {
         let key = crate::hash::Digest::of(ctx_dir.to_string_lossy().as_bytes()).short();

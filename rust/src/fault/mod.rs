@@ -1,0 +1,582 @@
+//! Deterministic fault injection for crash-consistency testing.
+//!
+//! Every durability boundary in the crate — layer tar/meta/sidecar writes in
+//! [`crate::store`], chunk-pool I/O, push negotiation and pull staging in
+//! [`crate::registry`], and step execution in [`crate::builder`] — calls one
+//! of the hooks in this module ([`check`] or [`durable_write`]) with a
+//! *named site* and the path being touched. When no plan is installed the
+//! hooks compile down to a single relaxed atomic load and fall through to
+//! the plain I/O, so the fault-free path pays effectively nothing (asserted
+//! by `benches/fault_overhead.rs`).
+//!
+//! # Model
+//!
+//! A [`FaultPlan`] is a set of [`FaultSpec`]s, each keyed by `(site,
+//! at_hit)`: the n-th time a hook fires at that site (within the plan's
+//! scope), the spec's [`FaultMode`] triggers:
+//!
+//! - `ErrOnce` / `ErrN(n)` — a *transient* error (`io::ErrorKind::
+//!   Interrupted`); [`RetryPolicy`] classifies it as retryable, so a
+//!   bounded number of these are absorbed with backoff.
+//! - `Torn(k)` — the first `k` bytes land in the temp file, then a *fatal*
+//!   error is returned and the temp file is deliberately left orphaned
+//!   (the caller must not clean it up — a real crash would not have).
+//! - `Crash` — the operation is abandoned mid-flight: for writes the temp
+//!   file is fully written but never synced/renamed; for reads and
+//!   negotiation a fatal error propagates. This simulates process death at
+//!   that exact point; recovery sweeps pick up the pieces on next open.
+//!
+//! Plans are *scoped* to a directory tree: a spec only fires when the
+//! hooked path lives under `scope`. Tests always scope plans to their own
+//! temp directories so concurrently running tests cannot trip each other's
+//! faults; [`install`] additionally serializes installers behind a global
+//! mutex.
+//!
+//! Hit counting is per-site and deterministic: hooks count every arrival
+//! at a site inside the scope, whether or not a spec fires, so
+//! `fail_at(site, k)` always means "the k-th arrival" regardless of which
+//! other specs are active. An observe-only plan ([`FaultPlan::observe`])
+//! records the per-site hit counts of a run without injecting anything —
+//! the fault-matrix test uses this to enumerate the reachable `(site, k)`
+//! space before sweeping it.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Duration;
+
+use crate::util::prng::Prng;
+
+/// Every registered fault site, in durability-boundary order. The
+/// fault-matrix test enumerates this list; adding a hook to a new
+/// boundary means adding its site name here.
+pub const SITES: &[&str] = &[
+    "store.layer.tar",        // layer.tar body write in the layer store
+    "store.layer.meta",       // layer json metadata (the commit point)
+    "store.layer.sidecar",    // chunk/checkpoint/file-index sidecars
+    "store.image",            // image manifests and the tag map
+    "registry.pool.put",      // chunk landing in a content-addressed pool
+    "registry.pool.get",      // chunk read out of a pool
+    "registry.push.negotiate", // has/has_batch presence negotiation
+    "registry.push.journal",  // per-layer push-journal entry
+    "registry.push.commit",   // serial phase-3 remote commit writes
+    "registry.pull.stage",    // verified chunk landing in pull staging
+    "builder.step",           // a build step executing in the scheduler
+];
+
+/// What happens when a spec triggers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// One transient error, then the site behaves normally.
+    ErrOnce,
+    /// `n` consecutive transient errors starting at the keyed hit.
+    ErrN(u32),
+    /// Write the first `k` bytes, then fail fatally, leaving the torn
+    /// temp file orphaned. Only meaningful at write sites; at check-only
+    /// sites it degenerates to `Crash`.
+    Torn(usize),
+    /// Abandon the operation mid-flight with a fatal error (the temp file,
+    /// if any, is fully written but never published).
+    Crash,
+}
+
+/// A single keyed fault: at the `at_hit`-th arrival at `site`, fire `mode`.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub site: &'static str,
+    pub at_hit: u64,
+    pub mode: FaultMode,
+}
+
+/// A scoped, deterministic set of faults to inject.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Only paths under this directory trip the plan's specs. `None`
+    /// matches everywhere — never use that in tests that share a process.
+    pub scope: Option<PathBuf>,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing but still counts hits per site; read
+    /// the counts back with [`FaultGuard::counts`].
+    pub fn observe() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Single fault: fire `mode` on the `at_hit`-th arrival at `site`.
+    pub fn fail_at(site: &'static str, at_hit: u64, mode: FaultMode) -> Self {
+        FaultPlan::default().and(site, at_hit, mode)
+    }
+
+    /// Add another spec to the plan.
+    pub fn and(mut self, site: &'static str, at_hit: u64, mode: FaultMode) -> Self {
+        self.specs.push(FaultSpec { site, at_hit, mode });
+        self
+    }
+
+    /// Restrict the plan to paths under `root`.
+    pub fn scoped(mut self, root: &Path) -> Self {
+        self.scope = Some(root.to_path_buf());
+        self
+    }
+
+    /// A seeded random plan of `n` specs drawn over [`SITES`], for chaos
+    /// sweeps. Equal seeds give equal plans.
+    pub fn random(seed: u64, n: usize) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut plan = FaultPlan::default();
+        for _ in 0..n {
+            let site = SITES[rng.index(SITES.len())];
+            let at_hit = rng.below(4);
+            let mode = match rng.below(4) {
+                0 => FaultMode::ErrOnce,
+                1 => FaultMode::ErrN(1 + rng.below(3) as u32),
+                2 => FaultMode::Torn(1 + rng.index(64)),
+                _ => FaultMode::Crash,
+            };
+            plan = plan.and(site, at_hit, mode);
+        }
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global plan state.
+// ---------------------------------------------------------------------------
+
+/// Fast-path flag: hooks bail on a single relaxed load when disarmed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// The installed plan, behind a lock only touched when armed.
+static ACTIVE: RwLock<Option<Arc<ActivePlan>>> = RwLock::new(None);
+/// Serializes installers so two tests cannot interleave plans.
+static INSTALL: Mutex<()> = Mutex::new(());
+
+struct ActivePlan {
+    scope: Option<PathBuf>,
+    specs: Vec<FaultSpec>,
+    hits: Mutex<HashMap<&'static str, u64>>,
+}
+
+impl ActivePlan {
+    /// Count the arrival and return the mode to fire, if any.
+    fn eval(&self, site: &'static str, path: &Path) -> Option<(FaultMode, u64)> {
+        if let Some(scope) = &self.scope {
+            if !path.starts_with(scope) {
+                return None;
+            }
+        }
+        let mut hits = lock(&self.hits);
+        let slot = hits.entry(site).or_insert(0);
+        let hit = *slot;
+        *slot += 1;
+        for spec in &self.specs {
+            if spec.site != site {
+                continue;
+            }
+            let fire = match spec.mode {
+                FaultMode::ErrN(n) => hit >= spec.at_hit && hit < spec.at_hit + n as u64,
+                _ => hit == spec.at_hit,
+            };
+            if fire {
+                return Some((spec.mode, hit));
+            }
+        }
+        None
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn active() -> Option<Arc<ActivePlan>> {
+    ACTIVE
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .cloned()
+}
+
+/// Keeps a plan installed; dropping it disarms the hooks and releases the
+/// installer lock. Hold it for the whole faulted run.
+pub struct FaultGuard {
+    plan: Arc<ActivePlan>,
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl FaultGuard {
+    /// Per-site arrival counts recorded so far (scope-filtered).
+    pub fn counts(&self) -> HashMap<&'static str, u64> {
+        lock(&self.plan.hits).clone()
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+/// Install a plan process-wide. Installers are serialized: a second
+/// `install` blocks until the first guard drops.
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let serial = INSTALL.lock().unwrap_or_else(|e| e.into_inner());
+    let active = Arc::new(ActivePlan {
+        scope: plan.scope,
+        specs: plan.specs,
+        hits: Mutex::new(HashMap::new()),
+    });
+    *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) = Some(active.clone());
+    ARMED.store(true, Ordering::SeqCst);
+    FaultGuard { plan: active, _serial: serial }
+}
+
+// ---------------------------------------------------------------------------
+// Injected-error payload and classification.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Injected {
+    site: &'static str,
+    hit: u64,
+    fatal: bool,
+}
+
+impl fmt::Display for Injected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.fatal {
+            write!(f, "injected crash at {} (hit {})", self.site, self.hit)
+        } else {
+            write!(f, "injected transient fault at {} (hit {})", self.site, self.hit)
+        }
+    }
+}
+
+impl std::error::Error for Injected {}
+
+fn transient_err(site: &'static str, hit: u64) -> io::Error {
+    io::Error::new(io::ErrorKind::Interrupted, Injected { site, hit, fatal: false })
+}
+
+fn crash_err(site: &'static str, hit: u64) -> io::Error {
+    io::Error::other(Injected { site, hit, fatal: true })
+}
+
+/// True if the error was produced by a hook in this module.
+pub fn is_injected(e: &io::Error) -> bool {
+    e.get_ref()
+        .is_some_and(|inner| inner.downcast_ref::<Injected>().is_some())
+}
+
+/// True for an injected *fatal* fault (torn write or simulated crash).
+/// Callers use this to skip their normal temp-file cleanup: a real crash
+/// would not have run it either, and recovery must cope with the orphan.
+pub fn is_crash(e: &io::Error) -> bool {
+    e.get_ref()
+        .and_then(|inner| inner.downcast_ref::<Injected>())
+        .is_some_and(|f| f.fatal)
+}
+
+/// Transient-error classification for [`RetryPolicy`]: interrupted-kind
+/// I/O errors (which is what `ErrOnce`/`ErrN` produce, and what a flaky
+/// wire would surface as).
+pub fn transient(e: &crate::Error) -> bool {
+    matches!(e, crate::Error::Io(io) if io.kind() == io::ErrorKind::Interrupted)
+}
+
+/// True if a crate-level error wraps an injected fatal fault.
+pub fn error_is_crash(e: &crate::Error) -> bool {
+    matches!(e, crate::Error::Io(io) if is_crash(io))
+}
+
+// ---------------------------------------------------------------------------
+// Hooks.
+// ---------------------------------------------------------------------------
+
+/// Fault hook for non-write operations (reads, negotiation, step entry).
+/// Disarmed cost: one relaxed atomic load.
+#[inline]
+pub fn check(site: &'static str, path: &Path) -> io::Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    check_slow(site, path)
+}
+
+#[cold]
+fn check_slow(site: &'static str, path: &Path) -> io::Result<()> {
+    let Some(plan) = active() else { return Ok(()) };
+    match plan.eval(site, path) {
+        None => Ok(()),
+        Some((FaultMode::ErrOnce | FaultMode::ErrN(_), hit)) => Err(transient_err(site, hit)),
+        Some((FaultMode::Torn(_) | FaultMode::Crash, hit)) => Err(crash_err(site, hit)),
+    }
+}
+
+/// Write `bytes` to `tmp` durably (create + write_all + fsync), under
+/// fault control keyed by `(site, target)`. `target` is the final
+/// destination the temp file will be renamed to — plans scope on it, so a
+/// plan scoped to a store root also covers that store's temp files.
+///
+/// On `Torn(k)` the first `k` bytes land in `tmp` un-synced and a fatal
+/// error returns; on `Crash` the full body lands un-synced. In both cases
+/// the temp file is deliberately orphaned: callers must check
+/// [`is_crash`] and skip cleanup, leaving the orphan for recovery sweeps.
+#[inline]
+pub fn durable_write(
+    site: &'static str,
+    target: &Path,
+    tmp: &Path,
+    bytes: &[u8],
+) -> io::Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return durable_write_plain(tmp, bytes);
+    }
+    durable_write_slow(site, target, tmp, bytes)
+}
+
+#[cold]
+fn durable_write_slow(
+    site: &'static str,
+    target: &Path,
+    tmp: &Path,
+    bytes: &[u8],
+) -> io::Result<()> {
+    let Some(plan) = active() else {
+        return durable_write_plain(tmp, bytes);
+    };
+    match plan.eval(site, target) {
+        None => durable_write_plain(tmp, bytes),
+        Some((FaultMode::ErrOnce | FaultMode::ErrN(_), hit)) => Err(transient_err(site, hit)),
+        Some((FaultMode::Torn(k), hit)) => {
+            let mut f = std::fs::File::create(tmp)?;
+            f.write_all(&bytes[..k.min(bytes.len())])?;
+            Err(crash_err(site, hit))
+        }
+        Some((FaultMode::Crash, hit)) => {
+            let mut f = std::fs::File::create(tmp)?;
+            f.write_all(bytes)?;
+            Err(crash_err(site, hit))
+        }
+    }
+}
+
+/// The fault-free durable write: create, write, fsync. Kept public so the
+/// overhead bench can compare the hooked path against this baseline.
+pub fn durable_write_plain(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()
+}
+
+// ---------------------------------------------------------------------------
+// Retry policy.
+// ---------------------------------------------------------------------------
+
+/// Bounded retry with exponential backoff and seeded jitter for transient
+/// faults. Fatal (crash/torn) and ordinary I/O errors propagate
+/// immediately; only [`transient`] errors burn retry budget.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (so `attempts = 1` never
+    /// retries).
+    pub attempts: u32,
+    /// Backoff before retry `r` is `base * 2^r`, capped at `cap`.
+    pub base: Duration,
+    pub cap: Duration,
+    /// Seeds the jitter stream; runs with equal seeds back off equally.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base: Duration::from_micros(500),
+            cap: Duration::from_millis(20),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (attempt budget of one).
+    pub fn none() -> Self {
+        RetryPolicy { attempts: 1, ..RetryPolicy::default() }
+    }
+
+    /// Run `op` under the policy. Returns the final result and how many
+    /// retries were spent (0 when the first attempt settled it).
+    pub fn run<T>(&self, mut op: impl FnMut() -> crate::Result<T>) -> (crate::Result<T>, u64) {
+        let mut rng = Prng::new(self.seed);
+        let mut retries: u64 = 0;
+        loop {
+            match op() {
+                Ok(v) => return (Ok(v), retries),
+                Err(e) if (retries + 1) < self.attempts as u64 && transient(&e) => {
+                    let exp = self
+                        .base
+                        .saturating_mul(1u32 << retries.min(16) as u32)
+                        .min(self.cap);
+                    // Jitter in [0.5, 1.0) of the capped backoff.
+                    std::thread::sleep(exp.mul_f64(0.5 + 0.5 * rng.f64()));
+                    retries += 1;
+                }
+                Err(e) => return (Err(e), retries),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lj-fault-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn disarmed_hooks_are_noops() {
+        let d = tmp("disarmed");
+        assert!(check("store.layer.tar", &d.join("x")).is_ok());
+        durable_write("store.layer.tar", &d.join("y"), &d.join("y.tmp"), b"abc").unwrap();
+        assert_eq!(std::fs::read(d.join("y.tmp")).unwrap(), b"abc");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn err_once_fires_exactly_at_keyed_hit() {
+        let d = tmp("erronce");
+        let guard = install(FaultPlan::fail_at("registry.pool.get", 2, FaultMode::ErrOnce).scoped(&d));
+        let p = d.join("chunk");
+        assert!(check("registry.pool.get", &p).is_ok()); // hit 0
+        assert!(check("registry.pool.get", &p).is_ok()); // hit 1
+        let err = check("registry.pool.get", &p).unwrap_err(); // hit 2
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        assert!(is_injected(&err) && !is_crash(&err));
+        assert!(check("registry.pool.get", &p).is_ok()); // hit 3
+        assert_eq!(guard.counts()["registry.pool.get"], 4);
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn scope_filters_foreign_paths() {
+        let d = tmp("scope");
+        let other = tmp("scope-other");
+        let guard = install(FaultPlan::fail_at("store.image", 0, FaultMode::Crash).scoped(&d));
+        // Outside the scope: no fault, no hit counted.
+        assert!(check("store.image", &other.join("img")).is_ok());
+        assert!(guard.counts().is_empty());
+        // Inside the scope: fires on the first arrival.
+        let err = check("store.image", &d.join("img")).unwrap_err();
+        assert!(is_crash(&err));
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+        let _ = std::fs::remove_dir_all(&other);
+    }
+
+    #[test]
+    fn torn_write_leaves_partial_orphan() {
+        let d = tmp("torn");
+        let guard = install(FaultPlan::fail_at("store.layer.tar", 0, FaultMode::Torn(3)).scoped(&d));
+        let target = d.join("layer.tar");
+        let tmp_file = d.join("layer.tar.tmp-x");
+        let err = durable_write("store.layer.tar", &target, &tmp_file, b"0123456789").unwrap_err();
+        assert!(is_crash(&err));
+        // The torn prefix landed in the temp file; the target never appeared.
+        assert_eq!(std::fs::read(&tmp_file).unwrap(), b"012");
+        assert!(!target.exists());
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn crash_write_is_full_but_unpublished() {
+        let d = tmp("crash");
+        let guard = install(FaultPlan::fail_at("registry.pull.stage", 0, FaultMode::Crash).scoped(&d));
+        let target = d.join("chunk");
+        let tmp_file = d.join(".tmp-1");
+        let err = durable_write("registry.pull.stage", &target, &tmp_file, b"body").unwrap_err();
+        assert!(is_crash(&err));
+        assert_eq!(std::fs::read(&tmp_file).unwrap(), b"body");
+        assert!(!target.exists());
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn retry_policy_absorbs_transients_within_budget() {
+        let d = tmp("retry-ok");
+        let guard = install(FaultPlan::fail_at("registry.pool.put", 0, FaultMode::ErrN(2)).scoped(&d));
+        let policy = RetryPolicy { base: Duration::from_micros(10), ..Default::default() };
+        let p = d.join("c");
+        let (res, retries) = policy.run(|| check("registry.pool.put", &p).map_err(crate::Error::from));
+        assert!(res.is_ok());
+        assert_eq!(retries, 2);
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn retry_policy_gives_up_on_crash_and_exhaustion() {
+        let d = tmp("retry-no");
+        // Crash is fatal: no retry spent.
+        let guard = install(FaultPlan::fail_at("registry.pool.put", 0, FaultMode::Crash).scoped(&d));
+        let policy = RetryPolicy { base: Duration::from_micros(10), ..Default::default() };
+        let p = d.join("c");
+        let (res, retries) = policy.run(|| check("registry.pool.put", &p).map_err(crate::Error::from));
+        assert!(res.is_err());
+        assert_eq!(retries, 0);
+        drop(guard);
+        // A transient burst longer than the budget exhausts it.
+        let guard = install(FaultPlan::fail_at("registry.pool.put", 0, FaultMode::ErrN(10)).scoped(&d));
+        let (res, retries) = policy.run(|| check("registry.pool.put", &p).map_err(crate::Error::from));
+        assert!(res.is_err());
+        assert_eq!(retries, policy.attempts as u64 - 1);
+        let last = res.unwrap_err();
+        assert!(transient(&last), "exhausted error stays transient-classified: {last}");
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn observe_plan_counts_without_injecting() {
+        let d = tmp("observe");
+        let guard = install(FaultPlan::observe().scoped(&d));
+        for _ in 0..3 {
+            assert!(check("builder.step", &d.join("ctx")).is_ok());
+        }
+        durable_write("store.layer.meta", &d.join("json"), &d.join("json.tmp"), b"{}").unwrap();
+        let counts = guard.counts();
+        assert_eq!(counts["builder.step"], 3);
+        assert_eq!(counts["store.layer.meta"], 1);
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let a = FaultPlan::random(9, 5);
+        let b = FaultPlan::random(9, 5);
+        assert_eq!(a.specs.len(), 5);
+        for (x, y) in a.specs.iter().zip(&b.specs) {
+            assert_eq!(x.site, y.site);
+            assert_eq!(x.at_hit, y.at_hit);
+            assert_eq!(x.mode, y.mode);
+        }
+        let c = FaultPlan::random(10, 5);
+        assert!(a.specs.iter().zip(&c.specs).any(|(x, y)| {
+            x.site != y.site || x.at_hit != y.at_hit || x.mode != y.mode
+        }));
+    }
+}

@@ -63,6 +63,7 @@ pub mod tar;
 pub mod cas;
 pub mod oci;
 pub mod dockerfile;
+pub mod fault;
 pub mod store;
 pub mod builder;
 pub mod diff;
@@ -81,6 +82,7 @@ pub mod prelude {
     pub use crate::coordinator::{BuildCoordinator, BuildRequest, BuildStrategy};
     pub use crate::daemon::Daemon;
     pub use crate::dockerfile::Dockerfile;
+    pub use crate::fault::{FaultMode, FaultPlan, RetryPolicy};
     pub use crate::hash::{Digest, HashEngine, NativeEngine, ParallelEngine, Sha256};
     pub use crate::inject::{InjectMode, InjectOptions, InjectReport};
     pub use crate::oci::{Image, ImageId, ImageRef, LayerId};

@@ -54,6 +54,13 @@ COMMANDS:
                                          chunks look like garbage. CI farms
                                          should prefer the coordinator's
                                          maintain() quiesce handshake.
+  recover [--remote DIR]                 crash-consistency sweep: remove
+                                         orphaned temp files and partial
+                                         layers under --root, keep resumable
+                                         pull staging, and (with --remote)
+                                         sweep the registry's temp files and
+                                         push journals. Runs implicitly on
+                                         every open; this surfaces the report
   coordinate [--workers N] [--jobs N] [--strategy auto|build|inject|inject-cascade]
          [--per-request] TAG=CTX [TAG=CTX ...]
                                          run a CI batch: one request per
@@ -474,7 +481,7 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
             for o in &outcomes {
                 println!(
                     "request {} [{}] on worker {}: {} in {} (queued {}) — {} | steps: {} scheduled, \
-                     {} deduped, {} adopted",
+                     {} deduped, {} adopted, {} retried",
                     o.id,
                     o.strategy_used,
                     o.worker,
@@ -485,6 +492,7 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     o.sched.steps_scheduled,
                     o.sched.steps_deduped,
                     o.sched.steps_adopted,
+                    o.sched.steps_retried,
                 );
             }
             println!("{}", metrics.summary());
@@ -512,6 +520,31 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
             let daemon = open_daemon()?;
             for (r, id) in daemon.images.tags()? {
                 println!("{:<40} {}", r.to_string(), id.short());
+            }
+        }
+        "recover" => {
+            // Opening the daemon IS the recovery pass; print what it found.
+            let daemon = open_daemon()?;
+            let r = daemon.layers.open_recovery();
+            println!(
+                "store: {} temp file(s) swept, {} partial layer(s) removed, \
+                 {} staging dir(s) kept for resume, {} staging dir(s) swept",
+                r.tmp_swept, r.partial_layers_swept, r.staging_kept, r.staging_swept,
+            );
+            if let Some(remote_dir) = cli.opt("--remote") {
+                let remote = RemoteRegistry::open(&PathBuf::from(remote_dir))?;
+                let rr = remote.open_recovery();
+                println!(
+                    "remote: {} temp file(s) swept, {} push journal(s) kept for resume, \
+                     {} dropped",
+                    rr.tmp_swept, rr.journals_kept, rr.journals_dropped,
+                );
+                if rr.scrub_scheduled {
+                    eprintln!(
+                        "note: a degradation event left a scrub pending — run \
+                         `layerjet registry scrub --remote {remote_dir}`"
+                    );
+                }
             }
         }
         "prune" => {

@@ -32,6 +32,10 @@ static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
 /// A content-addressed pool of chunk blobs.
 pub struct ChunkPool {
     root: PathBuf,
+    /// Fault site names for this pool's writes and reads (a staging pool
+    /// reports under different sites than the remote pool).
+    put_site: &'static str,
+    get_site: &'static str,
 }
 
 impl ChunkPool {
@@ -40,7 +44,18 @@ impl ChunkPool {
         std::fs::create_dir_all(root)?;
         Ok(ChunkPool {
             root: root.to_path_buf(),
+            put_site: "registry.pool.put",
+            get_site: "registry.pool.get",
         })
+    }
+
+    /// Open a pull-staging pool: same layout, but writes report under the
+    /// `registry.pull.stage` fault site so staging faults are injectable
+    /// independently of remote-pool faults.
+    pub fn open_staging(root: &Path) -> Result<ChunkPool> {
+        let mut pool = ChunkPool::open(root)?;
+        pool.put_site = "registry.pull.stage";
+        Ok(pool)
     }
 
     /// Reference a pool without creating anything on disk — used by pull
@@ -48,6 +63,8 @@ impl ChunkPool {
     pub fn at(root: &Path) -> ChunkPool {
         ChunkPool {
             root: root.to_path_buf(),
+            put_site: "registry.pool.put",
+            get_site: "registry.pool.get",
         }
     }
 
@@ -78,8 +95,12 @@ impl ChunkPool {
     }
 
     /// Fetch a chunk's bytes; a missing chunk is a registry error.
+    /// Transient wire faults surface here (as interrupted-kind I/O
+    /// errors) so callers can retry under a [`crate::fault::RetryPolicy`].
     pub fn get(&self, digest: &Digest) -> Result<Vec<u8>> {
-        std::fs::read(self.chunk_path(digest)).map_err(|e| {
+        let path = self.chunk_path(digest);
+        crate::fault::check(self.get_site, &path)?;
+        std::fs::read(path).map_err(|e| {
             Error::Registry(format!("chunk {} missing from pool: {e}", digest.short()))
         })
     }
@@ -105,9 +126,21 @@ impl ChunkPool {
             std::process::id(),
             TMP_NONCE.fetch_add(1, Ordering::Relaxed)
         ));
-        std::fs::write(&tmp, data)?;
+        if let Err(e) = crate::fault::durable_write(self.put_site, &path, &tmp, data) {
+            // An injected crash leaves the temp orphaned on purpose (a
+            // real one would have); recovery sweeps collect it.
+            if !crate::fault::is_crash(&e) {
+                let _ = std::fs::remove_file(&tmp);
+            }
+            return Err(e.into());
+        }
         std::fs::rename(&tmp, &path)?;
         Ok(true)
+    }
+
+    /// Remove orphaned `.tmp-*` files (crash leftovers); returns how many.
+    pub fn sweep_tmp(&self) -> usize {
+        crate::store::sweep_tmp_files(&self.root)
     }
 
     /// Remove a chunk (e.g. a staging entry that failed verification).

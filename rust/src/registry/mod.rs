@@ -96,6 +96,42 @@
 //! an interrupted push leaves at worst orphan pool chunks — which the
 //! next push negotiates away instead of re-uploading.
 //!
+//! # Failure semantics & recovery
+//!
+//! Every remote file the registry *serves* (checksum traces, manifests,
+//! tars, image configs, tags) commits through the same fsync-then-rename
+//! atomic write as the local store, so a crash leaves complete old/new
+//! files plus at worst orphaned `*.tmp-*` / `.tmp-*` entries — never a
+//! torn one. The durability boundaries are named [`crate::fault`] sites;
+//! see that module for the injection model.
+//!
+//! **Transient faults** (interrupted-kind I/O — a flaky wire) are
+//! retried in place under [`PushOptions::retry`]/[`PullOptions::retry`]
+//! (exponential backoff + seeded jitter + attempt budget); spent retries
+//! are surfaced as [`PushReport::retries`]/[`PullReport::retries`].
+//!
+//! **Interrupted pushes** resume from a small per-image **journal**
+//! (`<root>/push-journal/<image-id>/<layer-id>`): once a layer's chunks
+//! have all landed in the pool, its digest + encoded manifest are
+//! journaled, so a re-push of the same image skips that layer's read /
+//! verify / chunk / negotiate work entirely instead of restarting
+//! negotiation ([`PushReport::layers_resumed`]). The journal is deleted
+//! after the serial commit; [`RemoteRegistry::recover`] drops journals
+//! of already-committed images and sweeps temp orphans.
+//!
+//! **Interrupted pulls** resume at two granularities (verified local
+//! layers are skipped; verified staged chunks replay from
+//! `<store>/pull-staging/<image-id>/`); the staging pool is only removed
+//! after a fully committed pull, and [`crate::store::LayerStore::recover`]
+//! keeps resumable staging dirs while sweeping empty ones.
+//!
+//! **Graceful degradation**: a chunk pool that keeps failing past the
+//! retry budget (push) or serves corrupt chunks where the remote still
+//! holds a whole tar (pull) demotes that layer to the whole-tar path
+//! instead of failing the build, and schedules a scrub (the
+//! `needs-scrub` marker, cleared by [`RemoteRegistry::scrub`]) so rot is
+//! repaired out of band.
+//!
 //! # Maintenance
 //!
 //! * [`RemoteRegistry::scrub`] re-hashes every pool chunk and deletes
@@ -120,7 +156,7 @@ use crate::oci::{Image, ImageId, ImageRef, LayerId};
 use crate::store::{ImageStore, LayerStore};
 use crate::util::json::Json;
 use crate::{Error, Result};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -157,6 +193,9 @@ pub struct PushOptions {
     /// negotiation round-trips instead of O(layers); transferred bytes
     /// are identical either way.
     pub negotiate_per_chunk: bool,
+    /// Retry budget for transient pool/negotiation faults; spent retries
+    /// surface as [`PushReport::retries`].
+    pub retry: crate::fault::RetryPolicy,
 }
 
 impl Default for PushOptions {
@@ -166,6 +205,7 @@ impl Default for PushOptions {
             whole_tar: false,
             manifest_v1: false,
             negotiate_per_chunk: false,
+            retry: crate::fault::RetryPolicy::default(),
         }
     }
 }
@@ -181,6 +221,9 @@ pub struct PullOptions {
     /// puller leads the fetch, the rest adopt the bytes in memory. See
     /// [`ChunkFetchCache`].
     pub fetch_cache: Option<ChunkFetchCache>,
+    /// Retry budget for transient chunk-fetch faults; spent retries
+    /// surface as [`PullReport::retries`].
+    pub retry: crate::fault::RetryPolicy,
 }
 
 impl Default for PullOptions {
@@ -188,6 +231,7 @@ impl Default for PullOptions {
         PullOptions {
             jobs: 1,
             fetch_cache: None,
+            retry: crate::fault::RetryPolicy::default(),
         }
     }
 }
@@ -263,6 +307,15 @@ pub struct PushReport {
     pub negotiation_round_trips: usize,
     /// True when the v1 whole-tar wire mode was used.
     pub whole_tar: bool,
+    /// Transient-fault retries spent under [`PushOptions::retry`].
+    pub retries: u64,
+    /// Layers resumed from the push journal: their chunks were already
+    /// pooled by an interrupted push, so read/verify/chunk/negotiate
+    /// were skipped entirely.
+    pub layers_resumed: usize,
+    /// Layers demoted to the whole-tar wire path because the chunk pool
+    /// kept failing past the retry budget (a scrub was scheduled).
+    pub layers_degraded: usize,
 }
 
 /// Result of a successful pull.
@@ -287,6 +340,11 @@ pub struct PullReport {
     pub chunks_shared: usize,
     /// Bytes those shared chunks would otherwise have re-fetched.
     pub bytes_shared: u64,
+    /// Transient-fault retries spent under [`PullOptions::retry`].
+    pub retries: u64,
+    /// Layers that fell back to the remote's whole tar because their
+    /// chunks were corrupt (a scrub was scheduled).
+    pub layers_degraded: usize,
 }
 
 /// Result of a [`RemoteRegistry::scrub`] pass over the chunk pool.
@@ -305,6 +363,30 @@ pub struct ScrubReport {
     /// re-commits (and thereby re-uploads the missing chunks) instead of
     /// skipping the layer as `AlreadyExists`.
     pub layers_demoted: usize,
+}
+
+/// Result of a [`RemoteRegistry::recover`] crash-consistency sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryRecovery {
+    /// Orphaned temp files (pool, layer dirs, images, journals, root)
+    /// removed.
+    pub tmp_swept: usize,
+    /// Push journals kept for resume: their image has not committed and
+    /// at least one entry still validates.
+    pub journals_kept: usize,
+    /// Push journals dropped: the image committed (journal is garbage)
+    /// or no entry survived validation.
+    pub journals_dropped: usize,
+    /// A degradation event left a `needs-scrub` marker; run
+    /// [`RemoteRegistry::scrub`] to clear it.
+    pub scrub_scheduled: bool,
+}
+
+impl RegistryRecovery {
+    /// Nothing needed recovering.
+    pub fn is_clean(&self) -> bool {
+        *self == RegistryRecovery::default()
+    }
 }
 
 /// Result of a [`RemoteRegistry::gc`] mark-and-sweep.
@@ -335,6 +417,11 @@ struct LayerUpload {
     bytes_deduped: u64,
     chunks_uploaded: usize,
     chunks_deduped: usize,
+    /// Skipped the heavy stage: the push journal vouched for this layer.
+    resumed: bool,
+    /// Demoted to whole-tar because the pool kept failing past the retry
+    /// budget.
+    degraded: bool,
 }
 
 /// Per-layer transfer accounting shared by the pull paths.
@@ -346,19 +433,16 @@ struct ChunkStats {
     chunks_local: usize,
     chunks_shared: usize,
     bytes_shared: u64,
+    /// Transient-fault retries spent fetching this layer's chunks.
+    retries: u64,
+    /// Fell back to the remote's whole tar (corrupt chunks).
+    degraded: bool,
 }
 
 /// What one pipelined pull worker did for one layer.
 enum LayerPull {
     Skipped,
-    Fetched {
-        bytes_fetched: u64,
-        bytes_local: u64,
-        chunks_fetched: usize,
-        chunks_local: usize,
-        chunks_shared: usize,
-        bytes_shared: u64,
-    },
+    Fetched(ChunkStats),
 }
 
 /// Where one resolved chunk's bytes came from.
@@ -376,6 +460,9 @@ enum ChunkSource {
 /// protocol described in the module doc).
 pub struct RemoteRegistry {
     root: PathBuf,
+    /// What the implicit recovery sweep at open found, surfaced by the
+    /// `recover` CLI verb.
+    open_recovery: RegistryRecovery,
 }
 
 impl RemoteRegistry {
@@ -389,16 +476,97 @@ impl RemoteRegistry {
     /// Open a registry **without** a chunk pool — models a pre-chunk
     /// (v1) deployment. Pushes against it fall back to whole-tar
     /// uploads; pulls read layer tars.
+    ///
+    /// Runs [`RemoteRegistry::recover`] implicitly; the report is kept on
+    /// the handle ([`RemoteRegistry::open_recovery`]).
     pub fn open_legacy(root: &Path) -> Result<RemoteRegistry> {
         std::fs::create_dir_all(root.join("layers"))?;
         std::fs::create_dir_all(root.join("images"))?;
-        let reg = RemoteRegistry {
+        let mut reg = RemoteRegistry {
             root: root.to_path_buf(),
+            open_recovery: RegistryRecovery::default(),
         };
         if !reg.tags_path().exists() {
             std::fs::write(reg.tags_path(), "{}\n")?;
         }
+        reg.open_recovery = reg.recover().unwrap_or_default();
         Ok(reg)
+    }
+
+    /// The report of the implicit recovery sweep run when this registry
+    /// handle was opened.
+    pub fn open_recovery(&self) -> RegistryRecovery {
+        self.open_recovery
+    }
+
+    /// Crash-consistency sweep over the remote tree: removes orphaned
+    /// temp files everywhere a push writes (pool, layer dirs, images,
+    /// root), drops push journals whose image already committed (or
+    /// whose entries no longer parse), keeps resumable journals, and
+    /// reports whether a degradation event has scheduled a scrub.
+    /// Best-effort: individual unlink failures are skipped, not fatal.
+    pub fn recover(&self) -> Result<RegistryRecovery> {
+        let mut report = RegistryRecovery::default();
+        report.tmp_swept += crate::store::sweep_tmp_files(&self.root);
+        report.tmp_swept += crate::store::sweep_tmp_files(&self.chunk_pool_dir());
+        report.tmp_swept += crate::store::sweep_tmp_files(&self.root.join("images"));
+        if let Ok(entries) = std::fs::read_dir(self.root.join("layers")) {
+            for entry in entries.flatten() {
+                if entry.path().is_dir() {
+                    report.tmp_swept += crate::store::sweep_tmp_files(&entry.path());
+                }
+            }
+        }
+        if let Ok(entries) = std::fs::read_dir(self.root.join("push-journal")) {
+            for entry in entries.flatten() {
+                let dir = entry.path();
+                if !dir.is_dir() {
+                    continue;
+                }
+                report.tmp_swept += crate::store::sweep_tmp_files(&dir);
+                let image_name = entry.file_name().to_string_lossy().into_owned();
+                let committed = self
+                    .root
+                    .join("images")
+                    .join(format!("{image_name}.json"))
+                    .exists();
+                // Drop journal entries that no longer parse (torn before
+                // the atomic write? then they would not exist — this
+                // guards against foreign garbage), then the dir itself
+                // when its image already committed or nothing usable
+                // remains.
+                let mut usable = 0;
+                if let Ok(files) = std::fs::read_dir(&dir) {
+                    for f in files.flatten() {
+                        if read_journal_entry(&f.path()).is_some() {
+                            usable += 1;
+                        } else {
+                            let _ = std::fs::remove_file(f.path());
+                        }
+                    }
+                }
+                if committed || usable == 0 {
+                    if std::fs::remove_dir_all(&dir).is_ok() {
+                        report.journals_dropped += 1;
+                    }
+                } else {
+                    report.journals_kept += 1;
+                }
+            }
+        }
+        report.scrub_scheduled = self.scrub_scheduled();
+        Ok(report)
+    }
+
+    /// Mark the pool as needing a scrub (set by degradation events,
+    /// cleared by [`RemoteRegistry::scrub`]).
+    pub fn schedule_scrub(&self) {
+        let _ = std::fs::write(self.root.join("needs-scrub"), b"degradation event\n");
+    }
+
+    /// Is a scrub pending?
+    pub fn scrub_scheduled(&self) -> bool {
+        self.root.join("needs-scrub").exists()
     }
 
     /// Does this registry speak the chunk-addressed protocol?
@@ -505,15 +673,65 @@ impl RemoteRegistry {
         } else {
             None
         };
+        // Resume scan: a prior interrupted push of this image may have
+        // left per-layer journal entries — written only after every chunk
+        // of that layer landed in the pool — so those layers skip phase 2
+        // entirely instead of re-negotiating. Entries are trusted only
+        // when they still check out end to end: digest matches the
+        // declared diff id, the manifest decodes, and every referenced
+        // chunk is still in the pool (a scrub/gc may have collected it).
+        let journal_dir = self.root.join("push-journal").join(image_id.to_hex());
+        let mut resumable: HashMap<usize, Vec<u8>> = HashMap::new();
+        if let Some(pool) = &pool {
+            for &i in &uploads {
+                let entry = journal_dir.join(image.layer_ids[i].to_hex());
+                let Some((digest, encoded)) = read_journal_entry(&entry) else {
+                    continue;
+                };
+                if digest != image.diff_ids[i] {
+                    continue;
+                }
+                let complete = match decode_manifest(&encoded) {
+                    Some(LayerManifest::V2(m)) => {
+                        let digests: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
+                        pool.has_batch(&digests).into_iter().all(|p| p)
+                    }
+                    Some(LayerManifest::V1(cd)) => {
+                        pool.has_batch(&cd.chunks).into_iter().all(|p| p)
+                    }
+                    None => false,
+                };
+                if complete {
+                    resumable.insert(i, encoded);
+                }
+            }
+            if chunked && !uploads.is_empty() {
+                std::fs::create_dir_all(&journal_dir)?;
+            }
+        }
         // Chunks claimed by this push: the first claimer uploads (and is
         // charged), later claimers — other layers sharing the chunk —
         // count as dedup. Keeps accounting deterministic across `jobs`.
         let claimed: Mutex<HashSet<Digest>> = Mutex::new(HashSet::new());
         let round_trips = std::sync::atomic::AtomicUsize::new(0);
+        let retry_count = std::sync::atomic::AtomicU64::new(0);
         let uploaded: Vec<LayerUpload> = scoped_index_map(uploads.len(), opts.jobs, |slot| {
             let i = uploads[slot];
             let lid = &image.layer_ids[i];
             let declared = image.diff_ids[i];
+            if let Some(encoded) = resumable.get(&i) {
+                return Ok(LayerUpload {
+                    digest: declared,
+                    tar: Vec::new(),
+                    manifest: Some(encoded.clone()),
+                    bytes_uploaded: 0,
+                    bytes_deduped: 0,
+                    chunks_uploaded: 0,
+                    chunks_deduped: 0,
+                    resumed: true,
+                    degraded: false,
+                });
+            }
             let tar = layers.read_tar(lid)?;
             let digest = Digest::of(&tar);
             if digest != declared {
@@ -531,6 +749,8 @@ impl RemoteRegistry {
                     bytes_deduped: 0,
                     chunks_uploaded: 0,
                     chunks_deduped: 0,
+                    resumed: false,
+                    degraded: false,
                 });
             };
             let mut up = LayerUpload {
@@ -541,6 +761,8 @@ impl RemoteRegistry {
                 bytes_deduped: 0,
                 chunks_uploaded: 0,
                 chunks_deduped: 0,
+                resumed: false,
+                degraded: false,
             };
             // Layer-identity validation, shared by both manifest codecs:
             // the image's fixed-chunk root must describe this tar —
@@ -607,6 +829,11 @@ impl RemoteRegistry {
                 vec![None; spans.len()]
             } else {
                 round_trips.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let (chk, r) = opts.retry.run(|| {
+                    crate::fault::check("registry.push.negotiate", pool.root()).map_err(Error::from)
+                });
+                retry_count.fetch_add(r, std::sync::atomic::Ordering::Relaxed);
+                chk?;
                 let digests: Vec<Digest> = spans.iter().map(|(d, _)| *d).collect();
                 pool.has_batch(&digests).into_iter().map(Some).collect()
             };
@@ -618,19 +845,61 @@ impl RemoteRegistry {
                         Some(present) => !present,
                         None => {
                             round_trips.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let (chk, r) = opts.retry.run(|| {
+                                crate::fault::check("registry.push.negotiate", pool.root())
+                                    .map_err(Error::from)
+                            });
+                            retry_count.fetch_add(r, std::sync::atomic::Ordering::Relaxed);
+                            chk?;
                             !pool.has(chunk_digest)
                         }
                     };
                 if novel {
-                    pool.put(chunk_digest, chunk)?;
-                    up.bytes_uploaded += chunk.len() as u64;
-                    up.chunks_uploaded += 1;
+                    let (res, r) = opts.retry.run(|| pool.put(chunk_digest, chunk));
+                    retry_count.fetch_add(r, std::sync::atomic::Ordering::Relaxed);
+                    match res {
+                        Ok(_) => {
+                            up.bytes_uploaded += chunk.len() as u64;
+                            up.chunks_uploaded += 1;
+                        }
+                        // A transient wire fault that outlived the whole
+                        // retry budget: degrade this layer to a whole-tar
+                        // upload rather than failing the push, and flag
+                        // the pool for a scrub (it may hold the fault's
+                        // debris). Injected crash/torn faults are NOT
+                        // transient-classified and still fail the push —
+                        // they simulate this process dying.
+                        Err(e) if crate::fault::transient(&e) => {
+                            up.degraded = true;
+                            self.schedule_scrub();
+                            break;
+                        }
+                        Err(e) => return Err(e),
+                    }
                 } else {
                     up.bytes_deduped += chunk.len() as u64;
                     up.chunks_deduped += 1;
                 }
             }
-            up.manifest = Some(encoded);
+            if up.degraded {
+                up.manifest = None;
+                up.bytes_uploaded = tar.len() as u64;
+                up.tar = tar;
+            } else {
+                // Journal the finished layer — all its chunks are pooled —
+                // so an interrupted push resumes from here instead of
+                // re-negotiating. Atomic write: a crash mid-journal leaves
+                // a swept temp file, never a torn entry.
+                let mut entry = up.digest.prefixed().into_bytes();
+                entry.push(b'\n');
+                entry.extend_from_slice(&encoded);
+                crate::store::write_atomic(
+                    "registry.push.journal",
+                    &journal_dir.join(lid.to_hex()),
+                    &entry,
+                )?;
+                up.manifest = Some(encoded);
+            }
             Ok(up)
         })?;
 
@@ -647,30 +916,56 @@ impl RemoteRegistry {
             chunks_deduped: 0,
             negotiation_round_trips: round_trips.into_inner(),
             whole_tar: !chunked,
+            retries: retry_count.into_inner(),
+            layers_resumed: 0,
+            layers_degraded: 0,
         };
         for (slot, &i) in uploads.iter().enumerate() {
             let up = &uploaded[slot];
             let dir = self.layer_dir(&image.layer_ids[i]);
             std::fs::create_dir_all(&dir)?;
             match &up.manifest {
-                Some(encoded) => std::fs::write(dir.join("layer.chunks"), encoded)?,
-                None => std::fs::write(dir.join("layer.tar"), &up.tar)?,
+                Some(encoded) => crate::store::write_atomic(
+                    "registry.push.commit",
+                    &dir.join("layer.chunks"),
+                    encoded,
+                )?,
+                None => crate::store::write_atomic(
+                    "registry.push.commit",
+                    &dir.join("layer.tar"),
+                    &up.tar,
+                )?,
             }
             // The digest computed during verification IS the checksum
             // trace — the tar is never hashed a second time.
-            std::fs::write(dir.join("checksum"), up.digest.prefixed())?;
+            crate::store::write_atomic(
+                "registry.push.commit",
+                &dir.join("checksum"),
+                up.digest.prefixed().as_bytes(),
+            )?;
             report.bytes_uploaded += up.bytes_uploaded;
             report.bytes_deduped += up.bytes_deduped;
             report.chunks_uploaded += up.chunks_uploaded;
             report.chunks_deduped += up.chunks_deduped;
+            report.layers_resumed += up.resumed as usize;
+            report.layers_degraded += up.degraded as usize;
         }
-        std::fs::write(
-            self.root.join("images").join(format!("{}.json", image_id.to_hex())),
-            image.to_json().to_string_pretty(),
+        crate::store::write_atomic(
+            "registry.push.commit",
+            &self.root.join("images").join(format!("{}.json", image_id.to_hex())),
+            image.to_json().to_string_pretty().as_bytes(),
         )?;
         let mut tags = self.load_tags()?;
         tags.set(&r.to_string(), Json::str(image_id.to_hex()));
-        std::fs::write(self.tags_path(), tags.to_string_pretty())?;
+        crate::store::write_atomic(
+            "registry.push.commit",
+            &self.tags_path(),
+            tags.to_string_pretty().as_bytes(),
+        )?;
+        // The image committed; its resume journal is now garbage.
+        if chunked {
+            let _ = std::fs::remove_dir_all(&journal_dir);
+        }
         Ok(report)
     }
 
@@ -724,7 +1019,7 @@ impl RemoteRegistry {
         // finds its chunks, while concurrent pulls of other images into
         // the same store never share (or delete) each other's staging.
         let staging =
-            ChunkPool::open(&layers.root().join("pull-staging").join(image_id.to_hex()))?;
+            ChunkPool::open_staging(&layers.root().join("pull-staging").join(image_id.to_hex()))?;
 
         // Mirror push's width discipline: only a single-layer pull lends
         // its full width to the per-layer chunk verification — handing
@@ -741,6 +1036,7 @@ impl RemoteRegistry {
                 &staging,
                 verify_jobs,
                 opts.fetch_cache.as_ref(),
+                &opts.retry,
             )
         })?;
 
@@ -757,25 +1053,22 @@ impl RemoteRegistry {
             chunks_local: 0,
             chunks_shared: 0,
             bytes_shared: 0,
+            retries: 0,
+            layers_degraded: 0,
         };
         for p in results {
             match p {
                 LayerPull::Skipped => report.layers_skipped += 1,
-                LayerPull::Fetched {
-                    bytes_fetched,
-                    bytes_local,
-                    chunks_fetched,
-                    chunks_local,
-                    chunks_shared,
-                    bytes_shared,
-                } => {
+                LayerPull::Fetched(s) => {
                     report.layers_fetched += 1;
-                    report.bytes_fetched += bytes_fetched;
-                    report.bytes_local += bytes_local;
-                    report.chunks_fetched += chunks_fetched;
-                    report.chunks_local += chunks_local;
-                    report.chunks_shared += chunks_shared;
-                    report.bytes_shared += bytes_shared;
+                    report.bytes_fetched += s.bytes_fetched;
+                    report.bytes_local += s.bytes_local;
+                    report.chunks_fetched += s.chunks_fetched;
+                    report.chunks_local += s.chunks_local;
+                    report.chunks_shared += s.chunks_shared;
+                    report.bytes_shared += s.bytes_shared;
+                    report.retries += s.retries;
+                    report.layers_degraded += s.degraded as usize;
                 }
             }
         }
@@ -798,6 +1091,7 @@ impl RemoteRegistry {
         staging: &ChunkPool,
         verify_jobs: usize,
         fetch_cache: Option<&ChunkFetchCache>,
+        retry: &crate::fault::RetryPolicy,
     ) -> Result<LayerPull> {
         let lid = image.layer_ids[i];
         let declared = image.diff_ids[i];
@@ -825,8 +1119,15 @@ impl RemoteRegistry {
             None
         };
         let mut stats = ChunkStats::default();
-        let (tar, cd) = match manifest {
-            Some(LayerManifest::V2(m)) => {
+        // Chunk-set assembly runs behind a fallible boundary: when the
+        // chunk set turns out corrupt (or a transient wire fault outlives
+        // the retry budget) AND the remote also holds a whole `layer.tar`,
+        // the pull degrades to the tar instead of failing, and a scrub is
+        // scheduled to repair the pool. The degraded tar still passes the
+        // same full checksum verification below — degradation trades
+        // transfer efficiency, never integrity.
+        let assembled: Option<Result<(Vec<u8>, ChunkDigest)>> = match manifest {
+            Some(LayerManifest::V2(m)) => Some((|| {
                 // v2: variable-size chunks, addressed by raw SHA-256.
                 let expected: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
                 let chunk_bytes = resolve_chunks(
@@ -836,6 +1137,7 @@ impl RemoteRegistry {
                     staging,
                     &mut stats,
                     fetch_cache,
+                    retry,
                     &|slices: &[&[u8]]| cdc::digest_slices(slices, verify_jobs),
                 )?;
                 let mut tar = Vec::with_capacity(m.total_len as usize);
@@ -867,9 +1169,9 @@ impl RemoteRegistry {
                         lid.short()
                     )));
                 }
-                (tar, cd)
-            }
-            Some(LayerManifest::V1(cd)) => {
+                Ok((tar, cd))
+            })()),
+            Some(LayerManifest::V1(cd)) => Some((|| {
                 // v1: fixed 4 KiB chunks, addressed by engine digests.
                 if cd.root != image.chunk_roots[i] {
                     return Err(Error::Registry(format!(
@@ -884,6 +1186,7 @@ impl RemoteRegistry {
                     staging,
                     &mut stats,
                     fetch_cache,
+                    retry,
                     &|slices: &[&[u8]]| engine.hash_chunks(slices),
                 )?;
                 let mut tar = Vec::with_capacity(cd.total_len as usize);
@@ -898,6 +1201,23 @@ impl RemoteRegistry {
                         cd.total_len
                     )));
                 }
+                Ok((tar, cd))
+            })()),
+            None => None,
+        };
+        let (tar, cd) = match assembled {
+            Some(Ok(v)) => v,
+            Some(Err(e)) => {
+                let tar_path = self.layer_dir(&lid).join("layer.tar");
+                let degradable = matches!(e, Error::Registry(_)) || crate::fault::transient(&e);
+                if !degradable || !tar_path.exists() {
+                    return Err(e);
+                }
+                self.schedule_scrub();
+                stats.degraded = true;
+                let tar = std::fs::read(&tar_path)?;
+                stats.bytes_fetched += tar.len() as u64;
+                let cd = ChunkDigest::compute(&tar, engine);
                 (tar, cd)
             }
             None => {
@@ -910,14 +1230,6 @@ impl RemoteRegistry {
                 (tar, cd)
             }
         };
-        let ChunkStats {
-            bytes_fetched,
-            bytes_local,
-            chunks_fetched,
-            chunks_local,
-            chunks_shared,
-            bytes_shared,
-        } = stats;
         // The layer's single full hashing pass: integrity on pull, plus
         // the SHA checkpoints the store persists for later injections.
         let (digest, ckpts) = crate::hash::hash_with_checkpoints(&tar);
@@ -937,14 +1249,7 @@ impl RemoteRegistry {
             version: crate::store::LAYER_VERSION.into(),
         };
         layers.put_layer_prehashed(&meta, &tar, &cd, &ckpts)?;
-        Ok(LayerPull::Fetched {
-            bytes_fetched,
-            bytes_local,
-            chunks_fetched,
-            chunks_local,
-            chunks_shared,
-            bytes_shared,
-        })
+        Ok(LayerPull::Fetched(stats))
     }
 
     /// Drop a tag (the precondition for [`RemoteRegistry::gc`] to
@@ -1001,6 +1306,9 @@ impl RemoteRegistry {
                 dropped.insert(digest);
             }
         }
+        // The scrub ran to completion: clear any pending degradation
+        // marker, whether or not anything needed dropping.
+        let _ = std::fs::remove_file(self.root.join("needs-scrub"));
         if dropped.is_empty() {
             return Ok(report);
         }
@@ -1140,6 +1448,22 @@ pub enum LayerManifest {
     V2(CdcManifest),
 }
 
+/// Read one push-journal entry: the layer's whole-tar digest (prefixed,
+/// first line) followed by its encoded chunk manifest. `None` when the
+/// file is missing or does not parse — callers treat that as "no
+/// journal", never as an error (journals are an optimization; losing
+/// one only costs re-negotiation).
+fn read_journal_entry(path: &Path) -> Option<(Digest, Vec<u8>)> {
+    let bytes = std::fs::read(path).ok()?;
+    let nl = bytes.iter().position(|&b| b == b'\n')?;
+    let digest = Digest::parse(std::str::from_utf8(&bytes[..nl]).ok()?.trim())?;
+    let encoded = bytes[nl + 1..].to_vec();
+    if encoded.is_empty() {
+        return None;
+    }
+    Some((digest, encoded))
+}
+
 /// Decode a `layer.chunks` file, trying the v2 codec (magic +
 /// self-digest) first and the v1 codec (root-checked) second. `None`
 /// means corruption: neither codec's integrity check passed.
@@ -1165,11 +1489,21 @@ fn resolve_chunks(
     staging: &ChunkPool,
     stats: &mut ChunkStats,
     fetch_cache: Option<&ChunkFetchCache>,
+    retry: &crate::fault::RetryPolicy,
     hash_batch: &dyn Fn(&[&[u8]]) -> Vec<Digest>,
 ) -> Result<Vec<Vec<u8>>> {
     let n = expected.len();
     let mut chunk_bytes: Vec<Vec<u8>> = Vec::with_capacity(n);
     let mut source: Vec<ChunkSource> = Vec::with_capacity(n);
+    // Wire fetches retry transient faults under the caller's policy; a
+    // `Cell` keeps the count reachable from inside the fetch-cache
+    // closure without fighting the borrow checker.
+    let wire_retries = std::cell::Cell::new(0u64);
+    let fetch = |chunk_digest: &Digest| {
+        let (res, r) = retry.run(|| pool.get(chunk_digest));
+        wire_retries.set(wire_retries.get() + r);
+        res
+    };
     for chunk_digest in expected {
         match staging.try_get(chunk_digest) {
             Some(bytes) => {
@@ -1179,7 +1513,7 @@ fn resolve_chunks(
             None => match fetch_cache {
                 Some(cache) => {
                     let (bytes, shared) =
-                        cache.get_or_fetch(chunk_digest, || pool.get(chunk_digest))?;
+                        cache.get_or_fetch(chunk_digest, || fetch(chunk_digest))?;
                     chunk_bytes.push(bytes);
                     source.push(if shared {
                         ChunkSource::Shared
@@ -1188,7 +1522,7 @@ fn resolve_chunks(
                     });
                 }
                 None => {
-                    chunk_bytes.push(pool.get(chunk_digest)?);
+                    chunk_bytes.push(fetch(chunk_digest)?);
                     source.push(ChunkSource::Wire);
                 }
             },
@@ -1197,7 +1531,7 @@ fn resolve_chunks(
     let slices: Vec<&[u8]> = chunk_bytes.iter().map(|b| b.as_slice()).collect();
     let digests = hash_batch(&slices);
     drop(slices);
-    let mut retry: Vec<usize> = Vec::new();
+    let mut refetch: Vec<usize> = Vec::new();
     for j in 0..n {
         if digests[j] == expected[j] {
             continue;
@@ -1209,17 +1543,17 @@ fn resolve_chunks(
             )));
         }
         staging.remove(&expected[j])?;
-        retry.push(j);
+        refetch.push(j);
     }
-    if !retry.is_empty() {
-        let mut refetched = Vec::with_capacity(retry.len());
-        for &j in &retry {
-            refetched.push(pool.get(&expected[j])?);
+    if !refetch.is_empty() {
+        let mut refetched = Vec::with_capacity(refetch.len());
+        for &j in &refetch {
+            refetched.push(fetch(&expected[j])?);
         }
         let slices: Vec<&[u8]> = refetched.iter().map(|b| b.as_slice()).collect();
         let redigests = hash_batch(&slices);
         drop(slices);
-        for (k, &j) in retry.iter().enumerate() {
+        for (k, &j) in refetch.iter().enumerate() {
             if redigests[k] != expected[j] {
                 return Err(Error::Registry(format!(
                     "remote chunk {j} of layer {} corrupt",
@@ -1227,7 +1561,7 @@ fn resolve_chunks(
                 )));
             }
         }
-        for (k, &j) in retry.iter().enumerate() {
+        for (k, &j) in refetch.iter().enumerate() {
             chunk_bytes[j] = std::mem::take(&mut refetched[k]);
             source[j] = ChunkSource::Wire;
         }
@@ -1254,6 +1588,7 @@ fn resolve_chunks(
             }
         }
     }
+    stats.retries += wire_retries.get();
     Ok(chunk_bytes)
 }
 
@@ -1660,6 +1995,167 @@ mod tests {
         // app-b's empty CMD layer has a fresh id but identical content:
         // chunk negotiation dedups its bytes entirely.
         assert!(second.chunks_deduped > 0, "chunk-level dedup across tags");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn push_degrades_to_whole_tar_when_pool_writes_exhaust_retries() {
+        let (images, layers, remote, d) = fresh("degrade");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('degrade me')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+
+        // Every pool write fails transiently, far past any retry budget:
+        // the push must still succeed by demoting each layer that could
+        // not stream chunks to a whole-tar upload.
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(
+                "registry.pool.put",
+                0,
+                crate::fault::FaultMode::ErrN(100_000),
+            )
+            .scoped(&d.join("remote")),
+        );
+        let report = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+        drop(guard);
+        assert!(report.layers_degraded > 0, "pool faults demote layers");
+        assert!(report.retries > 0, "the retry budget was spent first");
+        assert!(remote.scrub_scheduled(), "degradation schedules a scrub");
+        // Degraded layers committed as whole tars: a fresh store pulls
+        // them through the legacy path, fully verified.
+        let (images2, layers2, _, d2) = fresh("degrade-pull");
+        remote
+            .pull(&ImageRef::parse("app:v1"), &images2, &layers2, &NativeEngine::new())
+            .unwrap();
+        let (_, img) = images2.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers2.verify(lid).unwrap());
+        }
+        // A completed scrub clears the marker.
+        remote.scrub().unwrap();
+        assert!(!remote.scrub_scheduled());
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn interrupted_push_resumes_from_journal() {
+        let (images, layers, remote, d) = fresh("journal");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('journal me')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+
+        // Crash at the first phase-3 commit write: every upload layer has
+        // already pooled its chunks and journaled, but nothing committed.
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(
+                "registry.push.commit",
+                0,
+                crate::fault::FaultMode::Crash,
+            )
+            .scoped(&d.join("remote")),
+        );
+        let err = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap_err();
+        drop(guard);
+        assert!(crate::fault::error_is_crash(&err), "the injected crash surfaces");
+
+        // Recovery keeps the journal (image not committed) and sweeps the
+        // crash's orphaned temp file.
+        let rec = remote.recover().unwrap();
+        assert_eq!(rec.journals_kept, 1);
+        assert!(rec.tmp_swept >= 1, "the crashed commit's temp file is swept");
+
+        // The re-push resumes every journaled layer: zero chunk traffic.
+        let report = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+        assert!(report.layers_resumed > 0, "journaled layers resume");
+        assert_eq!(report.chunks_uploaded, 0);
+        assert_eq!(report.bytes_uploaded, 0);
+        assert_eq!(
+            report.negotiation_round_trips, 0,
+            "resumed layers skip negotiation entirely"
+        );
+
+        // Committed: the journal is gone, and a fresh store round-trips.
+        assert!(!d.join("remote").join("push-journal").join(report.image_id.to_hex()).exists());
+        let (images2, layers2, _, d2) = fresh("journal-pull");
+        remote
+            .pull(&ImageRef::parse("app:v1"), &images2, &layers2, &NativeEngine::new())
+            .unwrap();
+        let (_, img) = images2.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        for lid in &img.layer_ids {
+            assert!(layers2.verify(lid).unwrap());
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn pull_degrades_to_whole_tar_when_chunks_corrupt() {
+        let (images, layers, remote, d) = fresh("pull-degrade");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('rot me')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+
+        // Rot every pool chunk, but give the remote a whole-tar fallback
+        // per layer (mirrors a registry that serves both granularities).
+        let (_, img) = images.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        for lid in &img.layer_ids {
+            let tar = layers.read_tar(lid).unwrap();
+            std::fs::write(d.join("remote").join("layers").join(lid.to_hex()).join("layer.tar"), tar)
+                .unwrap();
+        }
+        let pool_dir = d.join("remote").join("chunks");
+        for entry in std::fs::read_dir(&pool_dir).unwrap() {
+            let entry = entry.unwrap();
+            if entry.file_name().to_string_lossy().len() == 64 {
+                std::fs::write(entry.path(), b"rotted").unwrap();
+            }
+        }
+
+        let (images2, layers2, _, d2) = fresh("pull-degrade-dst");
+        let report = remote
+            .pull_with(
+                &ImageRef::parse("app:v1"),
+                &images2,
+                &layers2,
+                &NativeEngine::new(),
+                &PullOptions::default(),
+            )
+            .unwrap();
+        assert!(report.layers_degraded > 0, "corrupt chunks demote to tar fetches");
+        assert!(remote.scrub_scheduled(), "degradation schedules a scrub");
+        let (_, img2) = images2.get_by_ref(&ImageRef::parse("app:v1")).unwrap();
+        for lid in &img2.layer_ids {
+            assert!(layers2.verify(lid).unwrap(), "degraded pulls still verify fully");
+        }
+        // The scheduled scrub evicts the rotted chunks and clears the flag.
+        let scrub = remote.scrub().unwrap();
+        assert!(scrub.chunks_dropped > 0);
+        assert!(!remote.scrub_scheduled());
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn recover_drops_journal_of_committed_image() {
+        let (images, layers, remote, d) = fresh("jgc");
+        let ctx = d.join("ctx");
+        write_ctx(&ctx, DF, &[("main.py", "print('committed')\n")]);
+        build(&images, &layers, &ctx, "app:v1");
+        let report = remote.push(&ImageRef::parse("app:v1"), &images, &layers).unwrap();
+
+        // Plant a stale journal for the already-committed image.
+        let jdir = d.join("remote").join("push-journal").join(report.image_id.to_hex());
+        std::fs::create_dir_all(&jdir).unwrap();
+        std::fs::write(jdir.join("leftover"), b"sha256:junk\nnot a manifest").unwrap();
+
+        let rec = remote.recover().unwrap();
+        assert_eq!(rec.journals_dropped, 1);
+        assert_eq!(rec.journals_kept, 0);
+        assert!(!jdir.exists());
+        // Second pass: nothing left to do.
+        assert!(remote.recover().unwrap().is_clean());
         std::fs::remove_dir_all(&d).unwrap();
     }
 }

@@ -37,6 +37,7 @@ impl ImageStore {
     pub fn put(&self, image: &Image) -> Result<ImageId> {
         let id = image.id();
         super::write_atomic(
+            "store.image",
             &self.image_path(&id),
             image.to_json().to_string_pretty().as_bytes(),
         )?;
@@ -60,7 +61,7 @@ impl ImageStore {
     pub fn tag(&self, r: &ImageRef, id: &ImageId) -> Result<()> {
         let mut repos = self.load_repos()?;
         repos.set(&r.to_string(), Json::str(id.to_hex()));
-        super::write_atomic(&self.repos_path(), repos.to_string_pretty().as_bytes())?;
+        super::write_atomic("store.image", &self.repos_path(), repos.to_string_pretty().as_bytes())?;
         Ok(())
     }
 
@@ -87,7 +88,7 @@ impl ImageStore {
         if let Json::Obj(fields) = &mut repos {
             fields.retain(|(k, _)| k != &r.to_string());
         }
-        super::write_atomic(&self.repos_path(), repos.to_string_pretty().as_bytes())?;
+        super::write_atomic("store.image", &self.repos_path(), repos.to_string_pretty().as_bytes())?;
         Ok(())
     }
 

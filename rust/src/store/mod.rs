@@ -24,6 +24,30 @@
 //! taken around scan+plan / finalize / injection patching and released
 //! while steps execute. Lock order: daemon store lock → chunk pool;
 //! the store lock is never held while waiting on the step scheduler.
+//!
+//! ## Crash consistency
+//!
+//! What is **atomic**: every store file individually — [`write_atomic`]
+//! writes a uniquely named temp file *in the target directory*, fsyncs
+//! it, then renames, so a crash at any point leaves either the old
+//! complete file or the new complete file, plus at worst an orphaned
+//! `*.tmp-*`. Within one layer the `json` metadata is written **last**:
+//! a layer "exists" ([`LayerStore::exists`]) only once its data and
+//! sidecars landed, so a crash mid-`put_layer` leaves a directory
+//! without `json` — garbage by definition.
+//!
+//! What is **journaled**: nothing in the local store. (Registry pushes
+//! keep a small journal on the remote side; see `registry`.)
+//!
+//! What is **swept**: [`LayerStore::recover`] runs implicitly on
+//! [`LayerStore::open`] and removes orphaned `*.tmp-*` files, layer
+//! directories that never committed their `json`, and pull-staging
+//! directories holding no verified chunks. Staging directories that do
+//! hold verified chunks are *kept* — an interrupted pull resumes from
+//! them. The sweep assumes no concurrent writer on the same root in
+//! another process; in-process, stores are opened before builds run
+//! (the coordinator's daemons are constructed up front), so an open-time
+//! sweep cannot race a live writer's temp files.
 
 mod bundle;
 mod images;
@@ -38,11 +62,14 @@ use crate::{Error, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Write a file atomically: unique temp name in the same directory, then
-/// rename over the target. Concurrent writers of the same path (racing
-/// content-addressed writes under fleet scheduling) each land a complete
-/// file; the last rename wins.
-pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+/// Write a file atomically: unique temp name (pid + counter) in the same
+/// directory, fsync, then rename over the target. Concurrent writers of
+/// the same path (racing content-addressed writes under fleet
+/// scheduling) each land a complete file; the last rename wins. The
+/// write runs under the [`crate::fault`] hook named by `site`; an
+/// injected fatal fault deliberately leaves the temp file orphaned (a
+/// real crash would have too) for recovery sweeps to collect.
+pub(crate) fn write_atomic(site: &'static str, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
     let name = path
         .file_name()
@@ -53,7 +80,12 @@ pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
         std::process::id(),
         TMP_NONCE.fetch_add(1, Ordering::Relaxed)
     ));
-    std::fs::write(&tmp, bytes)?;
+    if let Err(e) = crate::fault::durable_write(site, path, &tmp, bytes) {
+        if !crate::fault::is_crash(&e) {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        return Err(e);
+    }
     match std::fs::rename(&tmp, path) {
         Ok(()) => Ok(()),
         Err(e) => {
@@ -63,21 +95,129 @@ pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     }
 }
 
+/// True for temp-file names produced by [`write_atomic`] or the chunk
+/// pools (`<name>.tmp-<pid>-<n>` / `.tmp-<pid>-<n>`).
+pub(crate) fn is_tmp_name(name: &str) -> bool {
+    name.contains(".tmp-")
+}
+
+/// Remove orphaned temp files directly under `dir`; returns how many.
+pub(crate) fn sweep_tmp_files(dir: &Path) -> usize {
+    let mut n = 0;
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            if is_tmp_name(&entry.file_name().to_string_lossy())
+                && entry.path().is_file()
+                && std::fs::remove_file(entry.path()).is_ok()
+            {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// What a [`LayerStore::recover`] sweep found and did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreRecovery {
+    /// Orphaned `*.tmp-*` files removed.
+    pub tmp_swept: usize,
+    /// Layer directories removed because their `json` never committed.
+    pub partial_layers_swept: usize,
+    /// Pull-staging directories kept because they hold resumable chunks.
+    pub staging_kept: usize,
+    /// Pull-staging directories removed (no verified chunks inside).
+    pub staging_swept: usize,
+}
+
+impl StoreRecovery {
+    /// True when the sweep found nothing to do.
+    pub fn is_clean(&self) -> bool {
+        *self == StoreRecovery::default()
+    }
+}
+
 /// Version string written to each layer's `version` file.
 pub const LAYER_VERSION: &str = "1.0";
 
 /// The overlay2-like on-disk layer store.
 pub struct LayerStore {
     root: PathBuf,
+    /// What the implicit recovery sweep at [`LayerStore::open`] found,
+    /// surfaced by the `recover` CLI verb.
+    open_recovery: StoreRecovery,
 }
 
 impl LayerStore {
     /// Open (creating if needed) a layer store under `<root>/overlay2`.
+    /// Runs [`LayerStore::recover`] implicitly; the report is kept on the
+    /// store ([`LayerStore::open_recovery`]).
     pub fn open(root: &Path) -> Result<LayerStore> {
         std::fs::create_dir_all(root.join("overlay2"))?;
-        Ok(LayerStore {
+        let mut store = LayerStore {
             root: root.to_path_buf(),
-        })
+            open_recovery: StoreRecovery::default(),
+        };
+        store.open_recovery = store.recover().unwrap_or_default();
+        Ok(store)
+    }
+
+    /// The report of the implicit recovery sweep run when this store was
+    /// opened.
+    pub fn open_recovery(&self) -> StoreRecovery {
+        self.open_recovery
+    }
+
+    /// Crash-consistency sweep (see the module-level note): removes
+    /// orphaned `*.tmp-*` files, layer directories that never committed
+    /// their `json`, and pull-staging directories holding no verified
+    /// chunks. Staging directories with verified chunks are kept for
+    /// pull resume. Best-effort: individual unlink failures are skipped,
+    /// not fatal.
+    pub fn recover(&self) -> Result<StoreRecovery> {
+        let mut report = StoreRecovery::default();
+        let overlay = self.root.join("overlay2");
+        if let Ok(entries) = std::fs::read_dir(&overlay) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                let path = entry.path();
+                if path.is_dir() {
+                    report.tmp_swept += sweep_tmp_files(&path);
+                    if LayerId::parse(&name).is_some() && !path.join("json").exists() {
+                        if std::fs::remove_dir_all(&path).is_ok() {
+                            report.partial_layers_swept += 1;
+                        }
+                    }
+                } else if is_tmp_name(&name) && std::fs::remove_file(&path).is_ok() {
+                    report.tmp_swept += 1;
+                }
+            }
+        }
+        let staging_root = self.root.join("pull-staging");
+        if let Ok(entries) = std::fs::read_dir(&staging_root) {
+            for entry in entries.flatten() {
+                let dir = entry.path();
+                if !dir.is_dir() {
+                    continue;
+                }
+                report.tmp_swept += sweep_tmp_files(&dir);
+                let staged = std::fs::read_dir(&dir)
+                    .map(|it| {
+                        it.flatten()
+                            .filter(|e| e.file_name().to_string_lossy().len() == 64)
+                            .count()
+                    })
+                    .unwrap_or(0);
+                if staged == 0 {
+                    if std::fs::remove_dir_all(&dir).is_ok() {
+                        report.staging_swept += 1;
+                    }
+                } else {
+                    report.staging_kept += 1;
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// Store root directory (hosts `overlay2/` plus transport scratch
@@ -131,13 +271,17 @@ impl LayerStore {
         debug_assert_eq!(meta.chunk_root, cd.root, "meta chunk root must match digest");
         let dir = self.layer_dir(&meta.id);
         std::fs::create_dir_all(&dir)?;
-        write_atomic(&dir.join("version"), LAYER_VERSION.as_bytes())?;
-        write_atomic(&dir.join("layer.tar"), tar)?;
+        write_atomic("store.layer.sidecar", &dir.join("version"), LAYER_VERSION.as_bytes())?;
+        write_atomic("store.layer.tar", &dir.join("layer.tar"), tar)?;
         self.write_chunk_sidecar(&meta.id, cd)?;
         self.write_sha_checkpoints(&meta.id, ckpts)?;
         // The `json` goes last: a layer "exists" only once its metadata
         // landed, so a racing reader never sees metadata ahead of data.
-        write_atomic(&dir.join("json"), meta.to_json().to_string_pretty().as_bytes())?;
+        write_atomic(
+            "store.layer.meta",
+            &dir.join("json"),
+            meta.to_json().to_string_pretty().as_bytes(),
+        )?;
         Ok(())
     }
 
@@ -155,7 +299,11 @@ impl LayerStore {
         if !dir.exists() {
             return Err(Error::Store(format!("layer {} missing", meta.id.short())));
         }
-        write_atomic(&dir.join("json"), meta.to_json().to_string_pretty().as_bytes())?;
+        write_atomic(
+            "store.layer.meta",
+            &dir.join("json"),
+            meta.to_json().to_string_pretty().as_bytes(),
+        )?;
         Ok(())
     }
 
@@ -169,7 +317,7 @@ impl LayerStore {
     /// raw in-place write the implicit injection path uses before it
     /// fixes the checksums.
     pub fn write_tar_raw(&self, id: &LayerId, tar: &[u8]) -> Result<()> {
-        write_atomic(&self.tar_path(id), tar)?;
+        write_atomic("store.layer.tar", &self.tar_path(id), tar)?;
         Ok(())
     }
 
@@ -207,7 +355,7 @@ impl LayerStore {
                 buf.extend_from_slice(&w.to_le_bytes());
             }
         }
-        write_atomic(&self.layer_dir(id).join("layer.shakpt"), &buf)?;
+        write_atomic("store.layer.sidecar", &self.layer_dir(id).join("layer.shakpt"), &buf)?;
         Ok(())
     }
 
@@ -250,6 +398,7 @@ impl LayerStore {
             ]));
         }
         write_atomic(
+            "store.layer.sidecar",
             &self.layer_dir(id).join("files.idx"),
             Json::Arr(doc).to_string_compact().as_bytes(),
         )?;
@@ -273,7 +422,7 @@ impl LayerStore {
 
     /// Write/replace the chunk-digest sidecar.
     pub fn write_chunk_sidecar(&self, id: &LayerId, cd: &ChunkDigest) -> Result<()> {
-        write_atomic(&self.layer_dir(id).join("layer.chunks"), &cd.encode())?;
+        write_atomic("store.layer.sidecar", &self.layer_dir(id).join("layer.chunks"), &cd.encode())?;
         Ok(())
     }
 
@@ -423,6 +572,39 @@ mod tests {
         s.delete(&m1.id).unwrap();
         assert_eq!(s.list().unwrap().len(), 1);
         assert!(!s.exists(&m1.id));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn recover_sweeps_orphans_but_keeps_resumable_staging() {
+        let (s, d) = fresh("recover");
+        let (meta, tar) = layer_with(b"x", "COPY a a");
+        s.put_layer(&meta, &tar, &NativeEngine::new()).unwrap();
+        // Orphaned temp inside a committed layer dir.
+        std::fs::write(s.layer_dir(&meta.id).join("layer.tar.tmp-1-2"), b"torn").unwrap();
+        // A layer dir whose `json` never committed: garbage.
+        let ghost = LayerId::derive("test", None, "RUN ghost");
+        std::fs::create_dir_all(s.layer_dir(&ghost)).unwrap();
+        std::fs::write(s.layer_dir(&ghost).join("layer.tar"), b"data").unwrap();
+        // A staging dir with a verified chunk resumes; one with only
+        // temp junk is swept.
+        let keep = d.join("pull-staging").join("a".repeat(64));
+        std::fs::create_dir_all(&keep).unwrap();
+        std::fs::write(keep.join("b".repeat(64)), b"chunk").unwrap();
+        let junk = d.join("pull-staging").join("c".repeat(64));
+        std::fs::create_dir_all(&junk).unwrap();
+        std::fs::write(junk.join(".tmp-9-9"), b"junk").unwrap();
+
+        let r = s.recover().unwrap();
+        assert_eq!(r.tmp_swept, 2);
+        assert_eq!(r.partial_layers_swept, 1);
+        assert_eq!(r.staging_kept, 1);
+        assert_eq!(r.staging_swept, 1);
+        assert!(!r.is_clean());
+        assert!(s.exists(&meta.id) && s.verify(&meta.id).unwrap());
+        assert!(!s.layer_dir(&ghost).exists());
+        assert!(keep.exists() && !junk.exists());
+        assert!(s.recover().unwrap().is_clean(), "second sweep finds nothing");
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -1,0 +1,242 @@
+//! Fault-matrix acceptance tests: every registered durability boundary
+//! is killed mid-flight, the process "restarts" (stores reopen and run
+//! their implicit recovery sweeps), the same work is re-run, and the
+//! final local + remote trees must be bit-identical to a never-faulted
+//! run with zero orphaned temp files or staging/journal leftovers.
+//!
+//! All plans are scoped to the test's own temp root so parallel test
+//! binaries cannot trip each other's specs; `fault::install` additionally
+//! serializes installers within this process.
+
+use layerjet::fault::{self, FaultMode, FaultPlan};
+use layerjet::prelude::*;
+use layerjet::registry::{PullOptions, PushOptions};
+use layerjet::util::prng::Prng;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-faults-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn daemon(root: &Path) -> layerjet::Result<Daemon> {
+    let mut daemon = Daemon::new(root)?;
+    daemon.cost = CostModel::instant();
+    Ok(daemon)
+}
+
+/// A three-layer project with a RUN step and a chunk-spanning COPY asset,
+/// so the scenario arrives at every fault site more than once.
+fn write_project(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /srv/\nRUN pip install flask\nCMD [\"python\", \"app.py\"]\n",
+    )
+    .unwrap();
+    let mut asset = vec![0u8; 48 * 1024];
+    Prng::new(0xfa17).fill_bytes(&mut asset);
+    std::fs::write(dir.join("asset.bin"), &asset).unwrap();
+    std::fs::write(dir.join("app.py"), "print('faulted')\n").unwrap();
+}
+
+/// Every file under `root`, relative path -> bytes, skipping the
+/// scan-cache (its file names key on the absolute context path, so they
+/// differ between the reference root and each matrix case root).
+fn snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, prefix: &str, out: &mut BTreeMap<String, Vec<u8>>) {
+        let mut entries: Vec<_> = std::fs::read_dir(dir).unwrap().map(|e| e.unwrap()).collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let rel = if prefix.is_empty() { name.clone() } else { format!("{prefix}/{name}") };
+            if e.file_type().unwrap().is_dir() {
+                if name == "scan-cache" {
+                    continue;
+                }
+                walk(&e.path(), &rel, out);
+            } else {
+                out.insert(rel, std::fs::read(e.path()).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, "", &mut out);
+    out
+}
+
+/// No orphaned atomic-write temp files, no push-journal entries, no
+/// pull-staging chunks anywhere under `root`.
+fn assert_no_orphans(root: &Path, context: &str) {
+    for (rel, _) in snapshot(root) {
+        assert!(!rel.contains(".tmp-"), "{context}: orphaned temp file {rel}");
+        assert!(!rel.contains("push-journal/"), "{context}: leftover journal entry {rel}");
+        assert!(!rel.contains("pull-staging/"), "{context}: leftover staged chunk {rel}");
+    }
+}
+
+/// The full durability scenario under one root: build locally, push to a
+/// registry in `<root>/remote`, pull into a second store in
+/// `<root>/prod`. Reopening the daemons/registry on every call is the
+/// "restart" — each open runs its implicit recovery sweep.
+fn run_scenario(root: &Path) -> layerjet::Result<()> {
+    let proj = root.join("proj");
+    if !proj.exists() {
+        write_project(&proj);
+    }
+    let dev = daemon(&root.join("dev"))?;
+    dev.build(&proj, "app:v1")?;
+    let remote = RemoteRegistry::open(&root.join("remote"))?;
+    dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() })?;
+    let prod = daemon(&root.join("prod"))?;
+    prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() })?;
+    assert!(prod.verify_image("app:v1")?, "pulled image must verify");
+    Ok(())
+}
+
+/// The capstone: for every registered fault site, inject a fatal fault
+/// at the first, middle, and last arrival, "restart", re-run, and assert
+/// the surviving state is bit-identical to a never-faulted run.
+#[test]
+fn fault_matrix_recovers_bit_identical_at_every_site() {
+    // Reference run: never faulted.
+    let reference = tmp("mx-ref");
+    run_scenario(&reference).expect("the fault-free scenario must succeed");
+    let want_dev = snapshot(&reference.join("dev"));
+    let want_remote = snapshot(&reference.join("remote"));
+    let want_prod = snapshot(&reference.join("prod"));
+
+    // Probe run: count how often the scenario arrives at each site.
+    let probe = tmp("mx-probe");
+    let guard = fault::install(FaultPlan::observe().scoped(&probe));
+    run_scenario(&probe).expect("the observe plan must inject nothing");
+    let counts = guard.counts();
+    drop(guard);
+    let _ = std::fs::remove_dir_all(&probe);
+    for &site in fault::SITES {
+        assert!(
+            counts.get(site).copied().unwrap_or(0) > 0,
+            "scenario never arrives at registered site {site}; the matrix cannot cover it"
+        );
+    }
+
+    let mut cases = 0usize;
+    for &site in fault::SITES {
+        let hits = counts[site];
+        let mut ks = vec![0, hits / 2, hits - 1];
+        ks.dedup();
+        for (i, &k) in ks.iter().enumerate() {
+            // Alternate the fatal flavours: a clean mid-operation crash
+            // and a torn write that strands a partial temp file.
+            let mode = if i == 1 { FaultMode::Torn(7) } else { FaultMode::Crash };
+            let root = tmp(&format!("mx-{}-{}", site.replace('.', "-"), k));
+            let guard = fault::install(FaultPlan::fail_at(site, k, mode).scoped(&root));
+            let faulted = run_scenario(&root);
+            drop(guard);
+            assert!(
+                faulted.is_err(),
+                "fatal fault at {site} hit {k} ({mode:?}) must surface as an error"
+            );
+
+            // Restart: re-running reopens every store, which sweeps
+            // orphans and resumes journals/staging; the second pass must
+            // complete and converge on the reference state.
+            run_scenario(&root).unwrap_or_else(|e| {
+                panic!("recovery re-run after fault at {site} hit {k} failed: {e:?}")
+            });
+            let ctx = format!("{site} hit {k} ({mode:?})");
+            assert_eq!(snapshot(&root.join("dev")), want_dev, "dev store diverged after {ctx}");
+            assert_eq!(
+                snapshot(&root.join("remote")),
+                want_remote,
+                "remote tree diverged after {ctx}"
+            );
+            assert_eq!(snapshot(&root.join("prod")), want_prod, "prod store diverged after {ctx}");
+            assert_no_orphans(&root, &ctx);
+            cases += 1;
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+    assert!(cases >= fault::SITES.len(), "matrix must cover every site at least once");
+    let _ = std::fs::remove_dir_all(&reference);
+}
+
+/// Transient faults never surface: one injected error at a chunk write,
+/// a chunk read, and a build step is absorbed by the retry policy, the
+/// scenario succeeds first try, and the retries are visible in the
+/// push/pull accounting.
+#[test]
+fn transient_faults_are_absorbed_and_accounted() {
+    let root = tmp("transient");
+    let proj = root.join("proj");
+    write_project(&proj);
+    let plan = FaultPlan::fail_at("registry.pool.put", 1, FaultMode::ErrOnce)
+        .and("registry.pool.get", 1, FaultMode::ErrOnce)
+        .and("builder.step", 0, FaultMode::ErrOnce)
+        .scoped(&root);
+    let guard = fault::install(plan);
+
+    let dev = daemon(&root.join("dev")).unwrap();
+    dev.build(&proj, "app:v1").expect("one transient step fault must be retried away");
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    let push = dev
+        .push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() })
+        .expect("one transient chunk-write fault must be retried away");
+    assert!(push.retries >= 1, "absorbed push fault must be accounted: {push:?}");
+    assert_eq!(push.layers_degraded, 0, "a single transient error must not demote the layer");
+
+    let prod = daemon(&root.join("prod")).unwrap();
+    let pull = prod
+        .pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() })
+        .expect("one transient chunk-read fault must be retried away");
+    drop(guard);
+    assert!(pull.retries >= 1, "absorbed pull fault must be accounted: {pull:?}");
+    assert_eq!(pull.layers_degraded, 0, "a single transient error must not demote the layer");
+    assert!(prod.verify_image("app:v1").unwrap());
+    assert_no_orphans(&root, "transient absorption");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// A step that fails transiently under the fleet scheduler is retried in
+/// place — the request still completes, no single-flight follower is
+/// poisoned, and the retries surface in the coordinator metrics.
+#[test]
+fn scheduler_retries_transient_step_faults_without_failing_requests() {
+    let root = tmp("sched");
+    let proj = root.join("proj");
+    write_project(&proj);
+    let guard = fault::install(FaultPlan::fail_at("builder.step", 1, FaultMode::ErrN(2)).scoped(&root));
+
+    let mut coordinator = BuildCoordinator::new(&root.join("farm"), 2);
+    coordinator.cost = CostModel::instant();
+    coordinator.jobs = 2;
+    let requests = vec![
+        BuildRequest {
+            id: 1,
+            project: proj.clone(),
+            tag: "app:v1".into(),
+            strategy: BuildStrategy::DockerRebuild,
+        },
+        BuildRequest {
+            id: 2,
+            project: proj.clone(),
+            tag: "app:v1".into(),
+            strategy: BuildStrategy::DockerRebuild,
+        },
+    ];
+    let (outcomes, metrics) = coordinator.run(requests).unwrap();
+    drop(guard);
+    assert!(
+        outcomes.iter().all(|o| o.ok),
+        "transient step faults must not fail any request: {outcomes:?}"
+    );
+    assert!(
+        metrics.steps_retried >= 2,
+        "both injected step errors must be absorbed and counted: {}",
+        metrics.summary()
+    );
+    assert!(metrics.summary().contains("retried"), "summary must surface retry accounting");
+    std::fs::remove_dir_all(&root).unwrap();
+}

@@ -496,3 +496,60 @@ fn negotiation_is_one_round_trip_per_layer() {
     }
     std::fs::remove_dir_all(&root).unwrap();
 }
+
+/// A v2 (CDC) pull killed at an injected chunk boundary resumes from the
+/// staging pool: chunks fetched and verified before the kill are replayed
+/// as local bytes instead of re-fetched over the wire.
+#[test]
+fn cdc_pull_killed_at_chunk_boundary_resumes_from_staging() {
+    use layerjet::fault::{self, FaultMode, FaultPlan};
+
+    let root = tmp("fault-pull");
+    let proj = root.join("proj");
+    write_project(&proj, 128 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push("app:v1", &remote).unwrap();
+    let (image_id, _) = dev.image("app:v1").unwrap();
+
+    // Kill 1: crash on the 5th wire-chunk read — mid-stream, at a chunk
+    // boundary of whichever layer is assembling.
+    let prod_root = root.join("prod");
+    let prod = daemon(&prod_root);
+    let guard = fault::install(
+        FaultPlan::fail_at("registry.pool.get", 4, FaultMode::Crash).scoped(&root),
+    );
+    let killed = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() });
+    drop(guard);
+    let err = killed.expect_err("the injected crash must kill the pull");
+    assert!(fault::error_is_crash(&err), "unexpected failure: {err:?}");
+
+    // Kill 2: the next attempt dies on the first local layer commit —
+    // after that layer's chunks were fetched, verified, and staged.
+    let guard = fault::install(
+        FaultPlan::fail_at("store.layer.tar", 0, FaultMode::Crash).scoped(&prod_root),
+    );
+    let killed = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() });
+    drop(guard);
+    assert!(killed.is_err(), "the injected store crash must kill the pull");
+    let staging = prod_root.join("pull-staging").join(image_id.to_hex());
+    assert!(staging.exists(), "an interrupted pull must leave its staging pool behind");
+    let staged = std::fs::read_dir(&staging)
+        .unwrap()
+        .filter(|e| e.as_ref().unwrap().file_name().to_string_lossy().len() == 64)
+        .count();
+    assert!(staged > 0, "verified chunks must be staged before the kill");
+
+    // Resume: reopening the store sweeps the partial layer, and the
+    // staged chunks replay as local bytes instead of wire fetches.
+    let prod = daemon(&prod_root);
+    let resumed = prod
+        .pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() })
+        .unwrap();
+    assert!(resumed.chunks_local > 0, "staged chunks must be replayed: {resumed:?}");
+    assert!(resumed.bytes_local > 0, "staged bytes count as local: {resumed:?}");
+    assert!(prod.verify_image("app:v1").unwrap());
+    assert!(!staging.exists(), "staging is cleared after the committed pull");
+    std::fs::remove_dir_all(&root).unwrap();
+}
