@@ -13,11 +13,17 @@
 //!                  (the worst fault-free case: the slow path runs, the
 //!                  scope filter rejects before any hit is counted).
 //!
+//! A fourth leg times the uncontended shared-lease cycle
+//! (acquire → renew → release) that every fleet push pays against the
+//! registry's lease table, bounded loosely against the single-write
+//! baseline.
+//!
 //! `cargo bench --bench fault_overhead`
 
 mod common;
 
 use layerjet::fault::{self, FaultMode, FaultPlan};
+use layerjet::registry::lease::{self, LeaseConfig, LeaseKind};
 use std::path::Path;
 use std::time::Instant;
 
@@ -82,23 +88,46 @@ fn main() {
     }
     let check_ns = t0.elapsed().as_secs_f64() * 1e9 / probes as f64;
 
+    // Leg 4: the full shared-lease cycle a fleet pusher pays per push —
+    // acquire (guard + seq + record) → renew heartbeat → release —
+    // disarmed. This is several durable writes plus a lockfile, so it is
+    // timed against its own loose bound rather than the single-write
+    // legs above.
+    let lease_dir = root.join("lease-table");
+    let lease_cfg = LeaseConfig { holder: "bench".into(), ..Default::default() };
+    let lease_iters = (iters / 4).max(25);
+    let t0 = Instant::now();
+    for _ in 0..lease_iters {
+        let mut l = lease::acquire(&lease_dir, LeaseKind::Shared, &lease_cfg).unwrap();
+        l.renew().unwrap();
+        l.release().unwrap();
+    }
+    let lease_cycle = t0.elapsed().as_secs_f64() / lease_iters as f64;
+
     let ns = |s: f64| s * 1e9;
     eprintln!("fault-free durable write, {iters} iters of 4 KiB write+fsync+rename:");
     eprintln!("  plain            {:>10.0} ns/op", ns(plain));
     eprintln!("  hooked disarmed  {:>10.0} ns/op  ({:.3}x plain)", ns(disarmed), disarmed / plain);
     eprintln!("  hooked foreign   {:>10.0} ns/op  ({:.3}x plain)", ns(foreign), foreign / plain);
     eprintln!("  bare check()     {:>10.2} ns/op  (disarmed, no I/O)", check_ns);
+    eprintln!(
+        "  lease cycle      {:>10.0} ns/op  ({:.3}x plain; acquire+renew+release, {lease_iters} iters)",
+        ns(lease_cycle),
+        lease_cycle / plain
+    );
 
     common::write_csv(
         "fault_overhead.csv",
         &format!(
-            "leg,ns_per_op,vs_plain\nplain,{:.0},1.0\ndisarmed,{:.0},{:.4}\nforeign,{:.0},{:.4}\ncheck_disarmed,{:.2},\n",
+            "leg,ns_per_op,vs_plain\nplain,{:.0},1.0\ndisarmed,{:.0},{:.4}\nforeign,{:.0},{:.4}\ncheck_disarmed,{:.2},\nlease_cycle,{:.0},{:.4}\n",
             ns(plain),
             ns(disarmed),
             disarmed / plain,
             ns(foreign),
             foreign / plain,
             check_ns,
+            ns(lease_cycle),
+            lease_cycle / plain,
         ),
     );
 
@@ -123,6 +152,17 @@ fn main() {
     assert!(
         check_ns < 1000.0,
         "the disarmed check() hook must stay in the nanosecond regime ({check_ns:.1} ns)"
+    );
+    // A lease cycle is ~4 durable writes + a guard lockfile round-trip;
+    // the bound is deliberately loose — it exists to catch a protocol
+    // regression (e.g. an accidental poll loop on the uncontended path),
+    // not to pin fsync timing.
+    assert!(
+        lease_cycle <= plain * 20.0,
+        "an uncontended lease cycle must stay within a small multiple of one \
+         durable write ({:.0} ns vs {:.0} ns)",
+        ns(lease_cycle),
+        ns(plain)
     );
 
     let _ = std::fs::remove_dir_all(&root);

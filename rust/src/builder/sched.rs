@@ -313,7 +313,9 @@ fn select_grant(keys: &[(u64, usize, u64)], bound: u64) -> Option<usize> {
 
 enum Slot<V> {
     InFlight,
-    Done(Arc<V>),
+    /// A published value plus its last-touched stamp on the table's
+    /// monotonic access clock (drives LRU eviction).
+    Done(Arc<V>, u64),
 }
 
 /// The outcome of joining a flight entry.
@@ -325,28 +327,42 @@ pub(crate) enum Join<V> {
     Done(Arc<V>),
 }
 
+/// Lock-protected interior of a [`Flight`].
+struct FlightTable<V> {
+    slots: HashMap<Digest, Slot<V>>,
+    /// Monotonic access clock; every claim or publish advances it.
+    clock: u64,
+    /// Retained `Done` entries never exceed this.
+    capacity: usize,
+    /// Current `Done` count (in-flight claims are not retention).
+    retained: usize,
+}
+
+/// Published values a table retains by default: plenty for whole-batch
+/// dedup determinism at realistic batch sizes, while bounding resident
+/// payload memory on very long coordinator runs (build farms replaying
+/// thousands of requests against one coordinator).
+pub const DEFAULT_RETAINED: usize = 4096;
+
 /// Keyed single-flight table: the first claimant of a key leads (executes
 /// the work once); later claimants adopt the published value. A leader
 /// that fails abandons the entry, and the next waiter re-leads — a
 /// failure never poisons the key for other requests.
 ///
-/// Retention: published values stay resident until the table is dropped
-/// (one table per coordinator batch / warm pass), which is what makes
-/// dedup deterministic for requests that join after the leader finished.
-/// Peak memory is therefore the distinct payload bytes produced in one
-/// batch — fine at this simulation's layer sizes; a weak/LRU retention
-/// policy for very large fleets is a ROADMAP follow-up.
+/// Retention is LRU-bounded ([`Flight::with_capacity`]; default
+/// [`DEFAULT_RETAINED`]): publishing past capacity evicts the
+/// least-recently-touched **published** value — in-flight claims are
+/// never evicted, so leadership is always unique. Eviction only costs
+/// dedup (an evicted key's next claimant re-leads and re-executes
+/// idempotent work); correctness never depends on residency.
 pub struct Flight<V> {
-    slots: Mutex<HashMap<Digest, Slot<V>>>,
+    table: Mutex<FlightTable<V>>,
     done: Condvar,
 }
 
 impl<V> Default for Flight<V> {
     fn default() -> Self {
-        Flight {
-            slots: Mutex::new(HashMap::new()),
-            done: Condvar::new(),
-        }
+        Flight::with_capacity(DEFAULT_RETAINED)
     }
 }
 
@@ -355,17 +371,35 @@ impl<V> Flight<V> {
         Flight::default()
     }
 
+    /// A table retaining at most `capacity` published values (minimum 1).
+    pub fn with_capacity(capacity: usize) -> Flight<V> {
+        Flight {
+            table: Mutex::new(FlightTable {
+                slots: HashMap::new(),
+                clock: 0,
+                capacity: capacity.max(1),
+                retained: 0,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
     /// Non-blocking claim: `Some(Lead)` if the caller became leader,
     /// `Some(Done)` if the value is already published, `None` if another
     /// leader is in flight (use [`Flight::join`] to wait).
     pub(crate) fn begin(&self, key: &Digest) -> Option<Join<V>> {
-        let mut slots = self.slots.lock().unwrap();
-        match slots.get(key) {
+        let mut table = self.table.lock().unwrap();
+        table.clock += 1;
+        let now = table.clock;
+        match table.slots.get_mut(key) {
             None => {
-                slots.insert(*key, Slot::InFlight);
+                table.slots.insert(*key, Slot::InFlight);
                 Some(Join::Lead)
             }
-            Some(Slot::Done(v)) => Some(Join::Done(v.clone())),
+            Some(Slot::Done(v, touched)) => {
+                *touched = now;
+                Some(Join::Done(v.clone()))
+            }
             Some(Slot::InFlight) => None,
         }
     }
@@ -374,28 +408,58 @@ impl<V> Flight<V> {
     /// `Done` with its value, or `Lead` if the entry was abandoned (the
     /// caller now leads the retry) or never existed.
     pub(crate) fn join(&self, key: &Digest) -> Join<V> {
-        let mut slots = self.slots.lock().unwrap();
+        let mut table = self.table.lock().unwrap();
         loop {
-            match slots.get(key) {
+            table.clock += 1;
+            let now = table.clock;
+            match table.slots.get_mut(key) {
                 None => {
-                    slots.insert(*key, Slot::InFlight);
+                    table.slots.insert(*key, Slot::InFlight);
                     return Join::Lead;
                 }
-                Some(Slot::Done(v)) => return Join::Done(v.clone()),
-                Some(Slot::InFlight) => slots = self.done.wait(slots).unwrap(),
+                Some(Slot::Done(v, touched)) => {
+                    *touched = now;
+                    return Join::Done(v.clone());
+                }
+                Some(Slot::InFlight) => table = self.done.wait(table).unwrap(),
             }
         }
     }
 
-    /// Publish the leader's value and wake every waiter.
+    /// Publish the leader's value and wake every waiter, evicting the
+    /// least-recently-touched published entries beyond capacity.
     pub(crate) fn publish(&self, key: &Digest, v: Arc<V>) {
-        self.slots.lock().unwrap().insert(*key, Slot::Done(v));
+        let mut table = self.table.lock().unwrap();
+        table.clock += 1;
+        let now = table.clock;
+        match table.slots.insert(*key, Slot::Done(v, now)) {
+            Some(Slot::Done(..)) => {}
+            _ => table.retained += 1,
+        }
+        while table.retained > table.capacity {
+            // O(slots) scan, paid only past capacity; tables are small
+            // next to the payloads they pin.
+            let lru = table
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Done(_, touched) if k != key => Some((*touched, *k)),
+                    _ => None,
+                })
+                .min();
+            let Some((_, evict)) = lru else { break };
+            table.slots.remove(&evict);
+            table.retained -= 1;
+        }
         self.done.notify_all();
     }
 
     /// Drop a failed leader's claim so a waiter can re-lead.
     pub(crate) fn abandon(&self, key: &Digest) {
-        self.slots.lock().unwrap().remove(key);
+        let mut table = self.table.lock().unwrap();
+        if let Some(Slot::Done(..)) = table.slots.remove(key) {
+            table.retained -= 1;
+        }
         self.done.notify_all();
     }
 }
@@ -651,6 +715,47 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         flight.abandon(&key);
         assert_eq!(waiter.join().unwrap(), "lead");
+    }
+
+    #[test]
+    fn flight_bounds_retention_evicting_lru_published_entries() {
+        let flight: Flight<u64> = Flight::with_capacity(2);
+        let (a, b, c) = (Digest([1; 32]), Digest([2; 32]), Digest([3; 32]));
+        for (k, v) in [(a, 1u64), (b, 2)] {
+            assert!(matches!(flight.begin(&k), Some(Join::Lead)));
+            flight.publish(&k, Arc::new(v));
+        }
+        // Touch `a`: `b` is now least-recently-used.
+        assert!(matches!(flight.begin(&a), Some(Join::Done(_))));
+        assert!(matches!(flight.begin(&c), Some(Join::Lead)));
+        flight.publish(&c, Arc::new(3));
+        // `b` was evicted — its next claimant re-leads; `a` and `c` stay
+        // resident.
+        assert!(matches!(flight.begin(&b), Some(Join::Lead)));
+        match flight.begin(&a) {
+            Some(Join::Done(v)) => assert_eq!(*v, 1),
+            _ => panic!("recently-touched entry must survive eviction"),
+        }
+        match flight.begin(&c) {
+            Some(Join::Done(v)) => assert_eq!(*v, 3),
+            _ => panic!("just-published entry must survive eviction"),
+        }
+    }
+
+    #[test]
+    fn flight_never_evicts_in_flight_claims() {
+        let flight: Flight<u64> = Flight::with_capacity(1);
+        let (lead, x, y) = (Digest([9; 32]), Digest([10; 32]), Digest([11; 32]));
+        assert!(matches!(flight.begin(&lead), Some(Join::Lead)));
+        for (k, v) in [(x, 1u64), (y, 2)] {
+            assert!(matches!(flight.begin(&k), Some(Join::Lead)));
+            flight.publish(&k, Arc::new(v));
+        }
+        // Published entries churned past capacity, but the in-flight
+        // claim is untouched: a second claimant still can't lead it.
+        assert!(flight.begin(&lead).is_none());
+        flight.publish(&lead, Arc::new(0));
+        assert!(matches!(flight.begin(&lead), Some(Join::Done(_))));
     }
 
     #[test]

@@ -155,6 +155,13 @@ pub struct WarmReport {
 /// is excluded — `registry gc` run against a half-committed push would
 /// sweep its not-yet-referenced pool chunks as garbage. Dropping the
 /// permit completes the quiesce handshake.
+///
+/// This is the **same-process fast path** only: writers in other
+/// processes are excluded by the registry's on-disk leases
+/// ([`crate::registry::lease`]), which every push and maintenance pass
+/// takes on lease-capable remotes. The permit spares same-process
+/// pushes a needless wait for their own coordinator's `maintain` and
+/// keeps the handshake cheap when only one process writes.
 pub struct PushPermit<'a>(#[allow(dead_code)] RwLockReadGuard<'a, ()>);
 
 /// The coordinator: a step-level scheduler over per-worker daemons.
@@ -171,7 +178,8 @@ pub struct BuildCoordinator {
     /// the hard-wired `jobs: 1` removed).
     pub jobs: usize,
     /// The maintenance quiesce handshake: pushes take it shared,
-    /// [`Self::maintain`] takes it exclusive.
+    /// [`Self::maintain`] takes it exclusive. Same-process fast path —
+    /// cross-process exclusion is the registry lease protocol's job.
     quiesce: RwLock<()>,
     /// The persistent step pool, created lazily at the first step-level
     /// batch and reused across batches (rebuilt if `jobs` changed).
@@ -232,13 +240,17 @@ impl BuildCoordinator {
         daemon.push_with(tag, remote, opts)
     }
 
-    /// Scheduled registry maintenance under the quiesce handshake: waits
-    /// for every in-flight push permit to drop, then — with new pushes
-    /// held off — runs `registry scrub` (drop rotted pool chunks, demote
-    /// affected layers) and `registry gc` (mark-and-sweep untagged
-    /// images, unreferenced layers, orphaned chunks). The exclusive hold
-    /// is what makes gc safe: a concurrent push's not-yet-committed
-    /// chunks would otherwise be indistinguishable from garbage.
+    /// Scheduled registry maintenance: waits for this process's
+    /// in-flight push permits to drop (the same-process fast path), then
+    /// — with new local pushes held off — runs `registry scrub` (drop
+    /// rotted pool chunks, demote affected layers) and `registry gc`
+    /// (mark-and-sweep untagged images, unreferenced layers, orphaned
+    /// chunks). Fleet-wide safety comes from the registry itself: on
+    /// lease-capable remotes scrub and gc each take the **exclusive
+    /// maintenance lease**, draining live pushers in *every* process and
+    /// fencing out expired zombies before anything is deleted — which is
+    /// what makes this safe to run from a cron/`maintain --interval`
+    /// loop while other machines keep pushing.
     pub fn maintain(&self, remote: &RemoteRegistry) -> Result<MaintenanceReport> {
         let _quiesced = self.quiesce.write().unwrap();
         Ok(MaintenanceReport {
@@ -281,6 +293,7 @@ impl BuildCoordinator {
                 &PullOptions {
                     jobs: pull_jobs,
                     fetch_cache: Some(fetch_cache.clone()),
+                    ..Default::default()
                 },
             )
         })?;

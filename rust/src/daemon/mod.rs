@@ -176,7 +176,11 @@ impl Daemon {
     }
 
     /// Push with explicit transport options (pipelined workers, wire
-    /// mode). Uses this daemon's hash engine for chunk manifests.
+    /// mode). Uses this daemon's hash engine for chunk manifests. On a
+    /// lease-capable remote the push runs under a shared fleet lease, so
+    /// many daemons on many machines may push the same registry
+    /// concurrently while maintenance (scrub/gc) waits them out — see
+    /// [`crate::registry`]'s multi-writer lease notes.
     pub fn push_with(
         &self,
         tag: &str,

@@ -64,6 +64,10 @@ pub const SITES: &[&str] = &[
     "registry.push.journal",  // per-layer push-journal entry
     "registry.push.commit",   // serial phase-3 remote commit writes
     "registry.pull.stage",    // verified chunk landing in pull staging
+    "registry.scrub.mark",    // the durable needs-scrub degradation marker
+    "registry.lease.acquire", // lease grant writes (seq, record, fence)
+    "registry.lease.renew",   // the lease heartbeat / commit barrier
+    "registry.lease.release", // lease record removal on clean release
     "builder.step",           // a build step executing in the scheduler
 ];
 

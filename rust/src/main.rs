@@ -48,19 +48,30 @@ COMMANDS:
                                          image collectable by gc)
   registry gc --remote DIR               mark-and-sweep: delete untagged
                                          images, unreferenced layers and
-                                         orphaned pool chunks. Run QUIESCED
-                                         (no concurrent push to the remote):
-                                         an in-flight push's uncommitted
-                                         chunks look like garbage. CI farms
-                                         should prefer the coordinator's
-                                         maintain() quiesce handshake.
+                                         orphaned pool chunks. Safe against
+                                         concurrent pushers on lease-capable
+                                         remotes (takes the exclusive
+                                         maintenance lease); on legacy
+                                         remotes run it quiesced — an
+                                         in-flight push's uncommitted chunks
+                                         look like garbage
+  maintain --remote DIR [--workers N] [--interval SECS] [--rounds N]
+                                         scheduled maintenance: scrub + gc
+                                         under the coordinator's quiesce
+                                         handshake and the remote's
+                                         exclusive lease (safe while other
+                                         machines push). One pass by
+                                         default; --interval loops forever
+                                         sleeping SECS between passes,
+                                         --rounds caps the loop
   recover [--remote DIR]                 crash-consistency sweep: remove
                                          orphaned temp files and partial
                                          layers under --root, keep resumable
                                          pull staging, and (with --remote)
-                                         sweep the registry's temp files and
-                                         push journals. Runs implicitly on
-                                         every open; this surfaces the report
+                                         sweep the registry's temp files,
+                                         push journals and stale lease
+                                         records. Runs implicitly on every
+                                         open; this surfaces the report
   coordinate [--workers N] [--jobs N] [--strategy auto|build|inject|inject-cascade]
          [--per-request] TAG=CTX [TAG=CTX ...]
                                          run a CI batch: one request per
@@ -340,7 +351,13 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 let report = daemon.push_with(
                     &tag,
                     &remote,
-                    &PushOptions { jobs, whole_tar, manifest_v1, negotiate_per_chunk },
+                    &PushOptions {
+                        jobs,
+                        whole_tar,
+                        manifest_v1,
+                        negotiate_per_chunk,
+                        ..Default::default()
+                    },
                 )?;
                 println!(
                     "pushed {}: {} layers, {} uploaded, {} deduped ({} chunks sent, {} reused, \
@@ -402,11 +419,13 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     }
                 }
                 "gc" => {
-                    eprintln!(
-                        "note: gc must run quiesced — a concurrent push's uncommitted chunks \
-                         are indistinguishable from garbage (coordinator pipelines: use \
-                         BuildCoordinator::maintain, which takes the quiesce handshake)"
-                    );
+                    if !remote.supports_leases() {
+                        eprintln!(
+                            "note: this remote is lease-unaware; gc must run quiesced — a \
+                             concurrent push's uncommitted chunks are indistinguishable from \
+                             garbage (coordinator pipelines: use BuildCoordinator::maintain)"
+                        );
+                    }
                     let r = remote.gc()?;
                     println!(
                         "gc: {} image(s), {} layer(s), {} chunk(s) removed, {} reclaimed",
@@ -500,6 +519,63 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 return Err(layerjet::Error::msg("coordinate: some requests failed"));
             }
         }
+        "maintain" => {
+            use layerjet::coordinator::BuildCoordinator;
+            let remote_dir = cli
+                .opt("--remote")
+                .ok_or_else(|| layerjet::Error::msg("maintain: missing --remote DIR"))?;
+            let workers = cli
+                .opt("--workers")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("maintain: bad --workers {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(1)
+                .max(1);
+            let interval = cli
+                .opt("--interval")
+                .map(|v| {
+                    v.parse::<u64>()
+                        .map_err(|_| layerjet::Error::msg(format!("maintain: bad --interval {v:?}")))
+                })
+                .transpose()?;
+            // One pass by default; with --interval loop forever unless
+            // --rounds caps it.
+            let rounds = cli
+                .opt("--rounds")
+                .map(|v| {
+                    v.parse::<u64>()
+                        .map_err(|_| layerjet::Error::msg(format!("maintain: bad --rounds {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(if interval.is_some() { 0 } else { 1 });
+            let remote = RemoteRegistry::open(&PathBuf::from(&remote_dir))?;
+            let coordinator = BuildCoordinator::new(&root, workers);
+            let mut pass = 0u64;
+            loop {
+                pass += 1;
+                let m = coordinator.maintain(&remote)?;
+                println!(
+                    "maintain pass {pass}: scrub {} chunk(s) checked, {} dropped, {} layer(s) \
+                     demoted | gc {} image(s), {} layer(s), {} chunk(s) removed, {} reclaimed",
+                    m.scrub.chunks_checked,
+                    m.scrub.chunks_dropped,
+                    m.scrub.layers_demoted,
+                    m.gc.images_dropped,
+                    m.gc.layers_dropped,
+                    m.gc.chunks_dropped,
+                    layerjet::util::human_bytes(m.gc.bytes_reclaimed),
+                );
+                if rounds != 0 && pass >= rounds {
+                    break;
+                }
+                match interval {
+                    Some(secs) => std::thread::sleep(std::time::Duration::from_secs(secs)),
+                    None => break,
+                }
+            }
+        }
         "history" => {
             let tag = cli
                 .pos()
@@ -536,8 +612,8 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 let rr = remote.open_recovery();
                 println!(
                     "remote: {} temp file(s) swept, {} push journal(s) kept for resume, \
-                     {} dropped",
-                    rr.tmp_swept, rr.journals_kept, rr.journals_dropped,
+                     {} dropped, {} stale lease(s) reclaimed",
+                    rr.tmp_swept, rr.journals_kept, rr.journals_dropped, rr.leases_reclaimed,
                 );
                 if rr.scrub_scheduled {
                     eprintln!(

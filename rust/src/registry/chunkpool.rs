@@ -94,6 +94,14 @@ impl ChunkPool {
         digests.iter().map(|d| self.has(d)).collect()
     }
 
+    /// Are ALL of `digests` present? The completeness probe behind push
+    /// journal resume and recovery's journal validation — one missing
+    /// chunk (scrubbed rot, a gc after the writer died) makes the whole
+    /// manifest unresumable.
+    pub fn has_all(&self, digests: &[Digest]) -> bool {
+        digests.iter().all(|d| self.has(d))
+    }
+
     /// Fetch a chunk's bytes; a missing chunk is a registry error.
     /// Transient wire faults surface here (as interrupted-kind I/O
     /// errors) so callers can retry under a [`crate::fault::RetryPolicy`].

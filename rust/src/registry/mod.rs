@@ -20,6 +20,7 @@
 //! <root>/layers/<layer-id>/layer.chunks — per-layer chunk manifest
 //! <root>/images/<image-id>.json
 //! <root>/tags.json
+//! <root>/leases/                      — multi-writer lease table ([`lease`])
 //! ```
 //!
 //! A layer is represented remotely by its **chunk manifest** plus the
@@ -79,6 +80,14 @@
 //! per-layer. v1 and v2 chunks never dedup against each other (different
 //! boundaries *and* different digest schemes) — that cost is the reason
 //! the chunking parameters are frozen as wire contract.
+//!
+//! **Lease-unaware legacy remotes**: a remote without a `leases/`
+//! directory (created by [`RemoteRegistry::open_legacy`], or populated
+//! by an old build) predates the multi-writer protocol. Pushes and
+//! maintenance against it skip lease acquisition entirely — single-
+//! writer semantics, exactly the pre-lease behavior — and never create
+//! the directory behind the operator's back; opening it with
+//! [`RemoteRegistry::open`] upgrades it in place.
 //!
 //! # Pipelining
 //!
@@ -141,14 +150,42 @@
 //!   trusting `has()` forever — rot is repaired by routine redeploys.
 //! * [`RemoteRegistry::gc`] mark-and-sweeps from `tags.json`: untagged
 //!   image configs, their unreferenced layer dirs, and pool chunks no
-//!   surviving manifest references are deleted. Run it quiesced (a
-//!   concurrent push's not-yet-committed chunks look like garbage).
+//!   surviving manifest references are deleted. Writer exclusion (a
+//!   concurrent push's not-yet-committed chunks look like garbage) comes
+//!   from the exclusive lease below, fleet-wide.
+//!
+//! # Multi-writer leases
+//!
+//! Any number of processes may push one remote concurrently while
+//! scrub/gc stay safe, via durable lease files under `<root>/leases/`
+//! (protocol and on-disk layout in [`lease`]):
+//!
+//! * **Shared leases** — every push holds one for its duration. They
+//!   coexist freely; acquisition waits only for a live exclusive lease.
+//! * **Exclusive leases** — [`RemoteRegistry::scrub`] and
+//!   [`RemoteRegistry::gc`] (and therefore `maintain`) hold one. They
+//!   wait for live shared leases to drain, so maintenance never sees a
+//!   half-pushed image from a *live* pusher.
+//! * **Fencing tokens** — every grant carries a monotonic token; an
+//!   exclusive grant raises the `fence` to its own token. Push validates
+//!   its token during the heavy stage and **renews at the commit
+//!   barrier**: a zombie pusher whose lease expired and was reclaimed
+//!   (its chunks possibly collected by a newer gc) fails the renew and
+//!   never commits a manifest over the gc'd pool.
+//! * **Stale reclaim** — a lease record past its TTL (heartbeat missed:
+//!   the holder crashed) is reclaimed by the next acquisition or by
+//!   [`RemoteRegistry::recover`] ([`RegistryRecovery::leases_reclaimed`]),
+//!   so a dead holder blocks the fleet for at most one TTL. The zombie's
+//!   push journal stops validating once gc collects its chunks, and
+//!   recovery then garbage-collects the journal too.
 
 pub mod cdc;
 pub mod chunkpool;
+pub mod lease;
 
 pub use cdc::CdcManifest;
 pub use chunkpool::ChunkPool;
+pub use lease::{Lease, LeaseConfig, LeaseKind};
 
 use crate::builder::parallel::scoped_index_map;
 use crate::hash::{ChunkDigest, Digest, HashEngine, NativeEngine, CHUNK_SIZE};
@@ -380,6 +417,9 @@ pub struct RegistryRecovery {
     /// A degradation event left a `needs-scrub` marker; run
     /// [`RemoteRegistry::scrub`] to clear it.
     pub scrub_scheduled: bool,
+    /// Stale lease records reclaimed (holders that crashed or expired
+    /// without releasing; see [`lease`]).
+    pub leases_reclaimed: usize,
 }
 
 impl RegistryRecovery {
@@ -463,28 +503,47 @@ pub struct RemoteRegistry {
     /// What the implicit recovery sweep at open found, surfaced by the
     /// `recover` CLI verb.
     open_recovery: RegistryRecovery,
+    /// How this handle participates in the multi-writer lease protocol
+    /// (holder identity, TTL, timeouts). Irrelevant on lease-unaware
+    /// legacy remotes.
+    lease_config: lease::LeaseConfig,
 }
 
 impl RemoteRegistry {
-    /// Open (creating if needed) a chunk-capable (v2) registry.
+    /// Open (creating if needed) a chunk-capable (v2) registry with the
+    /// default lease behavior.
     pub fn open(root: &Path) -> Result<RemoteRegistry> {
-        let reg = Self::open_legacy(root)?;
+        Self::open_with(root, lease::LeaseConfig::default())
+    }
+
+    /// Open a chunk-capable registry with explicit lease behavior — the
+    /// multi-process entry point: each daemon pins its own holder
+    /// identity; tests shrink TTLs to force zombie/reclaim scenarios.
+    pub fn open_with(root: &Path, lease_config: lease::LeaseConfig) -> Result<RemoteRegistry> {
         std::fs::create_dir_all(root.join("chunks"))?;
-        Ok(reg)
+        std::fs::create_dir_all(root.join(lease::LEASE_DIR))?;
+        Self::open_inner(root, lease_config)
     }
 
     /// Open a registry **without** a chunk pool — models a pre-chunk
     /// (v1) deployment. Pushes against it fall back to whole-tar
-    /// uploads; pulls read layer tars.
+    /// uploads; pulls read layer tars. Also lease-unaware: no `leases/`
+    /// directory is created, so writers skip the lease protocol (see
+    /// the module doc's compatibility notes).
     ///
     /// Runs [`RemoteRegistry::recover`] implicitly; the report is kept on
     /// the handle ([`RemoteRegistry::open_recovery`]).
     pub fn open_legacy(root: &Path) -> Result<RemoteRegistry> {
+        Self::open_inner(root, lease::LeaseConfig::default())
+    }
+
+    fn open_inner(root: &Path, lease_config: lease::LeaseConfig) -> Result<RemoteRegistry> {
         std::fs::create_dir_all(root.join("layers"))?;
         std::fs::create_dir_all(root.join("images"))?;
         let mut reg = RemoteRegistry {
             root: root.to_path_buf(),
             open_recovery: RegistryRecovery::default(),
+            lease_config,
         };
         if !reg.tags_path().exists() {
             std::fs::write(reg.tags_path(), "{}\n")?;
@@ -501,15 +560,23 @@ impl RemoteRegistry {
 
     /// Crash-consistency sweep over the remote tree: removes orphaned
     /// temp files everywhere a push writes (pool, layer dirs, images,
-    /// root), drops push journals whose image already committed (or
-    /// whose entries no longer parse), keeps resumable journals, and
-    /// reports whether a degradation event has scheduled a scrub.
+    /// lease table, root), reclaims expired lease records, drops push
+    /// journals whose image already committed (or whose entries no
+    /// longer validate — including chunks a gc has since collected,
+    /// which is how a fenced-out zombie's journal gets garbage-
+    /// collected), keeps resumable journals, and reports whether a
+    /// degradation event has scheduled a scrub.
     /// Best-effort: individual unlink failures are skipped, not fatal.
     pub fn recover(&self) -> Result<RegistryRecovery> {
         let mut report = RegistryRecovery::default();
         report.tmp_swept += crate::store::sweep_tmp_files(&self.root);
         report.tmp_swept += crate::store::sweep_tmp_files(&self.chunk_pool_dir());
         report.tmp_swept += crate::store::sweep_tmp_files(&self.root.join("images"));
+        let lease_dir = self.root.join(lease::LEASE_DIR);
+        if lease_dir.is_dir() {
+            report.tmp_swept += crate::store::sweep_tmp_files(&lease_dir);
+            report.leases_reclaimed += lease::sweep_expired(&lease_dir, &self.lease_config)?;
+        }
         if let Ok(entries) = std::fs::read_dir(self.root.join("layers")) {
             for entry in entries.flatten() {
                 if entry.path().is_dir() {
@@ -530,15 +597,24 @@ impl RemoteRegistry {
                     .join("images")
                     .join(format!("{image_name}.json"))
                     .exists();
-                // Drop journal entries that no longer parse (torn before
-                // the atomic write? then they would not exist — this
-                // guards against foreign garbage), then the dir itself
-                // when its image already committed or nothing usable
-                // remains.
+                // Drop journal entries that no longer validate end to
+                // end: unparseable (torn writes can't survive the atomic
+                // rename — this guards against foreign garbage), or
+                // referencing chunks the pool no longer holds (a gc ran
+                // after the writer's lease was reclaimed: the entry is a
+                // fenced-out zombie's and can never resume). Then drop
+                // the dir itself when its image already committed or
+                // nothing usable remains.
+                let pool = self
+                    .supports_chunks()
+                    .then(|| ChunkPool::at(&self.chunk_pool_dir()));
                 let mut usable = 0;
                 if let Ok(files) = std::fs::read_dir(&dir) {
                     for f in files.flatten() {
-                        if read_journal_entry(&f.path()).is_some() {
+                        let resumable = read_journal_entry(&f.path()).is_some_and(|(_, encoded)| {
+                            pool.as_ref().is_some_and(|p| manifest_chunks_pooled(p, &encoded))
+                        });
+                        if resumable {
                             usable += 1;
                         } else {
                             let _ = std::fs::remove_file(f.path());
@@ -559,9 +635,17 @@ impl RemoteRegistry {
     }
 
     /// Mark the pool as needing a scrub (set by degradation events,
-    /// cleared by [`RemoteRegistry::scrub`]).
-    pub fn schedule_scrub(&self) {
-        let _ = std::fs::write(self.root.join("needs-scrub"), b"degradation event\n");
+    /// cleared by [`RemoteRegistry::scrub`]). Durable and fault-hooked:
+    /// a marker lost to a torn write would silently cancel the repair a
+    /// degradation event just promised, so it commits through the same
+    /// atomic tmp+rename as everything else the registry serves.
+    pub fn schedule_scrub(&self) -> Result<()> {
+        crate::store::write_atomic(
+            "registry.scrub.mark",
+            &self.root.join("needs-scrub"),
+            b"degradation event\n",
+        )?;
+        Ok(())
     }
 
     /// Is a scrub pending?
@@ -572,6 +656,64 @@ impl RemoteRegistry {
     /// Does this registry speak the chunk-addressed protocol?
     pub fn supports_chunks(&self) -> bool {
         self.root.join("chunks").is_dir()
+    }
+
+    /// Does this remote carry a lease table (multi-writer capable)?
+    /// Legacy remotes without one get single-writer semantics: no lease
+    /// is taken and no fencing applies.
+    pub fn supports_leases(&self) -> bool {
+        self.root.join(lease::LEASE_DIR).is_dir()
+    }
+
+    /// Take a shared (pusher) lease, or `None` on lease-unaware remotes.
+    fn lease_shared(&self) -> Result<Option<lease::Lease>> {
+        if !self.supports_leases() {
+            return Ok(None);
+        }
+        lease::acquire(
+            &self.root.join(lease::LEASE_DIR),
+            lease::LeaseKind::Shared,
+            &self.lease_config,
+        )
+        .map(Some)
+    }
+
+    /// Take the exclusive (maintenance) lease, or `None` on
+    /// lease-unaware remotes.
+    fn lease_exclusive(&self) -> Result<Option<lease::Lease>> {
+        if !self.supports_leases() {
+            return Ok(None);
+        }
+        lease::acquire(
+            &self.root.join(lease::LEASE_DIR),
+            lease::LeaseKind::Exclusive,
+            &self.lease_config,
+        )
+        .map(Some)
+    }
+
+    /// Settle a held lease after the guarded operation: release on
+    /// success; on failure release too, EXCEPT when the error simulates
+    /// this process dying (an injected crash/torn fault) — a real dead
+    /// process could not have cleaned up either, so the record is left
+    /// for TTL reclaim, which is exactly what the fault matrix verifies.
+    fn settle_lease<T>(lease: Option<lease::Lease>, result: Result<T>) -> Result<T> {
+        match result {
+            Ok(v) => {
+                if let Some(lease) = lease {
+                    lease.release()?;
+                }
+                Ok(v)
+            }
+            Err(e) => {
+                if let Some(lease) = lease {
+                    if !crate::fault::error_is_crash(&e) {
+                        let _ = lease.release();
+                    }
+                }
+                Err(e)
+            }
+        }
     }
 
     fn tags_path(&self) -> PathBuf {
@@ -624,6 +766,11 @@ impl RemoteRegistry {
     /// Nothing the registry serves is mutated until every layer has
     /// verified; a failed or interrupted push leaves at worst orphan
     /// chunks in the pool, which a retry negotiates away.
+    ///
+    /// On a lease-capable remote the whole push runs under a shared
+    /// lease: concurrent pushes coexist, maintenance waits, and the
+    /// fencing token is validated during the heavy stage and renewed at
+    /// the commit barrier — see the module doc's lease section.
     pub fn push_with(
         &self,
         r: &ImageRef,
@@ -631,6 +778,20 @@ impl RemoteRegistry {
         layers: &LayerStore,
         engine: &dyn HashEngine,
         opts: &PushOptions,
+    ) -> Result<PushReport> {
+        let mut lease = self.lease_shared()?;
+        let result = self.push_locked(r, images, layers, engine, opts, lease.as_mut());
+        Self::settle_lease(lease, result)
+    }
+
+    fn push_locked(
+        &self,
+        r: &ImageRef,
+        images: &ImageStore,
+        layers: &LayerStore,
+        engine: &dyn HashEngine,
+        opts: &PushOptions,
+        mut lease: Option<&mut lease::Lease>,
     ) -> Result<PushReport> {
         let (image_id, image) = images.get_by_ref(r)?;
         let chunked = !opts.whole_tar && self.supports_chunks();
@@ -691,17 +852,7 @@ impl RemoteRegistry {
                 if digest != image.diff_ids[i] {
                     continue;
                 }
-                let complete = match decode_manifest(&encoded) {
-                    Some(LayerManifest::V2(m)) => {
-                        let digests: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
-                        pool.has_batch(&digests).into_iter().all(|p| p)
-                    }
-                    Some(LayerManifest::V1(cd)) => {
-                        pool.has_batch(&cd.chunks).into_iter().all(|p| p)
-                    }
-                    None => false,
-                };
-                if complete {
+                if manifest_chunks_pooled(pool, &encoded) {
                     resumable.insert(i, encoded);
                 }
             }
@@ -715,10 +866,18 @@ impl RemoteRegistry {
         let claimed: Mutex<HashSet<Digest>> = Mutex::new(HashSet::new());
         let round_trips = std::sync::atomic::AtomicUsize::new(0);
         let retry_count = std::sync::atomic::AtomicU64::new(0);
+        let lease_view: Option<&lease::Lease> = lease.as_deref();
         let uploaded: Vec<LayerUpload> = scoped_index_map(uploads.len(), opts.jobs, |slot| {
             let i = uploads[slot];
             let lid = &image.layer_ids[i];
             let declared = image.diff_ids[i];
+            // Fencing check before this layer's negotiation/journal
+            // round: a pusher whose lease was reclaimed (and possibly
+            // fenced by a newer gc) stops here instead of journaling
+            // entries that can never legally commit.
+            if let Some(lease) = lease_view {
+                lease.validate()?;
+            }
             if let Some(encoded) = resumable.get(&i) {
                 return Ok(LayerUpload {
                     digest: declared,
@@ -871,7 +1030,7 @@ impl RemoteRegistry {
                         // they simulate this process dying.
                         Err(e) if crate::fault::transient(&e) => {
                             up.degraded = true;
-                            self.schedule_scrub();
+                            self.schedule_scrub()?;
                             break;
                         }
                         Err(e) => return Err(e),
@@ -920,6 +1079,14 @@ impl RemoteRegistry {
             layers_resumed: 0,
             layers_degraded: 0,
         };
+        // Commit barrier: renew the lease (heartbeat + fencing check in
+        // one durable write) before the first serial mutation of
+        // anything the registry serves. A zombie pusher that outlived
+        // its TTL — whose chunks a newer gc may already have collected —
+        // dies here, cleanly, never over-writing the gc'd remote.
+        if let Some(lease) = lease.as_deref_mut() {
+            lease.renew()?;
+        }
         for (slot, &i) in uploads.iter().enumerate() {
             let up = &uploaded[slot];
             let dir = self.layer_dir(&image.layer_ids[i]);
@@ -1213,7 +1380,7 @@ impl RemoteRegistry {
                 if !degradable || !tar_path.exists() {
                     return Err(e);
                 }
-                self.schedule_scrub();
+                self.schedule_scrub()?;
                 stats.degraded = true;
                 let tar = std::fs::read(&tar_path)?;
                 stats.bytes_fetched += tar.len() as u64;
@@ -1285,10 +1452,25 @@ impl RemoteRegistry {
     /// A chunk is intact when its bytes re-derive its name under either
     /// pool addressing scheme: SHA-256 of the raw bytes (v2) or the
     /// padded engine digest (v1, chunks ≤ 4 KiB only).
+    ///
+    /// Runs under the exclusive maintenance lease on lease-capable
+    /// remotes: live pushers drain first, and every expired zombie is
+    /// fenced out before the pool is touched.
     pub fn scrub(&self) -> Result<ScrubReport> {
+        let lease = self.lease_exclusive()?;
+        let result = self.scrub_locked(lease.as_ref());
+        Self::settle_lease(lease, result)
+    }
+
+    fn scrub_locked(&self, lease: Option<&lease::Lease>) -> Result<ScrubReport> {
         let mut report = ScrubReport::default();
         if !self.supports_chunks() {
             return Ok(report);
+        }
+        // Fencing check: this grant must still be the table's newest
+        // exclusive token before anything is deleted.
+        if let Some(lease) = lease {
+            lease.validate()?;
         }
         let pool = ChunkPool::at(&self.chunk_pool_dir());
         let mut dropped: HashSet<Digest> = HashSet::new();
@@ -1336,12 +1518,26 @@ impl RemoteRegistry {
     /// references, and pool chunks no surviving manifest references —
     /// the remote analogue of the local `prune`.
     ///
-    /// Must run quiesced: an in-flight push's not-yet-committed pool
-    /// chunks are indistinguishable from garbage. A corrupt manifest on
-    /// a *live* layer aborts the sweep (deleting chunks it might
-    /// reference would turn detectable corruption into data loss) —
-    /// repair via [`RemoteRegistry::scrub`] + re-push first.
+    /// Must run without concurrent writers: an in-flight push's
+    /// not-yet-committed pool chunks are indistinguishable from garbage.
+    /// On lease-capable remotes the exclusive maintenance lease
+    /// guarantees that fleet-wide — live pushers drain before the sweep
+    /// starts, and reclaimed zombies are fenced so they can never
+    /// commit manifests referencing chunks this sweep deletes. A
+    /// corrupt manifest on a *live* layer aborts the sweep (deleting
+    /// chunks it might reference would turn detectable corruption into
+    /// data loss) — repair via [`RemoteRegistry::scrub`] + re-push
+    /// first.
     pub fn gc(&self) -> Result<GcReport> {
+        let lease = self.lease_exclusive()?;
+        let result = self.gc_locked(lease.as_ref());
+        Self::settle_lease(lease, result)
+    }
+
+    fn gc_locked(&self, lease: Option<&lease::Lease>) -> Result<GcReport> {
+        if let Some(lease) = lease {
+            lease.validate()?;
+        }
         let mut report = GcReport::default();
         let live_images: HashSet<ImageId> = self.tags()?.into_iter().map(|(_, id)| id).collect();
         let mut live_layers: HashSet<LayerId> = HashSet::new();
@@ -1472,6 +1668,21 @@ fn decode_manifest(bytes: &[u8]) -> Option<LayerManifest> {
         return Some(LayerManifest::V2(m));
     }
     ChunkDigest::decode(bytes).map(LayerManifest::V1)
+}
+
+/// Does the pool still hold every chunk an encoded manifest references?
+/// The resumability test shared by push's journal resume scan and
+/// recovery's journal validation: entries whose chunks a scrub/gc has
+/// collected are dead weight, not resume candidates.
+fn manifest_chunks_pooled(pool: &ChunkPool, encoded: &[u8]) -> bool {
+    match decode_manifest(encoded) {
+        Some(LayerManifest::V2(m)) => {
+            let digests: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
+            pool.has_all(&digests)
+        }
+        Some(LayerManifest::V1(cd)) => pool.has_all(&cd.chunks),
+        None => false,
+    }
 }
 
 /// Resolve every expected chunk to VERIFIED bytes, preferring the local

@@ -2,7 +2,8 @@
 //! is killed mid-flight, the process "restarts" (stores reopen and run
 //! their implicit recovery sweeps), the same work is re-run, and the
 //! final local + remote trees must be bit-identical to a never-faulted
-//! run with zero orphaned temp files or staging/journal leftovers.
+//! run with zero orphaned temp files, staging/journal leftovers, or
+//! stale lease records.
 //!
 //! All plans are scoped to the test's own temp root so parallel test
 //! binaries cannot trip each other's specs; `fault::install` additionally
@@ -10,7 +11,7 @@
 
 use layerjet::fault::{self, FaultMode, FaultPlan};
 use layerjet::prelude::*;
-use layerjet::registry::{PullOptions, PushOptions};
+use layerjet::registry::{LeaseConfig, PullOptions, PushOptions};
 use layerjet::util::prng::Prng;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -44,7 +45,10 @@ fn write_project(dir: &Path) {
 
 /// Every file under `root`, relative path -> bytes, skipping the
 /// scan-cache (its file names key on the absolute context path, so they
-/// differ between the reference root and each matrix case root).
+/// differ between the reference root and each matrix case root) and the
+/// lease directory (its `seq`/`fence` counters advance differently on a
+/// faulted-then-recovered run than on the reference run; lease hygiene
+/// is asserted separately by [`assert_no_orphans`]).
 fn snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
     fn walk(dir: &Path, prefix: &str, out: &mut BTreeMap<String, Vec<u8>>) {
         let mut entries: Vec<_> = std::fs::read_dir(dir).unwrap().map(|e| e.unwrap()).collect();
@@ -53,7 +57,7 @@ fn snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
             let name = e.file_name().to_string_lossy().into_owned();
             let rel = if prefix.is_empty() { name.clone() } else { format!("{prefix}/{name}") };
             if e.file_type().unwrap().is_dir() {
-                if name == "scan-cache" {
+                if name == "scan-cache" || name == "leases" {
                     continue;
                 }
                 walk(&e.path(), &rel, out);
@@ -68,19 +72,44 @@ fn snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
 }
 
 /// No orphaned atomic-write temp files, no push-journal entries, no
-/// pull-staging chunks anywhere under `root`.
+/// pull-staging chunks anywhere under `root`, and no lease directory
+/// holding anything besides its `seq`/`fence` counters (a surviving
+/// grant record, guard lockfile, or temp file is a stale lease).
 fn assert_no_orphans(root: &Path, context: &str) {
     for (rel, _) in snapshot(root) {
         assert!(!rel.contains(".tmp-"), "{context}: orphaned temp file {rel}");
         assert!(!rel.contains("push-journal/"), "{context}: leftover journal entry {rel}");
         assert!(!rel.contains("pull-staging/"), "{context}: leftover staged chunk {rel}");
     }
+    fn check_leases(dir: &Path, context: &str) {
+        for e in std::fs::read_dir(dir).unwrap().map(|e| e.unwrap()) {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if e.file_type().unwrap().is_dir() {
+                if name == "leases" {
+                    for f in std::fs::read_dir(e.path()).unwrap().map(|f| f.unwrap()) {
+                        let fname = f.file_name().to_string_lossy().into_owned();
+                        assert!(
+                            fname == "seq" || fname == "fence",
+                            "{context}: stale lease file leases/{fname}"
+                        );
+                    }
+                } else {
+                    check_leases(&e.path(), context);
+                }
+            }
+        }
+    }
+    check_leases(root, context);
 }
 
 /// The full durability scenario under one root: build locally, push to a
 /// registry in `<root>/remote`, pull into a second store in
-/// `<root>/prod`. Reopening the daemons/registry on every call is the
-/// "restart" — each open runs its implicit recovery sweep.
+/// `<root>/prod`, then run the maintenance pass (scrub marker, scrub,
+/// gc) so the exclusive-lease sites are inside the faulted window.
+/// Reopening the daemons/registry on every call is the "restart" — each
+/// open runs its implicit recovery sweep. The lease ttl is zero so a
+/// record stranded by an injected crash is reclaimed at the next open
+/// instead of stalling the recovery re-run for a wall-clock ttl.
 fn run_scenario(root: &Path) -> layerjet::Result<()> {
     let proj = root.join("proj");
     if !proj.exists() {
@@ -88,11 +117,21 @@ fn run_scenario(root: &Path) -> layerjet::Result<()> {
     }
     let dev = daemon(&root.join("dev"))?;
     dev.build(&proj, "app:v1")?;
-    let remote = RemoteRegistry::open(&root.join("remote"))?;
+    let remote = RemoteRegistry::open_with(
+        &root.join("remote"),
+        LeaseConfig { ttl: std::time::Duration::ZERO, ..Default::default() },
+    )?;
     dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() })?;
     let prod = daemon(&root.join("prod"))?;
     prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() })?;
     assert!(prod.verify_image("app:v1")?, "pulled image must verify");
+    // Maintenance coda: on a clean tree this is a no-op (the marker is
+    // consumed by scrub, everything is tagged so gc drops nothing), but
+    // it routes the scenario through the scrub-marker write and both
+    // exclusive-lease acquire/release paths so the matrix covers them.
+    remote.schedule_scrub()?;
+    remote.scrub()?;
+    remote.gc()?;
     Ok(())
 }
 

@@ -1,0 +1,236 @@
+//! Multi-writer lease acceptance tests: two registry handles on one
+//! remote tree model two machines in a push fleet. A gc racing live
+//! pushes must never collect a chunk a committed manifest references
+//! (the exclusive maintenance lease waits out shared pusher leases),
+//! and a zombie pusher — one whose lease expired and was fenced by a
+//! later maintenance pass — must fail cleanly, with its stranded push
+//! journal garbage-collected once gc reclaims its chunks.
+//!
+//! Fault plans are scoped to each test's temp root, matching the
+//! conventions of `tests/faults.rs`.
+
+use layerjet::fault::{self, FaultMode, FaultPlan};
+use layerjet::prelude::*;
+use layerjet::registry::{lease, LeaseConfig, PullOptions, PushOptions};
+use layerjet::util::prng::Prng;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-leases-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn daemon(root: &Path) -> layerjet::Result<Daemon> {
+    let mut daemon = Daemon::new(root)?;
+    daemon.cost = CostModel::instant();
+    Ok(daemon)
+}
+
+/// A small three-layer project; `salt` varies the COPY payload so each
+/// salted project commits distinct layers and chunks (the base image
+/// layers still dedup across them, as they would in a real fleet).
+fn write_project(dir: &Path, salt: u64) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /srv/\nRUN pip install flask\nCMD [\"python\", \"app.py\"]\n",
+    )
+    .unwrap();
+    let mut asset = vec![0u8; 24 * 1024];
+    Prng::new(0x1ea5e ^ salt).fill_bytes(&mut asset);
+    std::fs::write(dir.join("asset.bin"), &asset).unwrap();
+    std::fs::write(dir.join("app.py"), format!("print('leased {salt}')\n")).unwrap();
+}
+
+/// The headline race: one handle pushes a stream of images while a
+/// second handle hammers scrub + gc. The exclusive maintenance lease
+/// must serialize against the shared pusher leases, so every pushed tag
+/// still pulls and verifies afterwards — no live-manifest chunk was
+/// ever collected out from under a push.
+#[test]
+fn concurrent_push_and_gc_preserve_every_live_manifest() {
+    let root = tmp("race");
+    let tags: Vec<String> = (0..4).map(|i| format!("app:v{i}")).collect();
+    let dev = daemon(&root.join("dev")).unwrap();
+    for (i, tag) in tags.iter().enumerate() {
+        let proj = root.join(format!("proj-{i}"));
+        write_project(&proj, i as u64);
+        dev.build(&proj, tag).unwrap();
+    }
+
+    let remote_dir = root.join("remote");
+    let pusher = RemoteRegistry::open_with(
+        &remote_dir,
+        LeaseConfig { holder: "pusher-a".into(), ..Default::default() },
+    )
+    .unwrap();
+    let sweeper = RemoteRegistry::open_with(
+        &remote_dir,
+        LeaseConfig { holder: "sweeper-b".into(), ..Default::default() },
+    )
+    .unwrap();
+
+    std::thread::scope(|scope| {
+        let push = scope.spawn(|| -> layerjet::Result<()> {
+            for tag in &tags {
+                dev.push_with(tag, &pusher, &PushOptions { jobs: 1, ..Default::default() })?;
+            }
+            Ok(())
+        });
+        let sweep = scope.spawn(|| -> layerjet::Result<()> {
+            for _ in 0..8 {
+                sweeper.scrub()?;
+                sweeper.gc()?;
+            }
+            Ok(())
+        });
+        push.join().unwrap().expect("pushes must succeed under concurrent maintenance");
+        sweep.join().unwrap().expect("maintenance must succeed under concurrent pushes");
+    });
+
+    let prod = daemon(&root.join("prod")).unwrap();
+    for tag in &tags {
+        prod.pull_with(tag, &pusher, &PullOptions { jobs: 1, ..Default::default() })
+            .unwrap_or_else(|e| panic!("pull of {tag} after racing gc failed: {e:?}"));
+        assert!(prod.verify_image(tag).unwrap(), "{tag} must verify after racing gc");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// The zombie-pusher story end to end: a push dies at the commit point
+/// (chunks pooled, journal written, lease record stranded), recovery
+/// reclaims the expired lease, gc collects the uncommitted chunks, and
+/// the next recovery garbage-collects the now-unresumable journal. A
+/// fresh push then out-tokens the fence and completes normally.
+#[test]
+fn fenced_zombie_journal_is_garbage_collected_after_gc() {
+    let root = tmp("zombie");
+    let proj = root.join("proj");
+    write_project(&proj, 99);
+    let dev = daemon(&root.join("dev")).unwrap();
+    dev.build(&proj, "app:v1").unwrap();
+
+    let remote_dir = root.join("remote");
+    // A zero ttl makes every grant expire the instant it is issued, so
+    // the admin handle below reclaims the zombie without waiting out a
+    // wall-clock heartbeat window.
+    let remote = RemoteRegistry::open_with(
+        &remote_dir,
+        LeaseConfig { holder: "zombie".into(), ttl: Duration::ZERO, ..Default::default() },
+    )
+    .unwrap();
+
+    // Kill the push at the first serial commit write. The crash-classed
+    // error deliberately strands the shared lease record: a real dead
+    // process would not have released either.
+    let guard = fault::install(
+        FaultPlan::fail_at("registry.push.commit", 0, FaultMode::Crash).scoped(&root),
+    );
+    let crashed = dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() });
+    drop(guard);
+    assert!(crashed.is_err(), "a commit crash must surface as an error");
+    let lease_dir = remote_dir.join(lease::LEASE_DIR);
+    assert!(
+        std::fs::read_dir(&lease_dir)
+            .unwrap()
+            .any(|e| lease::is_record_name(&e.unwrap().file_name().to_string_lossy())),
+        "the crashed pusher's lease record must survive for ttl reclaim"
+    );
+
+    // The admin handle's implicit recovery reclaims the expired lease
+    // but keeps the journal: its chunks are all still pooled, so at this
+    // point the push could legitimately resume.
+    let admin = RemoteRegistry::open_with(
+        &remote_dir,
+        LeaseConfig { holder: "admin".into(), ttl: Duration::ZERO, ..Default::default() },
+    )
+    .unwrap();
+    let opened = admin.open_recovery();
+    assert!(opened.leases_reclaimed >= 1, "expired lease must be reclaimed at open: {opened:?}");
+    assert_eq!(opened.journals_kept, 1, "pooled-complete journal stays resumable: {opened:?}");
+
+    // gc finds nothing tagged and collects the zombie's chunks; from
+    // here its journal can never resume.
+    let gc = admin.gc().unwrap();
+    assert!(gc.chunks_dropped >= 1, "gc must collect the uncommitted chunks: {gc:?}");
+    let rec = admin.recover().unwrap();
+    assert_eq!(rec.journals_dropped, 1, "chunk-less journal must be dropped: {rec:?}");
+    assert_eq!(rec.journals_kept, 0, "{rec:?}");
+    let leftover = std::fs::read_dir(remote_dir.join("push-journal"))
+        .map(|it| it.count())
+        .unwrap_or(0);
+    assert_eq!(leftover, 0, "the zombie's journal directory must be gone");
+
+    // The fence left by gc's exclusive lease never blocks new work: a
+    // fresh grant's token always exceeds it.
+    dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() })
+        .expect("a fresh push must out-token the maintenance fence");
+    let prod = daemon(&root.join("prod")).unwrap();
+    prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() }).unwrap();
+    assert!(prod.verify_image("app:v1").unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Fencing at the lease-API level, against a real registry's lease
+/// table: a maintenance pass (scrub takes the exclusive lease) reclaims
+/// an expired shared grant and fences its holder — validation and the
+/// renew heartbeat both fail from then on — while new grants out-token
+/// the fence and proceed.
+#[test]
+fn maintenance_fences_out_an_expired_pusher() {
+    let root = tmp("fence");
+    let remote_dir = root.join("remote");
+    let admin = RemoteRegistry::open_with(
+        &remote_dir,
+        LeaseConfig { holder: "admin".into(), ..Default::default() },
+    )
+    .unwrap();
+
+    let cfg = LeaseConfig {
+        holder: "slow-pusher".into(),
+        ttl: Duration::ZERO,
+        acquire_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let lease_dir = remote_dir.join(lease::LEASE_DIR);
+    let mut stale = lease::acquire(&lease_dir, lease::LeaseKind::Shared, &cfg).unwrap();
+    // Wall-clock expiry alone does not invalidate a grant (clocks skew);
+    // only an actual reclaim does.
+    assert!(stale.validate().is_ok(), "an unreclaimed grant validates even past expiry");
+
+    admin.scrub().unwrap();
+    assert!(stale.validate().is_err(), "a fenced-out holder must fail validation");
+    assert!(stale.renew().is_err(), "a fenced-out holder must fail its heartbeat");
+
+    let fresh = lease::acquire(&lease_dir, lease::LeaseKind::Shared, &cfg).unwrap();
+    assert!(fresh.token() > stale.token(), "tokens stay monotonic across the fence");
+    fresh.release().unwrap();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Pre-lease deployments keep working untouched: a legacy remote never
+/// grows a lease table, writers skip the protocol entirely, and the
+/// push/pull round-trip still verifies.
+#[test]
+fn legacy_remotes_stay_lease_unaware() {
+    let root = tmp("legacy");
+    let proj = root.join("proj");
+    write_project(&proj, 7);
+    let dev = daemon(&root.join("dev")).unwrap();
+    dev.build(&proj, "app:v1").unwrap();
+
+    let remote = RemoteRegistry::open_legacy(&root.join("remote")).unwrap();
+    assert!(!remote.supports_leases(), "legacy layout must not be lease-capable");
+    dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() }).unwrap();
+    assert!(
+        !root.join("remote").join(lease::LEASE_DIR).exists(),
+        "pushing must not create a lease table on a legacy remote"
+    );
+
+    let prod = daemon(&root.join("prod")).unwrap();
+    prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() }).unwrap();
+    assert!(prod.verify_image("app:v1").unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+}
