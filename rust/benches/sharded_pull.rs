@@ -1,0 +1,263 @@
+//! **Sharded pull traffic** — what the origin registry actually serves
+//! when a fleet of edge pullers goes through a shared persistent pull
+//! cache, plus the migration cost of growing the shard ring. Emits a
+//! machine-readable baseline (`BENCH_sharded_pull.json`).
+//!
+//! Two experiments:
+//! * **origin offload** — waves of concurrent pulls into fresh stores,
+//!   all reading through one [`PullCache`]: the origin should serve
+//!   roughly ONE copy of the image no matter how many pullers arrive
+//!   (the headline: overall bytes-from-origin < 10% of bytes pulled,
+//!   and a fully-warm wave < 10% on its own);
+//! * **reshard cost** — growing the ring 2 → 3 must migrate a strict
+//!   minority of chunks (consistent hashing moves ~1/3 of the
+//!   keyspace, never a full reshuffle).
+//!
+//! `cargo bench --bench sharded_pull` (set `LAYERJET_TRIALS` to
+//! override the wave count).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::builder::CostModel;
+use layerjet::daemon::Daemon;
+use layerjet::registry::{PullCache, PullOptions, RemoteRegistry};
+use layerjet::util::json::Json;
+use layerjet::util::prng::Prng;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Concurrent pullers per wave.
+const WAVE_WIDTH: usize = 8;
+
+fn main() {
+    let waves = common::trials(8).max(2);
+    let root = common::bench_root("sharded-pull");
+    let offload = origin_offload_sweep(&root, waves);
+    let reshard = reshard_sweep(&root);
+    emit_baseline(waves, &offload, &reshard);
+
+    // Shape assertions (the cache tier's acceptance bars): once the
+    // cache is warm the origin serves a sliver of what the fleet pulls.
+    // Wave 0 is excluded — its concurrent cold pullers legitimately
+    // race to the origin (write-through lands only after each layer
+    // verifies). Protocol properties, not timing — safe on any machine.
+    assert!(
+        offload.warm_origin_fraction < 0.10,
+        "warm waves pulled {:.1}% from origin — the cache tier regressed",
+        offload.warm_origin_fraction * 100.0
+    );
+    assert!(
+        offload.warm_wave_origin_fraction < 0.10,
+        "the last wave still pulled {:.1}% from origin — read-through regressed",
+        offload.warm_wave_origin_fraction * 100.0
+    );
+    assert!(
+        reshard.migrated_fraction < 0.5,
+        "2→3 reshard migrated {:.1}% of chunks — consistent hashing regressed",
+        reshard.migrated_fraction * 100.0
+    );
+    eprintln!(
+        "sharded_pull shape checks OK ({:.2}% of warm-wave bytes from origin over {} pulls; \
+         2→3 reshard moved {:.1}% of chunks)",
+        offload.warm_origin_fraction * 100.0,
+        offload.pulls,
+        reshard.migrated_fraction * 100.0
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+struct OriginOffload {
+    pulls: usize,
+    transferred_bytes: u64,
+    origin_bytes: u64,
+    /// Origin fraction over every wave, wave 0's cold stampede included.
+    overall_origin_fraction: f64,
+    /// Origin fraction over waves 1.. (the steady state the headline
+    /// assertion holds to).
+    warm_origin_fraction: f64,
+    cold_wave_origin_fraction: f64,
+    /// Origin fraction of the final wave alone.
+    warm_wave_origin_fraction: f64,
+}
+
+struct ReshardCost {
+    chunks_scanned: usize,
+    chunks_migrated: usize,
+    migrated_fraction: f64,
+    balance_factor: f64,
+}
+
+/// A project whose COPY layer is dominated by a deterministic ~2 MiB
+/// asset, so each pull moves enough chunks to make fractions stable.
+fn write_project(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /srv/\nCMD [\"python\", \"zz_main.py\"]\n",
+    )
+    .unwrap();
+    let mut asset = vec![0u8; 2 << 20];
+    Prng::new(0x0ff10ad).fill_bytes(&mut asset);
+    std::fs::write(dir.join("aa_assets.bin"), &asset).unwrap();
+    std::fs::write(dir.join("zz_main.py"), "print('v1')\n").unwrap();
+}
+
+/// Waves of `WAVE_WIDTH` concurrent pulls into fresh stores, all
+/// sharing one persistent pull cache against a 3-shard remote.
+fn origin_offload_sweep(root: &Path, waves: usize) -> OriginOffload {
+    let proj = root.join("offload-proj");
+    write_project(&proj);
+    let mut dev = Daemon::new(&root.join("offload-daemon")).unwrap();
+    dev.cost = CostModel::instant();
+    dev.build(&proj, "obench:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("offload-remote")).unwrap();
+    dev.push("obench:v1", &remote).unwrap();
+    remote.shard_to(3).unwrap();
+    let cache = PullCache::open_default(&root.join("offload-edge-cache")).unwrap();
+
+    let mut table = Table::new(
+        &format!("{WAVE_WIDTH} concurrent pulls per wave through one pull cache ({waves} waves)"),
+        &["wave", "origin bytes", "cache bytes", "origin %", "wall"],
+    );
+    let mut out = OriginOffload {
+        pulls: 0,
+        transferred_bytes: 0,
+        origin_bytes: 0,
+        overall_origin_fraction: f64::NAN,
+        warm_origin_fraction: f64::NAN,
+        cold_wave_origin_fraction: f64::NAN,
+        warm_wave_origin_fraction: f64::NAN,
+    };
+    let (mut warm_transferred, mut warm_origin) = (0u64, 0u64);
+    for wave in 0..waves {
+        let reports: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for p in 0..WAVE_WIDTH {
+                let store = root.join(format!("offload-store-w{wave}-p{p}"));
+                let remote = &remote;
+                let cache = cache.clone();
+                let reports = &reports;
+                scope.spawn(move || {
+                    let puller = Daemon::new(&store).unwrap();
+                    let r = puller
+                        .pull_with(
+                            "obench:v1",
+                            remote,
+                            &PullOptions { jobs: 1, pull_cache: Some(cache), ..Default::default() },
+                        )
+                        .unwrap();
+                    reports.lock().unwrap().push((r.bytes_from_origin, r.bytes_from_cache));
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let (origin, cached) = reports
+            .lock()
+            .unwrap()
+            .iter()
+            .fold((0u64, 0u64), |(o, c), &(ro, rc)| (o + ro, c + rc));
+        let transferred = origin + cached;
+        let fraction = origin as f64 / (transferred as f64).max(1.0);
+        if wave == 0 {
+            out.cold_wave_origin_fraction = fraction;
+        } else {
+            warm_transferred += transferred;
+            warm_origin += origin;
+        }
+        out.warm_wave_origin_fraction = fraction;
+        out.pulls += WAVE_WIDTH;
+        out.transferred_bytes += transferred;
+        out.origin_bytes += origin;
+        table.row(vec![
+            wave.to_string(),
+            origin.to_string(),
+            cached.to_string(),
+            format!("{:.1}%", fraction * 100.0),
+            fmt_secs(wall),
+        ]);
+        // Fresh stores per wave; wipe them so the bench's disk footprint
+        // stays bounded by one wave, not waves × fleet.
+        for p in 0..WAVE_WIDTH {
+            let _ = std::fs::remove_dir_all(root.join(format!("offload-store-w{wave}-p{p}")));
+        }
+    }
+    out.overall_origin_fraction = out.origin_bytes as f64 / (out.transferred_bytes as f64).max(1.0);
+    out.warm_origin_fraction = warm_origin as f64 / (warm_transferred as f64).max(1.0);
+    table.print();
+    out
+}
+
+/// Grow a loaded 2-shard pool to 3 and measure how much actually moved.
+fn reshard_sweep(root: &Path) -> ReshardCost {
+    let proj = root.join("reshard-proj");
+    write_project(&proj);
+    let mut dev = Daemon::new(&root.join("reshard-daemon")).unwrap();
+    dev.cost = CostModel::instant();
+    dev.build(&proj, "rbench:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("reshard-remote")).unwrap();
+    dev.push("rbench:v1", &remote).unwrap();
+    remote.shard_to(2).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let report = remote.shard_to(3).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, balance) = remote.shard_stats().unwrap();
+    let out = ReshardCost {
+        chunks_scanned: report.chunks_scanned,
+        chunks_migrated: report.chunks_migrated,
+        migrated_fraction: report.chunks_migrated as f64 / (report.chunks_scanned as f64).max(1.0),
+        balance_factor: balance,
+    };
+
+    let mut table = Table::new(
+        "reshard 2 → 3 backends",
+        &["chunks", "migrated", "fraction", "balance", "wall"],
+    );
+    table.row(vec![
+        out.chunks_scanned.to_string(),
+        out.chunks_migrated.to_string(),
+        format!("{:.1}%", out.migrated_fraction * 100.0),
+        format!("{:.2}", out.balance_factor),
+        fmt_secs(wall),
+    ]);
+    table.print();
+    out
+}
+
+/// Write the machine-readable baseline: once into `bench_results/` and
+/// once at the repository root (the trajectory file later PRs compare
+/// against).
+fn emit_baseline(waves: usize, offload: &OriginOffload, reshard: &ReshardCost) {
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sharded_pull")),
+        ("measured", Json::Bool(true)),
+        ("waves", Json::num(waves as f64)),
+        ("wave_width", Json::num(WAVE_WIDTH as f64)),
+        ("pulls", Json::num(offload.pulls as f64)),
+        ("transferred_bytes", Json::num(offload.transferred_bytes as f64)),
+        ("origin_bytes", Json::num(offload.origin_bytes as f64)),
+        ("overall_origin_fraction", Json::num(offload.overall_origin_fraction)),
+        ("warm_origin_fraction", Json::num(offload.warm_origin_fraction)),
+        ("cold_wave_origin_fraction", Json::num(offload.cold_wave_origin_fraction)),
+        ("warm_wave_origin_fraction", Json::num(offload.warm_wave_origin_fraction)),
+        (
+            "reshard_2_to_3",
+            Json::obj(vec![
+                ("chunks_scanned", Json::num(reshard.chunks_scanned as f64)),
+                ("chunks_migrated", Json::num(reshard.chunks_migrated as f64)),
+                ("migrated_fraction", Json::num(reshard.migrated_fraction)),
+                ("balance_factor", Json::num(reshard.balance_factor)),
+            ]),
+        ),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_sharded_pull.json", &text).expect("write baseline");
+    // Repo root (cargo bench runs from the package dir `rust/`).
+    if std::fs::write("../BENCH_sharded_pull.json", &text).is_ok() {
+        eprintln!("wrote ../BENCH_sharded_pull.json");
+    }
+    eprintln!("wrote bench_results/BENCH_sharded_pull.json");
+}

@@ -314,8 +314,9 @@ fn select_grant(keys: &[(u64, usize, u64)], bound: u64) -> Option<usize> {
 enum Slot<V> {
     InFlight,
     /// A published value plus its last-touched stamp on the table's
-    /// monotonic access clock (drives LRU eviction).
-    Done(Arc<V>, u64),
+    /// monotonic access clock (drives LRU eviction) and its retention
+    /// weight (bytes for payload-bounded tables; 0 for count-only).
+    Done(Arc<V>, u64, u64),
 }
 
 /// The outcome of joining a flight entry.
@@ -336,6 +337,11 @@ struct FlightTable<V> {
     capacity: usize,
     /// Current `Done` count (in-flight claims are not retention).
     retained: usize,
+    /// Summed weight of retained entries never exceeds this (weighted
+    /// tables bound resident payload bytes, not just entry count).
+    max_weight: u64,
+    /// Current summed weight of retained entries.
+    weight: u64,
 }
 
 /// Published values a table retains by default: plenty for whole-batch
@@ -373,12 +379,22 @@ impl<V> Flight<V> {
 
     /// A table retaining at most `capacity` published values (minimum 1).
     pub fn with_capacity(capacity: usize) -> Flight<V> {
+        Flight::with_budget(capacity, u64::MAX)
+    }
+
+    /// A table bounded by entry count AND summed entry weight: publishes
+    /// past either bound evict least-recently-touched entries. Weighted
+    /// tables (e.g. the registry's chunk-fetch cache, where weight =
+    /// payload bytes) bound resident memory, not just entry count.
+    pub fn with_budget(capacity: usize, max_weight: u64) -> Flight<V> {
         Flight {
             table: Mutex::new(FlightTable {
                 slots: HashMap::new(),
                 clock: 0,
                 capacity: capacity.max(1),
                 retained: 0,
+                max_weight: max_weight.max(1),
+                weight: 0,
             }),
             done: Condvar::new(),
         }
@@ -396,7 +412,7 @@ impl<V> Flight<V> {
                 table.slots.insert(*key, Slot::InFlight);
                 Some(Join::Lead)
             }
-            Some(Slot::Done(v, touched)) => {
+            Some(Slot::Done(v, touched, _)) => {
                 *touched = now;
                 Some(Join::Done(v.clone()))
             }
@@ -417,7 +433,7 @@ impl<V> Flight<V> {
                     table.slots.insert(*key, Slot::InFlight);
                     return Join::Lead;
                 }
-                Some(Slot::Done(v, touched)) => {
+                Some(Slot::Done(v, touched, _)) => {
                     *touched = now;
                     return Join::Done(v.clone());
                 }
@@ -429,27 +445,38 @@ impl<V> Flight<V> {
     /// Publish the leader's value and wake every waiter, evicting the
     /// least-recently-touched published entries beyond capacity.
     pub(crate) fn publish(&self, key: &Digest, v: Arc<V>) {
+        self.publish_weighted(key, v, 0)
+    }
+
+    /// Publish with a retention weight (payload bytes for memory-bounded
+    /// tables). Evicts least-recently-touched published entries while
+    /// either the count capacity or the weight budget is exceeded; the
+    /// just-published entry is never evicted (an over-budget value still
+    /// serves its waiters — it just empties the rest of the table).
+    pub(crate) fn publish_weighted(&self, key: &Digest, v: Arc<V>, weight: u64) {
         let mut table = self.table.lock().unwrap();
         table.clock += 1;
         let now = table.clock;
-        match table.slots.insert(*key, Slot::Done(v, now)) {
-            Some(Slot::Done(..)) => {}
+        match table.slots.insert(*key, Slot::Done(v, now, weight)) {
+            Some(Slot::Done(_, _, old)) => table.weight -= old,
             _ => table.retained += 1,
         }
-        while table.retained > table.capacity {
-            // O(slots) scan, paid only past capacity; tables are small
+        table.weight += weight;
+        while table.retained > table.capacity || table.weight > table.max_weight {
+            // O(slots) scan, paid only past a bound; tables are small
             // next to the payloads they pin.
             let lru = table
                 .slots
                 .iter()
                 .filter_map(|(k, s)| match s {
-                    Slot::Done(_, touched) if k != key => Some((*touched, *k)),
+                    Slot::Done(_, touched, w) if k != key => Some((*touched, *k, *w)),
                     _ => None,
                 })
                 .min();
-            let Some((_, evict)) = lru else { break };
+            let Some((_, evict, w)) = lru else { break };
             table.slots.remove(&evict);
             table.retained -= 1;
+            table.weight -= w;
         }
         self.done.notify_all();
     }
@@ -457,8 +484,9 @@ impl<V> Flight<V> {
     /// Drop a failed leader's claim so a waiter can re-lead.
     pub(crate) fn abandon(&self, key: &Digest) {
         let mut table = self.table.lock().unwrap();
-        if let Some(Slot::Done(..)) = table.slots.remove(key) {
+        if let Some(Slot::Done(_, _, w)) = table.slots.remove(key) {
             table.retained -= 1;
+            table.weight -= w;
         }
         self.done.notify_all();
     }
@@ -740,6 +768,34 @@ mod tests {
             Some(Join::Done(v)) => assert_eq!(*v, 3),
             _ => panic!("just-published entry must survive eviction"),
         }
+    }
+
+    #[test]
+    fn flight_weight_budget_evicts_past_resident_bytes() {
+        // Plenty of count headroom; the 100-unit weight budget is the
+        // binding constraint (the ChunkFetchCache byte-budget shape).
+        let flight: Flight<u64> = Flight::with_budget(16, 100);
+        let (a, b, c) = (Digest([4; 32]), Digest([5; 32]), Digest([6; 32]));
+        for (k, v) in [(a, 1u64), (b, 2)] {
+            assert!(matches!(flight.begin(&k), Some(Join::Lead)));
+            flight.publish_weighted(&k, Arc::new(v), 50);
+        }
+        // Touch `a`; publishing `c` overflows the budget and must evict
+        // the colder `b`, not the hotter `a` or the new `c`.
+        assert!(matches!(flight.begin(&a), Some(Join::Done(_))));
+        assert!(matches!(flight.begin(&c), Some(Join::Lead)));
+        flight.publish_weighted(&c, Arc::new(3), 50);
+        assert!(matches!(flight.begin(&b), Some(Join::Lead)));
+        assert!(matches!(flight.begin(&a), Some(Join::Done(_))));
+        assert!(matches!(flight.begin(&c), Some(Join::Done(_))));
+        // An over-budget single value still publishes (waiters must be
+        // served) — it just empties everything else.
+        let big = Digest([7; 32]);
+        flight.abandon(&b); // clear the re-lead claim from above
+        assert!(matches!(flight.begin(&big), Some(Join::Lead)));
+        flight.publish_weighted(&big, Arc::new(9), 1000);
+        assert!(matches!(flight.begin(&big), Some(Join::Done(_))));
+        assert!(matches!(flight.begin(&a), Some(Join::Lead)));
     }
 
     #[test]

@@ -149,6 +149,12 @@ pub struct WarmReport {
     pub chunks_shared: usize,
     pub bytes_fetched: u64,
     pub bytes_shared: u64,
+    /// Bytes that actually crossed the wire from the origin registry —
+    /// the number a warm persistent pull cache drives toward zero.
+    pub bytes_from_origin: u64,
+    /// Bytes served by the persistent pull-cache tier
+    /// ([`BuildCoordinator::warm_with_cache`]).
+    pub bytes_from_cache: u64,
 }
 
 /// A live push permit: while any permit exists, [`BuildCoordinator::maintain`]
@@ -246,11 +252,14 @@ impl BuildCoordinator {
     /// rotted pool chunks, demote affected layers) and `registry gc`
     /// (mark-and-sweep untagged images, unreferenced layers, orphaned
     /// chunks). Fleet-wide safety comes from the registry itself: on
-    /// lease-capable remotes scrub and gc each take the **exclusive
-    /// maintenance lease**, draining live pushers in *every* process and
-    /// fencing out expired zombies before anything is deleted — which is
-    /// what makes this safe to run from a cron/`maintain --interval`
-    /// loop while other machines keep pushing.
+    /// lease-capable remotes, scrub takes each shard's **exclusive
+    /// lease round-robin** — one backend dark at a time, never the
+    /// whole pool — while gc holds shard 0's exclusive lease (the
+    /// fleet-wide writer lock) for its full mark-and-sweep. Both drain
+    /// live pushers in *every* process and fence out expired zombies
+    /// before anything is deleted — which is what makes this safe to
+    /// run from a cron/`maintain --interval` loop while other machines
+    /// keep pushing.
     pub fn maintain(&self, remote: &RemoteRegistry) -> Result<MaintenanceReport> {
         let _quiesced = self.quiesce.write().unwrap();
         Ok(MaintenanceReport {
@@ -270,6 +279,23 @@ impl BuildCoordinator {
     /// Per-worker store locks keep one worker's pulls serial (the tag
     /// map is a read-modify-write).
     pub fn warm(&self, remote: &RemoteRegistry, tags: &[String], jobs: usize) -> Result<WarmReport> {
+        self.warm_with_cache(remote, tags, jobs, None)
+    }
+
+    /// [`BuildCoordinator::warm`] with a persistent pull-cache tier: a
+    /// site-local on-disk cache ([`crate::registry::PullCache`]) that
+    /// every pull reads through before touching the origin. Across
+    /// batches (and coordinator restarts — the cache is durable) a
+    /// re-warm serves repeat chunks from local disk; the origin sees
+    /// only the delta. `WarmReport::bytes_from_origin` vs
+    /// `bytes_from_cache` is the measure of how well that worked.
+    pub fn warm_with_cache(
+        &self,
+        remote: &RemoteRegistry,
+        tags: &[String],
+        jobs: usize,
+        pull_cache: Option<crate::registry::PullCache>,
+    ) -> Result<WarmReport> {
         let units = self.workers * tags.len();
         if units == 0 {
             return Ok(WarmReport::default());
@@ -293,6 +319,7 @@ impl BuildCoordinator {
                 &PullOptions {
                     jobs: pull_jobs,
                     fetch_cache: Some(fetch_cache.clone()),
+                    pull_cache: pull_cache.clone(),
                     ..Default::default()
                 },
             )
@@ -304,6 +331,8 @@ impl BuildCoordinator {
             warm.chunks_shared += r.chunks_shared;
             warm.bytes_fetched += r.bytes_fetched;
             warm.bytes_shared += r.bytes_shared;
+            warm.bytes_from_origin += r.bytes_from_origin;
+            warm.bytes_from_cache += r.bytes_from_cache;
         }
         Ok(warm)
     }

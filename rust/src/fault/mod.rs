@@ -65,6 +65,9 @@ pub const SITES: &[&str] = &[
     "registry.push.commit",   // serial phase-3 remote commit writes
     "registry.pull.stage",    // verified chunk landing in pull staging
     "registry.scrub.mark",    // the durable needs-scrub degradation marker
+    "registry.shard.migrate", // rebalance chunk copies + ring descriptor commit
+    "registry.cache.put",     // verified chunk landing in a pull-cache tier
+    "registry.cache.get",     // pull-cache lookup (hit verification read)
     "registry.lease.acquire", // lease grant writes (seq, record, fence)
     "registry.lease.renew",   // the lease heartbeat / commit barrier
     "registry.lease.release", // lease record removal on clean release

@@ -39,11 +39,19 @@ COMMANDS:
                                          mode, --wire-v1 the fixed-chunk v1
                                          manifests, --per-chunk the per-chunk
                                          negotiation of legacy remotes)
-  pull NAME:TAG --remote DIR [--jobs N]  pull from a (directory) registry,
-                                         reconstructing layers from chunks
+  pull NAME:TAG --remote DIR [--jobs N] [--cache DIR [--cache-budget BYTES]]
+                                         pull from a (directory) registry,
+                                         reconstructing layers from chunks.
+                                         --cache reads through a persistent
+                                         on-disk pull cache (LRU-bounded to
+                                         --cache-budget, default 256 MiB):
+                                         chunks hit there never touch the
+                                         origin, and wire fetches are
+                                         written through for the next pull
   registry scrub --remote DIR            re-hash every pool chunk, drop rot,
                                          demote affected layers so the next
-                                         push repairs them
+                                         push repairs them (per-shard
+                                         exclusive leases, round-robin)
   registry untag NAME:TAG --remote DIR   drop a remote tag (what makes an
                                          image collectable by gc)
   registry gc --remote DIR               mark-and-sweep: delete untagged
@@ -55,6 +63,17 @@ COMMANDS:
                                          remotes run it quiesced — an
                                          in-flight push's uncommitted chunks
                                          look like garbage
+  registry shard --count N --remote DIR  re-shard the chunk pool across N
+                                         consistent-hash backends, migrating
+                                         only chunks whose assignment moved;
+                                         idempotent, resumable by re-running
+  registry rebalance --remote DIR        converge backends on the committed
+                                         ring descriptor (finish or roll
+                                         back a crashed re-shard)
+  registry stats --remote DIR [--cache DIR]
+                                         per-shard chunk/byte occupancy and
+                                         the ring balance factor; --cache
+                                         adds a local pull cache's occupancy
   maintain --remote DIR [--workers N] [--interval SECS] [--rounds N]
                                          scheduled maintenance: scrub + gc
                                          under the coordinator's quiesce
@@ -372,7 +391,28 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     if report.whole_tar { ", whole-tar mode" } else { "" },
                 );
             } else {
-                let report = daemon.pull_with(&tag, &remote, &PullOptions { jobs, ..Default::default() })?;
+                let pull_cache = match cli.opt("--cache") {
+                    Some(dir) => {
+                        let budget = cli
+                            .opt("--cache-budget")
+                            .map(|v| {
+                                v.parse::<u64>().map_err(|_| {
+                                    layerjet::Error::msg(format!("pull: bad --cache-budget {v:?}"))
+                                })
+                            })
+                            .transpose()?;
+                        Some(match budget {
+                            Some(b) => layerjet::registry::PullCache::open(&PathBuf::from(&dir), b)?,
+                            None => layerjet::registry::PullCache::open_default(&PathBuf::from(&dir))?,
+                        })
+                    }
+                    None => None,
+                };
+                let report = daemon.pull_with(
+                    &tag,
+                    &remote,
+                    &PullOptions { jobs, pull_cache: pull_cache.clone(), ..Default::default() },
+                )?;
                 println!(
                     "pulled {tag}: image {} ({} layers fetched, {} already local, {} fetched, {} reused from staging)",
                     report.image_id.short(),
@@ -381,11 +421,23 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     layerjet::util::human_bytes(report.bytes_fetched),
                     layerjet::util::human_bytes(report.bytes_local),
                 );
+                if let Some(cache) = &pull_cache {
+                    let s = cache.stats();
+                    println!(
+                        "transfer: {} from origin, {} from pull cache (hit rate {:.0}%, {} resident)",
+                        layerjet::util::human_bytes(report.bytes_from_origin),
+                        layerjet::util::human_bytes(report.bytes_from_cache),
+                        s.hit_rate() * 100.0,
+                        layerjet::util::human_bytes(s.bytes),
+                    );
+                }
             }
         }
         "registry" => {
             let sub = cli.pos().ok_or_else(|| {
-                layerjet::Error::msg("registry: missing subcommand (scrub|untag|gc)")
+                layerjet::Error::msg(
+                    "registry: missing subcommand (scrub|untag|gc|shard|rebalance|stats)",
+                )
             })?;
             let remote_dir = cli
                 .opt("--remote")
@@ -435,9 +487,61 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                         layerjet::util::human_bytes(r.bytes_reclaimed),
                     );
                 }
+                "shard" => {
+                    let count = cli
+                        .opt("--count")
+                        .ok_or_else(|| layerjet::Error::msg("registry shard: missing --count N"))?
+                        .parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg("registry shard: bad --count"))?;
+                    if count == 0 {
+                        return Err(layerjet::Error::msg("registry shard: --count must be >= 1"));
+                    }
+                    let r = remote.shard_to(count)?;
+                    println!(
+                        "sharded pool to {} backend(s): {} of {} chunks migrated ({}), {} stale copies cleaned",
+                        r.shards,
+                        r.chunks_migrated,
+                        r.chunks_scanned,
+                        layerjet::util::human_bytes(r.bytes_migrated),
+                        r.chunks_cleaned,
+                    );
+                }
+                "rebalance" => {
+                    let r = remote.rebalance()?;
+                    println!(
+                        "rebalanced {} backend(s): {} of {} chunks homed ({}), {} stale copies cleaned",
+                        r.shards,
+                        r.chunks_migrated,
+                        r.chunks_scanned,
+                        layerjet::util::human_bytes(r.bytes_migrated),
+                        r.chunks_cleaned,
+                    );
+                }
+                "stats" => {
+                    let (shards, balance) = remote.shard_stats()?;
+                    for s in &shards {
+                        let name = if s.name.is_empty() { "shard-0 (root)" } else { &s.name };
+                        println!(
+                            "{name}: {} chunk(s), {}",
+                            s.chunks,
+                            layerjet::util::human_bytes(s.bytes),
+                        );
+                    }
+                    println!("balance factor: {balance:.2} (max shard bytes / mean; 1.00 = even)");
+                    if let Some(dir) = cli.opt("--cache") {
+                        let cache = layerjet::registry::PullCache::open_default(&PathBuf::from(&dir))?;
+                        let s = cache.stats();
+                        println!(
+                            "pull cache {dir}: {} chunk(s) resident, {} of {} budget",
+                            s.entries,
+                            layerjet::util::human_bytes(s.bytes),
+                            layerjet::util::human_bytes(s.budget),
+                        );
+                    }
+                }
                 other => {
                     return Err(layerjet::Error::msg(format!(
-                        "registry: unknown subcommand {other:?} (scrub|untag|gc)"
+                        "registry: unknown subcommand {other:?} (scrub|untag|gc|shard|rebalance|stats)"
                     )))
                 }
             }

@@ -7,14 +7,21 @@
 //! [`MAX_CHUNK`](super::cdc::MAX_CHUNK) (8 KiB) named by the digest of
 //! their raw bytes (v2 manifests), or fixed 4 KiB chunks named by the
 //! padded engine digest (v1 manifests); the two coexist in one pool.
-//! Two pools use this layout:
+//! Three kinds of pool use this layout:
 //!
-//! * the **remote pool** at `<registry>/chunks/` — the deduplicated blob
-//!   store every pushed layer's manifest points into;
+//! * the **remote pool backends** at `<registry>/chunks/` (shard 0) and
+//!   `<registry>/shard-<k>/chunks/` — the deduplicated blob stores every
+//!   pushed layer's manifest points into. A `ChunkPool` is one backend;
+//!   [`super::ShardedPool`] is the facade that routes each digest to its
+//!   consistent-hash home across them;
 //! * the local **pull staging pool** at
 //!   `<store>/pull-staging/<image-id>/` — chunks fetched by an in-flight
 //!   pull land here first, so an interrupted pull of the same image
 //!   resumes without re-fetching them.
+//!
+//! (The persistent pull-cache tier in [`super::pullcache`] deliberately
+//! does NOT reuse this type: it adds LRU bookkeeping and hit counters a
+//! content-addressed source-of-truth pool must not carry.)
 //!
 //! Writes are write-to-temp-then-rename, so concurrent writers of the
 //! same digest (two pipelined push workers whose layers share a chunk)

@@ -5,7 +5,7 @@
 //! that matters is the half-dead one: a pusher that stalls mid-flight,
 //! outlives everyone's patience, then wakes up and commits over a gc
 //! that already ran. Leases make that impossible with three pieces of
-//! durable state under `<remote>/leases/`:
+//! durable state per lease table:
 //!
 //! ```text
 //! leases/
@@ -15,6 +15,14 @@
 //!   shared-<token>       one live pusher lease (token-named, unique)
 //!   exclusive-<token>    one live maintenance lease
 //! ```
+//!
+//! A sharded remote holds one such table **per shard** (shard 0's at
+//! `<remote>/leases/`, shard k's at `<remote>/shard-<k>/leases/`). This
+//! module is deliberately unaware of sharding — each table is an
+//! independent instance of the protocol below; the registry composes
+//! them (pushers hold every table shared in ascending shard order,
+//! maintenance holds one table exclusive — see the registry module
+//! doc's lease section).
 //!
 //! * **Shared** leases (push) coexist with each other; **exclusive**
 //!   leases (scrub/gc/maintain) require the table empty. Acquisition

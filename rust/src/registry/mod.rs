@@ -15,26 +15,74 @@
 //! The chunk-addressed remote layout is
 //!
 //! ```text
-//! <root>/chunks/<chunk-digest>        — deduplicated chunk blob pool
+//! <root>/shards.json                  — shard-ring descriptor ([`shard`]; absent = 1 shard)
+//! <root>/chunks/<chunk-digest>        — shard 0 of the deduplicated chunk blob pool
+//! <root>/leases/                      — shard 0 of the multi-writer lease table ([`lease`])
+//! <root>/shard-<k>/chunks/            — shard k chunk backend (k ≥ 1)
+//! <root>/shard-<k>/leases/            — shard k lease table
 //! <root>/layers/<layer-id>/checksum   — the immutable checksum trace
 //! <root>/layers/<layer-id>/layer.chunks — per-layer chunk manifest
 //! <root>/images/<image-id>.json
 //! <root>/tags.json
-//! <root>/leases/                      — multi-writer lease table ([`lease`])
 //! ```
 //!
 //! A layer is represented remotely by its **chunk manifest** plus the
 //! pool blobs the manifest points into. Push **negotiates**: per layer
 //! it asks the pool "which of these digests have you got?" in one
-//! batched round-trip ([`ChunkPool::has_batch`]; O(layers) round-trips
+//! batched round-trip ([`ShardedPool::has_batch`]; O(layers) round-trips
 //! total — [`PushOptions::negotiate_per_chunk`] keeps the per-chunk
 //! probe loop for legacy remotes without the batch endpoint) and
 //! streams only the novel chunks — so a clone-inject redeploy whose
 //! COPY layer differs by one edit uploads O(changed chunks) bytes
 //! instead of O(layer). Pull reassembles each layer tar from the
 //! manifest, preferring the local staging pool (chunks fetched by a
-//! previously interrupted pull) over the wire, and verifies every
-//! transferred chunk against its declared digest before committing it.
+//! previously interrupted pull), then the persistent pull-cache tier
+//! (if the puller opened one — see below), then the wire, and verifies
+//! every transferred chunk against its declared digest before
+//! committing it.
+//!
+//! ## Sharded chunk pool
+//!
+//! The pool is split **by digest** across N backend roots with
+//! consistent hashing ([`shard::ShardRing`]): each chunk digest maps
+//! deterministically to one backend, so pool traffic, occupancy, and
+//! maintenance scale by adding shards instead of growing one
+//! directory. The ring membership is the durable descriptor
+//! `<root>/shards.json` —
+//!
+//! ```json
+//! { "version": 1, "shards": ["", "shard-1", "shard-2"] }
+//! ```
+//!
+//! — each member naming a shard's directory prefix under the registry
+//! root (`""` = the root itself: shard 0 is the pre-shard `chunks/` +
+//! `leases/`, so every unsharded or legacy remote is exactly a
+//! one-shard ring and needs no migration). The descriptor commits
+//! atomically under the `registry.shard.migrate` fault site, and a
+//! **rebalance** ([`RemoteRegistry::shard_to`] /
+//! [`RemoteRegistry::rebalance`]) converges the on-disk pool to a new
+//! ring in three idempotent passes (copy chunks home → commit
+//! descriptor → clean stale copies): consistent hashing means growing
+//! the ring migrates only the keyspace the new shards capture, and a
+//! crash at any durable step re-runs to a bit-identical tree (see
+//! [`shard`] for the full algorithm and crash analysis).
+//!
+//! ## Pull-cache tier
+//!
+//! [`PullOptions::pull_cache`] names an on-disk, LRU-bounded,
+//! content-verified chunk cache ([`pullcache::PullCache`]) that an
+//! *edge* daemon opens in front of origin. Pull resolves each chunk
+//! staging → cache → shared in-memory fetch ([`ChunkFetchCache`]) →
+//! wire, and every verified wire fetch is written through to the cache
+//! — so repeated pulls of overlapping hot tags are absorbed at the
+//! edge and [`PullReport::bytes_from_origin`] collapses while
+//! [`PullReport::bytes_from_cache`] grows. **Consistency rule**: the
+//! cache holds copies, never authority. Every hit is re-verified
+//! against the requested digest and a mismatching copy (rot, or a
+//! stale copy of content origin has since scrubbed and repaired) is
+//! invalidated on the spot and refetched from origin; content a gc
+//! removed at origin is unreferenced by any live manifest and simply
+//! ages out of the cache via LRU. Origin never tracks cache copies.
 //!
 //! ## Manifest codecs
 //!
@@ -148,24 +196,42 @@
 //!   **demoted** (checksum trace removed) so the next push of any image
 //!   containing them re-uploads just the missing chunks instead of
 //!   trusting `has()` forever — rot is repaired by routine redeploys.
+//!   On a sharded pool the scrub runs **round-robin**: one shard's
+//!   exclusive lease at a time, so a long scrub of one shard never
+//!   blocks pushes landing on the others (see lease scoping below).
 //! * [`RemoteRegistry::gc`] mark-and-sweeps from `tags.json`: untagged
 //!   image configs, their unreferenced layer dirs, and pool chunks no
-//!   surviving manifest references are deleted. Writer exclusion (a
-//!   concurrent push's not-yet-committed chunks look like garbage) comes
-//!   from the exclusive lease below, fleet-wide.
+//!   surviving manifest references are deleted — across **every** shard
+//!   backend, under global writer exclusion for its whole duration (a
+//!   concurrent push's not-yet-committed chunks look like garbage, and
+//!   a push completing between mark and sweep would commit chunks the
+//!   mark never saw).
 //!
-//! # Multi-writer leases
+//! # Multi-writer leases (per-shard scoping)
 //!
 //! Any number of processes may push one remote concurrently while
-//! scrub/gc stay safe, via durable lease files under `<root>/leases/`
-//! (protocol and on-disk layout in [`lease`]):
+//! scrub/gc stay safe, via durable lease files (protocol and on-disk
+//! layout in [`lease`]). The lease table shards exactly like the pool:
+//! shard k's table lives beside shard k's chunks, and leases scope to
+//! the shard they guard.
 //!
-//! * **Shared leases** — every push holds one for its duration. They
-//!   coexist freely; acquisition waits only for a live exclusive lease.
-//! * **Exclusive leases** — [`RemoteRegistry::scrub`] and
-//!   [`RemoteRegistry::gc`] (and therefore `maintain`) hold one. They
-//!   wait for live shared leases to drain, so maintenance never sees a
-//!   half-pushed image from a *live* pusher.
+//! * **Shared leases** — every push acquires one on **every** shard's
+//!   table, in ascending shard order (the fixed order makes deadlock
+//!   impossible: no holder ever waits on a table while another holder
+//!   waits, in turn, on a table the first already holds). They coexist
+//!   freely; acquisition waits only for a live exclusive lease on that
+//!   table.
+//! * **Exclusive leases** — scoped to **one shard's** table. Because
+//!   every pusher holds all shards shared, holding any single shard's
+//!   exclusive lease excludes all pushers — which is what makes the
+//!   round-robin scrub safe while bounding a pusher's wait to one
+//!   shard's pass instead of the whole pool's. Operations that need
+//!   global, full-duration writer exclusion ([`RemoteRegistry::gc`],
+//!   rebalance — which also rewrites the ring descriptor) hold shard
+//!   0's exclusive lease throughout: shard 0 always exists, so its
+//!   table doubles as the ring-membership lock. Exclusive acquisition
+//!   waits for live shared leases on that table to drain, so
+//!   maintenance never sees a half-pushed image from a *live* pusher.
 //! * **Fencing tokens** — every grant carries a monotonic token; an
 //!   exclusive grant raises the `fence` to its own token. Push validates
 //!   its token during the heavy stage and **renews at the commit
@@ -182,10 +248,14 @@
 pub mod cdc;
 pub mod chunkpool;
 pub mod lease;
+pub mod pullcache;
+pub mod shard;
 
 pub use cdc::CdcManifest;
 pub use chunkpool::ChunkPool;
 pub use lease::{Lease, LeaseConfig, LeaseKind};
+pub use pullcache::{PullCache, PullCacheStats};
+pub use shard::{RebalanceReport, ShardRing, ShardStats, ShardedPool};
 
 use crate::builder::parallel::scoped_index_map;
 use crate::hash::{ChunkDigest, Digest, HashEngine, NativeEngine, CHUNK_SIZE};
@@ -258,6 +328,12 @@ pub struct PullOptions {
     /// puller leads the fetch, the rest adopt the bytes in memory. See
     /// [`ChunkFetchCache`].
     pub fetch_cache: Option<ChunkFetchCache>,
+    /// Optional persistent pull-cache tier ([`PullCache`]): chunks are
+    /// resolved from it before the wire, and verified wire fetches are
+    /// written through — repeated pulls of hot tags are absorbed at the
+    /// edge ([`PullReport::bytes_from_cache`] vs
+    /// [`PullReport::bytes_from_origin`]).
+    pub pull_cache: Option<PullCache>,
     /// Retry budget for transient chunk-fetch faults; spent retries
     /// surface as [`PullReport::retries`].
     pub retry: crate::fault::RetryPolicy,
@@ -268,24 +344,51 @@ impl Default for PullOptions {
         PullOptions {
             jobs: 1,
             fetch_cache: None,
+            pull_cache: None,
             retry: crate::fault::RetryPolicy::default(),
         }
     }
 }
 
+/// Default byte budget for a [`ChunkFetchCache`]: bounds the resident
+/// payload of a `warm()` fan-out (it used to retain every published
+/// chunk for its whole lifetime) while still covering several images'
+/// worth of hot chunks.
+pub const FETCH_CACHE_BUDGET: u64 = 256 * 1024 * 1024;
+
 /// A single-flight, in-memory chunk-fetch cache shared by concurrent
 /// pulls into *different* stores (per-worker daemons warming the same
 /// tags): keyed by the chunk's wire address, the first requester fetches
 /// from the remote pool, everyone else adopts the fetched bytes. Scoped
-/// to one warm-up batch — drop it to release the memory.
-#[derive(Clone, Default)]
+/// to one warm-up batch — drop it to release the memory. Resident
+/// payload is LRU-bounded by a byte budget ([`FETCH_CACHE_BUDGET`] by
+/// default, [`ChunkFetchCache::with_budget`] to size it): eviction only
+/// costs dedup (the next requester re-fetches), never correctness.
+#[derive(Clone)]
 pub struct ChunkFetchCache {
     inner: std::sync::Arc<crate::builder::sched::Flight<Vec<u8>>>,
+}
+
+impl Default for ChunkFetchCache {
+    fn default() -> Self {
+        ChunkFetchCache::with_budget(FETCH_CACHE_BUDGET)
+    }
 }
 
 impl ChunkFetchCache {
     pub fn new() -> ChunkFetchCache {
         ChunkFetchCache::default()
+    }
+
+    /// A cache whose retained chunk bytes never exceed `budget` (entry
+    /// count stays bounded by the flight table's default capacity).
+    pub fn with_budget(budget: u64) -> ChunkFetchCache {
+        ChunkFetchCache {
+            inner: std::sync::Arc::new(crate::builder::sched::Flight::with_budget(
+                crate::builder::sched::DEFAULT_RETAINED,
+                budget,
+            )),
+        }
     }
 
     /// Fetch-once: returns the chunk bytes plus whether they were
@@ -303,7 +406,12 @@ impl ChunkFetchCache {
             Join::Done(bytes) => Ok((bytes.as_ref().clone(), true)),
             Join::Lead => match fetch() {
                 Ok(bytes) => {
-                    self.inner.publish(digest, std::sync::Arc::new(bytes.clone()));
+                    let weight = bytes.len() as u64;
+                    self.inner.publish_weighted(
+                        digest,
+                        std::sync::Arc::new(bytes.clone()),
+                        weight,
+                    );
                     Ok((bytes, false))
                 }
                 Err(e) => {
@@ -377,6 +485,16 @@ pub struct PullReport {
     pub chunks_shared: usize,
     /// Bytes those shared chunks would otherwise have re-fetched.
     pub bytes_shared: u64,
+    /// Chunks served by the persistent pull-cache tier
+    /// ([`PullOptions::pull_cache`]) instead of origin.
+    pub chunks_from_cache: usize,
+    /// Bytes the pull-cache tier served.
+    pub bytes_from_cache: u64,
+    /// Bytes that actually crossed the origin registry: wire chunk
+    /// fetches plus whole-tar reads (degraded or legacy layers). The
+    /// headline planet-scale metric — with a warm pull cache this
+    /// collapses while total pulled bytes stay constant.
+    pub bytes_from_origin: u64,
     /// Transient-fault retries spent under [`PullOptions::retry`].
     pub retries: u64,
     /// Layers that fell back to the remote's whole tar because their
@@ -473,6 +591,10 @@ struct ChunkStats {
     chunks_local: usize,
     chunks_shared: usize,
     bytes_shared: u64,
+    chunks_from_cache: usize,
+    bytes_from_cache: u64,
+    /// Bytes that crossed origin (wire chunks + whole-tar reads).
+    bytes_from_origin: u64,
     /// Transient-fault retries spent fetching this layer's chunks.
     retries: u64,
     /// Fell back to the remote's whole tar (corrupt chunks).
@@ -494,6 +616,42 @@ enum ChunkSource {
     Wire,
     /// Another concurrent pull's fetch, via a shared [`ChunkFetchCache`].
     Shared,
+    /// The persistent pull-cache tier ([`PullOptions::pull_cache`]).
+    Cached,
+}
+
+/// The shared leases one push holds: one per shard lease table,
+/// acquired in ascending shard order (module doc: "Multi-writer
+/// leases"). Validation, renewal and release fan out to every member —
+/// a pusher is live only while it is live on *all* shards, so any
+/// single shard's exclusive grant fences it everywhere.
+struct ShardLeases {
+    leases: Vec<lease::Lease>,
+}
+
+impl ShardLeases {
+    /// Fencing check across every shard's table.
+    fn validate(&self) -> Result<()> {
+        for lease in &self.leases {
+            lease.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Commit-barrier heartbeat across every shard's table.
+    fn renew(&mut self) -> Result<()> {
+        for lease in &mut self.leases {
+            lease.renew()?;
+        }
+        Ok(())
+    }
+
+    fn release(self) -> Result<()> {
+        for lease in self.leases {
+            lease.release()?;
+        }
+        Ok(())
+    }
 }
 
 /// An in-process remote registry backed by a directory (layout and
@@ -570,12 +728,18 @@ impl RemoteRegistry {
     pub fn recover(&self) -> Result<RegistryRecovery> {
         let mut report = RegistryRecovery::default();
         report.tmp_swept += crate::store::sweep_tmp_files(&self.root);
-        report.tmp_swept += crate::store::sweep_tmp_files(&self.chunk_pool_dir());
         report.tmp_swept += crate::store::sweep_tmp_files(&self.root.join("images"));
-        let lease_dir = self.root.join(lease::LEASE_DIR);
-        if lease_dir.is_dir() {
-            report.tmp_swept += crate::store::sweep_tmp_files(&lease_dir);
-            report.leases_reclaimed += lease::sweep_expired(&lease_dir, &self.lease_config)?;
+        // Every shard's chunk backend and lease table (shard 0 is the
+        // root's own `chunks/` + `leases/`; a one-shard ring on
+        // unsharded remotes makes this the pre-shard sweep exactly).
+        let ring = ShardRing::load(&self.root).unwrap_or_else(|_| ShardRing::single());
+        for k in 0..ring.shard_count() {
+            report.tmp_swept += crate::store::sweep_tmp_files(&ring.chunk_dir(&self.root, k));
+            let lease_dir = ring.lease_dir(&self.root, k);
+            if lease_dir.is_dir() {
+                report.tmp_swept += crate::store::sweep_tmp_files(&lease_dir);
+                report.leases_reclaimed += lease::sweep_expired(&lease_dir, &self.lease_config)?;
+            }
         }
         if let Ok(entries) = std::fs::read_dir(self.root.join("layers")) {
             for entry in entries.flatten() {
@@ -607,7 +771,7 @@ impl RemoteRegistry {
                 // nothing usable remains.
                 let pool = self
                     .supports_chunks()
-                    .then(|| ChunkPool::at(&self.chunk_pool_dir()));
+                    .then(|| ShardedPool::at(&self.root, &ring));
                 let mut usable = 0;
                 if let Ok(files) = std::fs::read_dir(&dir) {
                     for f in files.flatten() {
@@ -665,27 +829,36 @@ impl RemoteRegistry {
         self.root.join(lease::LEASE_DIR).is_dir()
     }
 
-    /// Take a shared (pusher) lease, or `None` on lease-unaware remotes.
-    fn lease_shared(&self) -> Result<Option<lease::Lease>> {
+    /// Take shared (pusher) leases on **every** shard's table in
+    /// ascending shard order, or `None` on lease-unaware remotes. The
+    /// fixed order is the deadlock-freedom argument of the module doc;
+    /// holding all shards is what lets a single shard's exclusive lease
+    /// exclude every pusher.
+    fn lease_shared(&self, ring: &ShardRing) -> Result<Option<ShardLeases>> {
         if !self.supports_leases() {
             return Ok(None);
         }
-        lease::acquire(
-            &self.root.join(lease::LEASE_DIR),
-            lease::LeaseKind::Shared,
-            &self.lease_config,
-        )
-        .map(Some)
+        let mut leases = Vec::with_capacity(ring.shard_count());
+        for k in 0..ring.shard_count() {
+            leases.push(lease::acquire(
+                &ring.lease_dir(&self.root, k),
+                lease::LeaseKind::Shared,
+                &self.lease_config,
+            )?);
+        }
+        Ok(Some(ShardLeases { leases }))
     }
 
-    /// Take the exclusive (maintenance) lease, or `None` on
-    /// lease-unaware remotes.
-    fn lease_exclusive(&self) -> Result<Option<lease::Lease>> {
+    /// Take the exclusive (maintenance) lease on **one shard's** table,
+    /// or `None` on lease-unaware remotes. Shard 0 for operations that
+    /// need global writer exclusion; shard k for that shard's
+    /// round-robin scrub pass.
+    fn lease_exclusive_on(&self, ring: &ShardRing, k: usize) -> Result<Option<lease::Lease>> {
         if !self.supports_leases() {
             return Ok(None);
         }
         lease::acquire(
-            &self.root.join(lease::LEASE_DIR),
+            &ring.lease_dir(&self.root, k),
             lease::LeaseKind::Exclusive,
             &self.lease_config,
         )
@@ -709,6 +882,27 @@ impl RemoteRegistry {
                 if let Some(lease) = lease {
                     if !crate::fault::error_is_crash(&e) {
                         let _ = lease.release();
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// [`RemoteRegistry::settle_lease`], for the per-shard shared lease
+    /// set a push holds.
+    fn settle_shared<T>(leases: Option<ShardLeases>, result: Result<T>) -> Result<T> {
+        match result {
+            Ok(v) => {
+                if let Some(leases) = leases {
+                    leases.release()?;
+                }
+                Ok(v)
+            }
+            Err(e) => {
+                if let Some(leases) = leases {
+                    if !crate::fault::error_is_crash(&e) {
+                        let _ = leases.release();
                     }
                 }
                 Err(e)
@@ -779,11 +973,13 @@ impl RemoteRegistry {
         engine: &dyn HashEngine,
         opts: &PushOptions,
     ) -> Result<PushReport> {
-        let mut lease = self.lease_shared()?;
-        let result = self.push_locked(r, images, layers, engine, opts, lease.as_mut());
-        Self::settle_lease(lease, result)
+        let ring = ShardRing::load(&self.root)?;
+        let mut lease = self.lease_shared(&ring)?;
+        let result = self.push_locked(r, images, layers, engine, opts, &ring, lease.as_mut());
+        Self::settle_shared(lease, result)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn push_locked(
         &self,
         r: &ImageRef,
@@ -791,7 +987,8 @@ impl RemoteRegistry {
         layers: &LayerStore,
         engine: &dyn HashEngine,
         opts: &PushOptions,
-        mut lease: Option<&mut lease::Lease>,
+        ring: &ShardRing,
+        mut lease: Option<&mut ShardLeases>,
     ) -> Result<PushReport> {
         let (image_id, image) = images.get_by_ref(r)?;
         let chunked = !opts.whole_tar && self.supports_chunks();
@@ -830,7 +1027,7 @@ impl RemoteRegistry {
         // novel chunks into the pool. Pool writes are content-addressed
         // and idempotent, so they may land before the commit barrier.
         let pool = if chunked {
-            Some(ChunkPool::open(&self.chunk_pool_dir())?)
+            Some(ShardedPool::open(&self.root, ring)?)
         } else {
             None
         };
@@ -866,7 +1063,7 @@ impl RemoteRegistry {
         let claimed: Mutex<HashSet<Digest>> = Mutex::new(HashSet::new());
         let round_trips = std::sync::atomic::AtomicUsize::new(0);
         let retry_count = std::sync::atomic::AtomicU64::new(0);
-        let lease_view: Option<&lease::Lease> = lease.as_deref();
+        let lease_view: Option<&ShardLeases> = lease.as_deref();
         let uploaded: Vec<LayerUpload> = scoped_index_map(uploads.len(), opts.jobs, |slot| {
             let i = uploads[slot];
             let lid = &image.layer_ids[i];
@@ -1181,7 +1378,7 @@ impl RemoteRegistry {
             .ok_or_else(|| Error::Registry(format!("remote has no tag {r}")))?;
         let image = self.load_image(&image_id)?;
 
-        let pool = ChunkPool::at(&self.chunk_pool_dir());
+        let pool = ShardedPool::at(&self.root, &ShardRing::load(&self.root)?);
         // Staging is keyed by image id: a resumed pull of the same image
         // finds its chunks, while concurrent pulls of other images into
         // the same store never share (or delete) each other's staging.
@@ -1203,6 +1400,7 @@ impl RemoteRegistry {
                 &staging,
                 verify_jobs,
                 opts.fetch_cache.as_ref(),
+                opts.pull_cache.as_ref(),
                 &opts.retry,
             )
         })?;
@@ -1220,6 +1418,9 @@ impl RemoteRegistry {
             chunks_local: 0,
             chunks_shared: 0,
             bytes_shared: 0,
+            chunks_from_cache: 0,
+            bytes_from_cache: 0,
+            bytes_from_origin: 0,
             retries: 0,
             layers_degraded: 0,
         };
@@ -1234,6 +1435,9 @@ impl RemoteRegistry {
                     report.chunks_local += s.chunks_local;
                     report.chunks_shared += s.chunks_shared;
                     report.bytes_shared += s.bytes_shared;
+                    report.chunks_from_cache += s.chunks_from_cache;
+                    report.bytes_from_cache += s.bytes_from_cache;
+                    report.bytes_from_origin += s.bytes_from_origin;
                     report.retries += s.retries;
                     report.layers_degraded += s.degraded as usize;
                 }
@@ -1254,10 +1458,11 @@ impl RemoteRegistry {
         i: usize,
         layers: &LayerStore,
         engine: &dyn HashEngine,
-        pool: &ChunkPool,
+        pool: &ShardedPool,
         staging: &ChunkPool,
         verify_jobs: usize,
         fetch_cache: Option<&ChunkFetchCache>,
+        pull_cache: Option<&PullCache>,
         retry: &crate::fault::RetryPolicy,
     ) -> Result<LayerPull> {
         let lid = image.layer_ids[i];
@@ -1304,6 +1509,7 @@ impl RemoteRegistry {
                     staging,
                     &mut stats,
                     fetch_cache,
+                    pull_cache,
                     retry,
                     &|slices: &[&[u8]]| cdc::digest_slices(slices, verify_jobs),
                 )?;
@@ -1353,6 +1559,7 @@ impl RemoteRegistry {
                     staging,
                     &mut stats,
                     fetch_cache,
+                    pull_cache,
                     retry,
                     &|slices: &[&[u8]]| engine.hash_chunks(slices),
                 )?;
@@ -1384,6 +1591,7 @@ impl RemoteRegistry {
                 stats.degraded = true;
                 let tar = std::fs::read(&tar_path)?;
                 stats.bytes_fetched += tar.len() as u64;
+                stats.bytes_from_origin += tar.len() as u64;
                 let cd = ChunkDigest::compute(&tar, engine);
                 (tar, cd)
             }
@@ -1393,6 +1601,7 @@ impl RemoteRegistry {
                     Error::Registry(format!("remote layer {} missing: {e}", lid.short()))
                 })?;
                 stats.bytes_fetched += tar.len() as u64;
+                stats.bytes_from_origin += tar.len() as u64;
                 let cd = ChunkDigest::compute(&tar, engine);
                 (tar, cd)
             }
@@ -1453,27 +1662,58 @@ impl RemoteRegistry {
     /// pool addressing scheme: SHA-256 of the raw bytes (v2) or the
     /// padded engine digest (v1, chunks ≤ 4 KiB only).
     ///
-    /// Runs under the exclusive maintenance lease on lease-capable
-    /// remotes: live pushers drain first, and every expired zombie is
-    /// fenced out before the pool is touched.
+    /// On lease-capable remotes, scrub takes the shards' exclusive
+    /// leases **round-robin** — one shard's backend is re-hashed under
+    /// that shard's lease alone, then released before the next pass —
+    /// so pushers (who need every shard shared) drain once per pass
+    /// instead of the whole pool going dark for the full scan. Scrub
+    /// only deletes provably-rotted bytes, so passes tolerate pushes
+    /// landing between them; the final demotion pass re-checks the
+    /// pool under shard 0's lease before touching any checksum trace.
     pub fn scrub(&self) -> Result<ScrubReport> {
-        let lease = self.lease_exclusive()?;
-        let result = self.scrub_locked(lease.as_ref());
-        Self::settle_lease(lease, result)
-    }
-
-    fn scrub_locked(&self, lease: Option<&lease::Lease>) -> Result<ScrubReport> {
         let mut report = ScrubReport::default();
         if !self.supports_chunks() {
             return Ok(report);
         }
+        let ring = ShardRing::load(&self.root)?;
+        let mut dropped: HashSet<Digest> = HashSet::new();
+        for k in 0..ring.shard_count() {
+            let lease = self.lease_exclusive_on(&ring, k)?;
+            let result = self.scrub_shard(&ring, k, lease.as_ref(), &mut report, &mut dropped);
+            Self::settle_lease(lease, result)?;
+        }
+        // Every shard was scanned: clear any pending degradation
+        // marker, whether or not anything needed dropping.
+        let _ = std::fs::remove_file(self.root.join("needs-scrub"));
+        if dropped.is_empty() {
+            return Ok(report);
+        }
+        // Demote every layer whose manifest references a dropped chunk:
+        // with the checksum trace gone, push's phase-1 negotiation sees
+        // the layer as missing and re-commits it instead of skipping.
+        // Shard 0's exclusive lease excludes pushers fleet-wide here.
+        let lease = self.lease_exclusive_on(&ring, 0)?;
+        let result = self.demote_poisoned(&ring, lease.as_ref(), &mut report, &dropped);
+        Self::settle_lease(lease, result)?;
+        Ok(report)
+    }
+
+    /// One round-robin scrub pass: re-hash every chunk on shard `k`'s
+    /// backend and delete the rotted ones, recording their digests.
+    fn scrub_shard(
+        &self,
+        ring: &ShardRing,
+        k: usize,
+        lease: Option<&lease::Lease>,
+        report: &mut ScrubReport,
+        dropped: &mut HashSet<Digest>,
+    ) -> Result<()> {
         // Fencing check: this grant must still be the table's newest
         // exclusive token before anything is deleted.
         if let Some(lease) = lease {
             lease.validate()?;
         }
-        let pool = ChunkPool::at(&self.chunk_pool_dir());
-        let mut dropped: HashSet<Digest> = HashSet::new();
+        let pool = ChunkPool::at(&ring.chunk_dir(&self.root, k));
         for digest in pool.list()? {
             let Some(bytes) = pool.try_get(&digest) else {
                 continue;
@@ -1488,29 +1728,41 @@ impl RemoteRegistry {
                 dropped.insert(digest);
             }
         }
-        // The scrub ran to completion: clear any pending degradation
-        // marker, whether or not anything needed dropping.
-        let _ = std::fs::remove_file(self.root.join("needs-scrub"));
-        if dropped.is_empty() {
-            return Ok(report);
+        Ok(())
+    }
+
+    /// Scrub's final pass: strip the checksum trace from layers whose
+    /// manifests reference dropped chunks. A push may have re-uploaded
+    /// a dropped chunk between the round-robin passes and this one, so
+    /// only digests **still absent** from the pool poison a layer —
+    /// demoting a freshly-repaired layer would force a pointless
+    /// re-commit on its next push.
+    fn demote_poisoned(
+        &self,
+        ring: &ShardRing,
+        lease: Option<&lease::Lease>,
+        report: &mut ScrubReport,
+        dropped: &HashSet<Digest>,
+    ) -> Result<()> {
+        if let Some(lease) = lease {
+            lease.validate()?;
         }
-        // Demote every layer whose manifest references a dropped chunk:
-        // with the checksum trace gone, push's phase-1 negotiation sees
-        // the layer as missing and re-commits it instead of skipping.
+        let pool = ShardedPool::at(&self.root, ring);
         for lid in self.list_layer_dirs()? {
             let Some(manifest) = self.layer_manifest(&lid) else {
                 continue;
             };
+            let gone = |d: &Digest| dropped.contains(d) && !pool.has(d);
             let poisoned = match &manifest {
-                LayerManifest::V2(m) => m.chunks.iter().any(|(d, _)| dropped.contains(d)),
-                LayerManifest::V1(cd) => cd.chunks.iter().any(|d| dropped.contains(d)),
+                LayerManifest::V2(m) => m.chunks.iter().any(|(d, _)| gone(d)),
+                LayerManifest::V1(cd) => cd.chunks.iter().any(gone),
             };
             if poisoned && self.layer_dir(&lid).join("checksum").exists() {
                 std::fs::remove_file(self.layer_dir(&lid).join("checksum"))?;
                 report.layers_demoted += 1;
             }
         }
-        Ok(report)
+        Ok(())
     }
 
     /// Mark-and-sweep over the per-layer manifests: delete image configs
@@ -1529,12 +1781,19 @@ impl RemoteRegistry {
     /// data loss) — repair via [`RemoteRegistry::scrub`] + re-push
     /// first.
     pub fn gc(&self) -> Result<GcReport> {
-        let lease = self.lease_exclusive()?;
-        let result = self.gc_locked(lease.as_ref());
+        // Shard 0's exclusive lease is the fleet-wide writer lock
+        // (pushers take shared on every shard, ascending, so shard 0 is
+        // in every pusher's set). Unlike scrub, gc holds it for the
+        // WHOLE mark-and-sweep: a push landing between mark and sweep
+        // could commit manifests referencing chunks the sweep is about
+        // to delete.
+        let ring = ShardRing::load(&self.root)?;
+        let lease = self.lease_exclusive_on(&ring, 0)?;
+        let result = self.gc_locked(&ring, lease.as_ref());
         Self::settle_lease(lease, result)
     }
 
-    fn gc_locked(&self, lease: Option<&lease::Lease>) -> Result<GcReport> {
+    fn gc_locked(&self, ring: &ShardRing, lease: Option<&lease::Lease>) -> Result<GcReport> {
         if let Some(lease) = lease {
             lease.validate()?;
         }
@@ -1577,20 +1836,64 @@ impl RemoteRegistry {
                 }
             }
         }
-        // Sweep the pool.
+        // Sweep every shard backend. Each backend is swept against the
+        // same live set: a live chunk parked on the wrong shard (e.g.
+        // mid-rebalance) survives here and is cleaned — or homed — by
+        // the rebalance clean pass instead.
         if self.supports_chunks() {
-            let pool = ChunkPool::at(&self.chunk_pool_dir());
-            for digest in pool.list()? {
-                if !live_chunks.contains(&digest) {
-                    if let Some(bytes) = pool.try_get(&digest) {
-                        report.bytes_reclaimed += bytes.len() as u64;
+            let pool = ShardedPool::at(&self.root, ring);
+            for backend in pool.backends() {
+                for digest in backend.list()? {
+                    if !live_chunks.contains(&digest) {
+                        if let Some(bytes) = backend.try_get(&digest) {
+                            report.bytes_reclaimed += bytes.len() as u64;
+                        }
+                        backend.remove(&digest)?;
+                        report.chunks_dropped += 1;
                     }
-                    pool.remove(&digest)?;
-                    report.chunks_dropped += 1;
                 }
             }
         }
         Ok(report)
+    }
+
+    /// The committed shard ring descriptor (single-shard when none has
+    /// ever been committed — the pre-shard legacy layout).
+    pub fn shard_ring(&self) -> Result<ShardRing> {
+        ShardRing::load(&self.root)
+    }
+
+    /// Re-shard the pool to `count` backends, migrating only the
+    /// chunks whose consistent-hash assignment changed. Runs under
+    /// shard 0's exclusive lease of the **current** ring — the
+    /// ring-membership lock — so no pusher commits against a
+    /// half-migrated descriptor. Idempotent: a crashed call is resumed
+    /// by simply re-running it (the migration plan is recomputed from
+    /// on-disk backend state, not from what the last attempt managed).
+    pub fn shard_to(&self, count: usize) -> Result<RebalanceReport> {
+        let current = ShardRing::load(&self.root)?;
+        let lease = self.lease_exclusive_on(&current, 0)?;
+        let result = shard::rebalance_to(&self.root, &ShardRing::with_shards(count));
+        Self::settle_lease(lease, result)
+    }
+
+    /// Converge the backends on the **committed** descriptor: homes
+    /// every misplaced chunk and cleans stale copies and stranded
+    /// shard trees. After a crash mid-`shard_to`, this either finishes
+    /// the migration (descriptor already flipped) or rolls the
+    /// backends cleanly back to the old ring (it never flipped).
+    pub fn rebalance(&self) -> Result<RebalanceReport> {
+        let current = ShardRing::load(&self.root)?;
+        let lease = self.lease_exclusive_on(&current, 0)?;
+        let result = shard::rebalance_to(&self.root, &current);
+        Self::settle_lease(lease, result)
+    }
+
+    /// Per-shard chunk/byte occupancy plus the balance factor (max
+    /// shard bytes over mean shard bytes; 1.0 is perfectly even).
+    pub fn shard_stats(&self) -> Result<(Vec<ShardStats>, f64)> {
+        let ring = ShardRing::load(&self.root)?;
+        shard::shard_stats(&ShardedPool::at(&self.root, &ring))
     }
 
     /// Every layer id with a directory on this remote.
@@ -1674,7 +1977,7 @@ fn decode_manifest(bytes: &[u8]) -> Option<LayerManifest> {
 /// The resumability test shared by push's journal resume scan and
 /// recovery's journal validation: entries whose chunks a scrub/gc has
 /// collected are dead weight, not resume candidates.
-fn manifest_chunks_pooled(pool: &ChunkPool, encoded: &[u8]) -> bool {
+fn manifest_chunks_pooled(pool: &ShardedPool, encoded: &[u8]) -> bool {
     match decode_manifest(encoded) {
         Some(LayerManifest::V2(m)) => {
             let digests: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
@@ -1685,21 +1988,25 @@ fn manifest_chunks_pooled(pool: &ChunkPool, encoded: &[u8]) -> bool {
     }
 }
 
-/// Resolve every expected chunk to VERIFIED bytes, preferring the local
-/// staging pool over the wire. Staged bytes are as untrusted as wire
-/// bytes — a crashed pull can commit a torn write into staging — so both
-/// sources go through `hash_batch` (the codec's addressing scheme), and
-/// a poisoned staging entry is dropped and re-fetched rather than
-/// wedging every future pull of this image. Wire-fetched chunks are
-/// staged once they verify, so an interrupted pull resumes for free.
+/// Resolve every expected chunk to VERIFIED bytes, walking the tier
+/// order cheapest-first: staging → persistent pull cache → in-process
+/// fetch cache → origin wire. Staged and cached bytes are as untrusted
+/// as wire bytes — a crashed pull can commit a torn write into staging —
+/// so every source goes through `hash_batch` (the codec's addressing
+/// scheme), and a poisoned staging or cache entry is dropped and
+/// re-fetched rather than wedging every future pull of this image.
+/// Wire-fetched chunks are staged and written through to the pull cache
+/// once they verify, so an interrupted pull resumes for free and the
+/// next cold puller never touches the origin for them.
 #[allow(clippy::too_many_arguments)]
 fn resolve_chunks(
     lid: &LayerId,
     expected: &[Digest],
-    pool: &ChunkPool,
+    pool: &ShardedPool,
     staging: &ChunkPool,
     stats: &mut ChunkStats,
     fetch_cache: Option<&ChunkFetchCache>,
+    pull_cache: Option<&PullCache>,
     retry: &crate::fault::RetryPolicy,
     hash_batch: &dyn Fn(&[&[u8]]) -> Vec<Digest>,
 ) -> Result<Vec<Vec<u8>>> {
@@ -1721,22 +2028,33 @@ fn resolve_chunks(
                 chunk_bytes.push(bytes);
                 source.push(ChunkSource::Staged);
             }
-            None => match fetch_cache {
-                Some(cache) => {
-                    let (bytes, shared) =
-                        cache.get_or_fetch(chunk_digest, || fetch(chunk_digest))?;
-                    chunk_bytes.push(bytes);
-                    source.push(if shared {
-                        ChunkSource::Shared
-                    } else {
-                        ChunkSource::Wire
-                    });
+            None => {
+                // Persistent cache tier: a verified-on-read hit costs a
+                // local file read instead of an origin round trip. A
+                // corrupt copy self-invalidates inside `get` and falls
+                // through to the wire like any miss.
+                if let Some(hit) = pull_cache.and_then(|c| c.get(chunk_digest).transpose()) {
+                    chunk_bytes.push(hit?);
+                    source.push(ChunkSource::Cached);
+                    continue;
                 }
-                None => {
-                    chunk_bytes.push(fetch(chunk_digest)?);
-                    source.push(ChunkSource::Wire);
+                match fetch_cache {
+                    Some(cache) => {
+                        let (bytes, shared) =
+                            cache.get_or_fetch(chunk_digest, || fetch(chunk_digest))?;
+                        chunk_bytes.push(bytes);
+                        source.push(if shared {
+                            ChunkSource::Shared
+                        } else {
+                            ChunkSource::Wire
+                        });
+                    }
+                    None => {
+                        chunk_bytes.push(fetch(chunk_digest)?);
+                        source.push(ChunkSource::Wire);
+                    }
                 }
-            },
+            }
         }
     }
     let slices: Vec<&[u8]> = chunk_bytes.iter().map(|b| b.as_slice()).collect();
@@ -1747,13 +2065,20 @@ fn resolve_chunks(
         if digests[j] == expected[j] {
             continue;
         }
-        if source[j] != ChunkSource::Staged {
-            return Err(Error::Registry(format!(
-                "remote chunk {j} of layer {} corrupt",
-                lid.short()
-            )));
+        match source[j] {
+            // Both local tiers are repairable: drop the bad copy and
+            // refetch from the wire. (The pull cache verifies on read,
+            // but its check is per-scheme — a manifest addressed under
+            // the other scheme can still disagree with the batch hash.)
+            ChunkSource::Staged => staging.remove(&expected[j])?,
+            ChunkSource::Cached => {}
+            _ => {
+                return Err(Error::Registry(format!(
+                    "remote chunk {j} of layer {} corrupt",
+                    lid.short()
+                )));
+            }
         }
-        staging.remove(&expected[j])?;
         refetch.push(j);
     }
     if !refetch.is_empty() {
@@ -1791,11 +2116,25 @@ fn resolve_chunks(
                 // re-fetching what a sibling worker already pulled.
                 staging.put(&expected[j], bytes)?;
             }
+            ChunkSource::Cached => {
+                stats.bytes_from_cache += bytes.len() as u64;
+                stats.chunks_from_cache += 1;
+                // Cache hits stage like wire fetches: an interrupted
+                // pull resumes from staging even if the cache evicts
+                // the entry in the meantime.
+                staging.put(&expected[j], bytes)?;
+            }
             ChunkSource::Wire => {
                 stats.bytes_fetched += bytes.len() as u64;
                 stats.chunks_fetched += 1;
-                // Stage what came over the wire — only after it verified.
+                stats.bytes_from_origin += bytes.len() as u64;
+                // Stage what came over the wire — only after it
+                // verified — and write it through to the pull cache so
+                // the next puller through this edge skips the origin.
                 staging.put(&expected[j], bytes)?;
+                if let Some(cache) = pull_cache {
+                    cache.put(&expected[j], bytes)?;
+                }
             }
         }
     }

@@ -1,0 +1,429 @@
+//! Persistent read-through pull cache — the edge tier.
+//!
+//! [`super::ChunkFetchCache`] collapses concurrent fetches of one chunk
+//! *within* a single `warm()` fan-out, but it is in-memory: the next
+//! process pulls every byte from origin again. At fleet scale that is
+//! the dominant traffic — thousands of daemons pulling overlapping hot
+//! tags from one registry. A [`PullCache`] is the persistent tier an
+//! edge daemon opens in front of origin: an on-disk, LRU-bounded,
+//! content-verified chunk cache that absorbs repeated pulls, so
+//! `bytes_from_origin` collapses once the working set is warm.
+//!
+//! # Layout and durability
+//!
+//! One flat directory, one file per chunk named by its hex digest —
+//! the chunk-pool layout, minus manifests and leases (a cache holds no
+//! authority, only copies). Writes land through the same
+//! write-to-temp → fsync → rename discipline as every other durable
+//! byte in the system, under the `registry.cache.put` fault site; a
+//! crash mid-write leaves a `.tmp-*` orphan that [`PullCache::open`]
+//! sweeps. Lookups run under `registry.cache.get`. Both sites are in
+//! the `tests/faults.rs` kill matrix.
+//!
+//! # Consistency with scrub/gc at origin
+//!
+//! The cache is content-addressed, so it can never serve *wrong*
+//! bytes for a digest: every hit is re-verified against the requested
+//! digest (raw SHA-256 for v2 CDC chunks, engine chunk-digest for
+//! chunk-sized v1 entries) and a mismatching file — bit-rot, torn
+//! write, or a stale copy of content the origin has since scrubbed and
+//! repaired — is **invalidated on the spot** (deleted, counted, and
+//! reported as a miss so the caller refetches from origin). A chunk
+//! the origin gc'd merely lingers until LRU eviction; since no live
+//! manifest references its digest, no pull will ask for it.
+//!
+//! # Eviction
+//!
+//! The byte budget is enforced with the same LRU touch-stamp treatment
+//! as the scheduler flight table: every hit or re-put bumps a
+//! monotonic stamp, and a put that pushes the cache past its budget
+//! evicts minimum-stamp entries (never the chunk just written) until
+//! it fits. The index (digest → length + stamp) lives in memory and is
+//! rebuilt deterministically (name order) on open; stamps are not
+//! persisted — recency restarts warm-neutral, which is exactly what a
+//! restarted edge daemon wants.
+
+use crate::hash::{Digest, NativeEngine, CHUNK_SIZE};
+use crate::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fault site for cache fills (durable temp-then-rename writes).
+pub const PUT_SITE: &str = "registry.cache.put";
+/// Fault site for cache lookups (fires on every probe, hit or miss).
+pub const GET_SITE: &str = "registry.cache.get";
+
+/// Default byte budget: enough for a few warm images at the bench's
+/// asset sizes without letting an edge cache grow unbounded.
+pub const DEFAULT_BUDGET: u64 = 256 * 1024 * 1024;
+
+static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Clone, Copy)]
+struct Entry {
+    len: u64,
+    stamp: u64,
+}
+
+struct State {
+    map: HashMap<Digest, Entry>,
+    clock: u64,
+    bytes: u64,
+}
+
+struct Inner {
+    root: PathBuf,
+    budget: u64,
+    state: Mutex<State>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidated: AtomicU64,
+    evicted: AtomicU64,
+    bytes_served: AtomicU64,
+}
+
+/// Counters + occupancy snapshot, the feed of `registry stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PullCacheStats {
+    /// Verified lookups served from the cache.
+    pub hits: u64,
+    /// Probes that went to origin (absent, raced out, or invalidated).
+    pub misses: u64,
+    /// Hits whose bytes failed digest verification and were deleted.
+    pub invalidated: u64,
+    /// Entries evicted to stay under the byte budget.
+    pub evicted: u64,
+    /// Total bytes served from cache hits.
+    pub bytes_served: u64,
+    /// Chunks currently resident.
+    pub entries: u64,
+    /// Bytes currently resident.
+    pub bytes: u64,
+    /// The configured byte budget.
+    pub budget: u64,
+}
+
+impl PullCacheStats {
+    /// Hit fraction over all probes (0.0 when the cache is unprobed).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A persistent, LRU-bounded, scrub-aware chunk cache. Cheap to clone
+/// (shared handle) — `PullOptions` carries one by value, and every
+/// worker in a `warm()` fan-out shares the same tier.
+#[derive(Clone)]
+pub struct PullCache {
+    inner: Arc<Inner>,
+}
+
+impl PullCache {
+    /// Open (creating if needed) a cache directory with the given byte
+    /// budget. Sweeps `.tmp-*` crash orphans and rebuilds the index in
+    /// deterministic (name) order; over-budget residue from a previous
+    /// larger budget is evicted immediately.
+    pub fn open(root: &Path, budget: u64) -> Result<PullCache> {
+        std::fs::create_dir_all(root)?;
+        crate::store::sweep_tmp_files(root);
+        let mut names: Vec<(Digest, u64)> = Vec::new();
+        for entry in std::fs::read_dir(root)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(d) = Digest::parse(&name) {
+                names.push((d, entry.metadata()?.len()));
+            }
+        }
+        names.sort_by_key(|(d, _)| d.0);
+        let mut state =
+            State { map: HashMap::with_capacity(names.len()), clock: 0, bytes: 0 };
+        for (d, len) in names {
+            state.clock += 1;
+            state.bytes += len;
+            state.map.insert(d, Entry { len, stamp: state.clock });
+        }
+        let cache = PullCache {
+            inner: Arc::new(Inner {
+                root: root.to_path_buf(),
+                budget: budget.max(1),
+                state: Mutex::new(state),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                invalidated: AtomicU64::new(0),
+                evicted: AtomicU64::new(0),
+                bytes_served: AtomicU64::new(0),
+            }),
+        };
+        {
+            let mut state = cache.inner.state.lock().unwrap();
+            cache.evict_to_budget(&mut state, None);
+        }
+        Ok(cache)
+    }
+
+    /// Open with the default budget.
+    pub fn open_default(root: &Path) -> Result<PullCache> {
+        PullCache::open(root, DEFAULT_BUDGET)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.inner.root
+    }
+
+    fn chunk_path(&self, digest: &Digest) -> PathBuf {
+        self.inner.root.join(digest.to_hex())
+    }
+
+    /// Look a chunk up. `Ok(Some(bytes))` only for a verified hit;
+    /// `Ok(None)` for a miss (including an invalidated stale copy —
+    /// the caller falls through to origin). Errors are fault-site
+    /// injections or real I/O failures on the cache volume.
+    pub fn get(&self, digest: &Digest) -> Result<Option<Vec<u8>>> {
+        let path = self.chunk_path(digest);
+        crate::fault::check(GET_SITE, &path)?;
+        {
+            let mut state = self.inner.state.lock().unwrap();
+            if !state.map.contains_key(digest) {
+                drop(state);
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            state.clock += 1;
+            let clock = state.clock;
+            state.map.get_mut(digest).unwrap().stamp = clock;
+        }
+        // Read outside the lock; eviction racing us just turns the hit
+        // into a miss.
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.drop_entry(digest);
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let intact = Digest::of(&bytes) == *digest
+            || (bytes.len() <= CHUNK_SIZE && NativeEngine::chunk_digest(&bytes) == *digest);
+        if !intact {
+            // Stale or rotten copy — the scrub/gc consistency rule:
+            // never serve it, delete it, refetch from origin.
+            let _ = std::fs::remove_file(&path);
+            self.drop_entry(digest);
+            self.inner.invalidated.fetch_add(1, Ordering::Relaxed);
+            self.inner.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        }
+        self.inner.hits.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_served.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(Some(bytes))
+    }
+
+    /// Admit a verified chunk. Idempotent (a resident digest just gets
+    /// its recency bumped); may evict colder entries to stay under
+    /// budget. The caller vouches the bytes match the digest — pull
+    /// only admits chunks that already passed batch verification.
+    pub fn put(&self, digest: &Digest, bytes: &[u8]) -> Result<()> {
+        {
+            let mut state = self.inner.state.lock().unwrap();
+            if state.map.contains_key(digest) {
+                state.clock += 1;
+                let clock = state.clock;
+                state.map.get_mut(digest).unwrap().stamp = clock;
+                return Ok(());
+            }
+        }
+        let path = self.chunk_path(digest);
+        let tmp = self.inner.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        if let Err(e) = crate::fault::durable_write(PUT_SITE, &path, &tmp, bytes) {
+            // An injected crash leaves the temp orphaned on purpose;
+            // open()'s sweep collects it.
+            if !crate::fault::is_crash(&e) {
+                let _ = std::fs::remove_file(&tmp);
+            }
+            return Err(e.into());
+        }
+        std::fs::rename(&tmp, &path)?;
+        let mut state = self.inner.state.lock().unwrap();
+        state.clock += 1;
+        let entry = Entry { len: bytes.len() as u64, stamp: state.clock };
+        if state.map.insert(*digest, entry).is_none() {
+            state.bytes += entry.len;
+        }
+        self.evict_to_budget(&mut state, Some(digest));
+        Ok(())
+    }
+
+    /// Evict minimum-stamp entries until the cache fits its budget,
+    /// never evicting `keep` (the entry just written — an over-budget
+    /// chunk still caches, it just empties everything else).
+    fn evict_to_budget(&self, state: &mut State, keep: Option<&Digest>) {
+        while state.bytes > self.inner.budget {
+            let victim = state
+                .map
+                .iter()
+                .filter(|&(d, _)| Some(d) != keep)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(d, _)| *d);
+            let Some(victim) = victim else { break };
+            if let Some(entry) = state.map.remove(&victim) {
+                state.bytes -= entry.len;
+                let _ = std::fs::remove_file(self.inner.root.join(victim.to_hex()));
+                self.inner.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn drop_entry(&self, digest: &Digest) {
+        let mut state = self.inner.state.lock().unwrap();
+        if let Some(entry) = state.map.remove(digest) {
+            state.bytes -= entry.len;
+        }
+    }
+
+    pub fn stats(&self) -> PullCacheStats {
+        let (entries, bytes) = {
+            let state = self.inner.state.lock().unwrap();
+            (state.map.len() as u64, state.bytes)
+        };
+        PullCacheStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            invalidated: self.inner.invalidated.load(Ordering::Relaxed),
+            evicted: self.inner.evicted.load(Ordering::Relaxed),
+            bytes_served: self.inner.bytes_served.load(Ordering::Relaxed),
+            entries,
+            bytes,
+            budget: self.inner.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lj-pullcache-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn chunk(i: u32) -> (Digest, Vec<u8>) {
+        let data = i.to_le_bytes().repeat(200);
+        (Digest::of(&data), data)
+    }
+
+    #[test]
+    fn round_trips_and_counts() {
+        let d = tmp("roundtrip");
+        let cache = PullCache::open(&d, 1 << 20).unwrap();
+        let (digest, data) = chunk(1);
+        assert_eq!(cache.get(&digest).unwrap(), None);
+        cache.put(&digest, &data).unwrap();
+        assert_eq!(cache.get(&digest).unwrap().as_deref(), Some(&data[..]));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert_eq!(stats.bytes_served, data.len() as u64);
+        assert!(stats.hit_rate() > 0.49 && stats.hit_rate() < 0.51);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn survives_reopen_with_rebuilt_index() {
+        let d = tmp("reopen");
+        let (digest, data) = chunk(2);
+        {
+            let cache = PullCache::open(&d, 1 << 20).unwrap();
+            cache.put(&digest, &data).unwrap();
+        }
+        let cache = PullCache::open(&d, 1 << 20).unwrap();
+        assert_eq!(cache.stats().entries, 1);
+        assert_eq!(cache.get(&digest).unwrap().as_deref(), Some(&data[..]));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_copy_is_invalidated_not_served() {
+        let d = tmp("invalidate");
+        let cache = PullCache::open(&d, 1 << 20).unwrap();
+        let (digest, data) = chunk(3);
+        cache.put(&digest, &data).unwrap();
+        std::fs::write(d.join(digest.to_hex()), b"rotten").unwrap();
+        assert_eq!(cache.get(&digest).unwrap(), None, "stale bytes must not serve");
+        assert!(!d.join(digest.to_hex()).exists(), "stale copy must be deleted");
+        let stats = cache.stats();
+        assert_eq!((stats.invalidated, stats.entries), (1, 0));
+        // A refetch re-admits cleanly.
+        cache.put(&digest, &data).unwrap();
+        assert_eq!(cache.get(&digest).unwrap().as_deref(), Some(&data[..]));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn byte_budget_evicts_least_recently_touched() {
+        let d = tmp("lru");
+        let (d0, c0) = chunk(10);
+        let (d1, c1) = chunk(11);
+        let (d2, c2) = chunk(12);
+        // Budget fits exactly two 800-byte chunks.
+        let cache = PullCache::open(&d, (c0.len() + c1.len()) as u64).unwrap();
+        cache.put(&d0, &c0).unwrap();
+        cache.put(&d1, &c1).unwrap();
+        cache.get(&d0).unwrap().unwrap(); // d0 is now hotter than d1
+        cache.put(&d2, &c2).unwrap(); // must evict d1, the coldest
+        assert!(cache.get(&d1).unwrap().is_none(), "coldest entry must be evicted");
+        assert_eq!(cache.get(&d0).unwrap().as_deref(), Some(&c0[..]));
+        assert_eq!(cache.get(&d2).unwrap().as_deref(), Some(&c2[..]));
+        let stats = cache.stats();
+        assert_eq!(stats.evicted, 1);
+        assert!(stats.bytes <= stats.budget);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn crashed_put_leaves_tmp_that_reopen_sweeps() {
+        let d = tmp("crash");
+        let cache = PullCache::open(&d, 1 << 20).unwrap();
+        let (digest, data) = chunk(4);
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(PUT_SITE, 0, crate::fault::FaultMode::Crash)
+                .scoped(&d),
+        );
+        assert!(cache.put(&digest, &data).is_err());
+        drop(guard);
+        let orphans = std::fs::read_dir(&d)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .count();
+        assert_eq!(orphans, 1, "a crashed put leaves its temp for the sweep");
+        let cache = PullCache::open(&d, 1 << 20).unwrap();
+        assert_eq!(cache.stats().entries, 0);
+        assert!(std::fs::read_dir(&d).unwrap().next().is_none(), "sweep cleans the orphan");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn engine_addressed_v1_chunks_verify_too() {
+        let d = tmp("v1");
+        let cache = PullCache::open(&d, 1 << 20).unwrap();
+        let data = vec![7u8; 512];
+        let digest = NativeEngine::chunk_digest(&data);
+        cache.put(&digest, &data).unwrap();
+        assert_eq!(cache.get(&digest).unwrap().as_deref(), Some(&data[..]));
+        assert_eq!(cache.stats().invalidated, 0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,0 +1,649 @@
+//! Digest-range sharding of the remote chunk pool.
+//!
+//! A planet-scale registry cannot serve every chunk from one directory:
+//! pool scans, maintenance passes, and (on a real deployment) disk and
+//! network bandwidth all serialize on the single backend. This module
+//! splits the pool **by digest** across N backend roots with consistent
+//! hashing, so membership changes move only the chunks whose ring
+//! assignment actually changed — not 1/1-th of the pool like a modulo
+//! scheme would.
+//!
+//! # On-disk layout
+//!
+//! Shard 0 is the registry's original `<root>/chunks/` directory (and
+//! `<root>/leases/` lease table), so an unsharded remote is exactly a
+//! one-shard ring and every pre-shard tree keeps working untouched.
+//! Additional shards live under the same registry root:
+//!
+//! ```text
+//! <root>/shards.json            — durable ring descriptor
+//! <root>/chunks/                — shard 0 chunk backend
+//! <root>/leases/                — shard 0 lease table
+//! <root>/shard-1/chunks/        — shard 1 chunk backend
+//! <root>/shard-1/leases/        — shard 1 lease table
+//! <root>/shard-<k>/...          — shard k
+//! ```
+//!
+//! Keeping every backend under the registry root is deliberate: fault
+//! plans ([`crate::fault`]) scope by path prefix, recovery sweeps walk
+//! the registry tree, and a directory-registry "deployment" stays one
+//! copyable tree. A real multi-host deployment would mount each
+//! `shard-<k>` elsewhere; nothing in the ring logic assumes locality.
+//!
+//! # Ring descriptor (`shards.json`)
+//!
+//! ```json
+//! { "version": 1, "shards": ["", "shard-1", "shard-2"] }
+//! ```
+//!
+//! Each member is a shard's directory prefix relative to the registry
+//! root (`""` = the root itself, i.e. shard 0). The descriptor commits
+//! through the same fsync-then-rename atomic write as everything else
+//! the registry serves, under the `registry.shard.migrate` fault site:
+//! a crash mid-rebalance leaves either the old or the new descriptor in
+//! force, never a torn one. A missing descriptor means a one-shard
+//! ring — legacy remotes are never forced to migrate.
+//!
+//! # Consistent hashing
+//!
+//! Each shard contributes [`VNODES`] points to a 64-bit ring, each
+//! point the first 8 bytes of `SHA-256("<name>#<v>")`; a chunk digest
+//! maps to the first point clockwise from the first 8 bytes of the raw
+//! digest. Assignment therefore depends only on the member *names*, so
+//! growing 2 → 3 shards strands only the keyspace the new shard's
+//! points capture (~1/3 in expectation), never reshuffles the rest —
+//! the property the rebalance acceptance bar (< 50% of chunks moved on
+//! 2 → 3) measures.
+//!
+//! # Rebalance
+//!
+//! [`rebalance_to`] converges the on-disk pool to a target ring in
+//! three idempotent passes, every durable step under the
+//! `registry.shard.migrate` fault site:
+//!
+//! 1. **copy** — every chunk found in any backend that is not its
+//!    assigned home is copied home (skipped when already there);
+//! 2. **commit** — the new descriptor replaces `shards.json`
+//!    atomically: the instant readers see the new ring, every
+//!    assignment it makes is already satisfied;
+//! 3. **clean** — stale copies (chunks sitting in a backend the ring
+//!    no longer assigns them to) are deleted.
+//!
+//! A crash at any point leaves a tree a re-run converges from: before
+//! the commit the old ring is still fully served; after it the new
+//! ring is, with at worst duplicate chunks the clean pass (of the
+//! re-run) removes. The fault matrix (`tests/faults.rs`) kills the
+//! migrate site at first/middle/last hit and asserts bit-identical
+//! recovery with no orphans on either shard.
+
+use super::chunkpool::ChunkPool;
+use crate::hash::Digest;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// The durable ring descriptor's file name under the registry root.
+pub const SHARDS_FILE: &str = "shards.json";
+
+/// Fault site for rebalance chunk copies, stale-copy deletes, and the
+/// ring descriptor commit.
+pub const MIGRATE_SITE: &str = "registry.shard.migrate";
+
+/// Virtual ring points per shard. Enough to keep the balance factor
+/// (max shard occupancy / mean) low at small shard counts without
+/// making ring construction noticeable.
+const VNODES: usize = 64;
+
+/// A consistent-hash ring over named shard backends.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRing {
+    /// Directory prefixes relative to the registry root; `""` is shard
+    /// 0 (the root's own `chunks/` + `leases/`).
+    names: Vec<String>,
+    /// Sorted `(point, shard index)` ring; built from `names`.
+    points: Vec<(u64, usize)>,
+}
+
+impl ShardRing {
+    /// The degenerate one-shard ring every unsharded remote runs on.
+    pub fn single() -> ShardRing {
+        ShardRing::from_names(vec![String::new()])
+    }
+
+    /// A ring of `n` shards under the canonical naming scheme: shard 0
+    /// at the registry root, shard k at `shard-<k>`.
+    pub fn with_shards(n: usize) -> ShardRing {
+        let n = n.max(1);
+        ShardRing::from_names(
+            (0..n)
+                .map(|k| if k == 0 { String::new() } else { format!("shard-{k}") })
+                .collect(),
+        )
+    }
+
+    fn from_names(names: Vec<String>) -> ShardRing {
+        let mut points = Vec::with_capacity(names.len() * VNODES);
+        for (i, name) in names.iter().enumerate() {
+            for v in 0..VNODES {
+                let d = Digest::of(format!("{name}#{v}").as_bytes());
+                points.push((u64::from_be_bytes(d.0[..8].try_into().unwrap()), i));
+            }
+        }
+        points.sort_unstable();
+        ShardRing { names, points }
+    }
+
+    /// Load the durable descriptor, or the one-shard default when the
+    /// remote has never been sharded.
+    pub fn load(root: &Path) -> Result<ShardRing> {
+        let path = root.join(SHARDS_FILE);
+        if !path.exists() {
+            return Ok(ShardRing::single());
+        }
+        let doc = crate::util::json::Json::parse(&std::fs::read_to_string(&path)?)
+            .map_err(Error::Json)?;
+        let names: Vec<String> = doc
+            .get("shards")
+            .and_then(|s| s.as_arr())
+            .map(|arr| arr.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        if names.is_empty() {
+            return Err(Error::Registry(format!("{SHARDS_FILE} has no shard members")));
+        }
+        Ok(ShardRing::from_names(names))
+    }
+
+    /// Commit this ring as the remote's durable descriptor (atomic,
+    /// under the migrate fault site — the rebalance commit point).
+    pub fn save(&self, root: &Path) -> Result<()> {
+        use crate::util::json::Json;
+        let doc = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("shards", Json::Arr(self.names.iter().map(Json::str).collect())),
+        ]);
+        crate::store::write_atomic(
+            MIGRATE_SITE,
+            &root.join(SHARDS_FILE),
+            doc.to_string_pretty().as_bytes(),
+        )?;
+        Ok(())
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// The shard index a chunk digest is assigned to: the first ring
+    /// point clockwise from the digest's own 64-bit point.
+    pub fn assign(&self, digest: &Digest) -> usize {
+        let key = u64::from_be_bytes(digest.0[..8].try_into().unwrap());
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        let (_, shard) = if i == self.points.len() { self.points[0] } else { self.points[i] };
+        shard
+    }
+
+    /// A shard's chunk-backend directory under `root`.
+    pub fn chunk_dir(&self, root: &Path, shard: usize) -> PathBuf {
+        shard_chunk_dir(root, &self.names[shard])
+    }
+
+    /// A shard's lease-table directory under `root` (the per-shard
+    /// lease scoping of the multi-writer protocol).
+    pub fn lease_dir(&self, root: &Path, shard: usize) -> PathBuf {
+        shard_lease_dir(root, &self.names[shard])
+    }
+}
+
+fn shard_chunk_dir(root: &Path, name: &str) -> PathBuf {
+    if name.is_empty() {
+        root.join("chunks")
+    } else {
+        root.join(name).join("chunks")
+    }
+}
+
+fn shard_lease_dir(root: &Path, name: &str) -> PathBuf {
+    if name.is_empty() {
+        root.join(super::lease::LEASE_DIR)
+    } else {
+        root.join(name).join(super::lease::LEASE_DIR)
+    }
+}
+
+/// The sharded chunk pool: the [`ChunkPool`] API fronting N backend
+/// pools, routing each digest to its ring-assigned home. Push
+/// negotiation, pull resolution, journal validation, scrub and gc all
+/// run against this facade, so an unsharded remote (one-shard ring)
+/// behaves bit-for-bit like the pre-shard code.
+pub struct ShardedPool {
+    ring: ShardRing,
+    backends: Vec<ChunkPool>,
+}
+
+impl ShardedPool {
+    /// Open every backend (creating directories as needed).
+    pub fn open(root: &Path, ring: &ShardRing) -> Result<ShardedPool> {
+        let backends = (0..ring.shard_count())
+            .map(|k| ChunkPool::open(&ring.chunk_dir(root, k)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedPool { ring: ring.clone(), backends })
+    }
+
+    /// Reference the backends without creating anything on disk.
+    pub fn at(root: &Path, ring: &ShardRing) -> ShardedPool {
+        let backends =
+            (0..ring.shard_count()).map(|k| ChunkPool::at(&ring.chunk_dir(root, k))).collect();
+        ShardedPool { ring: ring.clone(), backends }
+    }
+
+    pub fn ring(&self) -> &ShardRing {
+        &self.ring
+    }
+
+    /// The backend pools, in shard order (scrub/gc iterate these
+    /// directly so misplaced or stale copies are still maintained).
+    pub fn backends(&self) -> &[ChunkPool] {
+        &self.backends
+    }
+
+    fn home(&self, digest: &Digest) -> &ChunkPool {
+        &self.backends[self.ring.assign(digest)]
+    }
+
+    /// The shard-0 backend directory — the negotiation endpoint's
+    /// identity for fault-site scoping, and the path legacy probes of
+    /// `<root>/chunks` keep resolving to.
+    pub fn root(&self) -> &Path {
+        self.backends[0].root()
+    }
+
+    pub fn has(&self, digest: &Digest) -> bool {
+        self.home(digest).has(digest)
+    }
+
+    pub fn has_batch(&self, digests: &[Digest]) -> Vec<bool> {
+        digests.iter().map(|d| self.has(d)).collect()
+    }
+
+    pub fn has_all(&self, digests: &[Digest]) -> bool {
+        digests.iter().all(|d| self.has(d))
+    }
+
+    pub fn get(&self, digest: &Digest) -> Result<Vec<u8>> {
+        self.home(digest).get(digest)
+    }
+
+    pub fn try_get(&self, digest: &Digest) -> Option<Vec<u8>> {
+        self.home(digest).try_get(digest)
+    }
+
+    pub fn put(&self, digest: &Digest, data: &[u8]) -> Result<bool> {
+        self.home(digest).put(digest, data)
+    }
+
+    pub fn remove(&self, digest: &Digest) -> Result<()> {
+        self.home(digest).remove(digest)
+    }
+
+    /// Every committed chunk digest across all shards, deduplicated
+    /// (a mid-rebalance tree can briefly hold a chunk twice) and sorted.
+    pub fn list(&self) -> Result<Vec<Digest>> {
+        let mut out = Vec::new();
+        for backend in &self.backends {
+            out.extend(backend.list()?);
+        }
+        out.sort_by_key(|d| d.0);
+        out.dedup();
+        Ok(out)
+    }
+
+    pub fn len(&self) -> Result<usize> {
+        Ok(self.list()?.len())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    pub fn disk_usage(&self) -> Result<u64> {
+        let mut total = 0;
+        for backend in &self.backends {
+            total += backend.disk_usage()?;
+        }
+        Ok(total)
+    }
+
+    pub fn sweep_tmp(&self) -> usize {
+        self.backends.iter().map(|b| b.sweep_tmp()).sum()
+    }
+}
+
+/// Per-shard occupancy, the observability feed of `registry stats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// The shard's directory prefix (`""` = shard 0 at the root).
+    pub name: String,
+    pub chunks: usize,
+    pub bytes: u64,
+}
+
+/// Occupancy of every backend plus the **balance factor**: the most
+/// loaded shard's byte occupancy over the mean (1.0 = perfectly even;
+/// skew is visible here before it hurts).
+pub fn shard_stats(pool: &ShardedPool) -> Result<(Vec<ShardStats>, f64)> {
+    let mut stats = Vec::with_capacity(pool.backends().len());
+    for (k, backend) in pool.backends().iter().enumerate() {
+        stats.push(ShardStats {
+            name: pool.ring().names()[k].clone(),
+            chunks: backend.len().unwrap_or(0),
+            bytes: backend.disk_usage().unwrap_or(0),
+        });
+    }
+    let total: u64 = stats.iter().map(|s| s.bytes).sum();
+    let mean = total as f64 / stats.len().max(1) as f64;
+    let max = stats.iter().map(|s| s.bytes).max().unwrap_or(0) as f64;
+    let balance = if mean > 0.0 { max / mean } else { 1.0 };
+    Ok((stats, balance))
+}
+
+/// What a [`rebalance_to`] pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RebalanceReport {
+    /// Chunks examined across every backend that exists on disk.
+    pub chunks_scanned: usize,
+    /// Chunks copied to their (new) ring-assigned home.
+    pub chunks_migrated: usize,
+    /// Bytes those migrated chunks carried.
+    pub bytes_migrated: u64,
+    /// Stale copies deleted from backends the ring no longer assigns
+    /// them to (includes duplicates left by an interrupted earlier run).
+    pub chunks_cleaned: usize,
+    /// Shards in the committed ring.
+    pub shards: usize,
+}
+
+/// Every backend directory that exists on disk under `root`, named by
+/// its prefix: the current ring's members, the target's, and any
+/// leftover `shard-<k>` trees an interrupted shrink stranded. Scanning
+/// disk rather than a descriptor is what makes rebalance resumable
+/// from *any* crash point.
+fn on_disk_backends(root: &Path, current: &ShardRing, target: &ShardRing) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut push = |n: String| {
+        if !names.contains(&n) {
+            names.push(n);
+        }
+    };
+    for n in current.names() {
+        push(n.clone());
+    }
+    for n in target.names() {
+        push(n.clone());
+    }
+    if let Ok(entries) = std::fs::read_dir(root) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("shard-") && e.path().join("chunks").is_dir() {
+                push(name);
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+/// Converge the pool to `target` (copy → commit descriptor → clean),
+/// as described in the module doc. Idempotent and resumable: re-running
+/// after a crash at any durable step completes the migration with a
+/// bit-identical final tree. The caller holds writer exclusion (the
+/// registry takes the shard-0 exclusive lease around this).
+pub fn rebalance_to(root: &Path, target: &ShardRing) -> Result<RebalanceReport> {
+    let current = ShardRing::load(root)?;
+    let mut report = RebalanceReport { shards: target.shard_count(), ..Default::default() };
+    let sources: Vec<ChunkPool> = on_disk_backends(root, &current, target)
+        .iter()
+        .map(|n| ChunkPool::at(&shard_chunk_dir(root, n)))
+        .collect();
+    let homes = ShardedPool::open(root, target)?;
+    // Per-shard lease tables exist from the moment the ring could
+    // direct a writer at them.
+    for k in 0..target.shard_count() {
+        std::fs::create_dir_all(target.lease_dir(root, k))?;
+    }
+
+    // Pass 1 — copy every chunk home. `ChunkPool::put` is the same
+    // durable tmp+rename write as push uses, but under the migrate
+    // fault site so the matrix can kill a migration mid-copy.
+    for source in &sources {
+        for digest in source.list()? {
+            report.chunks_scanned += 1;
+            let home = &homes.backends()[target.assign(&digest)];
+            if home.root() == source.root() || home.has(&digest) {
+                continue;
+            }
+            let bytes = source.get(&digest)?;
+            crate::fault::check(MIGRATE_SITE, &home.root().join(digest.to_hex()))
+                .map_err(Error::from)?;
+            home.put(&digest, &bytes)?;
+            report.chunks_migrated += 1;
+            report.bytes_migrated += bytes.len() as u64;
+        }
+    }
+
+    // Pass 2 — the commit point: the new ring becomes the one every
+    // reader resolves against, and every assignment it makes is
+    // already satisfied on disk.
+    target.save(root)?;
+
+    // Pass 3 — clean stale copies (and empty stranded shard trees).
+    for source in &sources {
+        for digest in source.list()? {
+            let home = &homes.backends()[target.assign(&digest)];
+            if home.root() != source.root() && home.has(&digest) {
+                crate::fault::check(MIGRATE_SITE, &source.root().join(digest.to_hex()))
+                    .map_err(Error::from)?;
+                source.remove(&digest)?;
+                report.chunks_cleaned += 1;
+            }
+        }
+    }
+    for name in on_disk_backends(root, &current, target) {
+        if name.is_empty() || target.names().contains(&name) {
+            continue;
+        }
+        let dir = shard_chunk_dir(root, &name);
+        if ChunkPool::at(&dir).is_empty().unwrap_or(false) {
+            let _ = std::fs::remove_dir_all(root.join(&name));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lj-shard-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn chunk(i: u32) -> (Digest, Vec<u8>) {
+        let data = i.to_le_bytes().repeat(256);
+        (Digest::of(&data), data)
+    }
+
+    #[test]
+    fn ring_assignment_is_deterministic_and_total() {
+        let ring = ShardRing::with_shards(3);
+        assert_eq!(ring.shard_count(), 3);
+        for i in 0..200u32 {
+            let (d, _) = chunk(i);
+            let a = ring.assign(&d);
+            assert!(a < 3);
+            assert_eq!(a, ring.assign(&d), "assignment must be stable");
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_moves_a_strict_minority() {
+        // The consistent-hashing property the rebalance bar depends on:
+        // 2 -> 3 shards reassigns roughly 1/3 of the keyspace, never
+        // the majority a modulo scheme reshuffles.
+        let two = ShardRing::with_shards(2);
+        let three = ShardRing::with_shards(3);
+        let n = 2000u32;
+        let moved = (0..n)
+            .filter(|i| {
+                let (d, _) = chunk(*i);
+                two.assign(&d) != three.assign(&d)
+            })
+            .count();
+        assert!(
+            moved * 2 < n as usize,
+            "2->3 moved {moved}/{n} chunks — consistent hashing regressed"
+        );
+        assert!(moved > 0, "a new shard must capture some keyspace");
+    }
+
+    #[test]
+    fn descriptor_round_trips_and_defaults_to_single() {
+        let d = tmp("descriptor");
+        assert_eq!(ShardRing::load(&d).unwrap(), ShardRing::single());
+        let ring = ShardRing::with_shards(3);
+        ring.save(&d).unwrap();
+        assert_eq!(ShardRing::load(&d).unwrap(), ring);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn sharded_pool_round_trips_across_backends() {
+        let d = tmp("pool");
+        let ring = ShardRing::with_shards(3);
+        let pool = ShardedPool::open(&d, &ring).unwrap();
+        let mut digests = Vec::new();
+        for i in 0..64u32 {
+            let (digest, data) = chunk(i);
+            assert!(pool.put(&digest, &data).unwrap());
+            digests.push(digest);
+        }
+        assert!(pool.has_all(&digests));
+        for (i, digest) in digests.iter().enumerate() {
+            assert_eq!(pool.get(digest).unwrap(), chunk(i as u32).1);
+        }
+        assert_eq!(pool.len().unwrap(), 64);
+        // With 64 chunks and 3 shards every backend should see traffic.
+        let occupied = pool.backends().iter().filter(|b| b.len().unwrap() > 0).count();
+        assert_eq!(occupied, 3, "64 chunks must spread over all 3 shards");
+        let (stats, balance) = shard_stats(&pool).unwrap();
+        assert_eq!(stats.iter().map(|s| s.chunks).sum::<usize>(), 64);
+        assert!(balance >= 1.0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rebalance_grows_migrates_minority_and_is_idempotent() {
+        let d = tmp("grow");
+        let two = ShardRing::with_shards(2);
+        two.save(&d).unwrap();
+        let pool = ShardedPool::open(&d, &two).unwrap();
+        let mut payload = std::collections::BTreeMap::new();
+        for i in 0..128u32 {
+            let (digest, data) = chunk(i);
+            pool.put(&digest, &data).unwrap();
+            payload.insert(digest, data);
+        }
+
+        let three = ShardRing::with_shards(3);
+        let report = rebalance_to(&d, &three).unwrap();
+        assert!(report.chunks_migrated > 0, "a grown ring must migrate something");
+        assert!(
+            report.chunks_migrated * 2 < 128,
+            "2->3 migrated {}/128 chunks — must move a strict minority",
+            report.chunks_migrated
+        );
+        assert_eq!(ShardRing::load(&d).unwrap(), three);
+
+        // Bit-identical service under the new ring, every chunk exactly
+        // at its assigned home and nowhere else.
+        let after = ShardedPool::at(&d, &three);
+        for (digest, data) in &payload {
+            assert_eq!(&after.get(digest).unwrap(), data);
+            for (k, backend) in after.backends().iter().enumerate() {
+                assert_eq!(
+                    backend.has(digest),
+                    three.assign(digest) == k,
+                    "chunk must live exactly at its assigned home"
+                );
+            }
+        }
+        // Idempotent: a second pass finds nothing to do.
+        let again = rebalance_to(&d, &three).unwrap();
+        assert_eq!(again.chunks_migrated, 0);
+        assert_eq!(again.chunks_cleaned, 0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rebalance_shrinks_back_and_empties_stranded_shards() {
+        let d = tmp("shrink");
+        let three = ShardRing::with_shards(3);
+        three.save(&d).unwrap();
+        let pool = ShardedPool::open(&d, &three).unwrap();
+        for i in 0..64u32 {
+            let (digest, data) = chunk(i);
+            pool.put(&digest, &data).unwrap();
+        }
+        let one = ShardRing::single();
+        let report = rebalance_to(&d, &one).unwrap();
+        assert_eq!(report.shards, 1);
+        let after = ShardedPool::at(&d, &one);
+        assert_eq!(after.len().unwrap(), 64);
+        assert!(!d.join("shard-1").exists(), "emptied shard tree is removed");
+        assert!(!d.join("shard-2").exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn interrupted_migration_resumes_bit_identical() {
+        let d = tmp("resume");
+        let two = ShardRing::with_shards(2);
+        two.save(&d).unwrap();
+        let pool = ShardedPool::open(&d, &two).unwrap();
+        let mut payload = std::collections::BTreeMap::new();
+        for i in 0..96u32 {
+            let (digest, data) = chunk(i);
+            pool.put(&digest, &data).unwrap();
+            payload.insert(digest, data);
+        }
+        let three = ShardRing::with_shards(3);
+        // Kill the second durable migrate step mid-flight.
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(MIGRATE_SITE, 1, crate::fault::FaultMode::Crash)
+                .scoped(&d),
+        );
+        let err = rebalance_to(&d, &three);
+        drop(guard);
+        assert!(err.is_err(), "the injected crash must surface");
+        // The old descriptor still governs: reads keep working.
+        let mid = ShardedPool::at(&d, &ShardRing::load(&d).unwrap());
+        for (digest, data) in &payload {
+            assert_eq!(&mid.get(digest).unwrap(), data, "mid-crash reads stay intact");
+        }
+        // Resume: the re-run converges on the target layout.
+        rebalance_to(&d, &three).unwrap();
+        let after = ShardedPool::at(&d, &three);
+        for (digest, data) in &payload {
+            assert_eq!(&after.get(digest).unwrap(), data);
+            for (k, backend) in after.backends().iter().enumerate() {
+                assert_eq!(backend.has(digest), three.assign(digest) == k);
+            }
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

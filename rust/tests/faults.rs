@@ -103,13 +103,19 @@ fn assert_no_orphans(root: &Path, context: &str) {
 }
 
 /// The full durability scenario under one root: build locally, push to a
-/// registry in `<root>/remote`, pull into a second store in
-/// `<root>/prod`, then run the maintenance pass (scrub marker, scrub,
-/// gc) so the exclusive-lease sites are inside the faulted window.
-/// Reopening the daemons/registry on every call is the "restart" — each
-/// open runs its implicit recovery sweep. The lease ttl is zero so a
-/// record stranded by an injected crash is reclaimed at the next open
-/// instead of stalling the recovery re-run for a wall-clock ttl.
+/// registry in `<root>/remote`, re-shard the pool to two backends (the
+/// `registry.shard.migrate` site), pull into a second store in
+/// `<root>/prod` through a persistent pull cache at `<root>/edge-cache`
+/// (the `registry.cache.{put,get}` sites — the cache dir sits outside
+/// the three bit-compared trees because its contents legitimately differ
+/// between a faulted-then-recovered run and the reference), then run the
+/// maintenance pass (scrub marker, scrub, gc) so the exclusive-lease
+/// sites are inside the faulted window. Reopening the daemons/registry
+/// on every call is the "restart" — each open runs its implicit recovery
+/// sweep (and `PullCache::open` sweeps its own temp files). The lease
+/// ttl is zero so a record stranded by an injected crash is reclaimed at
+/// the next open instead of stalling the recovery re-run for a
+/// wall-clock ttl.
 fn run_scenario(root: &Path) -> layerjet::Result<()> {
     let proj = root.join("proj");
     if !proj.exists() {
@@ -122,8 +128,17 @@ fn run_scenario(root: &Path) -> layerjet::Result<()> {
         LeaseConfig { ttl: std::time::Duration::ZERO, ..Default::default() },
     )?;
     dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() })?;
+    // Split the pool across two consistent-hash backends. Idempotent:
+    // the recovery re-run converges a half-migrated pool on the same
+    // bit-identical layout the reference run committed.
+    remote.shard_to(2)?;
+    let cache = layerjet::registry::PullCache::open_default(&root.join("edge-cache"))?;
     let prod = daemon(&root.join("prod"))?;
-    prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() })?;
+    prod.pull_with(
+        "app:v1",
+        &remote,
+        &PullOptions { jobs: 1, pull_cache: Some(cache), ..Default::default() },
+    )?;
     assert!(prod.verify_image("app:v1")?, "pulled image must verify");
     // Maintenance coda: on a clean tree this is a no-op (the marker is
     // consumed by scrub, everything is tagged so gc drops nothing), but

@@ -1,0 +1,276 @@
+//! End-to-end tests of the sharded chunk pool and the persistent
+//! read-through pull cache: resharding migrates only a minority of
+//! chunks and never changes what a pull observes, a warm edge cache
+//! keeps origin traffic under 10% of pulled bytes, and maintenance
+//! (round-robin scrub, sharded gc) still repairs and collects across
+//! every backend.
+
+use layerjet::fault::{self, FaultMode, FaultPlan};
+use layerjet::prelude::*;
+use layerjet::registry::{LeaseConfig, PullCache, PullOptions};
+use layerjet::util::prng::Prng;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lj-sharded-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn daemon(root: &Path) -> Daemon {
+    let mut daemon = Daemon::new(root).unwrap();
+    daemon.cost = CostModel::instant();
+    daemon
+}
+
+/// A project whose COPY layer carries enough deterministic bytes to
+/// spread across every shard of a small ring.
+fn write_project(dir: &Path, asset_len: usize) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /srv/\nCMD [\"python\", \"zz_main.py\"]\n",
+    )
+    .unwrap();
+    let mut asset = vec![0u8; asset_len];
+    Prng::new(0x5aa_5eed).fill_bytes(&mut asset);
+    std::fs::write(dir.join("aa_assets.bin"), &asset).unwrap();
+    std::fs::write(dir.join("zz_main.py"), "print('v1')\n").unwrap();
+}
+
+/// Every file under `root`, relative path → bytes.
+fn tree_snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, prefix: &str, out: &mut BTreeMap<String, Vec<u8>>) {
+        let mut entries: Vec<_> = std::fs::read_dir(dir).unwrap().map(|e| e.unwrap()).collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let rel = if prefix.is_empty() { name } else { format!("{prefix}/{name}") };
+            if e.file_type().unwrap().is_dir() {
+                walk(&e.path(), &rel, out);
+            } else {
+                out.insert(rel, std::fs::read(e.path()).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, "", &mut out);
+    out
+}
+
+/// Acceptance (headline): with a warm pull cache, a fresh store's pull
+/// moves < 10% of its bytes from the origin; cold is ~100%.
+#[test]
+fn warm_pull_cache_cuts_origin_bytes_below_ten_percent() {
+    let root = tmp("cache");
+    let proj = root.join("proj");
+    write_project(&proj, 256 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push("app:v1", &remote).unwrap();
+
+    let cache = PullCache::open_default(&root.join("edge-cache")).unwrap();
+
+    // Cold: every transferred byte comes from the origin, and each wire
+    // fetch is written through to the cache.
+    let prod1 = daemon(&root.join("prod1"));
+    let cold = prod1
+        .pull_with(
+            "app:v1",
+            &remote,
+            &PullOptions { jobs: 2, pull_cache: Some(cache.clone()), ..Default::default() },
+        )
+        .unwrap();
+    assert!(prod1.verify_image("app:v1").unwrap());
+    assert!(cold.bytes_from_origin > 0, "cold pull must hit the origin: {cold:?}");
+    assert_eq!(cold.bytes_from_cache, 0, "nothing can be cached yet: {cold:?}");
+    assert_eq!(
+        cold.bytes_from_origin, cold.bytes_fetched,
+        "cold: every fetched byte is an origin byte"
+    );
+
+    // Warm: a different machine (fresh store, empty staging) pulls the
+    // same image through the shared edge cache.
+    let prod2 = daemon(&root.join("prod2"));
+    let warm = prod2
+        .pull_with(
+            "app:v1",
+            &remote,
+            &PullOptions { jobs: 2, pull_cache: Some(cache.clone()), ..Default::default() },
+        )
+        .unwrap();
+    assert!(prod2.verify_image("app:v1").unwrap());
+    let transferred = warm.bytes_from_origin + warm.bytes_from_cache;
+    assert!(transferred > 0, "the fresh store must transfer something: {warm:?}");
+    assert!(
+        warm.bytes_from_origin * 10 < transferred,
+        "warm cache must keep origin bytes under 10% of {transferred}: {warm:?}"
+    );
+    let stats = cache.stats();
+    assert!(stats.hits > 0, "warm pull must be served by cache hits: {stats:?}");
+    assert!(stats.bytes_served >= warm.bytes_from_cache);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Acceptance: growing the ring 2 → 3 migrates fewer than half the
+/// chunks (consistent hashing moves ~1/3 of the keyspace), occupancy
+/// spreads over every backend, and a pull after the reshard leaves a
+/// store bit-identical to one pulled before it.
+#[test]
+fn reshard_two_to_three_migrates_minority_and_pulls_bit_identical() {
+    let root = tmp("grow");
+    let proj = root.join("proj");
+    write_project(&proj, 256 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push("app:v1", &remote).unwrap();
+    remote.shard_to(2).unwrap();
+
+    let before_store = daemon(&root.join("before"));
+    before_store.pull("app:v1", &remote).unwrap();
+    assert!(before_store.verify_image("app:v1").unwrap());
+    let want = tree_snapshot(&root.join("before"));
+
+    let report = remote.shard_to(3).unwrap();
+    assert_eq!(report.shards, 3);
+    assert!(report.chunks_migrated > 0, "growing the ring must move something: {report:?}");
+    assert!(
+        report.chunks_migrated * 2 < report.chunks_scanned,
+        "2→3 must migrate a strict minority of chunks: {report:?}"
+    );
+
+    let (stats, balance) = remote.shard_stats().unwrap();
+    assert_eq!(stats.len(), 3);
+    assert!(stats.iter().all(|s| s.chunks > 0), "every backend should hold chunks: {stats:?}");
+    assert!(balance >= 1.0, "balance factor is max/mean: {balance}");
+
+    let after_store = daemon(&root.join("after"));
+    after_store.pull("app:v1", &remote).unwrap();
+    assert!(after_store.verify_image("app:v1").unwrap());
+    assert_eq!(
+        tree_snapshot(&root.join("after")),
+        want,
+        "a pull through the resharded pool must be bit-identical"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// A reshard killed mid-migration leaves a pool that still serves
+/// bit-identical pulls (the committed ring keeps every chunk reachable),
+/// and re-running the reshard converges on the target layout.
+#[test]
+fn interrupted_reshard_keeps_pulls_bit_identical_and_resumes() {
+    let root = tmp("resume");
+    let proj = root.join("proj");
+    write_project(&proj, 192 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    // Zero ttl: the exclusive lease stranded by the injected crash is
+    // reclaimed at the next acquisition instead of stalling the test.
+    let remote = RemoteRegistry::open_with(
+        &root.join("remote"),
+        LeaseConfig { ttl: std::time::Duration::ZERO, ..Default::default() },
+    )
+    .unwrap();
+    dev.push("app:v1", &remote).unwrap();
+    remote.shard_to(2).unwrap();
+
+    let before_store = daemon(&root.join("before"));
+    before_store.pull("app:v1", &remote).unwrap();
+    let want = tree_snapshot(&root.join("before"));
+
+    // Kill the migration at its third arrival at the migrate site.
+    let guard =
+        fault::install(FaultPlan::fail_at("registry.shard.migrate", 2, FaultMode::Crash).scoped(&root));
+    let killed = remote.shard_to(3);
+    drop(guard);
+    assert!(killed.is_err(), "the injected crash must surface");
+
+    // Mid-migration: the committed descriptor still routes every chunk
+    // to a backend that holds it, so a pull sees nothing amiss.
+    let during_store = daemon(&root.join("during"));
+    during_store.pull("app:v1", &remote).unwrap();
+    assert!(during_store.verify_image("app:v1").unwrap());
+    assert_eq!(
+        tree_snapshot(&root.join("during")),
+        want,
+        "a pull during a crashed reshard must be bit-identical"
+    );
+
+    // Resume: re-running the reshard converges on three clean backends
+    // (no duplicate copies, no orphaned temp files).
+    let resumed = remote.shard_to(3).unwrap();
+    assert_eq!(resumed.shards, 3);
+    let (stats, _) = remote.shard_stats().unwrap();
+    assert_eq!(stats.len(), 3);
+    let total: usize = stats.iter().map(|s| s.chunks).sum();
+    assert_eq!(
+        total,
+        resumed.chunks_scanned - resumed.chunks_cleaned,
+        "no chunk may survive in two backends after convergence"
+    );
+    for (rel, _) in tree_snapshot(&root.join("remote")) {
+        assert!(!rel.contains(".tmp-"), "orphaned temp file {rel}");
+    }
+
+    let after_store = daemon(&root.join("after"));
+    after_store.pull("app:v1", &remote).unwrap();
+    assert!(after_store.verify_image("app:v1").unwrap());
+    assert_eq!(
+        tree_snapshot(&root.join("after")),
+        want,
+        "a pull after the resumed reshard must be bit-identical"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Maintenance still works across shards: scrub's round-robin passes
+/// find rot on any backend and demote the affected layer, the next push
+/// repairs it, and gc sweeps an untagged image's chunks off every shard.
+#[test]
+fn scrub_and_gc_cover_every_shard_backend() {
+    let root = tmp("maint");
+    let proj = root.join("proj");
+    write_project(&proj, 192 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push("app:v1", &remote).unwrap();
+    remote.shard_to(3).unwrap();
+
+    // Rot one chunk on a non-root backend (shard-1 or shard-2).
+    let shard_chunks = std::fs::read_dir(root.join("remote"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.file_name().unwrap().to_string_lossy().starts_with("shard-"))
+        .map(|p| p.join("chunks"))
+        .find(|p| std::fs::read_dir(p).map(|mut d| d.next().is_some()).unwrap_or(false))
+        .expect("a non-root backend must hold chunks");
+    let victim = std::fs::read_dir(&shard_chunks).unwrap().next().unwrap().unwrap().path();
+    std::fs::write(&victim, b"bit rot").unwrap();
+
+    let scrubbed = remote.scrub().unwrap();
+    assert_eq!(scrubbed.chunks_dropped, 1, "the rotted chunk must be dropped: {scrubbed:?}");
+    assert!(scrubbed.layers_demoted >= 1, "its layer must be demoted: {scrubbed:?}");
+
+    // The next push of the same image repairs the demoted layer.
+    let repaired = dev.push("app:v1", &remote).unwrap();
+    assert!(repaired.bytes_uploaded > 0, "repair must re-upload the missing chunk");
+    let prod = daemon(&root.join("prod"));
+    prod.pull("app:v1", &remote).unwrap();
+    assert!(prod.verify_image("app:v1").unwrap());
+
+    // gc after untag sweeps every backend empty.
+    remote.untag(&layerjet::oci::ImageRef::parse("app:v1")).unwrap();
+    let gc = remote.gc().unwrap();
+    assert!(gc.chunks_dropped > 0, "untagged image's chunks must be collected: {gc:?}");
+    let (stats, _) = remote.shard_stats().unwrap();
+    assert!(
+        stats.iter().all(|s| s.chunks == 0),
+        "gc must sweep every shard backend: {stats:?}"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
