@@ -1,0 +1,250 @@
+//! **Chunk-backed store economics** — what the layer-free `LayerStore`
+//! costs on disk as an edit history grows, and what reconstructing a
+//! tar from the pool costs at read time. Emits a machine-readable
+//! baseline (`BENCH_dedup_store.json`).
+//!
+//! Two experiments:
+//! * **history storage** — 50 one-file-edit revisions of a 1 MiB-asset
+//!   layer; the pool must grow by the churn, not by the revision count
+//!   (the acceptance bar: full history < 2x one revision's pool bytes,
+//!   where a tar-per-layer layout pays the full 50x);
+//! * **reconstruction latency** — cold `read_tar` (chunk reassembly
+//!   from the pool on a fresh store handle) vs hot (the in-memory tar
+//!   cache), bit-identity asserted on every read.
+//!
+//! `cargo bench --bench dedup_store` (set `LAYERJET_TRIALS` to
+//! override the trial count).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::hash::{ChunkDigest, Digest, NativeEngine};
+use layerjet::oci::{LayerId, LayerMeta};
+use layerjet::store::{LayerStore, LAYER_VERSION};
+use layerjet::tar::TarBuilder;
+use layerjet::util::json::Json;
+use layerjet::util::prng::Prng;
+use std::path::Path;
+
+const REVISIONS: usize = 50;
+const ASSET_LEN: usize = 1 << 20;
+const CHECKPOINTS: [usize; 4] = [1, 10, 25, 50];
+
+fn main() {
+    let trials = common::trials(5).max(2);
+    let root = common::bench_root("dedup-store");
+    std::fs::create_dir_all(&root).unwrap();
+    let history = history_sweep(&root);
+    let recon = reconstruct_sweep(&root, trials);
+    emit_baseline(&history, &recon, trials);
+
+    // Shape assertions (protocol properties, not timing — safe on any
+    // machine): the pool grows by churn, not by revision count, and
+    // the whole store undercuts the tar-per-layer layout by a wide
+    // margin.
+    assert!(
+        history.pool_bytes_full < 2 * history.pool_bytes_single,
+        "{REVISIONS}-revision pool {} must stay < 2x one revision's {}",
+        history.pool_bytes_full,
+        history.pool_bytes_single
+    );
+    assert!(
+        history.store_bytes_full < history.logical_bytes / 5,
+        "store footprint {} must be well under {} logical bytes",
+        history.store_bytes_full,
+        history.logical_bytes
+    );
+    eprintln!(
+        "dedup_store shape checks OK ({REVISIONS} revisions in {:.1}% of tar-per-layer bytes; \
+         cold reconstruct {}, hot {})",
+        history.store_bytes_full as f64 / history.logical_bytes as f64 * 100.0,
+        fmt_secs(recon.cold_secs),
+        fmt_secs(recon.hot_secs)
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+struct HistoryStorage {
+    logical_bytes: u64,
+    pool_bytes_single: u64,
+    pool_bytes_full: u64,
+    store_bytes_full: u64,
+    pool_chunks_full: u64,
+}
+
+struct ReconstructLatency {
+    tar_bytes: u64,
+    cold_secs: f64,
+    hot_secs: f64,
+}
+
+/// One revision of the benched project layer: a constant random asset
+/// plus a tiny source file that changes every revision, the asset
+/// sorted first so the delta sits at the tar tail.
+fn revision_layer(asset: &[u8], rev: usize) -> (LayerMeta, Vec<u8>) {
+    let mut b = TarBuilder::new();
+    b.append_file("aa_assets.bin", asset).unwrap();
+    b.append_file("zz_main.py", format!("print('rev {rev}')\n").as_bytes()).unwrap();
+    let tar = b.finish();
+    let created_by = format!("COPY . /srv/ # rev {rev}");
+    let id = LayerId::derive("bench", None, &created_by);
+    let meta = LayerMeta {
+        id,
+        parent: None,
+        parent_checksum: None,
+        checksum: Digest::of(&tar),
+        chunk_root: ChunkDigest::compute(&tar, &NativeEngine::new()).root,
+        created_by,
+        source_checksum: Digest([0u8; 32]),
+        is_empty_layer: false,
+        size: tar.len() as u64,
+        version: LAYER_VERSION.into(),
+    };
+    (meta, tar)
+}
+
+/// Total bytes of every regular file under `root`.
+fn disk_usage(root: &Path) -> u64 {
+    fn walk(dir: &Path, total: &mut u64) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let e = e.unwrap();
+            if e.file_type().unwrap().is_dir() {
+                walk(&e.path(), total);
+            } else {
+                *total += e.metadata().unwrap().len();
+            }
+        }
+    }
+    let mut total = 0;
+    walk(root, &mut total);
+    total
+}
+
+/// Store `REVISIONS` one-file-edit revisions and record how the pool
+/// and the whole store grow against the logical (tar-per-layer) cost.
+fn history_sweep(root: &Path) -> HistoryStorage {
+    let mut asset = vec![0u8; ASSET_LEN];
+    Prng::new(0xd15c).fill_bytes(&mut asset);
+    let eng = NativeEngine::new();
+    let store_root = root.join("history");
+    let store = LayerStore::open(&store_root).unwrap();
+
+    let mut table = Table::new(
+        &format!("{REVISIONS} one-file-edit revisions, {} KiB asset", ASSET_LEN / 1024),
+        &["revisions", "logical", "pool", "on disk", "vs tar-per-layer"],
+    );
+    let mut out = HistoryStorage {
+        logical_bytes: 0,
+        pool_bytes_single: 0,
+        pool_bytes_full: 0,
+        store_bytes_full: 0,
+        pool_chunks_full: 0,
+    };
+    for rev in 0..REVISIONS {
+        let (meta, tar) = revision_layer(&asset, rev);
+        store.put_layer(&meta, &tar, &eng).unwrap();
+        out.logical_bytes += tar.len() as u64;
+        if !CHECKPOINTS.contains(&(rev + 1)) {
+            continue;
+        }
+        let st = store.stats().unwrap();
+        let on_disk = disk_usage(&store_root);
+        if rev == 0 {
+            out.pool_bytes_single = st.pool_bytes;
+        }
+        out.pool_bytes_full = st.pool_bytes;
+        out.store_bytes_full = on_disk;
+        out.pool_chunks_full = st.pool_chunks as u64;
+        table.row(vec![
+            (rev + 1).to_string(),
+            format!("{} KiB", out.logical_bytes / 1024),
+            format!("{} KiB", st.pool_bytes / 1024),
+            format!("{} KiB", on_disk / 1024),
+            format!("{:.1}%", on_disk as f64 / out.logical_bytes as f64 * 100.0),
+        ]);
+    }
+    table.print();
+    out
+}
+
+/// Time `read_tar` cold (fresh store handle, full chunk reassembly)
+/// and hot (in-memory tar cache), asserting bit-identity every read.
+fn reconstruct_sweep(root: &Path, trials: usize) -> ReconstructLatency {
+    let mut asset = vec![0u8; ASSET_LEN];
+    Prng::new(0x7ea5e7).fill_bytes(&mut asset);
+    let eng = NativeEngine::new();
+    let store_root = root.join("reconstruct");
+    let (meta, tar) = revision_layer(&asset, 0);
+    LayerStore::open(&store_root).unwrap().put_layer(&meta, &tar, &eng).unwrap();
+
+    let (mut cold, mut hot) = (0.0f64, 0.0f64);
+    for _ in 0..trials {
+        let store = LayerStore::open(&store_root).unwrap();
+        let t0 = std::time::Instant::now();
+        let got = store.read_tar(&meta.id).unwrap();
+        cold += t0.elapsed().as_secs_f64();
+        assert_eq!(got, tar, "cold reconstruction must be bit-identical");
+        let t1 = std::time::Instant::now();
+        let got = store.read_tar(&meta.id).unwrap();
+        hot += t1.elapsed().as_secs_f64();
+        assert_eq!(got, tar, "cached read must be bit-identical");
+    }
+    let out = ReconstructLatency {
+        tar_bytes: tar.len() as u64,
+        cold_secs: cold / trials as f64,
+        hot_secs: hot / trials as f64,
+    };
+
+    let mut table = Table::new(
+        &format!("read_tar latency, {} KiB layer ({trials} trials)", out.tar_bytes / 1024),
+        &["path", "mean"],
+    );
+    table.row(vec!["cold (pool reassembly)".into(), fmt_secs(out.cold_secs)]);
+    table.row(vec!["hot (tar cache)".into(), fmt_secs(out.hot_secs)]);
+    table.print();
+    out
+}
+
+/// Write the machine-readable baseline: once into `bench_results/` and
+/// once at the repository root (the trajectory file later PRs compare
+/// against).
+fn emit_baseline(history: &HistoryStorage, recon: &ReconstructLatency, trials: usize) {
+    let doc = Json::obj(vec![
+        ("bench", Json::str("dedup_store")),
+        ("measured", Json::Bool(true)),
+        ("revisions", Json::num(REVISIONS as f64)),
+        ("asset_bytes", Json::num(ASSET_LEN as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("logical_bytes", Json::num(history.logical_bytes as f64)),
+        ("pool_bytes_single", Json::num(history.pool_bytes_single as f64)),
+        ("pool_bytes_full", Json::num(history.pool_bytes_full as f64)),
+        ("store_bytes_full", Json::num(history.store_bytes_full as f64)),
+        ("pool_chunks_full", Json::num(history.pool_chunks_full as f64)),
+        (
+            "pool_growth_fraction",
+            Json::num(
+                (history.pool_bytes_full - history.pool_bytes_single) as f64
+                    / (history.pool_bytes_single as f64).max(1.0),
+            ),
+        ),
+        (
+            "store_vs_logical_fraction",
+            Json::num(history.store_bytes_full as f64 / (history.logical_bytes as f64).max(1.0)),
+        ),
+        (
+            "reconstruct",
+            Json::obj(vec![
+                ("tar_bytes", Json::num(recon.tar_bytes as f64)),
+                ("cold_secs", Json::num(recon.cold_secs)),
+                ("hot_secs", Json::num(recon.hot_secs)),
+            ]),
+        ),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_dedup_store.json", &text).expect("write baseline");
+    // Repo root (cargo bench runs from the package dir `rust/`).
+    if std::fs::write("../BENCH_dedup_store.json", &text).is_ok() {
+        eprintln!("wrote ../BENCH_dedup_store.json");
+    }
+}

@@ -62,19 +62,19 @@ fn main() {
     let dir = root.join("disarmed");
     std::fs::create_dir_all(&dir).unwrap();
     let disarmed = time_writes(&dir, iters, |target, tmp| {
-        fault::durable_write("store.layer.tar", target, tmp, &payload).unwrap();
+        fault::durable_write("store.chunk.put", target, tmp, &payload).unwrap();
     });
 
     // Leg 3: hooked, armed, but scoped to a tree we never touch — the
     // slow path runs and the scope filter rejects every arrival.
     let elsewhere = root.join("elsewhere");
     let guard = fault::install(
-        FaultPlan::fail_at("store.layer.tar", 0, FaultMode::Crash).scoped(&elsewhere),
+        FaultPlan::fail_at("store.chunk.put", 0, FaultMode::Crash).scoped(&elsewhere),
     );
     let dir = root.join("foreign");
     std::fs::create_dir_all(&dir).unwrap();
     let foreign = time_writes(&dir, iters, |target, tmp| {
-        fault::durable_write("store.layer.tar", target, tmp, &payload).unwrap();
+        fault::durable_write("store.chunk.put", target, tmp, &payload).unwrap();
     });
     drop(guard);
 

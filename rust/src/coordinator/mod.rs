@@ -337,6 +337,26 @@ impl BuildCoordinator {
         Ok(warm)
     }
 
+    /// [`BuildCoordinator::warm_with_cache`] for a **hot set**: before
+    /// warming, the coordinator resolves each tag's chunk digests at
+    /// the origin ([`RemoteRegistry::tag_chunk_digests`]) and pins them
+    /// in the pull cache, so later cold-tag traffic cannot evict the
+    /// fleet's declared working set. Pins are cumulative across calls;
+    /// rotate the hot set with [`crate::registry::PullCache::unpin_all`].
+    pub fn warm_pinned(
+        &self,
+        remote: &RemoteRegistry,
+        tags: &[String],
+        jobs: usize,
+        pull_cache: crate::registry::PullCache,
+    ) -> Result<WarmReport> {
+        for tag in tags {
+            let r = crate::oci::ImageRef::parse(tag);
+            pull_cache.pin(&remote.tag_chunk_digests(&r)?);
+        }
+        self.warm_with_cache(remote, tags, jobs, Some(pull_cache))
+    }
+
     /// Process a batch of requests to completion under the default
     /// step-level scheduler; returns outcomes in completion order plus
     /// aggregate metrics.
@@ -697,6 +717,37 @@ mod tests {
         );
         // Re-warming is a no-op: every layer already local.
         assert_eq!(coordinator.warm(&remote, &tags, 2).unwrap().layers_fetched, 0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn warm_pinned_keeps_hot_tag_chunks_resident() {
+        let root = tmp("warmpin");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut seed = crate::daemon::Daemon::new(&root.join("seed")).unwrap();
+        seed.cost = CostModel::instant();
+        let scenario = Scenario::generate(ScenarioKind::PythonTiny, &root.join("proj"), 5).unwrap();
+        seed.build(&scenario.dir, &scenario.tag()).unwrap();
+        let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+        seed.push(&scenario.tag(), &remote).unwrap();
+
+        // A 1-byte budget would evict every chunk as it lands — unless
+        // the hot tag's digests are pinned first, in which case the
+        // cache keeps them and runs over budget by design.
+        let cache = crate::registry::PullCache::open(&root.join("cache"), 1).unwrap();
+        let coordinator = BuildCoordinator::new(&root.join("farm"), 1);
+        let tags = vec![scenario.tag()];
+        let warm = coordinator.warm_pinned(&remote, &tags, 1, cache.clone()).unwrap();
+        assert!(warm.layers_fetched > 0);
+        let stats = cache.stats();
+        assert!(stats.entries > 0, "pinned chunks must stay resident: {stats:?}");
+        assert!(stats.pinned_bytes > 0 && stats.pinned_bytes == stats.bytes);
+        assert!(stats.bytes > stats.budget, "pins hold the cache over budget");
+        // Every digest the origin lists for the tag is resident.
+        let digests = remote
+            .tag_chunk_digests(&crate::oci::ImageRef::parse(&scenario.tag()))
+            .unwrap();
+        assert_eq!(stats.entries, digests.len() as u64);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

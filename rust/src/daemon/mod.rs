@@ -264,7 +264,8 @@ impl Daemon {
     }
 
     /// Delete unreferenced layers (refcount = appearances in stored
-    /// images). Returns the number of layers removed.
+    /// images), then sweep the local chunk pool of chunks no surviving
+    /// layer references. Returns the number of layers removed.
     pub fn prune(&self) -> Result<usize> {
         let mut referenced = std::collections::BTreeSet::new();
         for id in self.images.list()? {
@@ -278,7 +279,34 @@ impl Daemon {
                 removed += 1;
             }
         }
+        if removed > 0 {
+            // Deleting a layer drops its manifest, not its chunks —
+            // reclaim the bytes (shared chunks survive via the other
+            // layers' manifests).
+            self.layers.gc_pool()?;
+        }
         Ok(removed)
+    }
+
+    /// Eagerly convert any legacy tar-layout layers to the chunk-backed
+    /// layout — the `layerjet store migrate` entry point. Lazy migration
+    /// (on a layer's next write) makes this optional; running it once
+    /// reclaims the legacy tar bytes immediately.
+    pub fn migrate_store(&self) -> Result<crate::store::MigrateReport> {
+        self.layers.migrate()
+    }
+
+    /// Verify every local pool chunk against its digest, drop rotted
+    /// ones, and report which layers that leaves incomplete (repair by
+    /// re-pulling them).
+    pub fn scrub_store(&self) -> Result<crate::store::PoolScrubReport> {
+        self.layers.scrub_pool()
+    }
+
+    /// Occupancy snapshot of the local store: layer counts by layout,
+    /// pool size, and the logical (pre-dedup) byte total.
+    pub fn store_stats(&self) -> Result<crate::store::StoreStats> {
+        self.layers.stats()
     }
 }
 

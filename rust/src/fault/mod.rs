@@ -1,7 +1,8 @@
 //! Deterministic fault injection for crash-consistency testing.
 //!
-//! Every durability boundary in the crate — layer tar/meta/sidecar writes in
-//! [`crate::store`], chunk-pool I/O, push negotiation and pull staging in
+//! Every durability boundary in the crate — local chunk-pool puts/gets,
+//! layer manifest/meta/sidecar writes in [`crate::store`], remote
+//! chunk-pool I/O, push negotiation and pull staging in
 //! [`crate::registry`], and step execution in [`crate::builder`] — calls one
 //! of the hooks in this module ([`check`] or [`durable_write`]) with a
 //! *named site* and the path being touched. When no plan is installed the
@@ -54,8 +55,10 @@ use crate::util::prng::Prng;
 /// fault-matrix test enumerates this list; adding a hook to a new
 /// boundary means adding its site name here.
 pub const SITES: &[&str] = &[
-    "store.layer.tar",        // layer.tar body write in the layer store
-    "store.layer.meta",       // layer json metadata (the commit point)
+    "store.chunk.put",        // chunk landing in the store's local pool
+    "store.chunk.get",        // chunk read back out (tar reconstruction)
+    "store.manifest.commit",  // a layer's chunk-manifest write (content commit)
+    "store.layer.meta",       // layer json metadata (the visibility point)
     "store.layer.sidecar",    // chunk/checkpoint/file-index sidecars
     "store.image",            // image manifests and the tag map
     "registry.pool.put",      // chunk landing in a content-addressed pool
@@ -454,8 +457,8 @@ mod tests {
     #[test]
     fn disarmed_hooks_are_noops() {
         let d = tmp("disarmed");
-        assert!(check("store.layer.tar", &d.join("x")).is_ok());
-        durable_write("store.layer.tar", &d.join("y"), &d.join("y.tmp"), b"abc").unwrap();
+        assert!(check("store.chunk.put", &d.join("x")).is_ok());
+        durable_write("store.chunk.put", &d.join("y"), &d.join("y.tmp"), b"abc").unwrap();
         assert_eq!(std::fs::read(d.join("y.tmp")).unwrap(), b"abc");
         let _ = std::fs::remove_dir_all(&d);
     }
@@ -495,10 +498,11 @@ mod tests {
     #[test]
     fn torn_write_leaves_partial_orphan() {
         let d = tmp("torn");
-        let guard = install(FaultPlan::fail_at("store.layer.tar", 0, FaultMode::Torn(3)).scoped(&d));
-        let target = d.join("layer.tar");
-        let tmp_file = d.join("layer.tar.tmp-x");
-        let err = durable_write("store.layer.tar", &target, &tmp_file, b"0123456789").unwrap_err();
+        let guard =
+            install(FaultPlan::fail_at("store.manifest.commit", 0, FaultMode::Torn(3)).scoped(&d));
+        let target = d.join("layer.manifest");
+        let tmp_file = d.join("layer.manifest.tmp-x");
+        let err = durable_write("store.manifest.commit", &target, &tmp_file, b"0123456789").unwrap_err();
         assert!(is_crash(&err));
         // The torn prefix landed in the temp file; the target never appeared.
         assert_eq!(std::fs::read(&tmp_file).unwrap(), b"012");

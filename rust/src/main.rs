@@ -48,10 +48,36 @@ COMMANDS:
                                          chunks hit there never touch the
                                          origin, and wire fetches are
                                          written through for the next pull
-  registry scrub --remote DIR            re-hash every pool chunk, drop rot,
+  store migrate                          eagerly convert legacy tar-layout
+                                         layers to the chunk-backed layout
+                                         and reclaim the shadowed tar bytes
+                                         (otherwise migration happens lazily,
+                                         on each layer's next write)
+  store scrub                            re-hash every local pool chunk, drop
+                                         rot, report layers left incomplete
+                                         (repair: re-pull their images)
+  store gc                               drop local pool chunks no layer
+                                         manifest references (runs
+                                         automatically after prune)
+  store stats                            local store occupancy: layers by
+                                         layout, pool chunks/bytes and the
+                                         dedup ratio vs logical size
+  warm --remote DIR TAG [TAG ...] [--workers N] [--jobs N]
+       [--cache DIR [--cache-budget BYTES]] [--pin]
+                                         pre-pull tags into every worker
+                                         daemon under --root (the
+                                         coordinator's farm warm-up);
+                                         --cache reads through a persistent
+                                         pull cache, --pin additionally
+                                         pins the tags' chunks there so
+                                         later cold-tag pulls cannot evict
+                                         the declared hot set
+  registry scrub --remote DIR [--jobs N] re-hash every pool chunk, drop rot,
                                          demote affected layers so the next
                                          push repairs them (per-shard
-                                         exclusive leases, round-robin)
+                                         exclusive leases; shards proceed in
+                                         parallel on N workers, default one
+                                         per shard)
   registry untag NAME:TAG --remote DIR   drop a remote tag (what makes an
                                          image collectable by gc)
   registry gc --remote DIR               mark-and-sweep: delete untagged
@@ -380,13 +406,14 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 )?;
                 println!(
                     "pushed {}: {} layers, {} uploaded, {} deduped ({} chunks sent, {} reused, \
-                     {} negotiation round-trip(s){})",
+                     {} rehashed, {} negotiation round-trip(s){})",
                     report.reference,
                     report.layers.len(),
                     layerjet::util::human_bytes(report.bytes_uploaded),
                     layerjet::util::human_bytes(report.bytes_deduped),
                     report.chunks_uploaded,
                     report.chunks_deduped,
+                    report.chunks_rehashed,
                     report.negotiation_round_trips,
                     if report.whole_tar { ", whole-tar mode" } else { "" },
                 );
@@ -433,6 +460,148 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 }
             }
         }
+        "store" => {
+            let sub = cli.pos().ok_or_else(|| {
+                layerjet::Error::msg("store: missing subcommand (migrate|scrub|gc|stats)")
+            })?;
+            let daemon = open_daemon()?;
+            match sub.as_str() {
+                "migrate" => {
+                    let r = daemon.migrate_store()?;
+                    println!(
+                        "migrated {} layer(s) to the chunk-backed layout \
+                         ({} already chunk-backed), {} of legacy tar reclaimed",
+                        r.layers_converted,
+                        r.layers_already_chunked,
+                        layerjet::util::human_bytes(r.bytes_reclaimed),
+                    );
+                }
+                "scrub" => {
+                    let r = daemon.scrub_store()?;
+                    println!(
+                        "scrubbed {} pool chunk(s): {} dropped ({}), {} layer(s) left incomplete",
+                        r.chunks_checked,
+                        r.chunks_dropped,
+                        layerjet::util::human_bytes(r.bytes_dropped),
+                        r.layers_incomplete,
+                    );
+                    if r.layers_incomplete > 0 {
+                        eprintln!(
+                            "note: re-pull any image containing the incomplete layer(s) to repair"
+                        );
+                    }
+                }
+                "gc" => {
+                    let r = daemon.layers.gc_pool()?;
+                    println!(
+                        "gc: {} unreferenced pool chunk(s) dropped, {} reclaimed",
+                        r.chunks_dropped,
+                        layerjet::util::human_bytes(r.bytes_reclaimed),
+                    );
+                }
+                "stats" => {
+                    let s = daemon.store_stats()?;
+                    println!(
+                        "{} layer(s): {} chunk-backed, {} legacy tar",
+                        s.layers, s.chunk_backed, s.legacy,
+                    );
+                    let ratio = if s.pool_bytes > 0 {
+                        s.logical_bytes as f64 / s.pool_bytes as f64
+                    } else {
+                        1.0
+                    };
+                    println!(
+                        "chunk pool: {} chunk(s), {} on disk for {} logical ({ratio:.2}x dedup)",
+                        s.pool_chunks,
+                        layerjet::util::human_bytes(s.pool_bytes),
+                        layerjet::util::human_bytes(s.logical_bytes),
+                    );
+                }
+                other => {
+                    return Err(layerjet::Error::msg(format!(
+                        "store: unknown subcommand {other:?} (migrate|scrub|gc|stats)"
+                    )))
+                }
+            }
+        }
+        "warm" => {
+            use layerjet::coordinator::BuildCoordinator;
+            let remote_dir = cli
+                .opt("--remote")
+                .ok_or_else(|| layerjet::Error::msg("warm: missing --remote DIR"))?;
+            let workers = cli
+                .opt("--workers")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("warm: bad --workers {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(1)
+                .max(1);
+            let jobs = cli
+                .opt("--jobs")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| layerjet::Error::msg(format!("warm: bad --jobs {v:?}")))
+                })
+                .transpose()?
+                .unwrap_or(workers);
+            let pin = cli.has("--pin");
+            let cache = match cli.opt("--cache") {
+                Some(dir) => {
+                    let budget = cli
+                        .opt("--cache-budget")
+                        .map(|v| {
+                            v.parse::<u64>().map_err(|_| {
+                                layerjet::Error::msg(format!("warm: bad --cache-budget {v:?}"))
+                            })
+                        })
+                        .transpose()?;
+                    Some(match budget {
+                        Some(b) => layerjet::registry::PullCache::open(&PathBuf::from(&dir), b)?,
+                        None => layerjet::registry::PullCache::open_default(&PathBuf::from(&dir))?,
+                    })
+                }
+                None => None,
+            };
+            let mut tags = Vec::new();
+            while let Some(t) = cli.pos() {
+                tags.push(t);
+            }
+            if tags.is_empty() {
+                return Err(layerjet::Error::msg("warm: no tags (pass NAME:TAG ...)"));
+            }
+            let remote = RemoteRegistry::open(&PathBuf::from(&remote_dir))?;
+            let coordinator = BuildCoordinator::new(&root, workers);
+            let warm = if pin {
+                let c = cache
+                    .clone()
+                    .ok_or_else(|| layerjet::Error::msg("warm: --pin requires --cache DIR"))?;
+                coordinator.warm_pinned(&remote, &tags, jobs, c)?
+            } else {
+                coordinator.warm_with_cache(&remote, &tags, jobs, cache.clone())?
+            };
+            println!(
+                "warmed {} tag(s) into {} worker(s): {} layer(s) fetched, {} fetched \
+                 ({} shared across workers), {} from origin, {} from pull cache",
+                tags.len(),
+                workers,
+                warm.layers_fetched,
+                layerjet::util::human_bytes(warm.bytes_fetched),
+                layerjet::util::human_bytes(warm.bytes_shared),
+                layerjet::util::human_bytes(warm.bytes_from_origin),
+                layerjet::util::human_bytes(warm.bytes_from_cache),
+            );
+            if let Some(c) = &cache {
+                let s = c.stats();
+                println!(
+                    "pull cache: {} resident ({} pinned) of {} budget",
+                    layerjet::util::human_bytes(s.bytes),
+                    layerjet::util::human_bytes(s.pinned_bytes),
+                    layerjet::util::human_bytes(s.budget),
+                );
+            }
+        }
         "registry" => {
             let sub = cli.pos().ok_or_else(|| {
                 layerjet::Error::msg(
@@ -456,7 +625,18 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     }
                 }
                 "scrub" => {
-                    let r = remote.scrub()?;
+                    let jobs = cli
+                        .opt("--jobs")
+                        .map(|v| {
+                            v.parse::<usize>().map_err(|_| {
+                                layerjet::Error::msg(format!("registry scrub: bad --jobs {v:?}"))
+                            })
+                        })
+                        .transpose()?;
+                    let r = match jobs {
+                        Some(j) => remote.scrub_with(j)?,
+                        None => remote.scrub()?,
+                    };
                     println!(
                         "scrubbed {} chunks: {} dropped ({} reclaimed), {} layer(s) demoted for re-push",
                         r.chunks_checked,

@@ -65,6 +65,17 @@ impl ChunkPool {
         Ok(pool)
     }
 
+    /// Open a daemon's **local layer-store pool** (`<store>/chunk-pool/`):
+    /// same layout, but I/O reports under the `store.chunk.{put,get}`
+    /// fault sites — the local store's durability boundaries are
+    /// injectable independently of any registry's.
+    pub fn open_local(root: &Path) -> Result<ChunkPool> {
+        let mut pool = ChunkPool::open(root)?;
+        pool.put_site = "store.chunk.put";
+        pool.get_site = "store.chunk.get";
+        Ok(pool)
+    }
+
     /// Reference a pool without creating anything on disk — used by pull
     /// against remotes that may not have a pool at all (legacy layout).
     pub fn at(root: &Path) -> ChunkPool {
@@ -189,11 +200,19 @@ impl ChunkPool {
         Ok(out)
     }
 
-    /// Number of committed chunks.
+    /// Is this name a committed chunk blob? In-flight `.tmp-*` writes
+    /// must NOT count: a 64-char temp name would otherwise skew `len`,
+    /// `disk_usage` (and the `registry stats` balance factors derived
+    /// from them) mid-push, and a temp name is never a valid digest.
+    fn is_committed_name(name: &str) -> bool {
+        !crate::store::is_tmp_name(name) && Digest::parse(name).is_some()
+    }
+
+    /// Number of committed chunks (in-flight `.tmp-*` writes excluded).
     pub fn len(&self) -> Result<usize> {
         let mut n = 0;
         for entry in std::fs::read_dir(&self.root)? {
-            if entry?.file_name().to_string_lossy().len() == 64 {
+            if Self::is_committed_name(&entry?.file_name().to_string_lossy()) {
                 n += 1;
             }
         }
@@ -204,12 +223,12 @@ impl ChunkPool {
         Ok(self.len()? == 0)
     }
 
-    /// Total bytes of committed chunks.
+    /// Total bytes of committed chunks (in-flight `.tmp-*` excluded).
     pub fn disk_usage(&self) -> Result<u64> {
         let mut total = 0;
         for entry in std::fs::read_dir(&self.root)? {
             let entry = entry?;
-            if entry.file_name().to_string_lossy().len() == 64 {
+            if Self::is_committed_name(&entry.file_name().to_string_lossy()) {
                 total += entry.metadata()?.len();
             }
         }
@@ -248,6 +267,27 @@ mod tests {
         let ghost = Digest::of(b"ghost");
         assert!(pool.get(&ghost).is_err());
         assert_eq!(pool.try_get(&ghost), None);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn in_flight_tmp_files_do_not_skew_stats() {
+        let (pool, d) = fresh("tmpskew");
+        let data = vec![3u8; 2048];
+        let digest = Digest::of(&data);
+        pool.put(&digest, &data).unwrap();
+        // An in-flight temp write, padded to exactly 64 chars so a naive
+        // name-length filter would count it as a committed chunk.
+        let mut tmp_name = format!(".tmp-{}-77", std::process::id());
+        while tmp_name.len() < 64 {
+            tmp_name.push('f');
+        }
+        assert_eq!(tmp_name.len(), 64);
+        std::fs::write(d.join(&tmp_name), vec![0u8; 9999]).unwrap();
+        assert_eq!(pool.len().unwrap(), 1, "tmp file must not count as a chunk");
+        assert_eq!(pool.disk_usage().unwrap(), 2048, "tmp bytes must not skew usage");
+        assert_eq!(pool.list().unwrap(), vec![digest], "tmp file must not list");
+        assert_eq!(pool.sweep_tmp(), 1);
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -461,6 +461,12 @@ pub struct PushReport {
     /// Layers demoted to the whole-tar wire path because the chunk pool
     /// kept failing past the retry budget (a scrub was scheduled).
     pub layers_degraded: usize,
+    /// Chunks whose digests were re-derived by hashing tar bytes during
+    /// this push. Zero when every uploaded layer came from a
+    /// chunk-backed store whose stored CDC manifest (and chunk-root
+    /// sidecar) were exchanged as-is — the manifest-exchange fast path;
+    /// legacy tar-layout layers and stale sidecars pay a re-chunk here.
+    pub chunks_rehashed: usize,
 }
 
 /// Result of a successful pull.
@@ -575,6 +581,9 @@ struct LayerUpload {
     bytes_deduped: u64,
     chunks_uploaded: usize,
     chunks_deduped: usize,
+    /// Chunks re-derived by hashing tar bytes during this push — zero
+    /// when the local store's chunk-backed manifest was exchanged as-is.
+    chunks_rehashed: usize,
     /// Skipped the heavy stage: the push journal vouched for this layer.
     resumed: bool,
     /// Demoted to whole-tar because the pool kept failing past the retry
@@ -936,6 +945,42 @@ impl RemoteRegistry {
         decode_manifest(&std::fs::read(self.layer_dir(id).join("layer.chunks")).ok()?)
     }
 
+    /// Every chunk digest reachable from a tag: tag → image → each
+    /// layer's chunk manifest (both codecs), deduplicated. What the
+    /// coordinator pins in a [`PullCache`] for tags it declares hot —
+    /// legacy (whole-tar) layers contribute nothing.
+    pub fn tag_chunk_digests(&self, r: &ImageRef) -> Result<Vec<Digest>> {
+        let tags = self.load_tags()?;
+        let image_id = tags
+            .get(&r.to_string())
+            .and_then(|v| v.as_str())
+            .and_then(ImageId::parse)
+            .ok_or_else(|| Error::Registry(format!("remote has no tag {r}")))?;
+        let image = self.load_image(&image_id)?;
+        let mut seen: HashSet<Digest> = HashSet::new();
+        let mut out = Vec::new();
+        for lid in &image.layer_ids {
+            match self.layer_manifest(lid) {
+                Some(LayerManifest::V2(m)) => {
+                    for (d, _) in &m.chunks {
+                        if seen.insert(*d) {
+                            out.push(*d);
+                        }
+                    }
+                }
+                Some(LayerManifest::V1(cd)) => {
+                    for d in &cd.chunks {
+                        if seen.insert(*d) {
+                            out.push(*d);
+                        }
+                    }
+                }
+                None => {}
+            }
+        }
+        Ok(out)
+    }
+
     /// Push an image (resolved from the local stores) with the default
     /// serial transport and the native hash engine.
     pub fn push(
@@ -1084,6 +1129,7 @@ impl RemoteRegistry {
                     bytes_deduped: 0,
                     chunks_uploaded: 0,
                     chunks_deduped: 0,
+                    chunks_rehashed: 0,
                     resumed: true,
                     degraded: false,
                 });
@@ -1105,6 +1151,7 @@ impl RemoteRegistry {
                     bytes_deduped: 0,
                     chunks_uploaded: 0,
                     chunks_deduped: 0,
+                    chunks_rehashed: 0,
                     resumed: false,
                     degraded: false,
                 });
@@ -1117,6 +1164,7 @@ impl RemoteRegistry {
                 bytes_deduped: 0,
                 chunks_uploaded: 0,
                 chunks_deduped: 0,
+                chunks_rehashed: 0,
                 resumed: false,
                 degraded: false,
             };
@@ -1132,7 +1180,11 @@ impl RemoteRegistry {
                 Some(cd) if cd.total_len == tar.len() as u64 && cd.root == image.chunk_roots[i] => {
                     cd
                 }
-                _ => ChunkDigest::compute(&tar, engine),
+                _ => {
+                    let cd = ChunkDigest::compute(&tar, engine);
+                    up.chunks_rehashed += cd.chunks.len();
+                    cd
+                }
             };
             if cd.root != image.chunk_roots[i] {
                 return Err(Error::Registry(format!(
@@ -1155,13 +1207,30 @@ impl RemoteRegistry {
                 (cd.encode(), spans)
             } else {
                 // v2 writer: content-defined chunks named by the SHA-256
-                // of their raw bytes. When this push uploads a single
-                // layer (the redeploy hot path) the layer pipeline is
-                // idle, so the span digesting borrows its width instead;
-                // multi-layer pushes already saturate it one layer per
-                // worker.
-                let span_jobs = if uploads.len() == 1 { opts.jobs } else { 1 };
-                let manifest = CdcManifest::from_data(&tar, span_jobs);
+                // of their raw bytes. A chunk-backed store already holds
+                // this layer's CDC manifest — the manifest-exchange fast
+                // path reuses it verbatim, so negotiation runs straight
+                // off the local pool's chunk list with **zero
+                // re-chunking** of the reconstructed tar. Only legacy
+                // tar-layout layers (or a manifest that no longer
+                // describes the bytes) pay a re-chunk. The checksum
+                // verification above already vouched for the tar, and
+                // `read_tar` reconstructs *from* this manifest, so the
+                // two cannot silently disagree.
+                let manifest = match layers.cdc_manifest(lid) {
+                    Some(m) if m.total_len == tar.len() as u64 => m,
+                    _ => {
+                        // When this push uploads a single layer (the
+                        // redeploy hot path) the layer pipeline is idle,
+                        // so the span digesting borrows its width
+                        // instead; multi-layer pushes already saturate
+                        // it one layer per worker.
+                        let span_jobs = if uploads.len() == 1 { opts.jobs } else { 1 };
+                        let m = CdcManifest::from_data(&tar, span_jobs);
+                        up.chunks_rehashed += m.chunks.len();
+                        m
+                    }
+                };
                 let mut offset = 0usize;
                 let spans = manifest
                     .chunks
@@ -1275,6 +1344,7 @@ impl RemoteRegistry {
             retries: retry_count.into_inner(),
             layers_resumed: 0,
             layers_degraded: 0,
+            chunks_rehashed: 0,
         };
         // Commit barrier: renew the lease (heartbeat + fencing check in
         // one durable write) before the first serial mutation of
@@ -1313,6 +1383,7 @@ impl RemoteRegistry {
             report.chunks_deduped += up.chunks_deduped;
             report.layers_resumed += up.resumed as usize;
             report.layers_degraded += up.degraded as usize;
+            report.chunks_rehashed += up.chunks_rehashed;
         }
         crate::store::write_atomic(
             "registry.push.commit",
@@ -1469,11 +1540,14 @@ impl RemoteRegistry {
         let declared = image.diff_ids[i];
         if layers.exists(&lid) {
             if let Ok(meta) = layers.meta(&lid) {
-                // Skip only a layer that is demonstrably intact: a crash
-                // can leave a fresh `json` over a truncated `layer.tar`,
-                // and re-pull is the documented repair path — so the
-                // resume check hashes the local tar (still far cheaper
-                // than a wire fetch) rather than trusting metadata.
+                // Skip only a layer that is demonstrably intact: the
+                // local pool may have lost chunks (scrubbed rot, a
+                // crashed migration), and re-pull is the documented
+                // repair path — so the resume check reconstructs and
+                // hashes the local content (still far cheaper than a
+                // wire fetch) rather than trusting metadata. `verify`
+                // maps content damage to `false`, which lands us on the
+                // refetch path right below.
                 if meta.checksum == declared && layers.verify(&lid).unwrap_or(false) {
                     return Ok(LayerPull::Skipped);
                 }
@@ -1498,7 +1572,8 @@ impl RemoteRegistry {
         // scheduled to repair the pool. The degraded tar still passes the
         // same full checksum verification below — degradation trades
         // transfer efficiency, never integrity.
-        let assembled: Option<Result<(Vec<u8>, ChunkDigest)>> = match manifest {
+        let assembled: Option<Result<(Vec<u8>, ChunkDigest, Option<CdcManifest>)>> = match manifest
+        {
             Some(LayerManifest::V2(m)) => Some((|| {
                 // v2: variable-size chunks, addressed by raw SHA-256.
                 let expected: Vec<Digest> = m.chunks.iter().map(|(d, _)| *d).collect();
@@ -1542,7 +1617,9 @@ impl RemoteRegistry {
                         lid.short()
                     )));
                 }
-                Ok((tar, cd))
+                // The verified wire manifest doubles as the layer's
+                // local chunk manifest — the store adopts it as-is.
+                Ok((tar, cd, Some(m)))
             })()),
             Some(LayerManifest::V1(cd)) => Some((|| {
                 // v1: fixed 4 KiB chunks, addressed by engine digests.
@@ -1575,11 +1652,11 @@ impl RemoteRegistry {
                         cd.total_len
                     )));
                 }
-                Ok((tar, cd))
+                Ok((tar, cd, None))
             })()),
             None => None,
         };
-        let (tar, cd) = match assembled {
+        let (tar, cd, wire_manifest) = match assembled {
             Some(Ok(v)) => v,
             Some(Err(e)) => {
                 let tar_path = self.layer_dir(&lid).join("layer.tar");
@@ -1593,7 +1670,7 @@ impl RemoteRegistry {
                 stats.bytes_fetched += tar.len() as u64;
                 stats.bytes_from_origin += tar.len() as u64;
                 let cd = ChunkDigest::compute(&tar, engine);
-                (tar, cd)
+                (tar, cd, None)
             }
             None => {
                 // Legacy layer: whole tar over the wire.
@@ -1603,7 +1680,7 @@ impl RemoteRegistry {
                 stats.bytes_fetched += tar.len() as u64;
                 stats.bytes_from_origin += tar.len() as u64;
                 let cd = ChunkDigest::compute(&tar, engine);
-                (tar, cd)
+                (tar, cd, None)
             }
         };
         // The layer's single full hashing pass: integrity on pull, plus
@@ -1624,7 +1701,13 @@ impl RemoteRegistry {
             size: tar.len() as u64,
             version: crate::store::LAYER_VERSION.into(),
         };
-        layers.put_layer_prehashed(&meta, &tar, &cd, &ckpts)?;
+        // v2 pulls hand their verified wire manifest straight to the
+        // chunk-backed store (no local re-chunking); v1 / whole-tar
+        // paths re-chunk on store like any other write.
+        match &wire_manifest {
+            Some(m) => layers.put_layer_from_wire(&meta, &tar, m, &cd, &ckpts)?,
+            None => layers.put_layer_prehashed(&meta, &tar, &cd, &ckpts)?,
+        }
         Ok(LayerPull::Fetched(stats))
     }
 
@@ -1662,25 +1745,47 @@ impl RemoteRegistry {
     /// pool addressing scheme: SHA-256 of the raw bytes (v2) or the
     /// padded engine digest (v1, chunks ≤ 4 KiB only).
     ///
-    /// On lease-capable remotes, scrub takes the shards' exclusive
-    /// leases **round-robin** — one shard's backend is re-hashed under
-    /// that shard's lease alone, then released before the next pass —
-    /// so pushers (who need every shard shared) drain once per pass
-    /// instead of the whole pool going dark for the full scan. Scrub
-    /// only deletes provably-rotted bytes, so passes tolerate pushes
-    /// landing between them; the final demotion pass re-checks the
-    /// pool under shard 0's lease before touching any checksum trace.
+    /// On lease-capable remotes, each per-shard pass runs under that
+    /// shard's exclusive lease alone, released as soon as the shard is
+    /// scanned — so pushers (who need every shard shared) drain one
+    /// shard at a time instead of the whole pool going dark for the
+    /// full scan. Scrub only deletes provably-rotted bytes, so passes
+    /// tolerate pushes landing between them; the final demotion pass
+    /// re-checks the pool under shard 0's lease before touching any
+    /// checksum trace. Runs one worker per shard; see
+    /// [`RemoteRegistry::scrub_with`] for explicit widths.
     pub fn scrub(&self) -> Result<ScrubReport> {
+        self.scrub_with(0)
+    }
+
+    /// [`RemoteRegistry::scrub`] with an explicit worker width
+    /// (`registry scrub --jobs N`; `0` means one worker per shard).
+    /// Shards are disjoint backend directories guarded by disjoint
+    /// leases, so the per-shard passes run concurrently on a scoped
+    /// worker pool and share nothing but the merged report. Each
+    /// worker holds exactly one exclusive lease and waits on nothing
+    /// else, so there is no cycle against pushers' ascending
+    /// shared-lease acquisition. The demotion pass keeps its serial,
+    /// fleet-locked semantics (shard 0's exclusive lease).
+    pub fn scrub_with(&self, jobs: usize) -> Result<ScrubReport> {
         let mut report = ScrubReport::default();
         if !self.supports_chunks() {
             return Ok(report);
         }
         let ring = ShardRing::load(&self.root)?;
-        let mut dropped: HashSet<Digest> = HashSet::new();
-        for k in 0..ring.shard_count() {
+        let shards = ring.shard_count();
+        let width = if jobs == 0 { shards } else { jobs };
+        let per_shard: Vec<(ScrubReport, Vec<Digest>)> = scoped_index_map(shards, width, |k| {
             let lease = self.lease_exclusive_on(&ring, k)?;
-            let result = self.scrub_shard(&ring, k, lease.as_ref(), &mut report, &mut dropped);
-            Self::settle_lease(lease, result)?;
+            let result = self.scrub_shard(&ring, k, lease.as_ref());
+            Self::settle_lease(lease, result)
+        })?;
+        let mut dropped: HashSet<Digest> = HashSet::new();
+        for (part, digests) in per_shard {
+            report.chunks_checked += part.chunks_checked;
+            report.chunks_dropped += part.chunks_dropped;
+            report.bytes_dropped += part.bytes_dropped;
+            dropped.extend(digests);
         }
         // Every shard was scanned: clear any pending degradation
         // marker, whether or not anything needed dropping.
@@ -1698,21 +1803,22 @@ impl RemoteRegistry {
         Ok(report)
     }
 
-    /// One round-robin scrub pass: re-hash every chunk on shard `k`'s
-    /// backend and delete the rotted ones, recording their digests.
+    /// One per-shard scrub pass: re-hash every chunk on shard `k`'s
+    /// backend and delete the rotted ones, returning the partial
+    /// report and the dropped digests for the caller to merge.
     fn scrub_shard(
         &self,
         ring: &ShardRing,
         k: usize,
         lease: Option<&lease::Lease>,
-        report: &mut ScrubReport,
-        dropped: &mut HashSet<Digest>,
-    ) -> Result<()> {
+    ) -> Result<(ScrubReport, Vec<Digest>)> {
         // Fencing check: this grant must still be the table's newest
         // exclusive token before anything is deleted.
         if let Some(lease) = lease {
             lease.validate()?;
         }
+        let mut report = ScrubReport::default();
+        let mut dropped = Vec::new();
         let pool = ChunkPool::at(&ring.chunk_dir(&self.root, k));
         for digest in pool.list()? {
             let Some(bytes) = pool.try_get(&digest) else {
@@ -1725,10 +1831,10 @@ impl RemoteRegistry {
                 pool.remove(&digest)?;
                 report.chunks_dropped += 1;
                 report.bytes_dropped += bytes.len() as u64;
-                dropped.insert(digest);
+                dropped.push(digest);
             }
         }
-        Ok(())
+        Ok((report, dropped))
     }
 
     /// Scrub's final pass: strip the checksum trace from layers whose

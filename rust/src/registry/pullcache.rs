@@ -42,10 +42,23 @@
 //! rebuilt deterministically (name order) on open; stamps are not
 //! persisted — recency restarts warm-neutral, which is exactly what a
 //! restarted edge daemon wants.
+//!
+//! # Pinning
+//!
+//! A coordinator that knows which tags are hot can [`PullCache::pin`]
+//! their chunk digests: pinned entries are never chosen as eviction
+//! victims, so background pulls of cold images cannot flush the
+//! fleet's working set. Pins are **advisory and in-process only** —
+//! they are not persisted (a restarted daemon re-pins from the
+//! coordinator's current hot set), and if the pinned set alone
+//! exceeds the byte budget the cache is allowed to run over budget
+//! rather than break the pin promise.
+//! [`PullCacheStats::pinned_bytes`] reports how much of the resident
+//! footprint is pinned.
 
 use crate::hash::{Digest, NativeEngine, CHUNK_SIZE};
 use crate::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -71,6 +84,9 @@ struct State {
     map: HashMap<Digest, Entry>,
     clock: u64,
     bytes: u64,
+    /// Digests the coordinator has declared hot; never eviction
+    /// victims. In-process only — rebuilt by re-pinning after restart.
+    pinned: HashSet<Digest>,
 }
 
 struct Inner {
@@ -101,6 +117,8 @@ pub struct PullCacheStats {
     pub entries: u64,
     /// Bytes currently resident.
     pub bytes: u64,
+    /// Resident bytes belonging to pinned (eviction-exempt) digests.
+    pub pinned_bytes: u64,
     /// The configured byte budget.
     pub budget: u64,
 }
@@ -142,8 +160,12 @@ impl PullCache {
             }
         }
         names.sort_by_key(|(d, _)| d.0);
-        let mut state =
-            State { map: HashMap::with_capacity(names.len()), clock: 0, bytes: 0 };
+        let mut state = State {
+            map: HashMap::with_capacity(names.len()),
+            clock: 0,
+            bytes: 0,
+            pinned: HashSet::new(),
+        };
         for (d, len) in names {
             state.clock += 1;
             state.bytes += len;
@@ -265,15 +287,34 @@ impl PullCache {
         Ok(())
     }
 
+    /// Declare digests hot: resident entries with these digests are
+    /// never picked as eviction victims, and future puts of them are
+    /// protected from the moment they land. Pinning is cumulative and
+    /// advisory; if the pinned set alone exceeds the budget the cache
+    /// runs over budget rather than evict a pin.
+    pub fn pin(&self, digests: &[Digest]) {
+        let mut state = self.inner.state.lock().unwrap();
+        state.pinned.extend(digests.iter().copied());
+    }
+
+    /// Drop every pin (e.g. the coordinator rotated its hot set).
+    /// Entries stay resident until ordinary LRU pressure evicts them.
+    pub fn unpin_all(&self) {
+        let mut state = self.inner.state.lock().unwrap();
+        state.pinned.clear();
+    }
+
     /// Evict minimum-stamp entries until the cache fits its budget,
     /// never evicting `keep` (the entry just written — an over-budget
-    /// chunk still caches, it just empties everything else).
+    /// chunk still caches, it just empties everything else) or a
+    /// pinned digest. If only `keep`/pinned entries remain, eviction
+    /// stops and the cache runs over budget.
     fn evict_to_budget(&self, state: &mut State, keep: Option<&Digest>) {
         while state.bytes > self.inner.budget {
             let victim = state
                 .map
                 .iter()
-                .filter(|&(d, _)| Some(d) != keep)
+                .filter(|&(d, _)| Some(d) != keep && !state.pinned.contains(d))
                 .min_by_key(|(_, e)| e.stamp)
                 .map(|(d, _)| *d);
             let Some(victim) = victim else { break };
@@ -293,9 +334,15 @@ impl PullCache {
     }
 
     pub fn stats(&self) -> PullCacheStats {
-        let (entries, bytes) = {
+        let (entries, bytes, pinned_bytes) = {
             let state = self.inner.state.lock().unwrap();
-            (state.map.len() as u64, state.bytes)
+            let pinned_bytes = state
+                .pinned
+                .iter()
+                .filter_map(|d| state.map.get(d))
+                .map(|e| e.len)
+                .sum();
+            (state.map.len() as u64, state.bytes, pinned_bytes)
         };
         PullCacheStats {
             hits: self.inner.hits.load(Ordering::Relaxed),
@@ -305,6 +352,7 @@ impl PullCache {
             bytes_served: self.inner.bytes_served.load(Ordering::Relaxed),
             entries,
             bytes,
+            pinned_bytes,
             budget: self.inner.budget,
         }
     }
@@ -389,6 +437,44 @@ mod tests {
         let stats = cache.stats();
         assert_eq!(stats.evicted, 1);
         assert!(stats.bytes <= stats.budget);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let d = tmp("pin");
+        let (d0, c0) = chunk(20);
+        let (d1, c1) = chunk(21);
+        let (d2, c2) = chunk(22);
+        // Budget fits exactly two chunks; d0 is the coldest but pinned.
+        let cache = PullCache::open(&d, (c0.len() + c1.len()) as u64).unwrap();
+        cache.put(&d0, &c0).unwrap();
+        cache.put(&d1, &c1).unwrap();
+        cache.pin(&[d0]);
+        cache.get(&d1).unwrap().unwrap(); // d1 now hotter than d0
+        cache.put(&d2, &c2).unwrap(); // must evict d1 — d0 is pinned
+        assert_eq!(
+            cache.get(&d0).unwrap().as_deref(),
+            Some(&c0[..]),
+            "pinned entry must never be an eviction victim"
+        );
+        assert!(cache.get(&d1).unwrap().is_none(), "coldest unpinned entry evicts");
+        assert_eq!(cache.get(&d2).unwrap().as_deref(), Some(&c2[..]));
+        let stats = cache.stats();
+        assert_eq!(stats.pinned_bytes, c0.len() as u64);
+        // Pin the survivors too: with only pinned entries (and the
+        // just-written chunk) resident, a further put runs over budget
+        // instead of breaking a pin.
+        cache.pin(&[d2]);
+        let (d3, c3) = chunk(23);
+        cache.put(&d3, &c3).unwrap();
+        assert!(cache.get(&d0).unwrap().is_some());
+        assert!(cache.get(&d2).unwrap().is_some());
+        assert!(cache.get(&d3).unwrap().is_some());
+        let stats = cache.stats();
+        assert!(stats.bytes > stats.budget, "pins may push the cache over budget");
+        cache.unpin_all();
+        assert_eq!(cache.stats().pinned_bytes, 0);
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -98,15 +98,11 @@ pub fn load_bundle(
         let meta = crate::oci::LayerMeta::from_json(
             &Json::parse(&String::from_utf8_lossy(meta_entry.data(bundle))).map_err(Error::Json)?,
         )?;
-        // Trust bundle metadata (docker-load semantics): write files
-        // directly rather than through put_layer's checksum assertion.
-        let dir = layers.layer_dir(&meta.id);
-        std::fs::create_dir_all(&dir)?;
-        std::fs::write(dir.join("version"), super::LAYER_VERSION)?;
-        std::fs::write(dir.join("layer.tar"), tar_entry.data(bundle))?;
-        std::fs::write(dir.join("json"), meta.to_json().to_string_pretty())?;
-        let cd = crate::hash::ChunkDigest::compute(tar_entry.data(bundle), engine);
-        layers.write_chunk_sidecar(&meta.id, &cd)?;
+        // Trust bundle metadata (docker-load semantics): adopt the
+        // layer without put_layer's checksum assertion. Content goes
+        // through the chunk pool like any other write, so re-loading
+        // an image whose layers are already stored costs no new bytes.
+        layers.adopt_layer(&meta, tar_entry.data(bundle), engine)?;
     }
 
     // Register config + tags.

@@ -1,29 +1,58 @@
-//! Local daemon storage: the overlay2-like layer store and the image
+//! Local daemon storage: the chunk-backed layer store and the image
 //! store ("the local registry" in the paper's terminology).
 //!
-//! Layout mirrors what the paper describes (§I, Table III-A): all layers
-//! live under `<root>/overlay2/<layer-id>/` with `version`, `layer.tar`
-//! and `json` files; image configs live under `<root>/images/`, and
-//! `repositories.json` maps `name:tag` to image ids.
+//! ## Layout
+//!
+//! Layer *metadata* keeps the overlay2-like shape the paper describes
+//! (§I, Table III-A): every layer lives under
+//! `<root>/overlay2/<layer-id>/` with `version`, `json`, and sidecar
+//! files; image configs live under `<root>/images/`, and
+//! `repositories.json` maps `name:tag` to image ids. Layer *content*
+//! is **layer-free**: the daemon keeps one content-addressed chunk
+//! pool under `<root>/chunk-pool/` (FastCDC chunks named by their
+//! SHA-256, the same codec the wire uses — [`crate::registry::cdc`]),
+//! and each layer directory stores a `layer.manifest` (its CDC chunk
+//! list) instead of a `layer.tar` body. The tar is **reconstructed on
+//! demand** from the pool ([`LayerStore::read_tar`]), with a small
+//! in-memory LRU cache ([`TAR_CACHE_BUDGET`]) absorbing hot-layer
+//! reconstruction cost. A 50-revision one-file-edit history therefore
+//! costs O(unique content), not O(revisions × layer size): every
+//! unchanged chunk is stored once no matter how many revisions
+//! reference it, and push/pull against a remote become manifest
+//! exchanges negotiated straight against this pool.
 //!
 //! Layer directories are addressed by the **permanent UUID**, so the
-//! implicit-decomposition injection path (paper §III.A) can patch
-//! `layer.tar` in place — "changes can be made to the layer directly
-//! without having to export the image or import the image".
+//! implicit-decomposition injection path (paper §III.A) still patches
+//! a layer's content in place — [`LayerStore::write_tar_raw`]
+//! re-chunks the patched tar, and unchanged chunks dedup against the
+//! pool.
+//!
+//! ## Back-compat / migration
+//!
+//! Stores written by older daemons hold `layer.tar` bodies.
+//! [`LayerStore::read_tar`] falls back to them transparently, every
+//! write converts the touched layer (lazy migration: the manifest
+//! lands, then the stale `layer.tar` is unlinked), and
+//! [`LayerStore::migrate`] converts a whole store eagerly (the
+//! `store migrate` CLI verb). When both files exist — a crash landed
+//! between manifest commit and body unlink — the **manifest wins**:
+//! it is always at least as new as the body.
 //!
 //! ## Concurrency / lock surface
 //!
 //! Every store file is written **atomically** (unique temp file in the
-//! target directory, then rename), so two writers racing the same layer
-//! id — possible under the coordinator's fleet scheduling and parallel
-//! warm-up, where the racing writers carry byte-identical
+//! target directory, then rename), so two writers racing the same
+//! layer id — possible under the coordinator's fleet scheduling and
+//! parallel warm-up, where the racing writers carry byte-identical
 //! content-addressed data — leave a complete file from one of them,
-//! never a torn one. Atomicity is per-file only: cross-file invariants
-//! (tar ↔ json ↔ sidecars of one revision, the image tag map) are
-//! serialized by the coordinator's **per-daemon store lock**, which is
-//! taken around scan+plan / finalize / injection patching and released
-//! while steps execute. Lock order: daemon store lock → chunk pool;
-//! the store lock is never held while waiting on the step scheduler.
+//! never a torn one. Pool chunk writes are idempotent the same way
+//! (temp + rename keyed by digest). Atomicity is per-file only:
+//! cross-file invariants (manifest ↔ json ↔ sidecars of one revision,
+//! the image tag map) are serialized by the coordinator's **per-daemon
+//! store lock**, which is taken around scan+plan / finalize /
+//! injection patching and released while steps execute. Lock order:
+//! daemon store lock → chunk pool → tar cache; the store lock is never
+//! held while waiting on the step scheduler.
 //!
 //! ## Crash consistency
 //!
@@ -31,23 +60,44 @@
 //! writes a uniquely named temp file *in the target directory*, fsyncs
 //! it, then renames, so a crash at any point leaves either the old
 //! complete file or the new complete file, plus at worst an orphaned
-//! `*.tmp-*`. Within one layer the `json` metadata is written **last**:
-//! a layer "exists" ([`LayerStore::exists`]) only once its data and
-//! sidecars landed, so a crash mid-`put_layer` leaves a directory
-//! without `json` — garbage by definition.
+//! `*.tmp-*`. Committed pool chunks are **immutable**: a crash can
+//! orphan a `.tmp-*` beside them, never tear one that landed.
+//!
+//! The write order inside one layer is the commit protocol
+//! ([`LayerStore::put_layer_prehashed`]):
+//!
+//! 1. pool chunks (`store.chunk.put`) — content first, idempotent;
+//! 2. `version` + hash sidecars (`store.layer.sidecar`);
+//! 3. `layer.manifest` (`store.manifest.commit`) — the layer's
+//!    **content commit point**: once it lands, every byte it names is
+//!    durable in the pool;
+//! 4. `json` last (`store.layer.meta`) — the **visibility point**: a
+//!    layer "exists" ([`LayerStore::exists`]) only once its metadata
+//!    landed, so a reader never sees metadata ahead of data.
+//!
+//! A crash before step 4 on a *fresh* layer leaves a directory without
+//! `json` — garbage by definition, swept on open. A crash between 3
+//! and 4 on an *overwrite* (same id, new revision) leaves new content
+//! under old metadata: [`LayerStore::verify`] fails until the metadata
+//! is rewritten — the §III.B key/lock window the injection path
+//! already handles. Chunks referenced by no surviving manifest are
+//! inert garbage until [`LayerStore::gc_pool`] collects them.
 //!
 //! What is **journaled**: nothing in the local store. (Registry pushes
 //! keep a small journal on the remote side; see `registry`.)
 //!
 //! What is **swept**: [`LayerStore::recover`] runs implicitly on
-//! [`LayerStore::open`] and removes orphaned `*.tmp-*` files, layer
-//! directories that never committed their `json`, and pull-staging
-//! directories holding no verified chunks. Staging directories that do
-//! hold verified chunks are *kept* — an interrupted pull resumes from
-//! them. The sweep assumes no concurrent writer on the same root in
-//! another process; in-process, stores are opened before builds run
-//! (the coordinator's daemons are constructed up front), so an open-time
-//! sweep cannot race a live writer's temp files.
+//! [`LayerStore::open`] and removes orphaned `*.tmp-*` files (in layer
+//! dirs, the chunk pool, and the overlay root), layer directories that
+//! never committed their `json` — or committed it with neither a
+//! `layer.manifest` nor a legacy `layer.tar` behind it — and
+//! pull-staging directories holding no verified chunks. Staging
+//! directories that do hold verified chunks are *kept* — an
+//! interrupted pull resumes from them. The sweep assumes no concurrent
+//! writer on the same root in another process; in-process, stores are
+//! opened before builds run (the coordinator's daemons are constructed
+//! up front), so an open-time sweep cannot race a live writer's temp
+//! files.
 
 mod bundle;
 mod images;
@@ -57,10 +107,13 @@ pub use images::ImageStore;
 
 use crate::hash::{ChunkDigest, Digest, HashEngine, ShaCheckpoint};
 use crate::oci::{LayerId, LayerMeta};
+use crate::registry::{CdcManifest, ChunkPool};
 use crate::util::json::Json;
 use crate::{Error, Result};
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Write a file atomically: unique temp name (pid + counter) in the same
 /// directory, fsync, then rename over the target. Concurrent writers of
@@ -120,9 +173,10 @@ pub(crate) fn sweep_tmp_files(dir: &Path) -> usize {
 /// What a [`LayerStore::recover`] sweep found and did.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StoreRecovery {
-    /// Orphaned `*.tmp-*` files removed.
+    /// Orphaned `*.tmp-*` files removed (layer dirs, chunk pool, root).
     pub tmp_swept: usize,
-    /// Layer directories removed because their `json` never committed.
+    /// Layer directories removed because their `json` never committed
+    /// (or committed with no content behind it).
     pub partial_layers_swept: usize,
     /// Pull-staging directories kept because they hold resumable chunks.
     pub staging_kept: usize,
@@ -140,22 +194,159 @@ impl StoreRecovery {
 /// Version string written to each layer's `version` file.
 pub const LAYER_VERSION: &str = "1.0";
 
-/// The overlay2-like on-disk layer store.
+/// Byte budget of the in-memory reconstructed-tar LRU cache. Hot
+/// layers (re-read by injection scans, pushes, verifies) skip repeated
+/// pool reconstruction; entries larger than the whole budget are never
+/// cached.
+pub const TAR_CACHE_BUDGET: u64 = 64 << 20;
+
+/// In-memory LRU of reconstructed layer tars. Entries are inserted
+/// only on reconstruction *reads* — never at write time, so a build
+/// landing hundreds of layers cannot evict a reader's working set —
+/// and invalidated by every content write or delete. Integrity checks
+/// ([`LayerStore::verify`]) bypass it entirely: a pool mutated behind
+/// the store's back must not be masked by a hot entry.
+struct TarCache {
+    budget: u64,
+    state: Mutex<TarCacheState>,
+}
+
+#[derive(Default)]
+struct TarCacheState {
+    map: HashMap<LayerId, (Arc<Vec<u8>>, u64)>,
+    bytes: u64,
+    clock: u64,
+}
+
+impl TarCache {
+    fn new(budget: u64) -> TarCache {
+        TarCache { budget, state: Mutex::new(TarCacheState::default()) }
+    }
+
+    fn get(&self, id: &LayerId) -> Option<Vec<u8>> {
+        let mut st = self.state.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        let (tar, last_used) = st.map.get_mut(id)?;
+        *last_used = stamp;
+        Some(tar.as_ref().clone())
+    }
+
+    fn insert(&self, id: &LayerId, tar: &[u8]) {
+        if tar.len() as u64 > self.budget {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        if let Some((old, _)) = st.map.insert(*id, (Arc::new(tar.to_vec()), stamp)) {
+            st.bytes -= old.len() as u64;
+        }
+        st.bytes += tar.len() as u64;
+        while st.bytes > self.budget {
+            let Some(victim) =
+                st.map.iter().min_by_key(|(_, (_, used))| *used).map(|(k, _)| *k)
+            else {
+                break;
+            };
+            if let Some((dropped, _)) = st.map.remove(&victim) {
+                st.bytes -= dropped.len() as u64;
+            }
+        }
+    }
+
+    fn invalidate(&self, id: &LayerId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some((dropped, _)) = st.map.remove(id) {
+            st.bytes -= dropped.len() as u64;
+        }
+    }
+
+    fn clear(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.map.clear();
+        st.bytes = 0;
+    }
+}
+
+/// What [`LayerStore::migrate`] converted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MigrateReport {
+    /// Legacy tar-layout layers converted to chunk manifests.
+    pub layers_converted: usize,
+    /// Layers that already had a manifest (nothing to do).
+    pub layers_already_chunked: usize,
+    /// Bytes of `layer.tar` bodies unlinked.
+    pub bytes_reclaimed: u64,
+}
+
+/// What a local-pool integrity pass ([`LayerStore::scrub_pool`]) found.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolScrubReport {
+    /// Committed chunks re-hashed.
+    pub chunks_checked: usize,
+    /// Chunks dropped because their bytes no longer match their name.
+    pub chunks_dropped: usize,
+    /// Bytes of rotted chunks dropped.
+    pub bytes_dropped: u64,
+    /// Chunk-backed layers left missing at least one pool chunk — a
+    /// registry pull of those layers refetches and repairs them.
+    pub layers_incomplete: usize,
+}
+
+/// What a local-pool garbage collection ([`LayerStore::gc_pool`]) dropped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolGcReport {
+    /// Chunks referenced by no layer manifest, removed.
+    pub chunks_dropped: usize,
+    /// Bytes those chunks occupied.
+    pub bytes_reclaimed: u64,
+}
+
+/// Storage accounting surfaced by the `store stats` CLI verb. The
+/// dedup ratio of the store is `logical_bytes / pool_bytes`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Visible layers.
+    pub layers: usize,
+    /// Layers stored as chunk manifests.
+    pub chunk_backed: usize,
+    /// Layers still on the legacy tar layout.
+    pub legacy: usize,
+    /// Committed chunks in the local pool.
+    pub pool_chunks: usize,
+    /// Bytes the pool occupies on disk (unique content).
+    pub pool_bytes: u64,
+    /// Sum of all layers' tar sizes — what the tar layout would cost.
+    pub logical_bytes: u64,
+}
+
+/// The overlay2-like on-disk layer store (chunk-backed; see the
+/// module-level notes for layout and the commit protocol).
 pub struct LayerStore {
     root: PathBuf,
+    /// The daemon's local content-addressed chunk pool
+    /// (`<root>/chunk-pool/`).
+    pool: ChunkPool,
+    /// Reconstructed-tar LRU (in-memory; process-local).
+    tar_cache: TarCache,
     /// What the implicit recovery sweep at [`LayerStore::open`] found,
     /// surfaced by the `recover` CLI verb.
     open_recovery: StoreRecovery,
 }
 
 impl LayerStore {
-    /// Open (creating if needed) a layer store under `<root>/overlay2`.
-    /// Runs [`LayerStore::recover`] implicitly; the report is kept on the
+    /// Open (creating if needed) a layer store under `<root>/overlay2`
+    /// with its chunk pool under `<root>/chunk-pool`. Runs
+    /// [`LayerStore::recover`] implicitly; the report is kept on the
     /// store ([`LayerStore::open_recovery`]).
     pub fn open(root: &Path) -> Result<LayerStore> {
         std::fs::create_dir_all(root.join("overlay2"))?;
+        let pool = ChunkPool::open_local(&root.join("chunk-pool"))?;
         let mut store = LayerStore {
             root: root.to_path_buf(),
+            pool,
+            tar_cache: TarCache::new(TAR_CACHE_BUDGET),
             open_recovery: StoreRecovery::default(),
         };
         store.open_recovery = store.recover().unwrap_or_default();
@@ -169,11 +360,12 @@ impl LayerStore {
     }
 
     /// Crash-consistency sweep (see the module-level note): removes
-    /// orphaned `*.tmp-*` files, layer directories that never committed
-    /// their `json`, and pull-staging directories holding no verified
-    /// chunks. Staging directories with verified chunks are kept for
-    /// pull resume. Best-effort: individual unlink failures are skipped,
-    /// not fatal.
+    /// orphaned `*.tmp-*` files (layer dirs, chunk pool, overlay root),
+    /// layer directories without a committed `json` — or with a `json`
+    /// but no content manifest or legacy body behind it — and
+    /// pull-staging directories holding no verified chunks. Staging
+    /// directories with verified chunks are kept for pull resume.
+    /// Best-effort: individual unlink failures are skipped, not fatal.
     pub fn recover(&self) -> Result<StoreRecovery> {
         let mut report = StoreRecovery::default();
         let overlay = self.root.join("overlay2");
@@ -183,8 +375,11 @@ impl LayerStore {
                 let path = entry.path();
                 if path.is_dir() {
                     report.tmp_swept += sweep_tmp_files(&path);
-                    if LayerId::parse(&name).is_some() && !path.join("json").exists() {
-                        if std::fs::remove_dir_all(&path).is_ok() {
+                    if LayerId::parse(&name).is_some() {
+                        let committed = path.join("json").exists()
+                            && (path.join("layer.manifest").exists()
+                                || path.join("layer.tar").exists());
+                        if !committed && std::fs::remove_dir_all(&path).is_ok() {
                             report.partial_layers_swept += 1;
                         }
                     }
@@ -193,6 +388,7 @@ impl LayerStore {
                 }
             }
         }
+        report.tmp_swept += sweep_tmp_files(&self.root.join("chunk-pool"));
         let staging_root = self.root.join("pull-staging");
         if let Ok(entries) = std::fs::read_dir(&staging_root) {
             for entry in entries.flatten() {
@@ -220,10 +416,18 @@ impl LayerStore {
         Ok(report)
     }
 
-    /// Store root directory (hosts `overlay2/` plus transport scratch
-    /// space such as the registry pull staging pool).
+    /// Store root directory (hosts `overlay2/`, `chunk-pool/`, plus
+    /// transport scratch space such as the registry pull staging pool).
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// The store's local content-addressed chunk pool. The registry
+    /// push path negotiates against it directly (manifest exchange —
+    /// no re-chunking of reconstructed tars) and pull lands fetched
+    /// chunks straight into it.
+    pub fn chunk_pool(&self) -> &ChunkPool {
+        &self.pool
     }
 
     /// Directory of one layer: `<root>/overlay2/<layer-id>/`.
@@ -231,19 +435,25 @@ impl LayerStore {
         self.root.join("overlay2").join(id.to_hex())
     }
 
-    /// Path of a layer's `layer.tar` (public because the injection path
-    /// patches it in place).
+    /// Path of a layer's *legacy* `layer.tar` body. Chunk-backed layers
+    /// have no such file — reads prefer `layer.manifest`; this exists
+    /// for back-compat probing and tests.
     pub fn tar_path(&self, id: &LayerId) -> PathBuf {
         self.layer_dir(id).join("layer.tar")
     }
 
+    /// A layer is visible once its `json` committed **and** content
+    /// stands behind it (a chunk manifest or a legacy tar body).
     pub fn exists(&self, id: &LayerId) -> bool {
-        self.layer_dir(id).join("json").exists()
+        let dir = self.layer_dir(id);
+        dir.join("json").exists()
+            && (dir.join("layer.manifest").exists() || dir.join("layer.tar").exists())
     }
 
-    /// Store a layer: writes `version`, `layer.tar`, `json`, plus the
-    /// chunk-digest sidecar. Overwrites an existing revision of the same
-    /// layer id (the paper's model: same id, new checksum).
+    /// Store a layer: chunks its tar into the pool and writes
+    /// `version`, `layer.manifest`, `json`, plus the chunk-digest
+    /// sidecar. Overwrites an existing revision of the same layer id
+    /// (the paper's model: same id, new checksum).
     pub fn put_layer(
         &self,
         meta: &LayerMeta,
@@ -265,16 +475,66 @@ impl LayerStore {
         meta: &LayerMeta,
         tar: &[u8],
         cd: &ChunkDigest,
-        ckpts: &[crate::hash::ShaCheckpoint],
+        ckpts: &[ShaCheckpoint],
     ) -> Result<()> {
         debug_assert_eq!(meta.checksum, Digest::of(tar), "meta checksum must match tar");
         debug_assert_eq!(meta.chunk_root, cd.root, "meta chunk root must match digest");
+        let manifest = CdcManifest::from_data(tar, 1);
+        self.put_layer_inner(meta, tar, &manifest, cd, Some(ckpts))
+    }
+
+    /// Store a layer arriving off the wire with its CDC manifest
+    /// already in hand (the registry pull fast path): chunks land
+    /// straight in the pool and the manifest is committed as-is —
+    /// zero local re-chunking.
+    pub fn put_layer_from_wire(
+        &self,
+        meta: &LayerMeta,
+        tar: &[u8],
+        manifest: &CdcManifest,
+        cd: &ChunkDigest,
+        ckpts: &[ShaCheckpoint],
+    ) -> Result<()> {
+        debug_assert_eq!(
+            manifest.total_len,
+            tar.len() as u64,
+            "wire manifest must describe this tar"
+        );
+        self.put_layer_inner(meta, tar, manifest, cd, Some(ckpts))
+    }
+
+    /// Adopt a layer from a `docker load` bundle: the bundle's recorded
+    /// metadata is trusted as-is, with no re-hash — `docker load`
+    /// trusts its input the same way, which is precisely what the
+    /// §III.C naive-clone attack exploits and registry push
+    /// re-verification catches.
+    pub fn adopt_layer(&self, meta: &LayerMeta, tar: &[u8], engine: &dyn HashEngine) -> Result<()> {
+        let cd = ChunkDigest::compute(tar, engine);
+        let manifest = CdcManifest::from_data(tar, 1);
+        self.put_layer_inner(meta, tar, &manifest, &cd, None)
+    }
+
+    /// The commit protocol (module-level notes, "Crash consistency"):
+    /// pool chunks → sidecars → manifest (content commit) → json
+    /// (visibility) → legacy-body unlink (lazy migration).
+    fn put_layer_inner(
+        &self,
+        meta: &LayerMeta,
+        tar: &[u8],
+        manifest: &CdcManifest,
+        cd: &ChunkDigest,
+        ckpts: Option<&[ShaCheckpoint]>,
+    ) -> Result<()> {
+        self.tar_cache.invalidate(&meta.id);
         let dir = self.layer_dir(&meta.id);
         std::fs::create_dir_all(&dir)?;
+        self.put_manifest_chunks(tar, manifest)?;
         write_atomic("store.layer.sidecar", &dir.join("version"), LAYER_VERSION.as_bytes())?;
-        write_atomic("store.layer.tar", &dir.join("layer.tar"), tar)?;
         self.write_chunk_sidecar(&meta.id, cd)?;
-        self.write_sha_checkpoints(&meta.id, ckpts)?;
+        if let Some(ckpts) = ckpts {
+            self.write_sha_checkpoints(&meta.id, ckpts)?;
+        }
+        write_atomic("store.manifest.commit", &dir.join("layer.manifest"), &manifest.encode())?;
         // The `json` goes last: a layer "exists" only once its metadata
         // landed, so a racing reader never sees metadata ahead of data.
         write_atomic(
@@ -282,6 +542,24 @@ impl LayerStore {
             &dir.join("json"),
             meta.to_json().to_string_pretty().as_bytes(),
         )?;
+        let legacy = dir.join("layer.tar");
+        if legacy.exists() {
+            let _ = std::fs::remove_file(&legacy);
+        }
+        self.tar_cache.invalidate(&meta.id);
+        Ok(())
+    }
+
+    /// Land every chunk of `manifest` (whose payload is `tar`) in the
+    /// pool. Idempotent per chunk — already-present digests are dedup
+    /// hits and cost one `exists` probe.
+    fn put_manifest_chunks(&self, tar: &[u8], manifest: &CdcManifest) -> Result<()> {
+        let mut off = 0usize;
+        for (digest, len) in &manifest.chunks {
+            let end = off + *len as usize;
+            self.pool.put(digest, &tar[off..end])?;
+            off = end;
+        }
         Ok(())
     }
 
@@ -307,23 +585,99 @@ impl LayerStore {
         Ok(())
     }
 
-    /// Read a layer's tar bytes.
+    /// Read a layer's tar bytes. Chunk-backed layers reconstruct from
+    /// the pool (`store.chunk.get` per chunk) through the in-memory
+    /// LRU tar cache; legacy layers read their `layer.tar` body. When
+    /// both representations exist (crash mid-migration) the manifest
+    /// wins — it is always at least as new as the body.
     pub fn read_tar(&self, id: &LayerId) -> Result<Vec<u8>> {
+        let manifest_path = self.layer_dir(id).join("layer.manifest");
+        if manifest_path.exists() {
+            if let Some(hit) = self.tar_cache.get(id) {
+                return Ok(hit);
+            }
+            let tar = self.reconstruct(id, &manifest_path)?;
+            self.tar_cache.insert(id, &tar);
+            return Ok(tar);
+        }
         std::fs::read(self.tar_path(id))
             .map_err(|e| Error::Store(format!("layer {} tar missing: {e}", id.short())))
     }
 
-    /// Overwrite a layer's tar bytes **without** touching metadata — the
+    /// [`LayerStore::read_tar`] minus the cache, both directions: reads
+    /// the disk fresh and caches nothing. Integrity checks use this so
+    /// an externally mutated pool is never masked by a hot entry.
+    fn read_tar_uncached(&self, id: &LayerId) -> Result<Vec<u8>> {
+        let manifest_path = self.layer_dir(id).join("layer.manifest");
+        if manifest_path.exists() {
+            return self.reconstruct(id, &manifest_path);
+        }
+        std::fs::read(self.tar_path(id))
+            .map_err(|e| Error::Store(format!("layer {} tar missing: {e}", id.short())))
+    }
+
+    /// Concatenate a layer's pool chunks back into its tar, checking
+    /// lengths chunk-by-chunk. Per-chunk *content* is not re-hashed
+    /// here — that is [`LayerStore::scrub_pool`]'s job; committed
+    /// chunks are immutable under the crash model, so the failure this
+    /// guards against is a missing or foreign-length chunk.
+    fn reconstruct(&self, id: &LayerId, manifest_path: &Path) -> Result<Vec<u8>> {
+        let bytes = std::fs::read(manifest_path)
+            .map_err(|e| Error::Store(format!("layer {} manifest unreadable: {e}", id.short())))?;
+        let m = CdcManifest::decode(&bytes)
+            .ok_or_else(|| Error::Store(format!("layer {} manifest corrupt", id.short())))?;
+        let mut tar = Vec::with_capacity(m.total_len as usize);
+        for (digest, len) in &m.chunks {
+            let chunk = self.pool.get(digest)?;
+            if chunk.len() != *len as usize {
+                return Err(Error::Store(format!(
+                    "layer {}: pool chunk {} is {} bytes, manifest says {}",
+                    id.short(),
+                    digest.short(),
+                    chunk.len(),
+                    len
+                )));
+            }
+            tar.extend_from_slice(&chunk);
+        }
+        if tar.len() as u64 != m.total_len {
+            return Err(Error::Store(format!(
+                "layer {}: reconstructed {} bytes, manifest says {}",
+                id.short(),
+                tar.len(),
+                m.total_len
+            )));
+        }
+        Ok(tar)
+    }
+
+    /// A layer's stored CDC manifest, if it is chunk-backed. The push
+    /// path uses this to negotiate against the pool without re-chunking
+    /// a reconstructed tar.
+    pub fn cdc_manifest(&self, id: &LayerId) -> Option<CdcManifest> {
+        CdcManifest::decode(&std::fs::read(self.layer_dir(id).join("layer.manifest")).ok()?)
+    }
+
+    /// Overwrite a layer's content **without** touching metadata — the
     /// raw in-place write the implicit injection path uses before it
-    /// fixes the checksums.
+    /// fixes the checksums. Re-chunks the patched tar; unchanged chunks
+    /// dedup against the pool, and a legacy body (if any) is retired.
     pub fn write_tar_raw(&self, id: &LayerId, tar: &[u8]) -> Result<()> {
-        write_atomic("store.layer.tar", &self.tar_path(id), tar)?;
+        self.tar_cache.invalidate(id);
+        let manifest = CdcManifest::from_data(tar, 1);
+        self.put_manifest_chunks(tar, &manifest)?;
+        let dir = self.layer_dir(id);
+        write_atomic("store.manifest.commit", &dir.join("layer.manifest"), &manifest.encode())?;
+        let legacy = dir.join("layer.tar");
+        if legacy.exists() {
+            let _ = std::fs::remove_file(&legacy);
+        }
         Ok(())
     }
 
-    /// Load the chunk-digest sidecar if present and well-formed, without
-    /// touching `layer.tar` — for callers (like the registry push
-    /// pipeline) that already hold the tar and can recompute more
+    /// Load the chunk-digest sidecar if present and well-formed,
+    /// without touching layer content — for callers (like the registry
+    /// push pipeline) that already hold the tar and can recompute more
     /// cheaply than [`LayerStore::chunk_digest`]'s re-read fallback.
     pub fn try_chunk_sidecar(&self, id: &LayerId) -> Option<ChunkDigest> {
         ChunkDigest::decode(&std::fs::read(self.layer_dir(id).join("layer.chunks")).ok()?)
@@ -344,8 +698,8 @@ impl LayerStore {
     }
 
     /// Write/replace the SHA-checkpoint sidecar (midstream SHA-256
-    /// states every CHECKPOINT_INTERVAL bytes of `layer.tar`; lets the
-    /// injector re-hash only from the first changed byte).
+    /// states every CHECKPOINT_INTERVAL bytes of the layer tar; lets
+    /// the injector re-hash only from the first changed byte).
     pub fn write_sha_checkpoints(&self, id: &LayerId, ckpts: &[ShaCheckpoint]) -> Result<()> {
         let mut buf = Vec::with_capacity(8 + 40 * ckpts.len());
         buf.extend_from_slice(&(ckpts.len() as u64).to_le_bytes());
@@ -439,8 +793,10 @@ impl LayerStore {
         Ok(out)
     }
 
-    /// Delete a layer directory entirely.
+    /// Delete a layer directory entirely. Its pool chunks stay until
+    /// [`LayerStore::gc_pool`] — another layer may reference them.
     pub fn delete(&self, id: &LayerId) -> Result<()> {
+        self.tar_cache.invalidate(id);
         let dir = self.layer_dir(id);
         if dir.exists() {
             std::fs::remove_dir_all(dir)?;
@@ -448,16 +804,149 @@ impl LayerStore {
         Ok(())
     }
 
-    /// Docker's integrity test for one layer: does `layer.tar` hash to
-    /// the checksum recorded in the layer json? The checksum bypass must
-    /// leave this returning `true`.
+    /// Docker's integrity test for one layer: does the layer's content
+    /// hash to the checksum recorded in its json? The checksum bypass
+    /// must leave this returning `true`. Always reads the disk fresh
+    /// (no tar cache), and maps *content* damage — missing chunk,
+    /// length drift, corrupt manifest — to `Ok(false)` so a pull can
+    /// repair by refetching; injected faults and transients still
+    /// propagate as errors for retry/crash handling.
     pub fn verify(&self, id: &LayerId) -> Result<bool> {
         let meta = self.meta(id)?;
         if meta.is_empty_layer {
             return Ok(true);
         }
-        let tar = self.read_tar(id)?;
-        Ok(Digest::of(&tar) == meta.checksum)
+        match self.read_tar_uncached(id) {
+            Ok(tar) => Ok(Digest::of(&tar) == meta.checksum),
+            Err(e) if crate::fault::error_is_crash(&e) || crate::fault::transient(&e) => Err(e),
+            Err(_) => Ok(false),
+        }
+    }
+
+    /// Eagerly convert every legacy tar-layout layer to the chunk-backed
+    /// layout (the `store migrate` CLI verb; writes use the same commit
+    /// protocol as [`LayerStore::put_layer_prehashed`], so a crash
+    /// mid-migration is recovered like any other). Idempotent.
+    pub fn migrate(&self) -> Result<MigrateReport> {
+        let mut report = MigrateReport::default();
+        for id in self.list()? {
+            let dir = self.layer_dir(&id);
+            let legacy = dir.join("layer.tar");
+            if dir.join("layer.manifest").exists() {
+                report.layers_already_chunked += 1;
+                // A body shadowed by a manifest (crash between commit
+                // and unlink) is pure waste; reclaim it here too.
+                if legacy.exists() {
+                    let n = std::fs::metadata(&legacy).map(|m| m.len()).unwrap_or(0);
+                    if std::fs::remove_file(&legacy).is_ok() {
+                        report.bytes_reclaimed += n;
+                    }
+                }
+                continue;
+            }
+            if !legacy.exists() {
+                continue;
+            }
+            let tar = self.read_tar(&id)?;
+            let manifest = CdcManifest::from_data(&tar, 1);
+            self.put_manifest_chunks(&tar, &manifest)?;
+            write_atomic("store.manifest.commit", &dir.join("layer.manifest"), &manifest.encode())?;
+            let n = std::fs::metadata(&legacy).map(|m| m.len()).unwrap_or(0);
+            if std::fs::remove_file(&legacy).is_ok() {
+                report.bytes_reclaimed += n;
+            }
+            report.layers_converted += 1;
+            self.tar_cache.invalidate(&id);
+        }
+        Ok(report)
+    }
+
+    /// Integrity pass over the local pool: re-hash every committed
+    /// chunk, drop the ones whose bytes no longer match their name
+    /// (bit rot, external mutation — crashes cannot cause this; see
+    /// the module notes), and count the layers left incomplete. A
+    /// registry pull of an incomplete layer refetches the missing
+    /// chunks and repairs it.
+    pub fn scrub_pool(&self) -> Result<PoolScrubReport> {
+        let mut report = PoolScrubReport::default();
+        for digest in self.pool.list()? {
+            let Some(bytes) = self.pool.try_get(&digest) else { continue };
+            report.chunks_checked += 1;
+            if Digest::of(&bytes) != digest {
+                self.pool.remove(&digest)?;
+                report.chunks_dropped += 1;
+                report.bytes_dropped += bytes.len() as u64;
+            }
+        }
+        for id in self.list()? {
+            if let Some(m) = self.cdc_manifest(&id) {
+                if !m.chunks.iter().all(|(d, _)| self.pool.has(d)) {
+                    report.layers_incomplete += 1;
+                }
+            }
+        }
+        // Cached tars predate whatever rot was just dropped; start
+        // clean so reads agree with the disk again.
+        self.tar_cache.clear();
+        Ok(report)
+    }
+
+    /// Drop pool chunks referenced by no layer manifest (run after
+    /// [`LayerStore::delete`], e.g. from `prune`). Aborts without
+    /// removing anything if a live layer's manifest fails to decode —
+    /// a corrupt manifest must not turn into a mass chunk deletion.
+    pub fn gc_pool(&self) -> Result<PoolGcReport> {
+        let mut live: HashSet<Digest> = HashSet::new();
+        for id in self.list()? {
+            let path = self.layer_dir(&id).join("layer.manifest");
+            let bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            };
+            match CdcManifest::decode(&bytes) {
+                Some(m) => live.extend(m.chunks.iter().map(|(d, _)| *d)),
+                None => {
+                    return Err(Error::Store(format!(
+                        "layer {} manifest corrupt; aborting pool gc",
+                        id.short()
+                    )))
+                }
+            }
+        }
+        let mut report = PoolGcReport::default();
+        for digest in self.pool.list()? {
+            if live.contains(&digest) {
+                continue;
+            }
+            let n = std::fs::metadata(self.pool.root().join(digest.to_hex()))
+                .map(|m| m.len())
+                .unwrap_or(0);
+            self.pool.remove(&digest)?;
+            report.chunks_dropped += 1;
+            report.bytes_reclaimed += n;
+        }
+        Ok(report)
+    }
+
+    /// Storage accounting: layers by layout, pool size, and the logical
+    /// bytes a tar-per-layer layout would have cost.
+    pub fn stats(&self) -> Result<StoreStats> {
+        let mut st = StoreStats::default();
+        for id in self.list()? {
+            st.layers += 1;
+            if self.layer_dir(&id).join("layer.manifest").exists() {
+                st.chunk_backed += 1;
+            } else {
+                st.legacy += 1;
+            }
+            if let Ok(meta) = self.meta(&id) {
+                st.logical_bytes += meta.size;
+            }
+        }
+        st.pool_chunks = self.pool.len()?;
+        st.pool_bytes = self.pool.disk_usage()?;
+        Ok(st)
     }
 }
 
@@ -502,11 +991,14 @@ mod tests {
         assert_eq!(s.read_tar(&meta.id).unwrap(), tar);
         assert_eq!(s.meta(&meta.id).unwrap(), meta);
         assert!(s.verify(&meta.id).unwrap());
-        // Table III-A files all present.
+        // Chunk-backed layout: manifest instead of a tar body, content
+        // in the shared pool.
         let dir = s.layer_dir(&meta.id);
-        for f in ["version", "layer.tar", "json"] {
+        for f in ["version", "layer.manifest", "json"] {
             assert!(dir.join(f).exists(), "{f} missing");
         }
+        assert!(!dir.join("layer.tar").exists(), "no tar body in chunk-backed layout");
+        assert!(s.chunk_pool().len().unwrap() > 0, "content must land in the pool");
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -521,6 +1013,7 @@ mod tests {
         assert_ne!(meta1.checksum, meta2.checksum, "revision => new checksum");
         s.put_layer(&meta2, &tar2, &eng).unwrap();
         assert_eq!(s.meta(&meta1.id).unwrap().checksum, meta2.checksum);
+        assert_eq!(s.read_tar(&meta1.id).unwrap(), tar2);
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -537,6 +1030,7 @@ mod tests {
         crate::tar::replace_file(&mut patched, "app.py", b"injected").unwrap();
         s.write_tar_raw(&meta.id, &patched).unwrap();
         assert!(!s.verify(&meta.id).unwrap(), "stale checksum must fail");
+        assert_eq!(s.read_tar(&meta.id).unwrap(), patched);
 
         // "Update both the key and the lock" (§III.B).
         let mut fixed = meta.clone();
@@ -554,7 +1048,8 @@ mod tests {
         let (meta, tar) = layer_with(&vec![7u8; 9000], "COPY big big");
         let cd = s.put_layer(&meta, &tar, &eng).unwrap();
         assert_eq!(s.chunk_digest(&meta.id, &eng).unwrap(), cd);
-        // Corrupt sidecar => transparently recomputed.
+        // Corrupt sidecar => transparently recomputed (from the
+        // reconstructed tar).
         std::fs::write(s.layer_dir(&meta.id).join("layer.chunks"), b"junk").unwrap();
         assert_eq!(s.chunk_digest(&meta.id, &eng).unwrap(), cd);
         std::fs::remove_dir_all(&d).unwrap();
@@ -576,6 +1071,120 @@ mod tests {
     }
 
     #[test]
+    fn layer_content_is_chunk_backed_and_deduped() {
+        let (s, d) = fresh("dedup");
+        let eng = NativeEngine::new();
+        let base = vec![42u8; 64 << 10];
+        let (m1, t1) = layer_with(&base, "COPY big v1");
+        s.put_layer(&m1, &t1, &eng).unwrap();
+        let mut edited = base.clone();
+        edited[0] ^= 1;
+        let (m2, t2) = layer_with(&edited, "COPY big v2");
+        s.put_layer(&m2, &t2, &eng).unwrap();
+        let st = s.stats().unwrap();
+        assert_eq!((st.layers, st.chunk_backed, st.legacy), (2, 2, 0));
+        assert_eq!(st.logical_bytes, (t1.len() + t2.len()) as u64);
+        assert!(
+            st.pool_bytes < st.logical_bytes,
+            "shared chunks must dedup: pool {} vs logical {}",
+            st.pool_bytes,
+            st.logical_bytes
+        );
+        assert_eq!(s.read_tar(&m1.id).unwrap(), t1);
+        assert_eq!(s.read_tar(&m2.id).unwrap(), t2);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn tar_cache_serves_hot_reads_and_verify_bypasses_it() {
+        let (s, d) = fresh("cache");
+        let eng = NativeEngine::new();
+        let (meta, tar) = layer_with(&vec![9u8; 32 << 10], "COPY hot hot");
+        s.put_layer(&meta, &tar, &eng).unwrap();
+        assert_eq!(s.read_tar(&meta.id).unwrap(), tar); // populates the cache
+        // Sabotage the pool behind the cache's back.
+        let victim = s.cdc_manifest(&meta.id).unwrap().chunks[0].0;
+        std::fs::remove_file(s.chunk_pool().root().join(victim.to_hex())).unwrap();
+        // A hot read still serves the cached reconstruction...
+        assert_eq!(s.read_tar(&meta.id).unwrap(), tar);
+        // ...but verify reads the disk fresh and reports the damage.
+        assert!(!s.verify(&meta.id).unwrap());
+        // Re-putting the layer repairs the pool and drops the entry.
+        s.put_layer(&meta, &tar, &eng).unwrap();
+        assert!(s.verify(&meta.id).unwrap());
+        assert_eq!(s.read_tar(&meta.id).unwrap(), tar);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn legacy_tar_layout_reads_and_migrates() {
+        let (s, d) = fresh("legacy");
+        let (meta, tar) = layer_with(b"legacy body", "COPY old old");
+        // Hand-write the pre-chunk-pool layout.
+        let dir = s.layer_dir(&meta.id);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("version"), LAYER_VERSION).unwrap();
+        std::fs::write(dir.join("layer.tar"), &tar).unwrap();
+        std::fs::write(dir.join("json"), meta.to_json().to_string_pretty()).unwrap();
+        assert!(s.exists(&meta.id));
+        assert_eq!(s.read_tar(&meta.id).unwrap(), tar);
+        assert!(s.verify(&meta.id).unwrap());
+        assert!(s.cdc_manifest(&meta.id).is_none());
+
+        let r = s.migrate().unwrap();
+        assert_eq!(r.layers_converted, 1);
+        assert_eq!(r.layers_already_chunked, 0);
+        assert_eq!(r.bytes_reclaimed, tar.len() as u64);
+        assert!(!dir.join("layer.tar").exists());
+        assert_eq!(s.read_tar(&meta.id).unwrap(), tar, "bit-identical after conversion");
+        assert!(s.verify(&meta.id).unwrap());
+
+        let again = s.migrate().unwrap();
+        assert_eq!(again.layers_converted, 0);
+        assert_eq!(again.layers_already_chunked, 1);
+        assert_eq!(again.bytes_reclaimed, 0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn scrub_pool_drops_rot_and_counts_incomplete_layers() {
+        let (s, d) = fresh("scrubpool");
+        let eng = NativeEngine::new();
+        let (meta, tar) = layer_with(&vec![5u8; 16 << 10], "COPY r r");
+        s.put_layer(&meta, &tar, &eng).unwrap();
+        let clean = s.scrub_pool().unwrap();
+        assert!(clean.chunks_checked > 0);
+        assert_eq!((clean.chunks_dropped, clean.layers_incomplete), (0, 0));
+        // Rot one chunk in place.
+        let victim = s.cdc_manifest(&meta.id).unwrap().chunks[0].0;
+        std::fs::write(s.chunk_pool().root().join(victim.to_hex()), b"bitrot").unwrap();
+        let r = s.scrub_pool().unwrap();
+        assert_eq!(r.chunks_dropped, 1);
+        assert!(r.bytes_dropped > 0);
+        assert_eq!(r.layers_incomplete, 1);
+        assert!(!s.verify(&meta.id).unwrap(), "lost chunk must fail verification");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn gc_pool_drops_only_unreferenced_chunks() {
+        let (s, d) = fresh("gcpool");
+        let eng = NativeEngine::new();
+        let (m1, t1) = layer_with(&vec![1u8; 32 << 10], "COPY a a");
+        let (m2, t2) =
+            layer_with(&[vec![1u8; 32 << 10], vec![2u8; 16 << 10]].concat(), "COPY b b");
+        s.put_layer(&m1, &t1, &eng).unwrap();
+        s.put_layer(&m2, &t2, &eng).unwrap();
+        assert_eq!(s.gc_pool().unwrap(), PoolGcReport::default(), "everything referenced");
+        s.delete(&m2.id).unwrap();
+        let r = s.gc_pool().unwrap();
+        assert!(r.chunks_dropped > 0 && r.bytes_reclaimed > 0);
+        assert_eq!(s.read_tar(&m1.id).unwrap(), t1, "survivor intact after gc");
+        assert!(s.verify(&m1.id).unwrap());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
     fn recover_sweeps_orphans_but_keeps_resumable_staging() {
         let (s, d) = fresh("recover");
         let (meta, tar) = layer_with(b"x", "COPY a a");
@@ -586,6 +1195,8 @@ mod tests {
         let ghost = LayerId::derive("test", None, "RUN ghost");
         std::fs::create_dir_all(s.layer_dir(&ghost)).unwrap();
         std::fs::write(s.layer_dir(&ghost).join("layer.tar"), b"data").unwrap();
+        // An orphaned temp in the local chunk pool (crashed put).
+        std::fs::write(d.join("chunk-pool").join(".tmp-4-4"), b"torn chunk").unwrap();
         // A staging dir with a verified chunk resumes; one with only
         // temp junk is swept.
         let keep = d.join("pull-staging").join("a".repeat(64));
@@ -596,7 +1207,7 @@ mod tests {
         std::fs::write(junk.join(".tmp-9-9"), b"junk").unwrap();
 
         let r = s.recover().unwrap();
-        assert_eq!(r.tmp_swept, 2);
+        assert_eq!(r.tmp_swept, 3);
         assert_eq!(r.partial_layers_swept, 1);
         assert_eq!(r.staging_kept, 1);
         assert_eq!(r.staging_swept, 1);
@@ -605,6 +1216,22 @@ mod tests {
         assert!(!s.layer_dir(&ghost).exists());
         assert!(keep.exists() && !junk.exists());
         assert!(s.recover().unwrap().is_clean(), "second sweep finds nothing");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn recover_sweeps_layer_with_metadata_but_no_content() {
+        // `json` present but neither manifest nor tar body behind it —
+        // can only arise from external tampering, but the sweep must
+        // not leave a layer that "exists" yet cannot be read.
+        let (s, d) = fresh("nocontent");
+        let ghost = LayerId::derive("test", None, "RUN hollow");
+        std::fs::create_dir_all(s.layer_dir(&ghost)).unwrap();
+        std::fs::write(s.layer_dir(&ghost).join("json"), b"{}").unwrap();
+        assert!(!s.exists(&ghost));
+        let r = s.recover().unwrap();
+        assert_eq!(r.partial_layers_swept, 1);
+        assert!(!s.layer_dir(&ghost).exists());
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -342,11 +342,24 @@ fn pull_resumes_from_local_layers_and_staged_chunks() {
     assert_eq!(second.layers_skipped, img.layer_ids.len() - 1);
     assert!(prod.verify_image("app:v1").unwrap());
 
-    // Repair: a crash can leave intact metadata over a truncated tar.
-    // The resume check verifies content, so re-pull refetches the layer.
-    let tar_path = prod.layers.tar_path(&img.layer_ids[1]);
-    let tar = std::fs::read(&tar_path).unwrap();
-    std::fs::write(&tar_path, &tar[..tar.len() / 2]).unwrap();
+    // Repair: a crash can leave intact metadata over missing content —
+    // in the chunk-backed layout, a pool chunk that never landed. Drop
+    // a chunk only layer 1 references; the resume check verifies
+    // content, so re-pull refetches exactly that layer.
+    let manifest = prod.layers.cdc_manifest(&img.layer_ids[1]).unwrap();
+    let mut elsewhere = std::collections::HashSet::new();
+    for lid in img.layer_ids.iter().filter(|l| **l != img.layer_ids[1]) {
+        if let Some(m) = prod.layers.cdc_manifest(lid) {
+            elsewhere.extend(m.chunks.iter().map(|(d, _)| *d));
+        }
+    }
+    let victim = manifest
+        .chunks
+        .iter()
+        .map(|(d, _)| *d)
+        .find(|d| !elsewhere.contains(d))
+        .expect("layer 1 must own at least one unshared chunk");
+    std::fs::remove_file(prod.layers.chunk_pool().root().join(victim.to_hex())).unwrap();
     let repaired = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() }).unwrap();
     assert_eq!(repaired.layers_fetched, 1, "corrupt local layer must be re-fetched");
     assert!(prod.verify_image("app:v1").unwrap());
@@ -528,7 +541,7 @@ fn cdc_pull_killed_at_chunk_boundary_resumes_from_staging() {
     // Kill 2: the next attempt dies on the first local layer commit —
     // after that layer's chunks were fetched, verified, and staged.
     let guard = fault::install(
-        FaultPlan::fail_at("store.layer.tar", 0, FaultMode::Crash).scoped(&prod_root),
+        FaultPlan::fail_at("store.manifest.commit", 0, FaultMode::Crash).scoped(&prod_root),
     );
     let killed = prod.pull_with("app:v1", &remote, &PullOptions { jobs: 1, ..Default::default() });
     drop(guard);
