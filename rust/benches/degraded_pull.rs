@@ -1,0 +1,244 @@
+//! **Degraded pull overhead** — what replica failover costs a puller
+//! when one backend of an R=2 pool is dead, and what the anti-entropy
+//! repair pass pays to converge afterwards. Emits a machine-readable
+//! baseline (`BENCH_degraded_pull.json`).
+//!
+//! Three experiments against a 2-shard, 2-replica pool:
+//! * **healthy pulls** — fresh stores pull with every backend alive
+//!   (the control: zero failover reads);
+//! * **degraded pulls** — the same pulls with one backend taken down
+//!   via the `registry.backend.read` fault site: every pull must still
+//!   verify, report its failover reads, and stay within a bounded
+//!   wall-clock multiple of the healthy control (failover is one local
+//!   miss plus breaker bookkeeping per chunk, not a retry storm);
+//! * **repair cost** — wipe one backend's copies behind the pool's
+//!   back and measure the anti-entropy pass restoring full
+//!   replication.
+//!
+//! `cargo bench --bench degraded_pull` (set `LAYERJET_TRIALS` to
+//! override the pull count per sweep).
+
+mod common;
+
+use layerjet::bench::report::{fmt_secs, Table};
+use layerjet::builder::CostModel;
+use layerjet::daemon::Daemon;
+use layerjet::fault::{self, FaultMode, FaultPlan};
+use layerjet::registry::{PullOptions, RemoteRegistry};
+use layerjet::util::json::Json;
+use layerjet::util::prng::Prng;
+use std::path::Path;
+
+/// A degraded pull may cost at most this multiple of a healthy one.
+/// Failover adds a failed existence probe and breaker bookkeeping per
+/// chunk homed on the dead backend — cheap, but the bound stays
+/// generous so the assertion holds on noisy shared runners.
+const MAX_OVERHEAD_RATIO: f64 = 5.0;
+
+fn main() {
+    let trials = common::trials(8).max(3);
+    let root = common::bench_root("degraded-pull");
+
+    // A ~2 MiB deterministic asset: enough chunks that both shards home
+    // a healthy share of them.
+    let proj = root.join("proj");
+    std::fs::create_dir_all(&proj).unwrap();
+    std::fs::write(
+        proj.join("Dockerfile"),
+        "FROM python:alpine\nCOPY . /srv/\nCMD [\"python\", \"zz_main.py\"]\n",
+    )
+    .unwrap();
+    let mut asset = vec![0u8; 2 << 20];
+    Prng::new(0x0ff10ad).fill_bytes(&mut asset);
+    std::fs::write(proj.join("aa_assets.bin"), &asset).unwrap();
+    std::fs::write(proj.join("zz_main.py"), "print('v1')\n").unwrap();
+
+    let mut dev = Daemon::new(&root.join("dev")).unwrap();
+    dev.cost = CostModel::instant();
+    dev.build(&proj, "dbench:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push("dbench:v1", &remote).unwrap();
+    remote.shard_to_with(2, 2).unwrap();
+    let occ = remote.occupancy().unwrap();
+    assert_eq!(
+        occ.replica_chunks,
+        occ.unique_chunks * 2,
+        "setup must leave a fully replicated R=2 pool: {occ:?}"
+    );
+
+    let healthy = pull_sweep(&root, &remote, trials, "healthy", None);
+    let shard1 = root.join("remote").join("shard-1");
+    let degraded = pull_sweep(&root, &remote, trials, "degraded", Some(&shard1));
+    let repair = repair_sweep(&remote, &shard1);
+
+    let overhead = degraded.median_secs / healthy.median_secs.max(1e-9);
+    let mut table = Table::new(
+        &format!("degraded pull overhead ({trials} pulls per sweep)"),
+        &["sweep", "median wall", "failover reads/pull", "chunks/pull"],
+    );
+    for s in [&healthy, &degraded] {
+        table.row(vec![
+            s.label.to_string(),
+            fmt_secs(s.median_secs),
+            format!("{:.1}", s.failover_reads as f64 / trials as f64),
+            format!("{:.1}", s.chunks_fetched as f64 / trials as f64),
+        ]);
+    }
+    table.print();
+
+    emit_baseline(trials, &healthy, &degraded, overhead, &repair);
+
+    // Shape assertions. The routing facts are protocol properties; the
+    // overhead ratio is the one timing bar, held generous on purpose.
+    assert_eq!(
+        healthy.failover_reads, 0,
+        "healthy pulls must never fail over"
+    );
+    assert!(
+        degraded.failover_reads > 0,
+        "degraded pulls must report failover reads"
+    );
+    assert!(
+        overhead < MAX_OVERHEAD_RATIO,
+        "degraded pulls cost {overhead:.2}x healthy — failover regressed \
+         (bound {MAX_OVERHEAD_RATIO}x)"
+    );
+    assert!(repair.converged, "repair must converge the wiped backend");
+    eprintln!(
+        "degraded_pull shape checks OK ({:.2}x overhead over {} pulls; repair restored \
+         {} copies in {})",
+        overhead,
+        trials,
+        repair.chunks_repaired,
+        fmt_secs(repair.wall_secs),
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+struct PullSweep {
+    label: &'static str,
+    median_secs: f64,
+    failover_reads: u64,
+    chunks_fetched: usize,
+}
+
+struct RepairCost {
+    copies_wiped: usize,
+    chunks_repaired: usize,
+    bytes_repaired: u64,
+    wall_secs: f64,
+    converged: bool,
+}
+
+/// `trials` fresh-store pulls; `dead_backend` takes that backend down
+/// for reads (scoped `Unavailable`) for the whole sweep.
+fn pull_sweep(
+    root: &Path,
+    remote: &RemoteRegistry,
+    trials: usize,
+    label: &'static str,
+    dead_backend: Option<&Path>,
+) -> PullSweep {
+    let guard = dead_backend.map(|dir| {
+        fault::install(
+            FaultPlan::fail_at("registry.backend.read", 0, FaultMode::Unavailable(u32::MAX))
+                .scoped(dir),
+        )
+    });
+    let mut walls = Vec::with_capacity(trials);
+    let mut out = PullSweep { label, median_secs: f64::NAN, failover_reads: 0, chunks_fetched: 0 };
+    for t in 0..trials {
+        let store = root.join(format!("{label}-store-{t}"));
+        let puller = Daemon::new(&store).unwrap();
+        let t0 = std::time::Instant::now();
+        let r = puller
+            .pull_with("dbench:v1", remote, &PullOptions { jobs: 2, ..Default::default() })
+            .unwrap();
+        walls.push(t0.elapsed().as_secs_f64());
+        assert!(puller.verify_image("dbench:v1").unwrap(), "{label} pull {t} must verify");
+        out.failover_reads += r.failover_reads;
+        out.chunks_fetched += r.chunks_fetched;
+        let _ = std::fs::remove_dir_all(&store);
+    }
+    drop(guard);
+    walls.sort_by(|a, b| a.total_cmp(b));
+    out.median_secs = walls[walls.len() / 2];
+    out
+}
+
+/// Wipe every chunk copy off one backend (no markers — the loss is
+/// silent) and measure the anti-entropy pass restoring them.
+fn repair_sweep(remote: &RemoteRegistry, backend_dir: &Path) -> RepairCost {
+    let chunks = backend_dir.join("chunks");
+    let mut wiped = 0usize;
+    for e in std::fs::read_dir(&chunks).unwrap() {
+        let p = e.unwrap().path();
+        if p.is_file() {
+            std::fs::remove_file(&p).unwrap();
+            wiped += 1;
+        }
+    }
+    assert!(wiped > 0, "the backend must have held copies to wipe");
+
+    let t0 = std::time::Instant::now();
+    let report = remote.repair().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let out = RepairCost {
+        copies_wiped: wiped,
+        chunks_repaired: report.chunks_repaired,
+        bytes_repaired: report.bytes_repaired,
+        wall_secs: wall,
+        converged: report.is_converged(),
+    };
+
+    let mut table =
+        Table::new("anti-entropy repair of a wiped backend", &["wiped", "repaired", "bytes", "wall"]);
+    table.row(vec![
+        out.copies_wiped.to_string(),
+        out.chunks_repaired.to_string(),
+        out.bytes_repaired.to_string(),
+        fmt_secs(out.wall_secs),
+    ]);
+    table.print();
+    out
+}
+
+/// Write the machine-readable baseline: once into `bench_results/` and
+/// once at the repository root (the trajectory file later PRs compare
+/// against).
+fn emit_baseline(
+    trials: usize,
+    healthy: &PullSweep,
+    degraded: &PullSweep,
+    overhead: f64,
+    repair: &RepairCost,
+) {
+    let doc = Json::obj(vec![
+        ("bench", Json::str("degraded_pull")),
+        ("measured", Json::Bool(true)),
+        ("trials", Json::num(trials as f64)),
+        ("healthy_median_secs", Json::num(healthy.median_secs)),
+        ("degraded_median_secs", Json::num(degraded.median_secs)),
+        ("overhead_ratio", Json::num(overhead)),
+        ("max_overhead_ratio", Json::num(MAX_OVERHEAD_RATIO)),
+        ("failover_reads", Json::num(degraded.failover_reads as f64)),
+        ("chunks_fetched", Json::num(degraded.chunks_fetched as f64)),
+        (
+            "repair",
+            Json::obj(vec![
+                ("copies_wiped", Json::num(repair.copies_wiped as f64)),
+                ("chunks_repaired", Json::num(repair.chunks_repaired as f64)),
+                ("bytes_repaired", Json::num(repair.bytes_repaired as f64)),
+                ("wall_secs", Json::num(repair.wall_secs)),
+            ]),
+        ),
+    ]);
+    let text = doc.to_string_pretty();
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_degraded_pull.json", &text).expect("write baseline");
+    // Repo root (cargo bench runs from the package dir `rust/`).
+    if std::fs::write("../BENCH_degraded_pull.json", &text).is_ok() {
+        eprintln!("wrote ../BENCH_degraded_pull.json");
+    }
+    eprintln!("wrote bench_results/BENCH_degraded_pull.json");
+}

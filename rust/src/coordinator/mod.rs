@@ -64,7 +64,8 @@ use crate::builder::{BuildOptions, CostModel, SchedContext, StepFlight, StepPool
 use crate::daemon::Daemon;
 use crate::inject::{InjectMode, InjectOptions};
 use crate::registry::{
-    ChunkFetchCache, GcReport, PullOptions, PushOptions, PushReport, RemoteRegistry, ScrubReport,
+    ChunkFetchCache, GcReport, PullOptions, PushOptions, PushReport, RemoteRegistry, RepairReport,
+    ScrubReport,
 };
 use crate::Result;
 use std::collections::VecDeque;
@@ -133,6 +134,10 @@ pub struct BuildOutcome {
 #[derive(Clone, Debug)]
 pub struct MaintenanceReport {
     pub scrub: ScrubReport,
+    /// The anti-entropy round: scrub may delete rotted replica copies,
+    /// so repair runs after it (re-copying from surviving replicas)
+    /// and before gc (whose sweep should see the converged layout).
+    pub repair: RepairReport,
     pub gc: GcReport,
 }
 
@@ -155,6 +160,13 @@ pub struct WarmReport {
     /// Bytes served by the persistent pull-cache tier
     /// ([`BuildCoordinator::warm_with_cache`]).
     pub bytes_from_cache: u64,
+    /// Chunk reads the origin served from a non-home replica (a backend
+    /// was erring or breaker-open during the warm) — the fleet's view
+    /// of origin degradation, aggregated from
+    /// [`crate::registry::PullReport::failover_reads`].
+    pub failover_reads: u64,
+    /// Replica copies origin write-repaired during the warm's reads.
+    pub read_repairs: u64,
 }
 
 /// A live push permit: while any permit exists, [`BuildCoordinator::maintain`]
@@ -262,8 +274,12 @@ impl BuildCoordinator {
     /// keep pushing.
     pub fn maintain(&self, remote: &RemoteRegistry) -> Result<MaintenanceReport> {
         let _quiesced = self.quiesce.write().unwrap();
+        // Struct-literal fields evaluate in written order: scrub, then
+        // the anti-entropy repair (re-replicating whatever scrub just
+        // dropped), then gc over the converged layout.
         Ok(MaintenanceReport {
             scrub: remote.scrub()?,
+            repair: remote.repair()?,
             gc: remote.gc()?,
         })
     }
@@ -333,6 +349,8 @@ impl BuildCoordinator {
             warm.bytes_shared += r.bytes_shared;
             warm.bytes_from_origin += r.bytes_from_origin;
             warm.bytes_from_cache += r.bytes_from_cache;
+            warm.failover_reads += r.failover_reads;
+            warm.read_repairs += r.read_repairs;
         }
         Ok(warm)
     }
@@ -352,7 +370,7 @@ impl BuildCoordinator {
     ) -> Result<WarmReport> {
         for tag in tags {
             let r = crate::oci::ImageRef::parse(tag);
-            pull_cache.pin(&remote.tag_chunk_digests(&r)?);
+            pull_cache.pin(&remote.tag_chunk_digests(&r)?)?;
         }
         self.warm_with_cache(remote, tags, jobs, Some(pull_cache))
     }

@@ -69,6 +69,8 @@ pub const SITES: &[&str] = &[
     "registry.pull.stage",    // verified chunk landing in pull staging
     "registry.scrub.mark",    // the durable needs-scrub degradation marker
     "registry.shard.migrate", // rebalance chunk copies + ring descriptor commit
+    "registry.backend.read",  // replica-routed backend read (the failover boundary)
+    "registry.backend.write", // replica fan-out write (the under-replication boundary)
     "registry.cache.put",     // verified chunk landing in a pull-cache tier
     "registry.cache.get",     // pull-cache lookup (hit verification read)
     "registry.lease.acquire", // lease grant writes (seq, record, fence)
@@ -91,6 +93,14 @@ pub enum FaultMode {
     /// Abandon the operation mid-flight with a fatal error (the temp file,
     /// if any, is fully written but never published).
     Crash,
+    /// `n` consecutive *outage* errors starting at the keyed hit: the
+    /// backend behind the site is unreachable, not crashed. Unlike
+    /// `ErrN`, the error is **not** transient-classified — retrying the
+    /// same backend cannot help — and unlike `Crash` it is not fatal:
+    /// the process survives and may route around the outage (replica
+    /// failover). This is how a test takes one shard backend down for a
+    /// whole push/pull window.
+    Unavailable(u32),
 }
 
 /// A single keyed fault: at the `at_hit`-th arrival at `site`, fire `mode`.
@@ -188,7 +198,9 @@ impl ActivePlan {
                 continue;
             }
             let fire = match spec.mode {
-                FaultMode::ErrN(n) => hit >= spec.at_hit && hit < spec.at_hit + n as u64,
+                FaultMode::ErrN(n) | FaultMode::Unavailable(n) => {
+                    hit >= spec.at_hit && hit < spec.at_hit + n as u64
+                }
                 _ => hit == spec.at_hit,
             };
             if fire {
@@ -250,19 +262,30 @@ pub fn install(plan: FaultPlan) -> FaultGuard {
 // Injected-error payload and classification.
 // ---------------------------------------------------------------------------
 
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum InjectedKind {
+    Transient,
+    Fatal,
+    Unavailable,
+}
+
 #[derive(Debug)]
 struct Injected {
     site: &'static str,
     hit: u64,
-    fatal: bool,
+    kind: InjectedKind,
 }
 
 impl fmt::Display for Injected {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        if self.fatal {
-            write!(f, "injected crash at {} (hit {})", self.site, self.hit)
-        } else {
-            write!(f, "injected transient fault at {} (hit {})", self.site, self.hit)
+        match self.kind {
+            InjectedKind::Fatal => write!(f, "injected crash at {} (hit {})", self.site, self.hit),
+            InjectedKind::Transient => {
+                write!(f, "injected transient fault at {} (hit {})", self.site, self.hit)
+            }
+            InjectedKind::Unavailable => {
+                write!(f, "injected backend outage at {} (hit {})", self.site, self.hit)
+            }
         }
     }
 }
@@ -270,11 +293,18 @@ impl fmt::Display for Injected {
 impl std::error::Error for Injected {}
 
 fn transient_err(site: &'static str, hit: u64) -> io::Error {
-    io::Error::new(io::ErrorKind::Interrupted, Injected { site, hit, fatal: false })
+    io::Error::new(io::ErrorKind::Interrupted, Injected { site, hit, kind: InjectedKind::Transient })
 }
 
 fn crash_err(site: &'static str, hit: u64) -> io::Error {
-    io::Error::other(Injected { site, hit, fatal: true })
+    io::Error::other(Injected { site, hit, kind: InjectedKind::Fatal })
+}
+
+fn unavailable_err(site: &'static str, hit: u64) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::ConnectionRefused,
+        Injected { site, hit, kind: InjectedKind::Unavailable },
+    )
 }
 
 /// True if the error was produced by a hook in this module.
@@ -289,7 +319,7 @@ pub fn is_injected(e: &io::Error) -> bool {
 pub fn is_crash(e: &io::Error) -> bool {
     e.get_ref()
         .and_then(|inner| inner.downcast_ref::<Injected>())
-        .is_some_and(|f| f.fatal)
+        .is_some_and(|f| f.kind == InjectedKind::Fatal)
 }
 
 /// Transient-error classification for [`RetryPolicy`]: interrupted-kind
@@ -302,6 +332,15 @@ pub fn transient(e: &crate::Error) -> bool {
 /// True if a crate-level error wraps an injected fatal fault.
 pub fn error_is_crash(e: &crate::Error) -> bool {
     matches!(e, crate::Error::Io(io) if is_crash(io))
+}
+
+/// Outage classification: a backend behind the faulted site is
+/// unreachable ([`FaultMode::Unavailable`], or what a refused
+/// connection would surface as on a real deployment). Not transient —
+/// retrying the same backend is pointless — and not a crash — the
+/// calling process is alive and may fail over to a replica.
+pub fn unavailable(e: &crate::Error) -> bool {
+    matches!(e, crate::Error::Io(io) if io.kind() == io::ErrorKind::ConnectionRefused)
 }
 
 // ---------------------------------------------------------------------------
@@ -325,6 +364,7 @@ fn check_slow(site: &'static str, path: &Path) -> io::Result<()> {
         None => Ok(()),
         Some((FaultMode::ErrOnce | FaultMode::ErrN(_), hit)) => Err(transient_err(site, hit)),
         Some((FaultMode::Torn(_) | FaultMode::Crash, hit)) => Err(crash_err(site, hit)),
+        Some((FaultMode::Unavailable(_), hit)) => Err(unavailable_err(site, hit)),
     }
 }
 
@@ -363,6 +403,8 @@ fn durable_write_slow(
     match plan.eval(site, target) {
         None => durable_write_plain(tmp, bytes),
         Some((FaultMode::ErrOnce | FaultMode::ErrN(_), hit)) => Err(transient_err(site, hit)),
+        // An unreachable backend never sees any bytes: no temp file.
+        Some((FaultMode::Unavailable(_), hit)) => Err(unavailable_err(site, hit)),
         Some((FaultMode::Torn(k), hit)) => {
             let mut f = std::fs::File::create(tmp)?;
             f.write_all(&bytes[..k.min(bytes.len())])?;
@@ -556,6 +598,35 @@ mod tests {
         assert_eq!(retries, policy.attempts as u64 - 1);
         let last = res.unwrap_err();
         assert!(transient(&last), "exhausted error stays transient-classified: {last}");
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn unavailable_is_neither_transient_nor_crash() {
+        let d = tmp("outage");
+        let guard = install(
+            FaultPlan::fail_at("registry.backend.read", 0, FaultMode::Unavailable(2)).scoped(&d),
+        );
+        let p = d.join("chunk");
+        let err = check("registry.backend.read", &p).unwrap_err(); // hit 0: down
+        assert!(is_injected(&err) && !is_crash(&err));
+        let err: crate::Error = err.into();
+        assert!(unavailable(&err), "outage classifies as unavailable: {err}");
+        assert!(!transient(&err), "retrying an unreachable backend is pointless");
+        assert!(!error_is_crash(&err), "the calling process survives an outage");
+        assert!(check("registry.backend.read", &p).is_err()); // hit 1: still down
+        assert!(check("registry.backend.read", &p).is_ok()); // hit 2: back up
+        drop(guard);
+        // And the retry policy spends no budget on it.
+        let guard = install(
+            FaultPlan::fail_at("registry.backend.write", 0, FaultMode::Unavailable(9)).scoped(&d),
+        );
+        let policy = RetryPolicy { base: Duration::from_micros(10), ..Default::default() };
+        let (res, retries) =
+            policy.run(|| check("registry.backend.write", &p).map_err(crate::Error::from));
+        assert!(res.is_err());
+        assert_eq!(retries, 0, "outages must not burn transient-retry budget");
         drop(guard);
         let _ = std::fs::remove_dir_all(&d);
     }

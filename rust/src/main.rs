@@ -89,19 +89,37 @@ COMMANDS:
                                          remotes run it quiesced — an
                                          in-flight push's uncommitted chunks
                                          look like garbage
-  registry shard --count N --remote DIR  re-shard the chunk pool across N
+  registry shard --count N --remote DIR [--replicas R]
+                                         re-shard the chunk pool across N
                                          consistent-hash backends, migrating
                                          only chunks whose assignment moved;
-                                         idempotent, resumable by re-running
+                                         idempotent, resumable by re-running.
+                                         --replicas sets the placement
+                                         factor (default: keep the current
+                                         ring's); shrinking drains departing
+                                         backends before membership commits
   registry rebalance --remote DIR        converge backends on the committed
                                          ring descriptor (finish or roll
                                          back a crashed re-shard)
+  registry repair --remote DIR           anti-entropy pass: re-copy every
+                                         live chunk to replica-set members
+                                         that lost it and drain the
+                                         under-replication markers degraded
+                                         pushes left behind
+  registry health --remote DIR [--cache DIR]
+                                         replication health: unique vs
+                                         replica occupancy, under-replicated
+                                         chunk count, per-backend breaker
+                                         state; --cache adds pull-cache pin
+                                         occupancy
   registry stats --remote DIR [--cache DIR]
                                          per-shard chunk/byte occupancy and
-                                         the ring balance factor; --cache
+                                         the ring balance factor, plus the
+                                         unique-vs-replica split; --cache
                                          adds a local pull cache's occupancy
   maintain --remote DIR [--workers N] [--interval SECS] [--rounds N]
-                                         scheduled maintenance: scrub + gc
+                                         scheduled maintenance: scrub +
+                                         repair + gc
                                          under the coordinator's quiesce
                                          handshake and the remote's
                                          exclusive lease (safe while other
@@ -676,7 +694,23 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                     if count == 0 {
                         return Err(layerjet::Error::msg("registry shard: --count must be >= 1"));
                     }
-                    let r = remote.shard_to(count)?;
+                    let replicas = cli
+                        .opt("--replicas")
+                        .map(|v| {
+                            v.parse::<usize>().map_err(|_| {
+                                layerjet::Error::msg(format!("registry shard: bad --replicas {v:?}"))
+                            })
+                        })
+                        .transpose()?;
+                    let r = match replicas {
+                        Some(0) => {
+                            return Err(layerjet::Error::msg(
+                                "registry shard: --replicas must be >= 1",
+                            ))
+                        }
+                        Some(rf) => remote.shard_to_with(count, rf)?,
+                        None => remote.shard_to(count)?,
+                    };
                     println!(
                         "sharded pool to {} backend(s): {} of {} chunks migrated ({}), {} stale copies cleaned",
                         r.shards,
@@ -697,6 +731,72 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                         r.chunks_cleaned,
                     );
                 }
+                "repair" => {
+                    let r = remote.repair()?;
+                    println!(
+                        "repair: {} chunk(s) checked, {} re-replicated ({} written), {} marker(s) cleared",
+                        r.chunks_checked,
+                        r.chunks_repaired,
+                        layerjet::util::human_bytes(r.bytes_repaired),
+                        r.markers_cleared,
+                    );
+                    if r.chunks_lost > 0 {
+                        eprintln!(
+                            "WARNING: {} chunk(s) unreadable on every replica — re-push the \
+                             affected images to restore them",
+                            r.chunks_lost,
+                        );
+                    }
+                    if r.under_replicated > 0 {
+                        eprintln!(
+                            "note: {} chunk(s) still under-replicated (a backend is down?); \
+                             re-run `registry repair` once it returns",
+                            r.under_replicated,
+                        );
+                    }
+                    if !r.is_converged() {
+                        return Err(layerjet::Error::msg("repair: pool has not converged"));
+                    }
+                }
+                "health" => {
+                    let occ = remote.occupancy()?;
+                    let (shards, _) = remote.shard_stats()?;
+                    println!(
+                        "pool: {} unique chunk(s) ({}) stored as {} replica copies ({})",
+                        occ.unique_chunks,
+                        layerjet::util::human_bytes(occ.unique_bytes),
+                        occ.replica_chunks,
+                        layerjet::util::human_bytes(occ.replica_bytes),
+                    );
+                    println!(
+                        "under-replicated: {} chunk(s){}",
+                        occ.under_replicated,
+                        if occ.under_replicated > 0 {
+                            " — run `registry repair`"
+                        } else {
+                            ""
+                        },
+                    );
+                    for s in &shards {
+                        let name = if s.name.is_empty() { "shard-0 (root)" } else { &s.name };
+                        println!(
+                            "{name}: {} chunk(s), {}",
+                            s.chunks,
+                            layerjet::util::human_bytes(s.bytes),
+                        );
+                    }
+                    if let Some(dir) = cli.opt("--cache") {
+                        let cache = layerjet::registry::PullCache::open_default(&PathBuf::from(&dir))?;
+                        let s = cache.stats();
+                        println!(
+                            "pull cache {dir}: {} chunk(s) resident ({} pinned), {} of {} budget",
+                            s.entries,
+                            cache.pins().len(),
+                            layerjet::util::human_bytes(s.bytes),
+                            layerjet::util::human_bytes(s.budget),
+                        );
+                    }
+                }
                 "stats" => {
                     let (shards, balance) = remote.shard_stats()?;
                     for s in &shards {
@@ -708,6 +808,15 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                         );
                     }
                     println!("balance factor: {balance:.2} (max shard bytes / mean; 1.00 = even)");
+                    let occ = remote.occupancy()?;
+                    println!(
+                        "occupancy: {} unique chunk(s) ({}), {} replica copies ({}), {} under-replicated",
+                        occ.unique_chunks,
+                        layerjet::util::human_bytes(occ.unique_bytes),
+                        occ.replica_chunks,
+                        layerjet::util::human_bytes(occ.replica_bytes),
+                        occ.under_replicated,
+                    );
                     if let Some(dir) = cli.opt("--cache") {
                         let cache = layerjet::registry::PullCache::open_default(&PathBuf::from(&dir))?;
                         let s = cache.stats();
@@ -721,7 +830,8 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 }
                 other => {
                     return Err(layerjet::Error::msg(format!(
-                        "registry: unknown subcommand {other:?} (scrub|untag|gc|shard|rebalance|stats)"
+                        "registry: unknown subcommand {other:?} \
+                         (scrub|untag|gc|shard|rebalance|repair|health|stats)"
                     )))
                 }
             }
@@ -842,10 +952,15 @@ fn run(args: Vec<String>) -> layerjet::Result<()> {
                 let m = coordinator.maintain(&remote)?;
                 println!(
                     "maintain pass {pass}: scrub {} chunk(s) checked, {} dropped, {} layer(s) \
-                     demoted | gc {} image(s), {} layer(s), {} chunk(s) removed, {} reclaimed",
+                     demoted | repair {} re-replicated, {} marker(s) cleared, {} still \
+                     under-replicated | gc {} image(s), {} layer(s), {} chunk(s) removed, \
+                     {} reclaimed",
                     m.scrub.chunks_checked,
                     m.scrub.chunks_dropped,
                     m.scrub.layers_demoted,
+                    m.repair.chunks_repaired,
+                    m.repair.markers_cleared,
+                    m.repair.under_replicated,
                     m.gc.images_dropped,
                     m.gc.layers_dropped,
                     m.gc.chunks_dropped,

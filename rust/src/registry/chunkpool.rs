@@ -91,7 +91,12 @@ impl ChunkPool {
         &self.root
     }
 
-    fn chunk_path(&self, digest: &Digest) -> PathBuf {
+    /// The path a chunk's blob lives (or would live) at. Public so the
+    /// replica-routing layer ([`super::ShardedPool`]) can key its
+    /// per-backend fault sites (`registry.backend.{read,write}`) on the
+    /// exact file a replica operation touches — a plan scoped to one
+    /// backend's directory then takes down that backend alone.
+    pub fn chunk_path(&self, digest: &Digest) -> PathBuf {
         self.root.join(digest.to_hex())
     }
 

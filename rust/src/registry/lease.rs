@@ -22,7 +22,15 @@
 //! independent instance of the protocol below; the registry composes
 //! them (pushers hold every table shared in ascending shard order,
 //! maintenance holds one table exclusive — see the registry module
-//! doc's lease section).
+//! doc's lease section). **Replica placement changes nothing here**: a
+//! pusher already holds every shard's table shared, so its chunk
+//! fan-out is licensed to write any member of any digest's replica
+//! set, and write order within a replica set needs no lease-level rule
+//! (content-addressed writes are idempotent; the ascending *table*
+//! acquisition order is what prevents deadlock, and it is fixed before
+//! any replica write happens). Repair and rebalance hold shard 0's
+//! exclusive lease — the fleet-wide writer lock — since both move
+//! copies between backends.
 //!
 //! * **Shared** leases (push) coexist with each other; **exclusive**
 //!   leases (scrub/gc/maintain) require the table empty. Acquisition

@@ -41,31 +41,84 @@
 //! every transferred chunk against its declared digest before
 //! committing it.
 //!
-//! ## Sharded chunk pool
+//! ## Sharded, replicated chunk pool
 //!
 //! The pool is split **by digest** across N backend roots with
-//! consistent hashing ([`shard::ShardRing`]): each chunk digest maps
-//! deterministically to one backend, so pool traffic, occupancy, and
-//! maintenance scale by adding shards instead of growing one
-//! directory. The ring membership is the durable descriptor
-//! `<root>/shards.json` —
+//! consistent hashing ([`shard::ShardRing`]), and each digest is held
+//! by **R replicas** (its *replica set*: the home shard plus the next
+//! R-1 distinct shards clockwise on the ring, home first), so pool
+//! traffic, occupancy, and maintenance scale by adding shards while a
+//! full backend outage costs zero failed pulls. The ring membership
+//! and replica factor are the durable descriptor `<root>/shards.json`
+//! —
 //!
 //! ```json
-//! { "version": 1, "shards": ["", "shard-1", "shard-2"] }
+//! { "version": 1, "shards": ["", "shard-1", "shard-2"], "replicas": 2 }
 //! ```
 //!
 //! — each member naming a shard's directory prefix under the registry
 //! root (`""` = the root itself: shard 0 is the pre-shard `chunks/` +
 //! `leases/`, so every unsharded or legacy remote is exactly a
-//! one-shard ring and needs no migration). The descriptor commits
-//! atomically under the `registry.shard.migrate` fault site, and a
-//! **rebalance** ([`RemoteRegistry::shard_to`] /
-//! [`RemoteRegistry::rebalance`]) converges the on-disk pool to a new
-//! ring in three idempotent passes (copy chunks home → commit
-//! descriptor → clean stale copies): consistent hashing means growing
-//! the ring migrates only the keyspace the new shards capture, and a
-//! crash at any durable step re-runs to a bit-identical tree (see
-//! [`shard`] for the full algorithm and crash analysis).
+//! one-shard ring and needs no migration). **Compat:** a descriptor
+//! without a `replicas` field is an R=1 pre-replication ring and
+//! behaves bit-for-bit like the pre-replication code; fully
+//! lease-unaware legacy remotes are unchanged (no descriptor, one
+//! shard, single-writer). The descriptor commits atomically under the
+//! `registry.shard.migrate` fault site, and a **rebalance**
+//! ([`RemoteRegistry::shard_to`] / [`RemoteRegistry::rebalance`])
+//! converges the on-disk pool to a new ring in three idempotent passes
+//! (copy every chunk to each missing replica home → commit descriptor
+//! → clean stale copies, never a copy whose digest is merely
+//! under-replicated): consistent hashing means growing the ring
+//! migrates only the keyspace the new shards capture, shrinking drains
+//! the departing backend into the survivors' replica sets *before* the
+//! membership commit, and a crash at any durable step re-runs to a
+//! bit-identical tree (see [`shard`] for the full algorithm and crash
+//! analysis).
+//!
+//! ## Replica writes, failover reads, anti-entropy repair
+//!
+//! * **Writes fan out**: [`ShardedPool::put`] writes every member of
+//!   the digest's replica set (`registry.backend.write` fault site,
+//!   keyed on the target chunk file, so an outage plan scoped to one
+//!   backend's directory takes down that backend alone). A push
+//!   **degrades gracefully**: it commits as long as at least one
+//!   replica took each chunk, and every digest missing a copy gets an
+//!   **under-replication marker** — an empty file
+//!   `<root>/under-replicated/<digest-hex>` (best-effort; the marker
+//!   is a fast index, not ground truth). `has()` is deliberately
+//!   strict — true only when *every* replica holds the chunk — so push
+//!   negotiation re-sends under-replicated chunks and ordinary
+//!   redeploys top up missing copies without waiting for repair.
+//! * **Reads fail over**: [`ShardedPool::get`] tries the replica set
+//!   in order — home first — and moves to the next replica on an
+//!   error, a missing copy, or an **open circuit breaker**
+//!   (`registry.backend.read` site). Each backend carries a
+//!   consecutive-failure breaker
+//!   ([`shard::BREAKER_THRESHOLD`] failures open it; while open, every
+//!   [`shard::BREAKER_PROBE_EVERY`]-th request probes it half-open) so
+//!   a dead backend stops eating a timeout per chunk. Failed-over
+//!   bytes are verified by digest before being trusted, and a verified
+//!   failover **write-repairs** missing copies (the home above all)
+//!   when their backends are reachable. Failovers and read-repairs
+//!   surface in [`PullReport::failover_reads`] /
+//!   [`PullReport::read_repairs`] and the coordinator metrics — never
+//!   as puller-visible errors.
+//! * **Anti-entropy**: [`RemoteRegistry::repair`] (under shard 0's
+//!   exclusive lease, like gc) walks every live layer manifest, finds
+//!   a verified source copy for each chunk, copies it to every replica
+//!   member that lacks it, clears satisfied markers, and drops markers
+//!   for digests no live manifest references. After the pass the ring
+//!   reports zero under-replicated chunks
+//!   ([`RemoteRegistry::under_replicated`]) unless a backend is still
+//!   down ([`RepairReport::under_replicated`] counts what remains).
+//! * **Interaction with scrub/gc**: scrub re-hashes every backend's
+//!   copies independently (a rotted replica is deleted; the next
+//!   repair or redeploy re-copies it from a surviving replica) and
+//!   only demotes a layer when a referenced chunk is gone from
+//!   *every* replica; gc sweeps each backend against the live set, so
+//!   any copy of a live digest survives and stale copies die — neither
+//!   ever collects a chunk that is merely under-replicated.
 //!
 //! ## Pull-cache tier
 //!
@@ -255,7 +308,9 @@ pub use cdc::CdcManifest;
 pub use chunkpool::ChunkPool;
 pub use lease::{Lease, LeaseConfig, LeaseKind};
 pub use pullcache::{PullCache, PullCacheStats};
-pub use shard::{RebalanceReport, ShardRing, ShardStats, ShardedPool};
+pub use shard::{
+    BackendHealth, PoolOccupancy, RebalanceReport, ShardRing, ShardStats, ShardedPool,
+};
 
 use crate::builder::parallel::scoped_index_map;
 use crate::hash::{ChunkDigest, Digest, HashEngine, NativeEngine, CHUNK_SIZE};
@@ -506,6 +561,15 @@ pub struct PullReport {
     /// Layers that fell back to the remote's whole tar because their
     /// chunks were corrupt (a scrub was scheduled).
     pub layers_degraded: usize,
+    /// Chunk reads served by a non-home replica because the home backend
+    /// erred, lacked the copy, or sat behind an open circuit breaker.
+    /// Failovers are invisible to the puller except here and in the
+    /// coordinator metrics — the bytes are digest-verified either way.
+    pub failover_reads: u64,
+    /// Missing replica copies written back opportunistically after a
+    /// failover read (read-repair; the anti-entropy complement is
+    /// [`RemoteRegistry::repair`]).
+    pub read_repairs: u64,
 }
 
 /// Result of a [`RemoteRegistry::scrub`] pass over the chunk pool.
@@ -564,6 +628,35 @@ pub struct GcReport {
     pub chunks_dropped: usize,
     /// Pool bytes reclaimed by the chunk sweep.
     pub bytes_reclaimed: u64,
+}
+
+/// Result of a [`RemoteRegistry::repair`] anti-entropy pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Live chunk digests examined (the union of every live layer
+    /// manifest's references).
+    pub chunks_checked: usize,
+    /// Chunks copied to at least one replica member that lacked them.
+    pub chunks_repaired: usize,
+    /// Bytes those repair copies carried (counted once per copy).
+    pub bytes_repaired: u64,
+    /// Under-replication markers cleared: the digest is now fully
+    /// replicated, or no live manifest references it anymore.
+    pub markers_cleared: usize,
+    /// Chunks still missing a replica copy after the pass (their target
+    /// backend is down right now); their markers stay for the next run.
+    pub under_replicated: usize,
+    /// Live chunks with **no** verified copy on any backend — pull of
+    /// the owning layers will degrade to whole-tar until a redeploy
+    /// re-uploads them. Scrub demotion is the companion escalation.
+    pub chunks_lost: usize,
+}
+
+impl RepairReport {
+    /// The ring is fully replicated (nothing outstanding or lost).
+    pub fn is_converged(&self) -> bool {
+        self.under_replicated == 0 && self.chunks_lost == 0
+    }
 }
 
 /// What one pipelined push worker produced for one layer.
@@ -1494,6 +1587,8 @@ impl RemoteRegistry {
             bytes_from_origin: 0,
             retries: 0,
             layers_degraded: 0,
+            failover_reads: 0,
+            read_repairs: 0,
         };
         for p in results {
             match p {
@@ -1514,6 +1609,10 @@ impl RemoteRegistry {
                 }
             }
         }
+        // One pool instance served every layer worker, so its health
+        // counters aggregate this pull's replica routing.
+        report.failover_reads = pool.health().failovers();
+        report.read_repairs = pool.health().repairs();
         // Fully committed: the staging pool has served its purpose.
         let _ = std::fs::remove_dir_all(staging.root());
         Ok(report)
@@ -1858,7 +1957,11 @@ impl RemoteRegistry {
             let Some(manifest) = self.layer_manifest(&lid) else {
                 continue;
             };
-            let gone = |d: &Digest| dropped.contains(d) && !pool.has(d);
+            // `has_any`, not the strict `has`: a chunk with one
+            // surviving replica copy is still servable (and repair will
+            // re-copy it) — only a chunk gone from EVERY replica
+            // poisons the layer.
+            let gone = |d: &Digest| dropped.contains(d) && !pool.has_any(d);
             let poisoned = match &manifest {
                 LayerManifest::V2(m) => m.chunks.iter().any(|(d, _)| gone(d)),
                 LayerManifest::V1(cd) => cd.chunks.iter().any(gone),
@@ -1970,16 +2073,29 @@ impl RemoteRegistry {
     }
 
     /// Re-shard the pool to `count` backends, migrating only the
-    /// chunks whose consistent-hash assignment changed. Runs under
-    /// shard 0's exclusive lease of the **current** ring — the
-    /// ring-membership lock — so no pusher commits against a
-    /// half-migrated descriptor. Idempotent: a crashed call is resumed
-    /// by simply re-running it (the migration plan is recomputed from
-    /// on-disk backend state, not from what the last attempt managed).
+    /// chunks whose consistent-hash assignment changed and preserving
+    /// the current replica factor. Runs under shard 0's exclusive
+    /// lease of the **current** ring — the ring-membership lock — so
+    /// no pusher commits against a half-migrated descriptor.
+    /// Idempotent: a crashed call is resumed by simply re-running it
+    /// (the migration plan is recomputed from on-disk backend state,
+    /// not from what the last attempt managed). Shrinking drains the
+    /// departing backends into the survivors before the membership
+    /// commit — see [`shard::rebalance_to`].
     pub fn shard_to(&self, count: usize) -> Result<RebalanceReport> {
+        let replicas = ShardRing::load(&self.root)?.replicas();
+        self.shard_to_with(count, replicas)
+    }
+
+    /// [`RemoteRegistry::shard_to`] with an explicit replica factor
+    /// (`registry shard --count N --replicas R`; clamped to
+    /// `[1, count]`). Raising R on an unchanged membership is the bulk
+    /// replication pass; lowering it cleans the now-excess copies.
+    pub fn shard_to_with(&self, count: usize, replicas: usize) -> Result<RebalanceReport> {
         let current = ShardRing::load(&self.root)?;
         let lease = self.lease_exclusive_on(&current, 0)?;
-        let result = shard::rebalance_to(&self.root, &ShardRing::with_shards(count));
+        let target = ShardRing::with_shards_replicated(count, replicas);
+        let result = shard::rebalance_to(&self.root, &target);
         Self::settle_lease(lease, result)
     }
 
@@ -2000,6 +2116,129 @@ impl RemoteRegistry {
     pub fn shard_stats(&self) -> Result<(Vec<ShardStats>, f64)> {
         let ring = ShardRing::load(&self.root)?;
         shard::shard_stats(&ShardedPool::at(&self.root, &ring))
+    }
+
+    /// The pool's unique-vs-replica occupancy split (see
+    /// [`shard::PoolOccupancy`]) — summing per-shard counts
+    /// double-counts content once replicas exist.
+    pub fn occupancy(&self) -> Result<PoolOccupancy> {
+        let ring = ShardRing::load(&self.root)?;
+        shard::pool_occupancy(&ShardedPool::at(&self.root, &ring))
+    }
+
+    /// Outstanding under-replication markers: digests known to be
+    /// missing at least one replica copy (degraded pushes and failed
+    /// read-repairs record them; [`RemoteRegistry::repair`] drains
+    /// them). The `registry health` headline.
+    pub fn under_replicated(&self) -> Result<Vec<Digest>> {
+        let ring = ShardRing::load(&self.root)?;
+        Ok(ShardedPool::at(&self.root, &ring).under_replicated_markers())
+    }
+
+    /// Anti-entropy pass: walk every live layer manifest and converge
+    /// each referenced chunk to full replication — find a verified
+    /// source copy on any backend, copy it to every replica member
+    /// that lacks it, clear satisfied under-replication markers, and
+    /// drop markers no live manifest backs. Holds shard 0's exclusive
+    /// lease (the fleet-wide writer lock, like gc): repair moves
+    /// copies between backends, and racing a rebalance or a gc sweep
+    /// with that is how split-brain trees are made. A backend that is
+    /// still down just keeps its markers for the next pass
+    /// ([`RepairReport::under_replicated`]); an injected crash
+    /// propagates, and a re-run converges (the pass is idempotent —
+    /// every copy is skip-if-present).
+    pub fn repair(&self) -> Result<RepairReport> {
+        if !self.supports_chunks() {
+            return Ok(RepairReport::default());
+        }
+        let ring = ShardRing::load(&self.root)?;
+        let lease = self.lease_exclusive_on(&ring, 0)?;
+        let result = self.repair_locked(&ring, lease.as_ref());
+        Self::settle_lease(lease, result)
+    }
+
+    fn repair_locked(&self, ring: &ShardRing, lease: Option<&lease::Lease>) -> Result<RepairReport> {
+        if let Some(lease) = lease {
+            lease.validate()?;
+        }
+        let mut report = RepairReport::default();
+        let pool = ShardedPool::at(&self.root, ring);
+        // The live set, deterministically ordered. Corrupt manifests
+        // are scrub's domain — repair only converges what it can read.
+        let mut live: std::collections::BTreeSet<Digest> = std::collections::BTreeSet::new();
+        for lid in self.list_layer_dirs()? {
+            match self.layer_manifest(&lid) {
+                Some(LayerManifest::V2(m)) => live.extend(m.chunks.iter().map(|(d, _)| *d)),
+                Some(LayerManifest::V1(cd)) => live.extend(cd.chunks.iter().copied()),
+                None => {}
+            }
+        }
+        for digest in &live {
+            report.chunks_checked += 1;
+            let set = ring.replica_set(digest);
+            // A verified source: prefer replica members (home first),
+            // fall back to any backend (a stale mid-rebalance copy is
+            // as good a source as any — content-addressing vouches for
+            // it). Rotted copies never serve as sources.
+            let mut source: Option<Vec<u8>> = None;
+            let replica_backends = set.iter().map(|&k| &pool.backends()[k]);
+            let others = pool
+                .backends()
+                .iter()
+                .enumerate()
+                .filter(|(k, _)| !set.contains(k))
+                .map(|(_, b)| b);
+            for backend in replica_backends.chain(others) {
+                if let Some(bytes) = backend.try_get(digest) {
+                    if Digest::of(&bytes) == *digest
+                        || (bytes.len() <= CHUNK_SIZE && NativeEngine::chunk_digest(&bytes) == *digest)
+                    {
+                        source = Some(bytes);
+                        break;
+                    }
+                }
+            }
+            let Some(bytes) = source else {
+                report.chunks_lost += 1;
+                continue;
+            };
+            let mut repaired = false;
+            let mut missing = false;
+            for &k in &set {
+                let backend = &pool.backends()[k];
+                if backend.has(digest) {
+                    continue;
+                }
+                let res = crate::fault::check(shard::BACKEND_WRITE_SITE, &backend.chunk_path(digest))
+                    .map_err(Error::from)
+                    .and_then(|()| backend.put(digest, &bytes));
+                match res {
+                    Ok(_) => {
+                        if !repaired {
+                            report.chunks_repaired += 1; // count the chunk once
+                            repaired = true;
+                        }
+                        report.bytes_repaired += bytes.len() as u64;
+                    }
+                    Err(e) if crate::fault::error_is_crash(&e) => return Err(e),
+                    Err(_) => missing = true,
+                }
+            }
+            if missing {
+                report.under_replicated += 1;
+                pool.mark_under_replicated(digest);
+            } else if pool.clear_marker(digest) {
+                report.markers_cleared += 1;
+            }
+        }
+        // Markers for digests no live manifest references are moot —
+        // gc will (or already did) collect the chunks themselves.
+        for digest in pool.under_replicated_markers() {
+            if !live.contains(&digest) && pool.clear_marker(&digest) {
+                report.markers_cleared += 1;
+            }
+        }
+        Ok(report)
     }
 
     /// Every layer id with a directory on this remote.

@@ -48,11 +48,17 @@
 //! A coordinator that knows which tags are hot can [`PullCache::pin`]
 //! their chunk digests: pinned entries are never chosen as eviction
 //! victims, so background pulls of cold images cannot flush the
-//! fleet's working set. Pins are **advisory and in-process only** —
-//! they are not persisted (a restarted daemon re-pins from the
-//! coordinator's current hot set), and if the pinned set alone
-//! exceeds the byte budget the cache is allowed to run over budget
-//! rather than break the pin promise.
+//! fleet's working set. Pins are advisory (they shape eviction, never
+//! correctness) but **durable**: the pinned digest set persists as
+//! `pins.json` beside the chunks — committed through the same
+//! temp-then-rename discipline as the chunks themselves, under the
+//! `registry.cache.put` site — and [`PullCache::open`] reloads it, so
+//! a `warm --pin` survives a daemon restart instead of leaving the
+//! working set unprotected until the next coordinator pass. Unknown
+//! digests in the file are harmless (they pin nothing until the chunk
+//! lands), and a missing or unreadable file simply means no pins. If
+//! the pinned set alone exceeds the byte budget the cache is allowed
+//! to run over budget rather than break the pin promise.
 //! [`PullCacheStats::pinned_bytes`] reports how much of the resident
 //! footprint is pinned.
 
@@ -72,6 +78,10 @@ pub const GET_SITE: &str = "registry.cache.get";
 /// asset sizes without letting an edge cache grow unbounded.
 pub const DEFAULT_BUDGET: u64 = 256 * 1024 * 1024;
 
+/// The durable pinned-digest set, beside the chunks (its name can
+/// never collide with a chunk file — chunk names are hex digests).
+pub const PINS_FILE: &str = "pins.json";
+
 static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
 
 #[derive(Clone, Copy)]
@@ -85,7 +95,8 @@ struct State {
     clock: u64,
     bytes: u64,
     /// Digests the coordinator has declared hot; never eviction
-    /// victims. In-process only — rebuilt by re-pinning after restart.
+    /// victims. Mirrored durably in [`PINS_FILE`] so a restart keeps
+    /// the working set protected.
     pinned: HashSet<Digest>,
 }
 
@@ -164,7 +175,7 @@ impl PullCache {
             map: HashMap::with_capacity(names.len()),
             clock: 0,
             bytes: 0,
-            pinned: HashSet::new(),
+            pinned: load_pins(root),
         };
         for (d, len) in names {
             state.clock += 1;
@@ -291,17 +302,46 @@ impl PullCache {
     /// never picked as eviction victims, and future puts of them are
     /// protected from the moment they land. Pinning is cumulative and
     /// advisory; if the pinned set alone exceeds the budget the cache
-    /// runs over budget rather than evict a pin.
-    pub fn pin(&self, digests: &[Digest]) {
+    /// runs over budget rather than evict a pin. The updated set is
+    /// committed durably to [`PINS_FILE`] before this returns, so a
+    /// restarted daemon reopens with the same protection.
+    pub fn pin(&self, digests: &[Digest]) -> Result<()> {
         let mut state = self.inner.state.lock().unwrap();
         state.pinned.extend(digests.iter().copied());
+        self.save_pins(&state)
     }
 
     /// Drop every pin (e.g. the coordinator rotated its hot set).
     /// Entries stay resident until ordinary LRU pressure evicts them.
-    pub fn unpin_all(&self) {
+    /// Durable like [`PullCache::pin`].
+    pub fn unpin_all(&self) -> Result<()> {
         let mut state = self.inner.state.lock().unwrap();
         state.pinned.clear();
+        self.save_pins(&state)
+    }
+
+    /// Commit the pinned set to [`PINS_FILE`] (caller holds the state
+    /// lock, so concurrent pinners serialize their rewrites). An empty
+    /// set removes the file — an unpinned cache leaves no residue.
+    fn save_pins(&self, state: &State) -> Result<()> {
+        use crate::util::json::Json;
+        let path = self.inner.root.join(PINS_FILE);
+        if state.pinned.is_empty() {
+            if let Err(e) = std::fs::remove_file(&path) {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    return Err(e.into());
+                }
+            }
+            return Ok(());
+        }
+        let mut pins: Vec<&Digest> = state.pinned.iter().collect();
+        pins.sort_by_key(|d| d.0); // deterministic file for bit-compared trees
+        let doc = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("pins", Json::Arr(pins.iter().map(|d| Json::str(d.to_hex())).collect())),
+        ]);
+        crate::store::write_atomic(PUT_SITE, &path, doc.to_string_pretty().as_bytes())?;
+        Ok(())
     }
 
     /// Evict minimum-stamp entries until the cache fits its budget,
@@ -324,6 +364,14 @@ impl PullCache {
                 self.inner.evicted.fetch_add(1, Ordering::Relaxed);
             }
         }
+    }
+
+    /// Currently pinned digests, sorted (the `registry health` feed).
+    pub fn pins(&self) -> Vec<Digest> {
+        let state = self.inner.state.lock().unwrap();
+        let mut out: Vec<Digest> = state.pinned.iter().copied().collect();
+        out.sort_by_key(|d| d.0);
+        out
     }
 
     fn drop_entry(&self, digest: &Digest) {
@@ -356,6 +404,22 @@ impl PullCache {
             budget: self.inner.budget,
         }
     }
+}
+
+/// Read the durable pinned set. Pins are advisory, so a missing or
+/// unparseable file degrades to "no pins" instead of failing the open;
+/// unparseable *entries* are skipped the same way.
+fn load_pins(root: &Path) -> HashSet<Digest> {
+    let Ok(text) = std::fs::read_to_string(root.join(PINS_FILE)) else {
+        return HashSet::new();
+    };
+    let Ok(doc) = crate::util::json::Json::parse(&text) else {
+        return HashSet::new();
+    };
+    doc.get("pins")
+        .and_then(|p| p.as_arr())
+        .map(|arr| arr.iter().filter_map(|v| v.as_str().and_then(Digest::parse)).collect())
+        .unwrap_or_default()
 }
 
 #[cfg(test)]
@@ -450,7 +514,7 @@ mod tests {
         let cache = PullCache::open(&d, (c0.len() + c1.len()) as u64).unwrap();
         cache.put(&d0, &c0).unwrap();
         cache.put(&d1, &c1).unwrap();
-        cache.pin(&[d0]);
+        cache.pin(&[d0]).unwrap();
         cache.get(&d1).unwrap().unwrap(); // d1 now hotter than d0
         cache.put(&d2, &c2).unwrap(); // must evict d1 — d0 is pinned
         assert_eq!(
@@ -465,7 +529,7 @@ mod tests {
         // Pin the survivors too: with only pinned entries (and the
         // just-written chunk) resident, a further put runs over budget
         // instead of breaking a pin.
-        cache.pin(&[d2]);
+        cache.pin(&[d2]).unwrap();
         let (d3, c3) = chunk(23);
         cache.put(&d3, &c3).unwrap();
         assert!(cache.get(&d0).unwrap().is_some());
@@ -473,8 +537,43 @@ mod tests {
         assert!(cache.get(&d3).unwrap().is_some());
         let stats = cache.stats();
         assert!(stats.bytes > stats.budget, "pins may push the cache over budget");
-        cache.unpin_all();
+        cache.unpin_all().unwrap();
         assert_eq!(cache.stats().pinned_bytes, 0);
+        assert!(!d.join(PINS_FILE).exists(), "an empty pin set leaves no file");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn pins_survive_reopen_and_keep_protecting_eviction() {
+        let d = tmp("durable-pin");
+        let (d0, c0) = chunk(30);
+        let (d1, c1) = chunk(31);
+        let (d2, c2) = chunk(32);
+        let budget = (c0.len() + c1.len()) as u64;
+        {
+            let cache = PullCache::open(&d, budget).unwrap();
+            cache.put(&d0, &c0).unwrap();
+            cache.put(&d1, &c1).unwrap();
+            cache.pin(&[d0]).unwrap();
+            assert!(d.join(PINS_FILE).exists(), "pin must commit durably");
+        }
+        // "Daemon restart": a fresh open reloads the pinned set...
+        let cache = PullCache::open(&d, budget).unwrap();
+        assert_eq!(cache.pins(), vec![d0]);
+        assert_eq!(cache.stats().pinned_bytes, c0.len() as u64);
+        // ...and d0 is still protected: with d0 pinned and d2 just
+        // written, d1 is the only legal eviction victim.
+        cache.put(&d2, &c2).unwrap();
+        assert_eq!(
+            cache.get(&d0).unwrap().as_deref(),
+            Some(&c0[..]),
+            "a pin from before the restart must still protect its entry"
+        );
+        assert!(cache.get(&d1).unwrap().is_none(), "the unpinned entry is the victim");
+        // unpin_all clears the durable set too: the next open sees none.
+        cache.unpin_all().unwrap();
+        let cache = PullCache::open(&d, budget).unwrap();
+        assert!(cache.pins().is_empty(), "unpin_all must clear the durable set");
         std::fs::remove_dir_all(&d).unwrap();
     }
 

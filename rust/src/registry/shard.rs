@@ -1,4 +1,5 @@
-//! Digest-range sharding of the remote chunk pool.
+//! Digest-range sharding of the remote chunk pool, with R-way replica
+//! placement, per-backend health tracking, and failover reads.
 //!
 //! A planet-scale registry cannot serve every chunk from one directory:
 //! pool scans, maintenance passes, and (on a real deployment) disk and
@@ -7,6 +8,21 @@
 //! hashing, so membership changes move only the chunks whose ring
 //! assignment actually changed — not 1/1-th of the pool like a modulo
 //! scheme would.
+//!
+//! Sharding alone leaves every chunk on exactly one backend: one
+//! unreachable root makes a slice of every layer unpullable. Because
+//! chunks are immutable and self-verifying, replication is cheap and
+//! safe — so the ring also carries a **replica factor** R: a digest's
+//! home shard plus the next R-1 *distinct* shards clockwise hold a
+//! copy. Writes fan out to every replica and degrade gracefully (a
+//! down replica records an under-replication marker instead of failing
+//! the push, as long as at least one replica took the write); reads
+//! try the home copy first and **fail over** to the next replica on an
+//! error or an open circuit breaker, verifying failed-over bytes by
+//! digest and write-repairing the home copy when it is reachable
+//! again. The anti-entropy `repair` pass
+//! ([`super::RemoteRegistry::repair`]) walks live manifests and
+//! converges the ring back to full replication.
 //!
 //! # On-disk layout
 //!
@@ -22,6 +38,7 @@
 //! <root>/shard-1/chunks/        — shard 1 chunk backend
 //! <root>/shard-1/leases/        — shard 1 lease table
 //! <root>/shard-<k>/...          — shard k
+//! <root>/under-replicated/      — one empty marker file per degraded digest
 //! ```
 //!
 //! Keeping every backend under the registry root is deliberate: fault
@@ -33,18 +50,22 @@
 //! # Ring descriptor (`shards.json`)
 //!
 //! ```json
-//! { "version": 1, "shards": ["", "shard-1", "shard-2"] }
+//! { "version": 1, "shards": ["", "shard-1", "shard-2"], "replicas": 2 }
 //! ```
 //!
 //! Each member is a shard's directory prefix relative to the registry
-//! root (`""` = the root itself, i.e. shard 0). The descriptor commits
-//! through the same fsync-then-rename atomic write as everything else
-//! the registry serves, under the `registry.shard.migrate` fault site:
-//! a crash mid-rebalance leaves either the old or the new descriptor in
-//! force, never a torn one. A missing descriptor means a one-shard
-//! ring — legacy remotes are never forced to migrate.
+//! root (`""` = the root itself, i.e. shard 0). A **missing
+//! `replicas` field means R=1** — every descriptor written before
+//! replication existed keeps exactly its old meaning, and an R=1 ring
+//! behaves bit-for-bit like the pre-replication code. The descriptor
+//! commits through the same fsync-then-rename atomic write as
+//! everything else the registry serves, under the
+//! `registry.shard.migrate` fault site: a crash mid-rebalance leaves
+//! either the old or the new descriptor in force, never a torn one. A
+//! missing descriptor means a one-shard ring — legacy remotes are
+//! never forced to migrate.
 //!
-//! # Consistent hashing
+//! # Consistent hashing and replica placement
 //!
 //! Each shard contributes [`VNODES`] points to a 64-bit ring, each
 //! point the first 8 bytes of `SHA-256("<name>#<v>")`; a chunk digest
@@ -53,7 +74,24 @@
 //! growing 2 → 3 shards strands only the keyspace the new shard's
 //! points capture (~1/3 in expectation), never reshuffles the rest —
 //! the property the rebalance acceptance bar (< 50% of chunks moved on
-//! 2 → 3) measures.
+//! 2 → 3) measures. The replica set of a digest is the first R
+//! *distinct* shards met walking clockwise from its point — the home
+//! shard first, so R=1 degenerates to plain assignment and growing R
+//! never moves a home copy.
+//!
+//! # Backend health and failover
+//!
+//! Every [`ShardedPool`] carries a per-backend consecutive-failure
+//! circuit breaker: [`BREAKER_THRESHOLD`] consecutive failed
+//! operations open it, after which reads skip the backend without
+//! touching it — except every [`BREAKER_PROBE_EVERY`]-th skipped
+//! request, which probes the backend (half-open state) so recovery is
+//! noticed without wall-clock timers (deterministic under test). One
+//! success closes the breaker. Backend I/O runs under the
+//! `registry.backend.read` / `registry.backend.write` fault sites,
+//! keyed on the chunk file inside the backend directory, so a plan
+//! scoped to one backend's tree takes down exactly that backend
+//! ([`crate::fault::FaultMode::Unavailable`] is the outage flavour).
 //!
 //! # Rebalance
 //!
@@ -61,25 +99,34 @@
 //! three idempotent passes, every durable step under the
 //! `registry.shard.migrate` fault site:
 //!
-//! 1. **copy** — every chunk found in any backend that is not its
-//!    assigned home is copied home (skipped when already there);
+//! 1. **copy** — every chunk found in any backend is copied to each
+//!    member of its target replica set that lacks it (skipped when
+//!    already there);
 //! 2. **commit** — the new descriptor replaces `shards.json`
 //!    atomically: the instant readers see the new ring, every
 //!    assignment it makes is already satisfied;
-//! 3. **clean** — stale copies (chunks sitting in a backend the ring
-//!    no longer assigns them to) are deleted.
+//! 3. **clean** — stale copies (chunks sitting in a backend outside
+//!    their replica set) are deleted, but **only** once every replica
+//!    location holds the chunk — a merely under-replicated chunk is
+//!    never collected.
 //!
 //! A crash at any point leaves a tree a re-run converges from: before
 //! the commit the old ring is still fully served; after it the new
 //! ring is, with at worst duplicate chunks the clean pass (of the
-//! re-run) removes. The fault matrix (`tests/faults.rs`) kills the
-//! migrate site at first/middle/last hit and asserts bit-identical
-//! recovery with no orphans on either shard.
+//! re-run) removes. Shrinking the ring is the same algorithm run
+//! toward a smaller member list: pass 1 drains the departing backend
+//! into the survivors' replica sets before the membership commit, and
+//! pass 3 empties it so the stranded tree can be removed. The fault
+//! matrix (`tests/faults.rs`) kills the migrate site at
+//! first/middle/last hit and asserts bit-identical recovery with no
+//! orphans on any shard.
 
 use super::chunkpool::ChunkPool;
-use crate::hash::Digest;
+use crate::hash::{Digest, NativeEngine, CHUNK_SIZE};
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// The durable ring descriptor's file name under the registry root.
 pub const SHARDS_FILE: &str = "shards.json";
@@ -88,12 +135,34 @@ pub const SHARDS_FILE: &str = "shards.json";
 /// ring descriptor commit.
 pub const MIGRATE_SITE: &str = "registry.shard.migrate";
 
+/// Fault site for replica-routed backend reads (the failover boundary).
+pub const BACKEND_READ_SITE: &str = "registry.backend.read";
+
+/// Fault site for replica fan-out writes (the under-replication
+/// boundary).
+pub const BACKEND_WRITE_SITE: &str = "registry.backend.write";
+
+/// Directory (under the registry root) of under-replication markers:
+/// one empty file per degraded digest, named by its hex digest. The
+/// markers are a fast index for `registry health` and the repair pass;
+/// the authoritative anti-entropy walk is over the live manifests.
+pub const UNDER_REPLICATED_DIR: &str = "under-replicated";
+
+/// Consecutive failures that open a backend's circuit breaker.
+pub const BREAKER_THRESHOLD: u32 = 3;
+
+/// While a breaker is open, every this-many-th skipped request probes
+/// the backend instead (deterministic half-open state — no wall-clock
+/// timer to flake under test).
+pub const BREAKER_PROBE_EVERY: u32 = 4;
+
 /// Virtual ring points per shard. Enough to keep the balance factor
 /// (max shard occupancy / mean) low at small shard counts without
 /// making ring construction noticeable.
 const VNODES: usize = 64;
 
-/// A consistent-hash ring over named shard backends.
+/// A consistent-hash ring over named shard backends, carrying the
+/// pool's replica factor.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardRing {
     /// Directory prefixes relative to the registry root; `""` is shard
@@ -101,26 +170,44 @@ pub struct ShardRing {
     names: Vec<String>,
     /// Sorted `(point, shard index)` ring; built from `names`.
     points: Vec<(u64, usize)>,
+    /// Copies of every chunk (clamped to the member count); 1 = the
+    /// pre-replication behavior.
+    replicas: usize,
 }
 
 impl ShardRing {
     /// The degenerate one-shard ring every unsharded remote runs on.
     pub fn single() -> ShardRing {
-        ShardRing::from_names(vec![String::new()])
+        ShardRing::from_names(vec![String::new()], 1)
     }
 
     /// A ring of `n` shards under the canonical naming scheme: shard 0
-    /// at the registry root, shard k at `shard-<k>`.
+    /// at the registry root, shard k at `shard-<k>`. Replica factor 1
+    /// (the pre-replication behavior); raise it with
+    /// [`ShardRing::with_replicas`].
     pub fn with_shards(n: usize) -> ShardRing {
         let n = n.max(1);
         ShardRing::from_names(
             (0..n)
                 .map(|k| if k == 0 { String::new() } else { format!("shard-{k}") })
                 .collect(),
+            1,
         )
     }
 
-    fn from_names(names: Vec<String>) -> ShardRing {
+    /// [`ShardRing::with_shards`] at replica factor `r`.
+    pub fn with_shards_replicated(n: usize, r: usize) -> ShardRing {
+        ShardRing::with_shards(n).with_replicas(r)
+    }
+
+    /// This ring with replica factor `r`, clamped to `[1, members]`
+    /// (a 2-shard ring cannot hold 3 distinct copies).
+    pub fn with_replicas(mut self, r: usize) -> ShardRing {
+        self.replicas = r.clamp(1, self.names.len());
+        self
+    }
+
+    fn from_names(names: Vec<String>, replicas: usize) -> ShardRing {
         let mut points = Vec::with_capacity(names.len() * VNODES);
         for (i, name) in names.iter().enumerate() {
             for v in 0..VNODES {
@@ -129,11 +216,13 @@ impl ShardRing {
             }
         }
         points.sort_unstable();
-        ShardRing { names, points }
+        let replicas = replicas.clamp(1, names.len());
+        ShardRing { names, points, replicas }
     }
 
     /// Load the durable descriptor, or the one-shard default when the
-    /// remote has never been sharded.
+    /// remote has never been sharded. A descriptor without a
+    /// `replicas` field is an R=1 pre-replication ring.
     pub fn load(root: &Path) -> Result<ShardRing> {
         let path = root.join(SHARDS_FILE);
         if !path.exists() {
@@ -149,7 +238,8 @@ impl ShardRing {
         if names.is_empty() {
             return Err(Error::Registry(format!("{SHARDS_FILE} has no shard members")));
         }
-        Ok(ShardRing::from_names(names))
+        let replicas = doc.get("replicas").and_then(|v| v.as_u64()).unwrap_or(1) as usize;
+        Ok(ShardRing::from_names(names, replicas))
     }
 
     /// Commit this ring as the remote's durable descriptor (atomic,
@@ -159,6 +249,7 @@ impl ShardRing {
         let doc = Json::obj(vec![
             ("version", Json::num(1.0)),
             ("shards", Json::Arr(self.names.iter().map(Json::str).collect())),
+            ("replicas", Json::num(self.replicas as f64)),
         ]);
         crate::store::write_atomic(
             MIGRATE_SITE,
@@ -172,17 +263,44 @@ impl ShardRing {
         self.names.len()
     }
 
+    /// The ring's replica factor (already clamped to the member count).
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
     /// The shard index a chunk digest is assigned to: the first ring
-    /// point clockwise from the digest's own 64-bit point.
+    /// point clockwise from the digest's own 64-bit point. This is the
+    /// digest's **home** — the first member of its replica set.
     pub fn assign(&self, digest: &Digest) -> usize {
         let key = u64::from_be_bytes(digest.0[..8].try_into().unwrap());
         let i = self.points.partition_point(|&(p, _)| p < key);
         let (_, shard) = if i == self.points.len() { self.points[0] } else { self.points[i] };
         shard
+    }
+
+    /// The digest's replica set: the first `replicas` *distinct* shards
+    /// met walking clockwise from its point, home first. R=1 is
+    /// exactly `[assign(digest)]`, and growing R only appends — it
+    /// never relocates an existing copy.
+    pub fn replica_set(&self, digest: &Digest) -> Vec<usize> {
+        let want = self.replicas.min(self.names.len());
+        let key = u64::from_be_bytes(digest.0[..8].try_into().unwrap());
+        let start = self.points.partition_point(|&(p, _)| p < key);
+        let mut out = Vec::with_capacity(want);
+        for i in 0..self.points.len() {
+            let (_, shard) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&shard) {
+                out.push(shard);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
     }
 
     /// A shard's chunk-backend directory under `root`.
@@ -213,14 +331,106 @@ fn shard_lease_dir(root: &Path, name: &str) -> PathBuf {
     }
 }
 
-/// The sharded chunk pool: the [`ChunkPool`] API fronting N backend
-/// pools, routing each digest to its ring-assigned home. Push
-/// negotiation, pull resolution, journal validation, scrub and gc all
-/// run against this facade, so an unsharded remote (one-shard ring)
+/// Do `bytes` re-derive `digest` under either pool addressing scheme
+/// (raw SHA-256 for v2 CDC chunks, padded engine digest for
+/// chunk-sized v1 entries)? The verification every failed-over read
+/// and every repair source passes before its bytes are trusted.
+fn chunk_verifies(digest: &Digest, bytes: &[u8]) -> bool {
+    Digest::of(bytes) == *digest
+        || (bytes.len() <= CHUNK_SIZE && NativeEngine::chunk_digest(bytes) == *digest)
+}
+
+#[derive(Default)]
+struct BreakerState {
+    consecutive_failures: u32,
+    /// Requests skipped since the breaker opened (drives the
+    /// deterministic half-open probe cadence).
+    skipped: u32,
+}
+
+/// Per-backend circuit breakers plus the failover/repair counters the
+/// pull report surfaces. Shared by every worker of a pull fan-out
+/// (one tracker per [`ShardedPool`] instance; state is per-process —
+/// a restarted daemon starts with every breaker closed, which is
+/// exactly the re-probe a restart should perform).
+pub struct BackendHealth {
+    states: Vec<Mutex<BreakerState>>,
+    failovers: AtomicU64,
+    repairs: AtomicU64,
+}
+
+impl BackendHealth {
+    fn new(backends: usize) -> BackendHealth {
+        BackendHealth {
+            states: (0..backends).map(|_| Mutex::new(BreakerState::default())).collect(),
+            failovers: AtomicU64::new(0),
+            repairs: AtomicU64::new(0),
+        }
+    }
+
+    /// Should this request skip backend `k` without touching it?
+    /// False while the breaker is closed; while open, true except on
+    /// the deterministic probe turns.
+    fn should_skip(&self, k: usize) -> bool {
+        let mut s = self.states[k].lock().unwrap_or_else(|e| e.into_inner());
+        if s.consecutive_failures < BREAKER_THRESHOLD {
+            return false;
+        }
+        s.skipped += 1;
+        if s.skipped >= BREAKER_PROBE_EVERY {
+            s.skipped = 0; // half-open: this request probes the backend
+            return false;
+        }
+        true
+    }
+
+    fn ok(&self, k: usize) {
+        let mut s = self.states[k].lock().unwrap_or_else(|e| e.into_inner());
+        s.consecutive_failures = 0;
+        s.skipped = 0;
+    }
+
+    fn fail(&self, k: usize) {
+        let mut s = self.states[k].lock().unwrap_or_else(|e| e.into_inner());
+        s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+    }
+
+    /// Is backend `k`'s breaker currently open?
+    pub fn is_open(&self, k: usize) -> bool {
+        let s = self.states[k].lock().unwrap_or_else(|e| e.into_inner());
+        s.consecutive_failures >= BREAKER_THRESHOLD
+    }
+
+    fn note_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_repair(&self) {
+        self.repairs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Reads served from a non-home replica.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Missing copies written back opportunistically (read-repair).
+    pub fn repairs(&self) -> u64 {
+        self.repairs.load(Ordering::Relaxed)
+    }
+}
+
+/// The sharded, replicated chunk pool: the [`ChunkPool`] API fronting
+/// N backend pools, routing each digest to its ring-assigned replica
+/// set. Push negotiation, pull resolution, journal validation, scrub
+/// and gc all run against this facade, so an unsharded R=1 remote
 /// behaves bit-for-bit like the pre-shard code.
 pub struct ShardedPool {
     ring: ShardRing,
     backends: Vec<ChunkPool>,
+    /// The registry root (owner of `under-replicated/`).
+    registry_root: PathBuf,
+    health: BackendHealth,
 }
 
 impl ShardedPool {
@@ -229,14 +439,24 @@ impl ShardedPool {
         let backends = (0..ring.shard_count())
             .map(|k| ChunkPool::open(&ring.chunk_dir(root, k)))
             .collect::<Result<Vec<_>>>()?;
-        Ok(ShardedPool { ring: ring.clone(), backends })
+        Ok(ShardedPool {
+            ring: ring.clone(),
+            health: BackendHealth::new(backends.len()),
+            backends,
+            registry_root: root.to_path_buf(),
+        })
     }
 
     /// Reference the backends without creating anything on disk.
     pub fn at(root: &Path, ring: &ShardRing) -> ShardedPool {
-        let backends =
+        let backends: Vec<ChunkPool> =
             (0..ring.shard_count()).map(|k| ChunkPool::at(&ring.chunk_dir(root, k))).collect();
-        ShardedPool { ring: ring.clone(), backends }
+        ShardedPool {
+            ring: ring.clone(),
+            health: BackendHealth::new(backends.len()),
+            backends,
+            registry_root: root.to_path_buf(),
+        }
     }
 
     pub fn ring(&self) -> &ShardRing {
@@ -249,8 +469,10 @@ impl ShardedPool {
         &self.backends
     }
 
-    fn home(&self, digest: &Digest) -> &ChunkPool {
-        &self.backends[self.ring.assign(digest)]
+    /// The per-backend health tracker (breaker state + failover and
+    /// read-repair counters for this pool instance).
+    pub fn health(&self) -> &BackendHealth {
+        &self.health
     }
 
     /// The shard-0 backend directory — the negotiation endpoint's
@@ -260,8 +482,21 @@ impl ShardedPool {
         self.backends[0].root()
     }
 
+    /// Is a chunk **fully replicated** — present at every member of
+    /// its replica set? Push negotiation deliberately uses this strict
+    /// reading: a pusher re-sends an under-replicated chunk and the
+    /// replica fan-out of [`ShardedPool::put`] tops up the missing
+    /// copies, so ordinary push traffic heals degradation without
+    /// waiting for a repair pass. At R=1 this is plain presence.
     pub fn has(&self, digest: &Digest) -> bool {
-        self.home(digest).has(digest)
+        self.ring.replica_set(digest).iter().all(|&k| self.backends[k].has(digest))
+    }
+
+    /// Is at least one replica copy present? The serving-possibility
+    /// probe (scrub's demotion pass asks this — a layer whose chunk
+    /// is merely under-replicated must not be demoted).
+    pub fn has_any(&self, digest: &Digest) -> bool {
+        self.ring.replica_set(digest).iter().any(|&k| self.backends[k].has(digest))
     }
 
     pub fn has_batch(&self, digests: &[Digest]) -> Vec<bool> {
@@ -272,24 +507,174 @@ impl ShardedPool {
         digests.iter().all(|d| self.has(d))
     }
 
+    /// Fetch a chunk: home replica first, failing over clockwise
+    /// through the replica set on an error or an open breaker.
+    /// Failed-over bytes are verified by digest before they are
+    /// trusted, and a verified failover **write-repairs** the home
+    /// copy when the home backend is reachable. Injected crash errors
+    /// propagate immediately (simulated process death is not an
+    /// outage); everything else burns through the replica set before
+    /// surfacing the first error.
     pub fn get(&self, digest: &Digest) -> Result<Vec<u8>> {
-        self.home(digest).get(digest)
+        let set = self.ring.replica_set(digest);
+        let last = set.len() - 1;
+        let mut first_err: Option<Error> = None;
+        for (rank, &k) in set.iter().enumerate() {
+            let backend = &self.backends[k];
+            // Open breaker: skip without touching the backend — unless
+            // it is this request's probe turn, or no replica is left.
+            if rank < last && self.health.should_skip(k) {
+                continue;
+            }
+            match crate::fault::check(BACKEND_READ_SITE, &backend.chunk_path(digest))
+                .map_err(Error::from)
+            {
+                Ok(()) => {}
+                Err(e) if crate::fault::error_is_crash(&e) => return Err(e),
+                Err(e) => {
+                    self.health.fail(k);
+                    first_err.get_or_insert(e);
+                    continue;
+                }
+            }
+            if !backend.has(digest) {
+                // Reachable but missing the copy (degraded write, not
+                // yet repaired): not a health event — try the next
+                // replica.
+                self.health.ok(k);
+                continue;
+            }
+            match backend.get(digest) {
+                Ok(bytes) => {
+                    self.health.ok(k);
+                    if rank > 0 {
+                        if !chunk_verifies(digest, &bytes) {
+                            // A rotted secondary copy is scrub's
+                            // problem, not a serving candidate.
+                            continue;
+                        }
+                        self.health.note_failover();
+                        self.write_repair(digest, &bytes, &set)?;
+                    }
+                    return Ok(bytes);
+                }
+                Err(e) if crate::fault::error_is_crash(&e) => return Err(e),
+                Err(e) => {
+                    self.health.fail(k);
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        Err(first_err.unwrap_or_else(|| {
+            Error::Registry(format!("chunk {} missing from pool: no replica holds it", digest.short()))
+        }))
+    }
+
+    /// After a failover read: opportunistically copy the verified
+    /// bytes back to every replica member missing them (most
+    /// importantly the home). A still-down backend just keeps its
+    /// under-replication marker; an injected crash propagates.
+    fn write_repair(&self, digest: &Digest, bytes: &[u8], set: &[usize]) -> Result<()> {
+        let mut missing = false;
+        for &k in set {
+            let backend = &self.backends[k];
+            if backend.has(digest) {
+                continue;
+            }
+            let res = crate::fault::check(BACKEND_WRITE_SITE, &backend.chunk_path(digest))
+                .map_err(Error::from)
+                .and_then(|()| backend.put(digest, bytes));
+            match res {
+                Ok(_) => {
+                    self.health.ok(k);
+                    self.health.note_repair();
+                }
+                Err(e) if crate::fault::error_is_crash(&e) => return Err(e),
+                Err(_) => {
+                    self.health.fail(k);
+                    missing = true;
+                }
+            }
+        }
+        if missing {
+            self.mark_under_replicated(digest);
+        } else {
+            self.clear_marker(digest);
+        }
+        Ok(())
     }
 
     pub fn try_get(&self, digest: &Digest) -> Option<Vec<u8>> {
-        self.home(digest).try_get(digest)
+        self.ring
+            .replica_set(digest)
+            .into_iter()
+            .find_map(|k| self.backends[k].try_get(digest))
     }
 
+    /// Commit a chunk to every member of its replica set. Degrades
+    /// gracefully: the put succeeds as long as **at least one** replica
+    /// holds the chunk afterwards, and any replica that could not take
+    /// its copy (outage, transient exhaustion) records a durable
+    /// under-replication marker for the repair pass to drain. Injected
+    /// crash errors propagate (a crashed process writes nothing more);
+    /// if *no* replica holds the chunk the first error surfaces so the
+    /// pusher's retry/degrade machinery handles it.
     pub fn put(&self, digest: &Digest, data: &[u8]) -> Result<bool> {
-        self.home(digest).put(digest, data)
+        let set = self.ring.replica_set(digest);
+        let mut stored_any = false;
+        let mut missing_any = false;
+        let mut novel = false;
+        let mut first_err: Option<Error> = None;
+        for &k in &set {
+            let backend = &self.backends[k];
+            if backend.has(digest) {
+                stored_any = true;
+                continue;
+            }
+            let res = crate::fault::check(BACKEND_WRITE_SITE, &backend.chunk_path(digest))
+                .map_err(Error::from)
+                .and_then(|()| backend.put(digest, data));
+            match res {
+                Ok(n) => {
+                    self.health.ok(k);
+                    stored_any = true;
+                    novel = novel || n;
+                }
+                Err(e) if crate::fault::error_is_crash(&e) => return Err(e),
+                Err(e) => {
+                    self.health.fail(k);
+                    missing_any = true;
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if !stored_any {
+            // Every replica refused: surface the first error with its
+            // classification intact (a transient stays retryable).
+            return Err(first_err
+                .unwrap_or_else(|| Error::Registry("replica set is empty".into())));
+        }
+        if missing_any {
+            self.mark_under_replicated(digest);
+        } else {
+            self.clear_marker(digest);
+        }
+        Ok(novel)
     }
 
+    /// Remove a chunk from **every** backend holding a copy (replica
+    /// members and stale mid-rebalance copies alike), plus its marker.
     pub fn remove(&self, digest: &Digest) -> Result<()> {
-        self.home(digest).remove(digest)
+        for backend in &self.backends {
+            backend.remove(digest)?;
+        }
+        self.clear_marker(digest);
+        Ok(())
     }
 
     /// Every committed chunk digest across all shards, deduplicated
-    /// (a mid-rebalance tree can briefly hold a chunk twice) and sorted.
+    /// (replica copies — and a mid-rebalance tree briefly holding a
+    /// chunk twice — count once) and sorted.
     pub fn list(&self) -> Result<Vec<Digest>> {
         let mut out = Vec::new();
         for backend in &self.backends {
@@ -300,6 +685,7 @@ impl ShardedPool {
         Ok(out)
     }
 
+    /// Unique chunks (replicas dedup'd by digest).
     pub fn len(&self) -> Result<usize> {
         Ok(self.list()?.len())
     }
@@ -308,6 +694,9 @@ impl ShardedPool {
         Ok(self.len()? == 0)
     }
 
+    /// Total bytes on disk across every backend — replica copies
+    /// included (this is physical occupancy, not unique content; see
+    /// [`pool_occupancy`] for the split).
     pub fn disk_usage(&self) -> Result<u64> {
         let mut total = 0;
         for backend in &self.backends {
@@ -318,6 +707,44 @@ impl ShardedPool {
 
     pub fn sweep_tmp(&self) -> usize {
         self.backends.iter().map(|b| b.sweep_tmp()).sum()
+    }
+
+    fn marker_dir(&self) -> PathBuf {
+        self.registry_root.join(UNDER_REPLICATED_DIR)
+    }
+
+    fn marker_path(&self, digest: &Digest) -> PathBuf {
+        self.marker_dir().join(digest.to_hex())
+    }
+
+    /// Record (best-effort) that a digest is missing at least one
+    /// replica copy. Best-effort is sound: the marker is only a fast
+    /// index — the repair pass walks every live manifest regardless,
+    /// so a marker the filesystem refused to write delays nothing but
+    /// the `registry health` headline.
+    pub fn mark_under_replicated(&self, digest: &Digest) {
+        let dir = self.marker_dir();
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(self.marker_path(digest), b"");
+    }
+
+    /// Drop a digest's under-replication marker; true if one existed.
+    pub fn clear_marker(&self, digest: &Digest) -> bool {
+        std::fs::remove_file(self.marker_path(digest)).is_ok()
+    }
+
+    /// Outstanding under-replication markers, sorted by digest.
+    pub fn under_replicated_markers(&self) -> Vec<Digest> {
+        let mut out = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(self.marker_dir()) {
+            for e in entries.flatten() {
+                if let Some(d) = Digest::parse(&e.file_name().to_string_lossy()) {
+                    out.push(d);
+                }
+            }
+        }
+        out.sort_by_key(|d| d.0);
+        out
     }
 }
 
@@ -332,7 +759,9 @@ pub struct ShardStats {
 
 /// Occupancy of every backend plus the **balance factor**: the most
 /// loaded shard's byte occupancy over the mean (1.0 = perfectly even;
-/// skew is visible here before it hurts).
+/// skew is visible here before it hurts). Per-shard numbers count
+/// physical copies — at R=2 a chunk appears in two shards' counts;
+/// [`pool_occupancy`] reports the dedup'd view.
 pub fn shard_stats(pool: &ShardedPool) -> Result<(Vec<ShardStats>, f64)> {
     let mut stats = Vec::with_capacity(pool.backends().len());
     for (k, backend) in pool.backends().iter().enumerate() {
@@ -349,17 +778,56 @@ pub fn shard_stats(pool: &ShardedPool) -> Result<(Vec<ShardStats>, f64)> {
     Ok((stats, balance))
 }
 
+/// The pool's logical-vs-physical occupancy split: once replicas
+/// exist, summing per-backend counts double-counts content, so
+/// `registry stats`/`health` report unique chunks and replica bytes
+/// separately.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolOccupancy {
+    /// Distinct digests resident anywhere in the pool.
+    pub unique_chunks: usize,
+    /// Bytes of one copy of each unique chunk (logical content size).
+    pub unique_bytes: u64,
+    /// Physical copies across every backend (≥ `unique_chunks`).
+    pub replica_chunks: usize,
+    /// Physical bytes across every backend (≥ `unique_bytes`).
+    pub replica_bytes: u64,
+    /// Outstanding under-replication markers.
+    pub under_replicated: usize,
+}
+
+/// Measure [`PoolOccupancy`] by walking every backend once.
+pub fn pool_occupancy(pool: &ShardedPool) -> Result<PoolOccupancy> {
+    let mut occ = PoolOccupancy::default();
+    let mut seen: std::collections::HashSet<Digest> = std::collections::HashSet::new();
+    for backend in pool.backends() {
+        for digest in backend.list()? {
+            let len = std::fs::metadata(backend.chunk_path(&digest)).map(|m| m.len()).unwrap_or(0);
+            occ.replica_chunks += 1;
+            occ.replica_bytes += len;
+            if seen.insert(digest) {
+                occ.unique_chunks += 1;
+                occ.unique_bytes += len;
+            }
+        }
+    }
+    occ.under_replicated = pool.under_replicated_markers().len();
+    Ok(occ)
+}
+
 /// What a [`rebalance_to`] pass did.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RebalanceReport {
     /// Chunks examined across every backend that exists on disk.
     pub chunks_scanned: usize,
-    /// Chunks copied to their (new) ring-assigned home.
+    /// Copies written to (new) ring-assigned replica locations.
     pub chunks_migrated: usize,
-    /// Bytes those migrated chunks carried.
+    /// Bytes those migrated copies carried.
     pub bytes_migrated: u64,
-    /// Stale copies deleted from backends the ring no longer assigns
-    /// them to (includes duplicates left by an interrupted earlier run).
+    /// Stale copies deleted from backends outside their digest's
+    /// replica set (includes duplicates left by an interrupted earlier
+    /// run). A copy is only ever deleted once every replica location
+    /// holds the chunk.
     pub chunks_cleaned: usize,
     /// Shards in the committed ring.
     pub shards: usize,
@@ -396,10 +864,14 @@ fn on_disk_backends(root: &Path, current: &ShardRing, target: &ShardRing) -> Vec
 }
 
 /// Converge the pool to `target` (copy → commit descriptor → clean),
-/// as described in the module doc. Idempotent and resumable: re-running
-/// after a crash at any durable step completes the migration with a
-/// bit-identical final tree. The caller holds writer exclusion (the
-/// registry takes the shard-0 exclusive lease around this).
+/// as described in the module doc. Replica-aware: pass 1 fills every
+/// member of each digest's target replica set, pass 3 deletes a copy
+/// only when its backend is outside the replica set AND every replica
+/// location holds the chunk — an under-replicated chunk is never
+/// collected. Idempotent and resumable: re-running after a crash at
+/// any durable step completes the migration with a bit-identical final
+/// tree. The caller holds writer exclusion (the registry takes the
+/// shard-0 exclusive lease around this).
 pub fn rebalance_to(root: &Path, target: &ShardRing) -> Result<RebalanceReport> {
     let current = ShardRing::load(root)?;
     let mut report = RebalanceReport { shards: target.shard_count(), ..Default::default() };
@@ -414,22 +886,31 @@ pub fn rebalance_to(root: &Path, target: &ShardRing) -> Result<RebalanceReport> 
         std::fs::create_dir_all(target.lease_dir(root, k))?;
     }
 
-    // Pass 1 — copy every chunk home. `ChunkPool::put` is the same
-    // durable tmp+rename write as push uses, but under the migrate
-    // fault site so the matrix can kill a migration mid-copy.
+    // Pass 1 — copy every chunk to each member of its replica set that
+    // lacks it. `ChunkPool::put` is the same durable tmp+rename write
+    // as push uses, but under the migrate fault site so the matrix can
+    // kill a migration mid-copy. This is also the shrink drain: a
+    // departing backend's chunks land at their surviving replica homes
+    // here, before the membership commit below.
     for source in &sources {
         for digest in source.list()? {
             report.chunks_scanned += 1;
-            let home = &homes.backends()[target.assign(&digest)];
-            if home.root() == source.root() || home.has(&digest) {
-                continue;
+            let mut bytes: Option<Vec<u8>> = None;
+            for &k in &target.replica_set(&digest) {
+                let home = &homes.backends()[k];
+                if home.root() == source.root() || home.has(&digest) {
+                    continue;
+                }
+                if bytes.is_none() {
+                    bytes = Some(source.get(&digest)?);
+                }
+                let data = bytes.as_ref().unwrap();
+                crate::fault::check(MIGRATE_SITE, &home.chunk_path(&digest))
+                    .map_err(Error::from)?;
+                home.put(&digest, data)?;
+                report.chunks_migrated += 1;
+                report.bytes_migrated += data.len() as u64;
             }
-            let bytes = source.get(&digest)?;
-            crate::fault::check(MIGRATE_SITE, &home.root().join(digest.to_hex()))
-                .map_err(Error::from)?;
-            home.put(&digest, &bytes)?;
-            report.chunks_migrated += 1;
-            report.bytes_migrated += bytes.len() as u64;
         }
     }
 
@@ -438,16 +919,22 @@ pub fn rebalance_to(root: &Path, target: &ShardRing) -> Result<RebalanceReport> 
     // already satisfied on disk.
     target.save(root)?;
 
-    // Pass 3 — clean stale copies (and empty stranded shard trees).
+    // Pass 3 — clean stale copies (and empty stranded shard trees). A
+    // copy is stale only when its backend is outside the digest's
+    // replica set; and even then it is kept until every replica
+    // location holds the chunk — never collect what is merely
+    // under-replicated.
     for source in &sources {
         for digest in source.list()? {
-            let home = &homes.backends()[target.assign(&digest)];
-            if home.root() != source.root() && home.has(&digest) {
-                crate::fault::check(MIGRATE_SITE, &source.root().join(digest.to_hex()))
-                    .map_err(Error::from)?;
-                source.remove(&digest)?;
-                report.chunks_cleaned += 1;
+            let set = target.replica_set(&digest);
+            let in_set = set.iter().any(|&k| homes.backends()[k].root() == source.root());
+            if in_set || !set.iter().all(|&k| homes.backends()[k].has(&digest)) {
+                continue;
             }
+            crate::fault::check(MIGRATE_SITE, &source.chunk_path(&digest))
+                .map_err(Error::from)?;
+            source.remove(&digest)?;
+            report.chunks_cleaned += 1;
         }
     }
     for name in on_disk_backends(root, &current, target) {
@@ -457,6 +944,13 @@ pub fn rebalance_to(root: &Path, target: &ShardRing) -> Result<RebalanceReport> 
         let dir = shard_chunk_dir(root, &name);
         if ChunkPool::at(&dir).is_empty().unwrap_or(false) {
             let _ = std::fs::remove_dir_all(root.join(&name));
+        }
+    }
+    // Digests whose replica sets rebalance just satisfied no longer
+    // need their degradation markers.
+    for digest in homes.under_replicated_markers() {
+        if homes.has(&digest) {
+            homes.clear_marker(&digest);
         }
     }
     Ok(report)
@@ -491,6 +985,30 @@ mod tests {
     }
 
     #[test]
+    fn replica_sets_are_distinct_home_first_and_stable() {
+        let ring = ShardRing::with_shards_replicated(3, 2);
+        assert_eq!(ring.replicas(), 2);
+        for i in 0..200u32 {
+            let (d, _) = chunk(i);
+            let set = ring.replica_set(&d);
+            assert_eq!(set.len(), 2);
+            assert_eq!(set[0], ring.assign(&d), "home shard leads the replica set");
+            assert_ne!(set[0], set[1], "replica members must be distinct shards");
+            assert_eq!(set, ring.replica_set(&d), "placement must be stable");
+        }
+        // R=1 degenerates to plain assignment; growing R only appends.
+        let flat = ShardRing::with_shards(3);
+        for i in 0..50u32 {
+            let (d, _) = chunk(i);
+            assert_eq!(flat.replica_set(&d), vec![flat.assign(&d)]);
+            assert_eq!(ring.replica_set(&d)[0], flat.replica_set(&d)[0]);
+        }
+        // The factor clamps to the member count.
+        assert_eq!(ShardRing::with_shards_replicated(2, 5).replicas(), 2);
+        assert_eq!(ShardRing::single().with_replicas(3).replicas(), 1);
+    }
+
+    #[test]
     fn growing_the_ring_moves_a_strict_minority() {
         // The consistent-hashing property the rebalance bar depends on:
         // 2 -> 3 shards reassigns roughly 1/3 of the keyspace, never
@@ -518,6 +1036,25 @@ mod tests {
         let ring = ShardRing::with_shards(3);
         ring.save(&d).unwrap();
         assert_eq!(ShardRing::load(&d).unwrap(), ring);
+        let replicated = ShardRing::with_shards_replicated(3, 2);
+        replicated.save(&d).unwrap();
+        assert_eq!(ShardRing::load(&d).unwrap(), replicated);
+        assert_eq!(ShardRing::load(&d).unwrap().replicas(), 2);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn descriptor_without_replicas_field_is_r1() {
+        // Compat: every pre-replication descriptor keeps its meaning.
+        let d = tmp("compat");
+        std::fs::write(
+            d.join(SHARDS_FILE),
+            b"{\"version\": 1, \"shards\": [\"\", \"shard-1\"]}",
+        )
+        .unwrap();
+        let ring = ShardRing::load(&d).unwrap();
+        assert_eq!(ring.shard_count(), 2);
+        assert_eq!(ring.replicas(), 1, "missing replicas field must mean R=1");
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -543,6 +1080,149 @@ mod tests {
         let (stats, balance) = shard_stats(&pool).unwrap();
         assert_eq!(stats.iter().map(|s| s.chunks).sum::<usize>(), 64);
         assert!(balance >= 1.0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn replicated_pool_writes_every_replica_and_dedups_counts() {
+        let d = tmp("replicated");
+        let ring = ShardRing::with_shards_replicated(3, 2);
+        let pool = ShardedPool::open(&d, &ring).unwrap();
+        let mut digests = Vec::new();
+        for i in 0..48u32 {
+            let (digest, data) = chunk(i);
+            pool.put(&digest, &data).unwrap();
+            digests.push(digest);
+        }
+        for digest in &digests {
+            for &k in &ring.replica_set(digest) {
+                assert!(
+                    pool.backends()[k].has(digest),
+                    "every replica member must hold a copy"
+                );
+            }
+            assert!(pool.has(digest));
+        }
+        // list/len/occupancy dedup replica copies by digest.
+        assert_eq!(pool.len().unwrap(), 48, "len must not double-count replicas");
+        let occ = pool_occupancy(&pool).unwrap();
+        assert_eq!(occ.unique_chunks, 48);
+        assert_eq!(occ.replica_chunks, 96, "R=2 keeps two physical copies");
+        assert_eq!(occ.replica_bytes, 2 * occ.unique_bytes);
+        assert_eq!(occ.under_replicated, 0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn degraded_put_records_marker_and_get_fails_over() {
+        let d = tmp("degraded");
+        let ring = ShardRing::with_shards_replicated(2, 2);
+        let pool = ShardedPool::open(&d, &ring).unwrap();
+        let (digest, data) = chunk(7);
+        let set = ring.replica_set(&digest);
+        assert_eq!(set.len(), 2);
+        let secondary_dir = pool.backends()[set[1]].root().to_path_buf();
+
+        // Secondary down for the write: the put still commits (home
+        // took it) and records the degradation.
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(
+                BACKEND_WRITE_SITE,
+                0,
+                crate::fault::FaultMode::Unavailable(1_000),
+            )
+            .scoped(&secondary_dir),
+        );
+        assert!(pool.put(&digest, &data).unwrap());
+        drop(guard);
+        assert!(pool.backends()[set[0]].has(&digest));
+        assert!(!pool.backends()[set[1]].has(&digest));
+        assert_eq!(pool.under_replicated_markers(), vec![digest]);
+        assert!(!pool.has(&digest), "under-replicated is not fully replicated");
+        assert!(pool.has_any(&digest));
+
+        // Reads keep working while under-replicated: the home copy
+        // serves (the missing secondary is never consulted).
+        assert_eq!(pool.get(&digest).unwrap(), data);
+
+        // A later put (re-push of the same content) tops up the missing
+        // replica and clears the marker.
+        assert!(pool.put(&digest, &data).unwrap(), "the top-up copy is a novel write");
+        assert!(pool.has(&digest));
+        assert!(pool.under_replicated_markers().is_empty());
+
+        // Now kill the home backend: reads fail over to the secondary
+        // and count it.
+        let home_dir = pool.backends()[set[0]].root().to_path_buf();
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(
+                BACKEND_READ_SITE,
+                0,
+                crate::fault::FaultMode::Unavailable(1_000),
+            )
+            .scoped(&home_dir),
+        );
+        assert_eq!(pool.get(&digest).unwrap(), data, "failover read serves the replica");
+        drop(guard);
+        assert!(pool.health().failovers() >= 1, "failover must be counted");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_and_probes_shut() {
+        let d = tmp("breaker");
+        let ring = ShardRing::with_shards_replicated(2, 2);
+        let pool = ShardedPool::open(&d, &ring).unwrap();
+        // Find a digest homed on shard 0 with its replica on shard 1.
+        let (digest, data) = (0..)
+            .map(chunk)
+            .find(|(dg, _)| ring.assign(dg) == 0)
+            .unwrap();
+        pool.put(&digest, &data).unwrap();
+        let home_dir = pool.backends()[0].root().to_path_buf();
+        let guard = crate::fault::install(
+            crate::fault::FaultPlan::fail_at(
+                BACKEND_READ_SITE,
+                0,
+                crate::fault::FaultMode::Unavailable(1_000_000),
+            )
+            .scoped(&home_dir),
+        );
+        for _ in 0..(BREAKER_THRESHOLD + 2) {
+            assert_eq!(pool.get(&digest).unwrap(), data);
+        }
+        assert!(pool.health().is_open(0), "consecutive failures must open the breaker");
+        // While open, most requests skip the dead backend entirely.
+        let before = pool.health().failovers();
+        for _ in 0..4 {
+            assert_eq!(pool.get(&digest).unwrap(), data);
+        }
+        assert_eq!(pool.health().failovers(), before + 4);
+        drop(guard);
+        // The outage lifted: the next probe turn closes the breaker.
+        for _ in 0..(BREAKER_PROBE_EVERY + 1) {
+            assert_eq!(pool.get(&digest).unwrap(), data);
+        }
+        assert!(!pool.health().is_open(0), "a successful probe must close the breaker");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn failover_read_write_repairs_the_home_copy() {
+        let d = tmp("readrepair");
+        let ring = ShardRing::with_shards_replicated(2, 2);
+        let pool = ShardedPool::open(&d, &ring).unwrap();
+        let (digest, data) = chunk(3);
+        let set = ring.replica_set(&digest);
+        pool.put(&digest, &data).unwrap();
+        // Simulate a lost home copy (disk swap, partial restore).
+        pool.backends()[set[0]].remove(&digest).unwrap();
+        assert!(!pool.backends()[set[0]].has(&digest));
+        // The read fails over to the verified secondary copy and
+        // writes the home copy back.
+        assert_eq!(pool.get(&digest).unwrap(), data);
+        assert!(pool.backends()[set[0]].has(&digest), "failover must write-repair home");
+        assert!(pool.health().repairs() >= 1);
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -586,6 +1266,45 @@ mod tests {
         let again = rebalance_to(&d, &three).unwrap();
         assert_eq!(again.chunks_migrated, 0);
         assert_eq!(again.chunks_cleaned, 0);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rebalance_to_replicated_ring_fills_every_replica_set() {
+        let d = tmp("replicate-up");
+        let two = ShardRing::with_shards(2);
+        two.save(&d).unwrap();
+        let pool = ShardedPool::open(&d, &two).unwrap();
+        let mut payload = std::collections::BTreeMap::new();
+        for i in 0..64u32 {
+            let (digest, data) = chunk(i);
+            pool.put(&digest, &data).unwrap();
+            payload.insert(digest, data);
+        }
+        // Same membership, raised replica factor: rebalance is the
+        // bulk replication pass.
+        let replicated = ShardRing::with_shards_replicated(2, 2);
+        let report = rebalance_to(&d, &replicated).unwrap();
+        assert_eq!(report.chunks_migrated, 64, "every chunk gains exactly one copy");
+        assert_eq!(report.chunks_cleaned, 0, "no copy became stale");
+        let after = ShardedPool::at(&d, &replicated);
+        for (digest, data) in &payload {
+            for &k in &replicated.replica_set(digest) {
+                assert!(after.backends()[k].has(digest));
+            }
+            assert_eq!(&after.get(digest).unwrap(), data);
+        }
+        // And back down: R=1 cleans the now-stale second copies.
+        let flat = ShardRing::with_shards(2);
+        let down = rebalance_to(&d, &flat).unwrap();
+        assert_eq!(down.chunks_cleaned, 64);
+        let after = ShardedPool::at(&d, &flat);
+        for (digest, data) in &payload {
+            assert_eq!(&after.get(digest).unwrap(), data);
+            for (k, backend) in after.backends().iter().enumerate() {
+                assert_eq!(backend.has(digest), flat.assign(digest) == k);
+            }
+        }
         std::fs::remove_dir_all(&d).unwrap();
     }
 

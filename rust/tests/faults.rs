@@ -109,7 +109,7 @@ fn assert_no_orphans(root: &Path, context: &str) {
 /// (the `registry.cache.{put,get}` sites — the cache dir sits outside
 /// the three bit-compared trees because its contents legitimately differ
 /// between a faulted-then-recovered run and the reference), then run the
-/// maintenance pass (scrub marker, scrub, gc) so the exclusive-lease
+/// maintenance pass (scrub marker, scrub, repair, gc) so the exclusive-lease
 /// sites are inside the faulted window. Reopening the daemons/registry
 /// on every call is the "restart" — each open runs its implicit recovery
 /// sweep (and `PullCache::open` sweeps its own temp files). The lease
@@ -128,10 +128,13 @@ fn run_scenario(root: &Path) -> layerjet::Result<()> {
         LeaseConfig { ttl: std::time::Duration::ZERO, ..Default::default() },
     )?;
     dev.push_with("app:v1", &remote, &PushOptions { jobs: 1, ..Default::default() })?;
-    // Split the pool across two consistent-hash backends. Idempotent:
-    // the recovery re-run converges a half-migrated pool on the same
-    // bit-identical layout the reference run committed.
-    remote.shard_to(2)?;
+    // Split the pool across two consistent-hash backends at replica
+    // factor 2, so every later chunk write fans out to both replicas
+    // (`registry.backend.write`) and every pull read routes through the
+    // failover path (`registry.backend.read`). Idempotent: the recovery
+    // re-run converges a half-migrated pool on the same bit-identical
+    // layout the reference run committed.
+    remote.shard_to_with(2, 2)?;
     let cache = layerjet::registry::PullCache::open_default(&root.join("edge-cache"))?;
     let prod = daemon(&root.join("prod"))?;
     prod.pull_with(
@@ -141,11 +144,14 @@ fn run_scenario(root: &Path) -> layerjet::Result<()> {
     )?;
     assert!(prod.verify_image("app:v1")?, "pulled image must verify");
     // Maintenance coda: on a clean tree this is a no-op (the marker is
-    // consumed by scrub, everything is tagged so gc drops nothing), but
-    // it routes the scenario through the scrub-marker write and both
-    // exclusive-lease acquire/release paths so the matrix covers them.
+    // consumed by scrub, every replica set is already full so repair
+    // copies nothing, everything is tagged so gc drops nothing), but it
+    // routes the scenario through the scrub-marker write, the
+    // anti-entropy walk, and both exclusive-lease acquire/release paths
+    // so the matrix covers them.
     remote.schedule_scrub()?;
     remote.scrub()?;
+    remote.repair()?;
     remote.gc()?;
     Ok(())
 }

@@ -4,6 +4,13 @@
 //! keeps origin traffic under 10% of pulled bytes, and maintenance
 //! (round-robin scrub, sharded gc) still repairs and collects across
 //! every backend.
+//!
+//! The `replication_*` tests (the CI `replication` filter) cover the
+//! R=2 placement story: a push with a dead replica backend still
+//! commits and records under-replication markers, pulls fail over to
+//! surviving copies and report it, `repair` converges the pool back to
+//! full replication, and a ring shrink drains the departing backend
+//! before the membership commit.
 
 use layerjet::fault::{self, FaultMode, FaultPlan};
 use layerjet::prelude::*;
@@ -271,6 +278,190 @@ fn scrub_and_gc_cover_every_shard_backend() {
     assert!(
         stats.iter().all(|s| s.chunks == 0),
         "gc must sweep every shard backend: {stats:?}"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Acceptance: at R=2 a push with one replica backend down still
+/// commits (and records what it could not place), every tag keeps
+/// pulling bit-identically while either backend is dead — with the
+/// report counting the failover reads — and an anti-entropy `repair`
+/// drains the markers back to a fully replicated pool.
+#[test]
+fn replication_degraded_push_failover_pulls_and_repair_convergence() {
+    let root = tmp("replication");
+    let proj = root.join("proj");
+    write_project(&proj, 192 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    let remote = RemoteRegistry::open(&root.join("remote")).unwrap();
+    dev.push("app:v1", &remote).unwrap();
+
+    // Two backends, two copies of everything.
+    let sharded = remote.shard_to_with(2, 2).unwrap();
+    assert_eq!(sharded.shards, 2);
+    let occ = remote.occupancy().unwrap();
+    assert!(occ.unique_chunks > 0);
+    assert_eq!(
+        occ.replica_chunks,
+        occ.unique_chunks * 2,
+        "R=2 means two copies of every chunk: {occ:?}"
+    );
+    assert_eq!(occ.under_replicated, 0, "{occ:?}");
+
+    // v2 lands while backend shard-1 is down for writes: the push
+    // commits on the surviving copies and marks the rest.
+    std::fs::write(proj.join("zz_main.py"), "print('v2')\n").unwrap();
+    dev.build(&proj, "app:v2").unwrap();
+    let shard1 = root.join("remote").join("shard-1");
+    let writes_down = fault::install(
+        FaultPlan::fail_at("registry.backend.write", 0, FaultMode::Unavailable(u32::MAX))
+            .scoped(&shard1),
+    );
+    dev.push("app:v2", &remote).unwrap();
+    drop(writes_down);
+    let markers = remote.under_replicated().unwrap();
+    assert!(!markers.is_empty(), "a degraded push must record under-replication");
+
+    // Both tags still pull with shard-1 fully dead: reads fail over to
+    // the surviving copy and the report says so.
+    let backend_down = fault::install(
+        FaultPlan::fail_at("registry.backend.read", 0, FaultMode::Unavailable(u32::MAX))
+            .and("registry.backend.write", 0, FaultMode::Unavailable(u32::MAX))
+            .scoped(&shard1),
+    );
+    // (The cold v1 pull moves every chunk, so its report is the robust
+    // place to observe failovers; v2 then only fetches its novel tail.)
+    let degraded = daemon(&root.join("degraded"));
+    let report = degraded
+        .pull_with("app:v1", &remote, &PullOptions { jobs: 2, ..Default::default() })
+        .unwrap();
+    degraded.pull("app:v2", &remote).unwrap();
+    drop(backend_down);
+    assert!(degraded.verify_image("app:v1").unwrap());
+    assert!(degraded.verify_image("app:v2").unwrap());
+    assert!(
+        report.failover_reads > 0,
+        "a dead home backend must surface as failover reads: {report:?}"
+    );
+
+    // Repair with the backend restored: the markers drain and the pool
+    // converges back to two copies of everything.
+    let repair = remote.repair().unwrap();
+    assert!(repair.chunks_repaired > 0, "repair must re-replicate the degraded push: {repair:?}");
+    assert!(repair.is_converged(), "{repair:?}");
+    assert!(remote.under_replicated().unwrap().is_empty());
+    let occ = remote.occupancy().unwrap();
+    assert_eq!(occ.replica_chunks, occ.unique_chunks * 2, "post-repair: {occ:?}");
+    assert_eq!(occ.under_replicated, 0, "{occ:?}");
+    let again = remote.repair().unwrap();
+    assert_eq!(again.chunks_repaired, 0, "repair must be idempotent: {again:?}");
+
+    // Baselines pulled through the healthy pool match the degraded
+    // store bit for bit...
+    let clean = daemon(&root.join("clean"));
+    clean.pull("app:v1", &remote).unwrap();
+    clean.pull("app:v2", &remote).unwrap();
+    let want = tree_snapshot(&root.join("clean"));
+    assert_eq!(
+        tree_snapshot(&root.join("degraded")),
+        want,
+        "pulls through a half-dead pool must be bit-identical"
+    );
+
+    // ...and so do pulls with the *other* backend dead.
+    let root_backend = root.join("remote").join("chunks");
+    let other_down = fault::install(
+        FaultPlan::fail_at("registry.backend.read", 0, FaultMode::Unavailable(u32::MAX))
+            .scoped(&root_backend),
+    );
+    let survivor = daemon(&root.join("survivor"));
+    let report = survivor
+        .pull_with("app:v1", &remote, &PullOptions { jobs: 2, ..Default::default() })
+        .unwrap();
+    survivor.pull("app:v2", &remote).unwrap();
+    drop(other_down);
+    assert!(
+        report.failover_reads > 0,
+        "losing shard 0 must surface as failover reads: {report:?}"
+    );
+    assert!(survivor.verify_image("app:v1").unwrap());
+    assert!(survivor.verify_image("app:v2").unwrap());
+    assert_eq!(
+        tree_snapshot(&root.join("survivor")),
+        want,
+        "pulls with the other backend dead must be bit-identical"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Shrinking a replicated ring drains the departing backend before the
+/// membership commit: after `shard_to_with(n-1, 2)` the stranded tree
+/// is gone, the pool is still fully replicated, and a shrink killed
+/// mid-drain keeps serving bit-identical pulls until a re-run converges.
+#[test]
+fn replication_shrink_drains_departing_backend_and_resumes() {
+    let root = tmp("replshrink");
+    let proj = root.join("proj");
+    write_project(&proj, 192 * 1024);
+    let dev = daemon(&root.join("dev"));
+    dev.build(&proj, "app:v1").unwrap();
+    // Zero ttl: the exclusive lease stranded by the injected crash is
+    // reclaimed at the next acquisition instead of stalling the test.
+    let remote = RemoteRegistry::open_with(
+        &root.join("remote"),
+        LeaseConfig { ttl: std::time::Duration::ZERO, ..Default::default() },
+    )
+    .unwrap();
+    dev.push("app:v1", &remote).unwrap();
+    remote.shard_to_with(3, 2).unwrap();
+
+    let before_store = daemon(&root.join("before"));
+    before_store.pull("app:v1", &remote).unwrap();
+    let want = tree_snapshot(&root.join("before"));
+
+    // Kill the shrink partway through its drain copies.
+    let guard = fault::install(
+        FaultPlan::fail_at("registry.shard.migrate", 2, FaultMode::Crash).scoped(&root),
+    );
+    let killed = remote.shard_to_with(2, 2);
+    drop(guard);
+    assert!(killed.is_err(), "the injected crash must surface");
+
+    // Mid-shrink the committed 3-shard ring still routes every chunk to
+    // a live copy.
+    let during_store = daemon(&root.join("during"));
+    during_store.pull("app:v1", &remote).unwrap();
+    assert!(during_store.verify_image("app:v1").unwrap());
+    assert_eq!(
+        tree_snapshot(&root.join("during")),
+        want,
+        "a pull during a crashed shrink must be bit-identical"
+    );
+
+    // Re-running converges: the departing backend was drained to its
+    // surviving replica homes and its tree removed.
+    let resumed = remote.shard_to_with(2, 2).unwrap();
+    assert_eq!(resumed.shards, 2);
+    assert!(
+        !root.join("remote").join("shard-2").exists(),
+        "the departing backend must be drained and removed"
+    );
+    let occ = remote.occupancy().unwrap();
+    assert_eq!(
+        occ.replica_chunks,
+        occ.unique_chunks * 2,
+        "the shrunk pool must stay fully replicated: {occ:?}"
+    );
+    assert_eq!(occ.under_replicated, 0, "{occ:?}");
+
+    let after_store = daemon(&root.join("after"));
+    after_store.pull("app:v1", &remote).unwrap();
+    assert!(after_store.verify_image("app:v1").unwrap());
+    assert_eq!(
+        tree_snapshot(&root.join("after")),
+        want,
+        "a pull after the resumed shrink must be bit-identical"
     );
     std::fs::remove_dir_all(&root).unwrap();
 }
